@@ -1,0 +1,74 @@
+//! Overload-oriented scheduling study (§7): compares Baseline vs Early
+//! Rejection vs Prediction-based Early Rejection on an overloaded
+//! cluster (Table 3) and prints the prefill/decode load time series that
+//! exhibit — and then damp — the Fig 9/10 anti-phase fluctuation.
+//!
+//!     cargo run --release --offline --example overload_study -- \
+//!         [--requests 8000] [--speedup 2.0] [--prefill 8] [--decode 8]
+
+use anyhow::Result;
+use mooncake::config::{RejectionPolicy, SimConfig};
+use mooncake::metrics::Outcome;
+use mooncake::sim;
+use mooncake::trace::gen::{generate, TraceGenConfig};
+use mooncake::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let n = args.get_usize("requests", 8_000);
+    let speedup = args.get_f64("speedup", 2.0);
+    let trace = generate(&TraceGenConfig { n_requests: n, ..Default::default() });
+
+    println!("overload study: {n} requests, replay x{speedup}\n");
+    println!(
+        "{:<22} {:>10} {:>16} {:>18} {:>10}",
+        "policy", "rejected", "after-prefill", "wasted-prefill-tok", "completed"
+    );
+    for (name, rej) in [
+        ("baseline", RejectionPolicy::Baseline),
+        ("early-rejection", RejectionPolicy::Early),
+        ("predictive", RejectionPolicy::Predictive),
+    ] {
+        let cfg = SimConfig {
+            n_prefill: args.get_usize("prefill", 8),
+            n_decode: args.get_usize("decode", 8),
+            rejection: rej,
+            ..Default::default()
+        };
+        let res = sim::run(&cfg, &trace, speedup);
+        let rep = res.report(&cfg);
+        let rejected =
+            res.metrics.iter().filter(|m| m.outcome != Outcome::Completed).count();
+        println!(
+            "{:<22} {:>10} {:>16} {:>18} {:>10}",
+            name, rejected, rep.n_rejected_after_prefill, rep.wasted_prefill_tokens, rep.n_completed
+        );
+    }
+
+    // Load curves under the two early-rejection variants.
+    for (name, rej) in
+        [("early-rejection", RejectionPolicy::Early), ("predictive", RejectionPolicy::Predictive)]
+    {
+        let cfg = SimConfig {
+            n_prefill: 3,
+            n_decode: 5,
+            rejection: rej,
+            ..Default::default()
+        };
+        let res = sim::run(&cfg, &trace, speedup.max(3.0));
+        println!("\nload curve ({name}), one row per minute:");
+        println!("{:>6} {:>14} {:>13}", "t_min", "prefill_load", "decode_load");
+        for s in res.load_samples.iter().step_by(6).take(25) {
+            let bar = |x: f64| "#".repeat((x * 20.0) as usize);
+            println!(
+                "{:>6.1} {:>7.2} {:<22} {:>5.2} {}",
+                s.t / 60_000.0,
+                s.prefill_load,
+                bar(s.prefill_load),
+                s.decode_load,
+                bar(s.decode_load)
+            );
+        }
+    }
+    Ok(())
+}

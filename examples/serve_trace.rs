@@ -1,0 +1,81 @@
+//! Trace replay through the full Mooncake cluster simulator — the
+//! paper-scale path (dummy LLaMA2-70B on 8xA800 nodes, modeled
+//! analytically).  Generates (or loads) a calibrated trace, replays it
+//! through Conductor + prefill pool + Messenger + decode pool, and
+//! prints the §8-style report plus TTFT/TBT CDFs.
+//!
+//!     cargo run --release --offline --example serve_trace -- \
+//!         [--trace trace.jsonl] [--requests 8000] [--prefill 8] \
+//!         [--decode 8] [--speedup 1.0]
+
+use anyhow::Result;
+use mooncake::config::SimConfig;
+use mooncake::sim;
+use mooncake::trace::{gen, jsonl, stats};
+use mooncake::util::args::Args;
+use mooncake::util::stats::cdf_at;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let trace = match args.get("trace") {
+        Some(path) => {
+            println!("loading trace from {path}");
+            jsonl::load(path)?
+        }
+        None => {
+            let n = args.get_usize("requests", 8_000);
+            println!("generating calibrated trace ({n} requests)");
+            gen::generate(&gen::TraceGenConfig { n_requests: n, ..Default::default() })
+        }
+    };
+    let s = stats::summarize(&trace);
+    println!(
+        "trace: {} requests, mean input {:.0} / output {:.0} tokens, {} unique blocks\n",
+        s.n_requests, s.mean_input, s.mean_output, s.unique_blocks
+    );
+
+    let cfg = SimConfig {
+        n_prefill: args.get_usize("prefill", 8),
+        n_decode: args.get_usize("decode", 8),
+        ..Default::default()
+    };
+    let speedup = args.get_f64("speedup", 1.0);
+    let t = std::time::Instant::now();
+    let res = sim::run(&cfg, &trace, speedup);
+    let wall = t.elapsed().as_secs_f64();
+    let rep = res.report(&cfg);
+
+    println!("--- Mooncake [{}P+{}D], replay x{speedup} ---", cfg.n_prefill, cfg.n_decode);
+    println!("completed {} / {} requests", rep.n_completed, rep.n_total);
+    println!(
+        "rejected: {} at arrival, {} after prefill",
+        rep.n_rejected_arrival, rep.n_rejected_after_prefill
+    );
+    println!("TTFT: mean {:.0} ms, P90 {:.0} ms", rep.ttft_mean, rep.ttft_p90);
+    println!("TBT (max-gap): P90 {:.1} ms", rep.tbt_p90);
+    println!("SLO attainment: {:.1}%", rep.slo_attainment * 100.0);
+    println!(
+        "goodput: {:.2} req/s | {:.0} tok/s | {} GB KVCache moved",
+        rep.goodput_rps,
+        rep.goodput_tokens_per_sec,
+        res.transfer_bytes / 1_000_000_000
+    );
+    println!(
+        "cache: {} reused / {} recomputed blocks, {} fetches, {} migrations",
+        res.conductor.reused_blocks,
+        res.conductor.recomputed_blocks,
+        res.conductor.remote_fetches,
+        res.conductor.migrations
+    );
+
+    // CDFs (Fig 13 style).
+    let ttfts: Vec<f64> =
+        res.metrics.iter().filter(|m| !m.ttft_ms.is_nan()).map(|m| m.ttft_ms).collect();
+    let grid: Vec<f64> = (1..=10).map(|i| cfg.slo.ttft_ms * i as f64 / 10.0).collect();
+    println!("\nTTFT CDF:");
+    for (g, c) in grid.iter().zip(cdf_at(&ttfts, &grid)) {
+        println!("  <= {:>8.0} ms: {:.3}", g, c);
+    }
+    println!("\nsimulated {:.1}x faster than real time", s.duration_ms as f64 / speedup / 1e3 / wall);
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + weights.npz.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the HLO
+text via `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client, and executes it on the request path — Python is never involved
+after this script exits.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.  Lowered
+with return_tuple=True; the Rust side unwraps with `to_tuple()`.
+
+Artifacts (per shape bucket, see ModelConfig):
+  prefill_s{S}.hlo.txt   args = [*params, tokens i32[S], kv f32[L,2,C,kvh,hd],
+                                 start i32[1], n_valid i32[1]]
+                         -> (last_logits f32[V], kv_out)
+  decode_b{B}.hlo.txt    args = [*params, tokens i32[B], kv f32[B,L,2,C,kvh,hd],
+                                 positions i32[B]]
+                         -> (logits f32[B,V], kv_out)
+  weights.npz            params in param_specs order (npz member names sort
+                         in ABI order by construction)
+  manifest.json          model config + bucket/artifact inventory for Rust
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import TINY, ModelConfig
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_shape_dtype(cfg: ModelConfig):
+    return [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in cfg.param_specs()]
+
+
+def lower_prefill(cfg: ModelConfig, s: int) -> str:
+    fn = functools.partial(M.prefill_step, cfg)
+    lowered = jax.jit(fn).lower(
+        param_shape_dtype(cfg),
+        jax.ShapeDtypeStruct((s,), jnp.int32),
+        jax.ShapeDtypeStruct(M.kv_shape(cfg), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: ModelConfig, b: int) -> str:
+    fn = functools.partial(M.decode_step, cfg)
+    lowered = jax.jit(fn).lower(
+        param_shape_dtype(cfg),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct(M.kv_shape(cfg, b), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: ModelConfig, path: str, seed: int = 0):
+    params = M.init_params(cfg, seed)
+    arrays = {name: np.asarray(p) for (name, _), p in zip(cfg.param_specs(), params)}
+    np.savez(path, **arrays)
+
+
+def build(outdir: str, cfg: ModelConfig = TINY, seed: int = 0):
+    os.makedirs(outdir, exist_ok=True)
+    artifacts = {}
+    for s in cfg.prefill_buckets:
+        name = f"prefill_s{s}.hlo.txt"
+        text = lower_prefill(cfg, s)
+        with open(os.path.join(outdir, name), "w") as f:
+            f.write(text)
+        artifacts[f"prefill_s{s}"] = name
+        print(f"  {name}: {len(text)} chars")
+    for b in cfg.decode_buckets:
+        name = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b)
+        with open(os.path.join(outdir, name), "w") as f:
+            f.write(text)
+        artifacts[f"decode_b{b}"] = name
+        print(f"  {name}: {len(text)} chars")
+
+    write_weights(cfg, os.path.join(outdir, "weights.npz"), seed)
+    print("  weights.npz")
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "param_names": [n for n, _ in cfg.param_specs()],
+        "param_shapes": [list(s) for _, s in cfg.param_specs()],
+        "prefill_buckets": list(cfg.prefill_buckets),
+        "decode_buckets": list(cfg.decode_buckets),
+        "artifacts": artifacts,
+        "weights": "weights.npz",
+        "seed": seed,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(f"AOT-lowering dummy model to {args.out}")
+    build(args.out, TINY, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Model configuration shared by the L1 kernels, the L2 model, and AOT.
+
+The live-path model is a scaled-down LLaMA-architecture transformer (the
+paper's experiments use a "dummy model that follows the same architecture
+as LLaMA2-70B"; we keep the architecture — RMSNorm, RoPE, GQA, SwiGLU —
+and shrink the dimensions so the CPU PJRT client can serve it).  The
+LLaMA2-70B constants used by the Rust analytic performance model live in
+`rust/src/model/llama.rs`; keep the two in sync via the manifest.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the tiny dummy model."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    d_ff: int = 384
+    max_ctx: int = 1024          # per-request KVCache capacity (tokens)
+    rope_base: float = 10000.0
+    page: int = 64               # KVCache page size used by paged kernels
+
+    # AOT shape buckets.  Rust picks the smallest bucket that fits.
+    prefill_buckets: tuple = (64, 256)
+    decode_buckets: tuple = (1, 4, 8)
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model or True
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.max_ctx % self.page == 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group(self) -> int:
+        """Query heads per KV head (GQA group size)."""
+        return self.n_heads // self.n_kv_heads
+
+    def param_specs(self):
+        """Ordered (name, shape) list — the AOT parameter ABI.
+
+        Rust reads `weights.npz` and feeds the literals in this exact
+        order as the leading executable arguments, so the order here is
+        load-bearing.  Names are prefixed with a running index to make
+        the order reconstructible from the npz alone.
+        """
+        specs = [("tok_emb", (self.vocab, self.d_model))]
+        for layer in range(self.n_layers):
+            p = f"l{layer}_"
+            specs += [
+                (p + "attn_norm", (self.d_model,)),
+                (p + "wq", (self.d_model, self.q_dim)),
+                (p + "wk", (self.d_model, self.kv_dim)),
+                (p + "wv", (self.d_model, self.kv_dim)),
+                (p + "wo", (self.q_dim, self.d_model)),
+                (p + "mlp_norm", (self.d_model,)),
+                (p + "w_gate", (self.d_model, self.d_ff)),
+                (p + "w_up", (self.d_model, self.d_ff)),
+                (p + "w_down", (self.d_ff, self.d_model)),
+            ]
+        specs += [
+            ("final_norm", (self.d_model,)),
+            ("lm_head", (self.d_model, self.vocab)),
+        ]
+        return [(f"p{i:03d}_{name}", shape) for i, (name, shape) in enumerate(specs)]
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+TINY = ModelConfig()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .decode_attention import decode_attention
+from .prefill_attention import prefill_attention
+from .paged_attention import paged_attention
+from . import ref
+
+__all__ = ["decode_attention", "prefill_attention", "paged_attention", "ref"]

@@ -1,0 +1,86 @@
+"""Pallas paged decode-attention kernel (vLLM PagedAttention, TPU-shaped).
+
+The KVCache lives in a global *page pool* ([NP, PS, kvh, hd]); each
+sequence owns a block table of page ids.  This mirrors Mooncake's paged
+CPU-DRAM KVCache (Fig 3): pages are the dedup/transfer unit, and the
+decode kernel must gather a sequence's pages at attention time.
+
+TPU adaptation: on GPU, PagedAttention resolves the page indirection with
+per-warp gather loads from HBM.  On TPU the gather is expressed inside the
+kernel with `pl.load` + `pl.dslice` on a whole-pool ref (on real hardware
+the block table would be scalar-prefetched via PrefetchScalarGridSpec so
+the HBM->VMEM DMA schedule can chase it); pages are walked sequentially
+with an online-softmax accumulator, one grid step per sequence.
+
+interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, kp_ref, vp_ref, bt_ref, len_ref, o_ref, *, ps, group, max_blocks):
+    q = q_ref[0].astype(jnp.float32)  # [nh, hd]
+    nh, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    seq_len = len_ref[0]
+
+    m = jnp.full((nh, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((nh, 1), jnp.float32)
+    acc = jnp.zeros((nh, hd), jnp.float32)
+
+    # Walk the sequence's pages.  max_blocks is static (block table width);
+    # pages past the valid length contribute nothing via masking.
+    for blk in range(max_blocks):
+        page = bt_ref[0, blk]
+        k = pl.load(kp_ref, (pl.dslice(page, 1),))[0].astype(jnp.float32)  # [PS, kvh, hd]
+        v = pl.load(vp_ref, (pl.dslice(page, 1),))[0].astype(jnp.float32)
+        k = jnp.repeat(k, group, axis=1)  # [PS, nh, hd]
+        v = jnp.repeat(v, group, axis=1)
+        s = jnp.einsum("nd,knd->nk", q, k, preferred_element_type=jnp.float32) * scale
+        kvpos = blk * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = kvpos < seq_len
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l = alpha * l + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("nk,knd->nd", p, v, preferred_element_type=jnp.float32)
+        m = m_new
+
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, block_tables, lens):
+    """Paged decode attention.  See `ref.paged_attention_ref`.
+
+    q: [B, nh, hd]; k/v_pages: [NP, PS, kvh, hd];
+    block_tables: [B, MB] int32; lens: [B] int32 (>= 1).
+    """
+    B, nh, hd = q.shape
+    NP, PS, kvh, _ = k_pages.shape
+    MB = block_tables.shape[1]
+    group = nh // kvh
+    grid = (B,)
+    return pl.pallas_call(
+        functools.partial(_kernel, ps=PS, group=group, max_blocks=MB),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nh, hd), lambda b: (b, 0, 0)),
+            # Whole page pool visible to every grid step; the kernel
+            # gathers pages with dynamic `pl.load`s.
+            pl.BlockSpec((NP, PS, kvh, hd), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((NP, PS, kvh, hd), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((1, MB), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, nh, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, hd), q.dtype),
+        interpret=True,
+    )(q, k_pages, v_pages, block_tables, lens)

@@ -1,0 +1,102 @@
+"""Pallas chunked-prefill flash-attention kernel.
+
+This is the §5.1 CPP chunk's compute hot-spot: a chunk of S queries at
+global offset `q_start` attends causally over the full per-request cache
+(reused prefix + the chunk's freshly written K/V).  The grid tiles queries
+(BQ) x cache (BK); the cache streams HBM->VMEM one block per step, which
+is the TPU expression of the paper's layer-wise load/compute overlap
+(§5.2) — the next KV block is fetched while the MXU contracts the current
+one.  Online softmax in VMEM scratch persists across the kv-block grid
+dimension (the minor, sequential one).
+
+interpret=True for CPU-PJRT execution; see decode_attention.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, group):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # [BQ, nh, hd]
+    k = k_ref[...].astype(jnp.float32)  # [BK, kvh, hd]
+    v = v_ref[...].astype(jnp.float32)
+    nh, hd = q.shape[1], q.shape[2]
+    k = jnp.repeat(k, group, axis=1)  # [BK, nh, hd]
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("qnd,knd->qnk", q, k, preferred_element_type=jnp.float32) * scale
+
+    # Causal mask in *global* positions: query row i*BQ+r sits at
+    # q_start + i*BQ + r and may attend to cache cols <= its own position.
+    q_start = start_ref[0]
+    qpos = q_start + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1, bk), 0)
+    kvpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, 1, bk), 2)
+    mask = kvpos <= qpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :, None]          # [BQ, nh, 1]
+    m_cur = jnp.max(s, axis=2, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)          # [BQ, nh, 1]
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = alpha[..., 0] * l_ref[...] + jnp.sum(p, axis=2)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum(
+        "qnk,knd->qnd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new[..., 0]
+    l_ref[...] = l_new
+
+    @pl.when(j == nblk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)[:, :, None]
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(q, k, v, q_start, *, block_q: int = 64, block_k: int = 128):
+    """Chunked causal prefill attention.  See `ref.prefill_attention_ref`.
+
+    q: [S, nh, hd]; k, v: [C, kvh, hd]; q_start: [1] int32.
+    Cache positions > q_start+S-1 are masked by causality alone, so no
+    kv_len operand is needed (the chunk's own K/V are the newest entries).
+    """
+    S, nh, hd = q.shape
+    C, kvh = k.shape[0], k.shape[1]
+    bq = min(block_q, S)
+    assert S % bq == 0 and C % block_k == 0, (S, bq, C, block_k)
+    group = nh // kvh
+    grid = (S // bq, C // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=block_k, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bq, nh, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_k, kvh, hd), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_k, kvh, hd), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, nh, hd), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, nh, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, nh), jnp.float32),
+            pltpu.VMEM((bq, nh), jnp.float32),
+            pltpu.VMEM((bq, nh, hd), jnp.float32),
+        ],
+        interpret=True,
+    )(q_start, q, k, v)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float32 tolerance across the shape/dtype sweep in
+`python/tests/`.  They are written for clarity, not speed.
+"""
+
+import jax.numpy as jnp
+
+
+def repeat_kv(x, group: int):
+    """[..., kvh, hd] -> [..., kvh*group, hd] by repeating each KV head."""
+    return jnp.repeat(x, group, axis=-2)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Single-token (decode-step) attention over a contiguous cache.
+
+    q:    [B, nh, hd]   query for the new token of each sequence
+    k, v: [B, C, kvh, hd]   per-slot KVCache (positions >= lens are junk)
+    lens: [B] int32     valid cache length per slot (>= 1)
+    returns [B, nh, hd]
+    """
+    B, nh, hd = q.shape
+    kvh = k.shape[2]
+    group = nh // kvh
+    kr = repeat_kv(k, group)  # [B, C, nh, hd]
+    vr = repeat_kv(v, group)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # [B, nh, C]
+    s = jnp.einsum("bnd,bcnd->bnc", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    pos = jnp.arange(k.shape[1])[None, None, :]
+    s = jnp.where(pos < lens[:, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bnc,bcnd->bnd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v, q_start, kv_len):
+    """Causal chunked-prefill attention.
+
+    The chunk's queries live at global positions q_start..q_start+S-1 and
+    attend to all cache positions j <= their own position (the cache holds
+    the reused prefix plus this chunk's freshly-written K/V).
+
+    q:    [S, nh, hd]
+    k, v: [C, kvh, hd]
+    q_start: scalar int32 (global offset of q[0])
+    kv_len:  scalar int32 (valid cache positions; >= q_start + S)
+    returns [S, nh, hd]
+    """
+    S, nh, hd = q.shape
+    kvh = k.shape[1]
+    group = nh // kvh
+    kr = repeat_kv(k, group)  # [C, nh, hd]
+    vr = repeat_kv(v, group)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("snd,cnd->snc", q.astype(jnp.float32), kr.astype(jnp.float32)) * scale
+    qpos = q_start + jnp.arange(S)[:, None, None]
+    cpos = jnp.arange(k.shape[0])[None, None, :]
+    mask = (cpos <= qpos) & (cpos < kv_len)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("snc,cnd->snd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lens):
+    """Decode attention over a paged KVCache.
+
+    q:            [B, nh, hd]
+    k/v_pages:    [NP, PS, kvh, hd]   global page pool
+    block_tables: [B, MB] int32       page ids per sequence (row-major)
+    lens:         [B] int32           valid tokens per sequence
+    returns [B, nh, hd]
+    """
+    B = q.shape[0]
+    MB = block_tables.shape[1]
+    PS = k_pages.shape[1]
+    # Gather each sequence's pages into a contiguous [B, MB*PS, kvh, hd] view.
+    k = k_pages[block_tables].reshape(B, MB * PS, *k_pages.shape[2:])
+    v = v_pages[block_tables].reshape(B, MB * PS, *v_pages.shape[2:])
+    return decode_attention_ref(q, k, v, lens)

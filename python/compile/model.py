@@ -1,0 +1,163 @@
+"""L2: the dummy-model forward passes (prefill / decode-step) in JAX.
+
+LLaMA-architecture decoder (RMSNorm, RoPE, GQA, SwiGLU) over a contiguous
+per-slot KVCache, calling the L1 Pallas kernels for attention.  Two entry
+points are AOT-lowered per shape bucket (see aot.py):
+
+  prefill_step(params, tokens[S], kv[L,2,C,kvh,hd], start[1], n_valid[1])
+      -> (last_logits[V], kv_out)
+  decode_step(params, tokens[B], kv[B,L,2,C,kvh,hd], positions[B])
+      -> (logits[B,V], kv_out)
+
+Semantics the Rust engine relies on:
+  * prefill writes the chunk's K/V at cache positions [start, start+S) and
+    returns the logits of query row n_valid-1 (rows >= n_valid are padding;
+    their K/V are junk in the cache but are either overwritten by the next
+    chunk — which starts at start+n_valid — or masked at decode time by
+    `positions`).
+  * decode appends one token per slot at cache position `positions[b]` and
+    attends over positions < positions[b]+1.  Inactive batch slots simply
+    carry junk that the engine ignores.
+
+Weights are *inputs* (not baked constants) so every artifact stays small
+and shares one `weights.npz`; see ModelConfig.param_specs for the ABI.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import decode_attention, prefill_attention
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    """LLaMA RMSNorm over the trailing feature axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x, positions, base: float):
+    """Rotary embedding.  x: [..., T, H, hd]; positions broadcast to [..., T]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # [..., T, 1, half]
+    angles = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def unpack_params(cfg: ModelConfig, flat):
+    """Flat tuple (param_specs order) -> nested dict."""
+    # Names are "p{idx:03d}_{name}"; strip the index prefix.
+    d = {n.split("_", 1)[1]: arr for (n, _), arr in zip(cfg.param_specs(), flat)}
+
+    def layer(i):
+        prefix = f"l{i}_"
+        return {k[len(prefix):]: v for k, v in d.items() if k.startswith(prefix)}
+
+    return {
+        "tok_emb": d["tok_emb"],
+        "layers": [layer(i) for i in range(cfg.n_layers)],
+        "final_norm": d["final_norm"],
+        "lm_head": d["lm_head"],
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Synthetic dummy-model weights (the paper also serves a dummy model)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            out.append(0.05 * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention + MLP blocks
+
+
+def _mlp(p, x):
+    gate = jax.nn.silu(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _qkv(cfg, p, x, positions):
+    """x: [..., T, d] -> q [..., T, nh, hd], k/v [..., T, kvh, hd] (roped)."""
+    lead = x.shape[:-1]
+    q = (x @ p["wq"]).reshape(*lead, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(*lead, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(*lead, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_base)
+    k = rope(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+
+
+def prefill_step(cfg: ModelConfig, params_flat, tokens, kv, start, n_valid):
+    """One CPP chunk of prefill.  Shapes in the module docstring."""
+    p = unpack_params(cfg, params_flat)
+    S = tokens.shape[0]
+    s0 = start[0]
+    positions = s0 + jnp.arange(S, dtype=jnp.int32)  # [S]
+    x = p["tok_emb"][tokens]  # [S, d]
+
+    for li, lp in enumerate(p["layers"]):
+        h = rms_norm(x, lp["attn_norm"])
+        q, k, v = _qkv(cfg, lp, h, positions)
+        # Write this chunk's K/V into the cache at [start, start+S).
+        kv = jax.lax.dynamic_update_slice(kv, k[None, None], (li, 0, s0, 0, 0))
+        kv = jax.lax.dynamic_update_slice(kv, v[None, None], (li, 1, s0, 0, 0))
+        attn = prefill_attention(q, kv[li, 0], kv[li, 1], start)
+        x = x + attn.reshape(S, -1) @ lp["wo"]
+        x = x + _mlp(lp, rms_norm(x, lp["mlp_norm"]))
+
+    x = rms_norm(x, p["final_norm"])
+    # Logits of the last *valid* row (rows past n_valid are padding).
+    last = jax.lax.dynamic_slice(x, (n_valid[0] - 1, 0), (1, cfg.d_model))[0]
+    return last @ p["lm_head"], kv
+
+
+def decode_step(cfg: ModelConfig, params_flat, tokens, kv, positions):
+    """One continuous-batching decode iteration over B slots."""
+    p = unpack_params(cfg, params_flat)
+    B = tokens.shape[0]
+    x = p["tok_emb"][tokens]  # [B, d]
+
+    def write(cache_bl, val, pos):
+        # cache_bl: [C, kvh, hd]; val: [kvh, hd] — insert at `pos`.
+        return jax.lax.dynamic_update_slice(cache_bl, val[None], (pos, 0, 0))
+
+    for li, lp in enumerate(p["layers"]):
+        h = rms_norm(x, lp["attn_norm"])
+        q, k, v = _qkv(cfg, lp, h, positions)  # q: [B, nh, hd]; k/v: [B, kvh, hd]
+        kc = jax.vmap(write)(kv[:, li, 0], k, positions)  # [B, C, kvh, hd]
+        vc = jax.vmap(write)(kv[:, li, 1], v, positions)
+        kv = kv.at[:, li, 0].set(kc)
+        kv = kv.at[:, li, 1].set(vc)
+        attn = decode_attention(q, kc, vc, positions + 1)
+        x = x + attn.reshape(B, -1) @ lp["wo"]
+        x = x + _mlp(lp, rms_norm(x, lp["mlp_norm"]))
+
+    x = rms_norm(x, p["final_norm"])
+    return x @ p["lm_head"], kv
+
+
+def kv_shape(cfg: ModelConfig, batch: int | None = None):
+    """Canonical KVCache tensor shape (leading batch dim optional)."""
+    base = (cfg.n_layers, 2, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim)
+    return base if batch is None else (batch, *base)

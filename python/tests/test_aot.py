@@ -1,0 +1,53 @@
+"""AOT path: HLO text emission and manifest integrity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.config import TINY as cfg
+from compile import aot
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_prefill_lowers_to_hlo_text():
+    text = aot.lower_prefill(cfg, cfg.prefill_buckets[0])
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Weights are inputs, not constants: the param count must show up.
+    nparams = len(cfg.param_specs())
+    assert f"parameter({nparams})" in text or f"parameter({nparams + 1})" in text
+
+
+def test_decode_lowers_to_hlo_text():
+    text = aot.lower_decode(cfg, cfg.decode_buckets[0])
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_config():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["d_model"] == cfg.d_model
+    assert man["model"]["n_layers"] == cfg.n_layers
+    assert man["prefill_buckets"] == list(cfg.prefill_buckets)
+    assert man["decode_buckets"] == list(cfg.decode_buckets)
+    for key, fname in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, fname)), (key, fname)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "weights.npz")),
+                    reason="artifacts not built")
+def test_weights_npz_abi():
+    """npz member names must sort in param_specs order (the Rust ABI)."""
+    with np.load(os.path.join(ARTIFACTS, "weights.npz")) as z:
+        names = sorted(z.files)
+        specs = cfg.param_specs()
+        assert names == [n for n, _ in specs]
+        for name, shape in specs:
+            assert z[name].shape == tuple(shape), name
+            assert z[name].dtype == np.float32

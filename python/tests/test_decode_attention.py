@@ -1,0 +1,83 @@
+"""L1 decode_attention kernel vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention
+from compile.kernels.ref import decode_attention_ref
+
+
+def _mk(rng, B, nh, kvh, hd, C, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(B, nh, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, C, kvh, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, C, kvh, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize("C,bk", [(128, 128), (256, 128), (512, 64)])
+def test_matches_ref(B, C, bk):
+    rng = np.random.default_rng(0)
+    q, k, v = _mk(rng, B, 4, 2, 32, C)
+    lens = jnp.asarray(rng.integers(1, C + 1, size=(B,)), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=bk)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_len_one():
+    """A single valid cache entry: output must equal v[0] exactly-ish."""
+    rng = np.random.default_rng(1)
+    q, k, v = _mk(rng, 2, 4, 2, 32, 128)
+    lens = jnp.asarray([1, 1], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    # softmax over one element is the identity: out == repeated v[:, 0]
+    vr = jnp.repeat(v[:, 0], 2, axis=-2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vr), rtol=1e-5, atol=1e-5)
+
+
+def test_junk_beyond_len_is_ignored():
+    rng = np.random.default_rng(2)
+    q, k, v = _mk(rng, 2, 4, 2, 32, 256)
+    lens = jnp.asarray([100, 37], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    # Poison the invalid region; output must not change.
+    k2 = k.at[0, 100:].set(1e9).at[1, 37:].set(-1e9)
+    v2 = v.at[0, 100:].set(1e9).at[1, 37:].set(-1e9)
+    out2 = decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+
+def test_mha_no_gqa():
+    """kvh == nh (no grouping) must also work."""
+    rng = np.random.default_rng(3)
+    q, k, v = _mk(rng, 2, 4, 4, 16, 128)
+    lens = jnp.asarray([64, 128], jnp.int32)
+    out = decode_attention(q, k, v, lens)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 4),
+    nh_mult=st.integers(1, 4),
+    kvh=st.sampled_from([1, 2]),
+    hd=st.sampled_from([8, 16, 32]),
+    cblk=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(B, nh_mult, kvh, hd, cblk, seed):
+    """Property: kernel == oracle for arbitrary GQA shapes and lengths."""
+    rng = np.random.default_rng(seed)
+    nh = kvh * nh_mult
+    C = 64 * cblk
+    q, k, v = _mk(rng, B, nh, kvh, hd, C)
+    lens = jnp.asarray(rng.integers(1, C + 1, size=(B,)), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=64)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)

@@ -1,0 +1,82 @@
+//! Ablations over Mooncake's design knobs (beyond the paper's figures):
+//!
+//! 1. `kvcache_balancing_threshold` (Algorithm 1 line 8 / footnote 1:
+//!    "currently adjusted manually") — sweep the local-vs-remote tradeoff.
+//! 2. `prefill_chunk` (§5.1: "typically larger than 1000 tokens").
+//! 3. CPP group size (§5.1) on a long-context workload.
+//! 4. Per-instance cache capacity (the DRAM pool sizing question of §6.2).
+
+use mooncake::bench_util::{banner, fmt, row};
+use mooncake::config::{SimConfig, SloConfig};
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+
+fn main() {
+    let trace = gen::generate(&TraceGenConfig { n_requests: 4_000, ..Default::default() });
+
+    banner("Ablation 1: kvcache_balancing_threshold (8P+8D, 2x)");
+    row(&["threshold".into(), "mean_TTFT_ms".into(), "fetches".into(), "reused_blocks".into()]);
+    let mut ttfts = Vec::new();
+    for thr in [1.0, 2.0, 4.0, 8.0, 1e9] {
+        let cfg = SimConfig { kvcache_balancing_threshold: thr, ..Default::default() };
+        let res = sim::run(&cfg, &trace, 2.0);
+        let rep = res.report(&cfg);
+        row(&[
+            if thr > 1e8 { "inf".into() } else { fmt(thr, 1) },
+            fmt(rep.ttft_mean, 0),
+            res.conductor.remote_fetches.to_string(),
+            res.conductor.reused_blocks.to_string(),
+        ]);
+        ttfts.push((thr, rep.ttft_mean, res.conductor.remote_fetches));
+    }
+    // Higher thresholds prefer local recompute: fetch volume must be
+    // monotone non-increasing in the threshold.  (Even at thr=inf a
+    // zero-local-match instance still fetches — ratio is infinite.)
+    assert!(ttfts[0].2 > 0, "threshold 1.0 must fetch");
+    assert!(
+        ttfts.last().unwrap().2 <= ttfts[0].2,
+        "fetches must not grow with the threshold"
+    );
+
+    banner("Ablation 2: prefill_chunk (long-context 64k workload)");
+    let long = gen::dataset("sim64k", 120, 0.2, 3);
+    let slo = SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 };
+    row(&["chunk_tokens".into(), "mean_TTFT_ms".into()]);
+    for chunk in [1_024u64, 4_096, 8_192, 16_384, 65_536] {
+        let cfg = SimConfig { prefill_chunk: chunk, n_prefill: 4, n_decode: 2, slo, ..Default::default() };
+        let rep = sim::run(&cfg, &long, 1.0).report(&cfg);
+        row(&[chunk.to_string(), fmt(rep.ttft_mean, 0)]);
+    }
+
+    banner("Ablation 3: CPP group size (128k inputs)");
+    let xl = gen::dataset("sim128k", 60, 0.05, 5);
+    row(&["cpp_group_max".into(), "mean_TTFT_ms".into()]);
+    let mut cpp = Vec::new();
+    for g in [1u64, 2, 4, 8] {
+        let cfg = SimConfig { cpp_group_max: g, n_prefill: 8, n_decode: 2, slo, ..Default::default() };
+        let rep = sim::run(&cfg, &xl, 1.0).report(&cfg);
+        row(&[g.to_string(), fmt(rep.ttft_mean, 0)]);
+        cpp.push(rep.ttft_mean);
+    }
+    assert!(cpp[2] < cpp[0] * 0.7, "CPP(4) must cut 128k TTFT vs single node");
+
+    banner("Ablation 4: per-instance cache capacity (blocks)");
+    row(&["capacity".into(), "mean_TTFT_ms".into(), "reused_blocks".into()]);
+    let mut caps = Vec::new();
+    for cap in [Some(500usize), Some(5_000), Some(50_000), None] {
+        let cfg = SimConfig { cache_capacity_blocks: cap, ..Default::default() };
+        let res = sim::run(&cfg, &trace, 2.0);
+        let rep = res.report(&cfg);
+        row(&[
+            cap.map(|c| c.to_string()).unwrap_or("inf".into()),
+            fmt(rep.ttft_mean, 0),
+            res.conductor.reused_blocks.to_string(),
+        ]);
+        caps.push((rep.ttft_mean, res.conductor.reused_blocks));
+    }
+    assert!(
+        caps.last().unwrap().1 >= caps[0].1,
+        "bigger caches must not reuse fewer blocks"
+    );
+    println!("\nablation shape checks OK");
+}

@@ -1,0 +1,101 @@
+//! Fig 11 — end-to-end comparison on public datasets (ArXiv Summarization
+//! and L-Eval): Mooncake-[3P+1D] and Mooncake-[2P+2D] vs vLLM-[4M],
+//! sweeping RPS and reporting P90 TTFT / P90 TBT normalized against the
+//! SLO thresholds (×10 and ×5 of the unloaded baseline, §8.1).
+//!
+//! Paper: Mooncake-[3P+1D] sustains ~20% (ArXiv) and ~40% (L-Eval) higher
+//! RPS than vLLM-[4M] within both SLOs; L-Eval benefits further from
+//! prefix caching.
+
+use mooncake::baseline::{self, VllmConfig};
+use mooncake::bench_util::{banner, fmt, row};
+use mooncake::config::{SimConfig, SloConfig};
+use mooncake::model::PerfModel;
+use mooncake::sim;
+use mooncake::trace::gen;
+
+struct Setup {
+    name: &'static str,
+    mean_in: u64,
+}
+
+fn slo_for(perf: &PerfModel, mean_in: u64) -> SloConfig {
+    // Unloaded single-request baselines (§8.1 Metric).
+    let ttft_base = perf.prefill_ms(mean_in, 0);
+    let tbt_base = perf.decode_step_ms(1, mean_in);
+    SloConfig { ttft_ms: 10.0 * ttft_base, tbt_ms: 5.0 * tbt_base }
+}
+
+fn max_rps_under_slo(name: &str, dataset: &str, slo: SloConfig, rps_grid: &[f64], n: usize) -> f64 {
+    let mut best = 0.0f64;
+    for &rps in rps_grid {
+        let trace = gen::dataset(dataset, n, rps, 11);
+        let (ttft_p90, tbt_p90, attain) = match name {
+            "vLLM-[4M]" => {
+                let cfg = VllmConfig { n_instances: 4, slo, ..Default::default() };
+                let rep = baseline::run(&cfg, &trace, 1.0);
+                (rep.ttft_p90, rep.tbt_p90, rep.slo_attainment)
+            }
+            _ => {
+                let (p, d) = if name.contains("3P+1D") { (3, 1) } else { (2, 2) };
+                let cfg = SimConfig { n_prefill: p, n_decode: d, slo, ..Default::default() };
+                let rep = sim::run(&cfg, &trace, 1.0).report(&cfg);
+                (rep.ttft_p90, rep.tbt_p90, rep.slo_attainment)
+            }
+        };
+        row(&[
+            name.into(),
+            fmt(rps, 2),
+            fmt(ttft_p90 / slo.ttft_ms, 2),
+            fmt(tbt_p90 / slo.tbt_ms, 2),
+            fmt(attain, 2),
+        ]);
+        // Sustained = P90s inside SLO *and* >=90% of requests actually
+        // served within SLO (Mooncake's 429s must not count as capacity).
+        if ttft_p90 <= slo.ttft_ms && tbt_p90 <= slo.tbt_ms && attain >= 0.9 {
+            best = best.max(rps);
+        }
+    }
+    best
+}
+
+fn main() {
+    let perf = PerfModel::paper();
+    let setups = [
+        Setup { name: "arxiv", mean_in: 8_088 },
+        Setup { name: "leval", mean_in: 19_019 },
+    ];
+    let systems = ["vLLM-[4M]", "Mooncake-[3P+1D]", "Mooncake-[2P+2D]"];
+    let rps_grid = [0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0];
+
+    let mut winners = Vec::new();
+    for s in &setups {
+        let slo = slo_for(&perf, s.mean_in);
+        banner(&format!(
+            "Fig 11: {} (SLO: TTFT {:.0} ms, TBT {:.0} ms)",
+            s.name, slo.ttft_ms, slo.tbt_ms
+        ));
+        row(&["system".into(), "rps".into(), "P90_TTFT/SLO".into(), "P90_TBT/SLO".into(), "attain".into()]);
+        let mut per_system = Vec::new();
+        for sys in systems {
+            let best = max_rps_under_slo(sys, s.name, slo, &rps_grid, 300);
+            per_system.push((sys, best));
+        }
+        println!("max RPS under both SLOs:");
+        for (sys, best) in &per_system {
+            println!("  {sys:18} {best:.2} rps");
+        }
+        winners.push((s.name, per_system));
+    }
+
+    // Shape checks: Mooncake-[3P+1D] must beat vLLM on both datasets.
+    for (ds, per_system) in &winners {
+        let vllm = per_system.iter().find(|x| x.0.contains("vLLM")).unwrap().1;
+        let mc = per_system.iter().find(|x| x.0.contains("3P+1D")).unwrap().1;
+        assert!(
+            mc >= vllm,
+            "{ds}: Mooncake-[3P+1D] ({mc}) must sustain >= vLLM ({vllm}) rps"
+        );
+    }
+    println!("\nfig11 shape checks OK");
+}

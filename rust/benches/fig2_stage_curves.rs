@@ -1,0 +1,46 @@
+//! Fig 2 — normalized throughput and latency of the prefill and decoding
+//! stages for the dummy LLaMA2-70B model.
+//!
+//! Left: prefill latency vs sequence length (superlinear) and throughput
+//! (tokens/s, peaking then falling as attention dominates).
+//! Right: decode latency vs batch size (grows) and throughput
+//! (sublinear growth — memory-bound).
+
+use mooncake::bench_util::{banner, fmt, row};
+use mooncake::model::PerfModel;
+
+fn main() {
+    let perf = PerfModel::paper();
+
+    banner("Fig 2 (left): prefill stage vs sequence length");
+    row(&["seq_len".into(), "latency_ms".into(), "tok_per_s".into(), "norm_latency".into()]);
+    let base = perf.prefill_ms(1_000, 0);
+    for n in [1_000u64, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000, 128_000] {
+        let ms = perf.prefill_ms(n, 0);
+        row(&[
+            n.to_string(),
+            fmt(ms, 1),
+            fmt(n as f64 / ms * 1e3, 0),
+            fmt(ms / base, 2),
+        ]);
+    }
+
+    banner("Fig 2 (right): decoding stage vs batch size (ctx 4k/seq)");
+    row(&["batch".into(), "step_ms".into(), "tok_per_s".into(), "norm_throughput".into()]);
+    let t1 = perf.decode_step_ms(1, 4_000);
+    let thru1 = 1.0 / t1 * 1e3;
+    for b in [1u64, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let ms = perf.decode_step_ms(b, b * 4_000);
+        let thru = b as f64 / ms * 1e3;
+        row(&[b.to_string(), fmt(ms, 2), fmt(thru, 0), fmt(thru / thru1, 2)]);
+    }
+
+    // Shape assertions (the figure's qualitative content).
+    let lat64k = perf.prefill_ms(64_000, 0);
+    let lat8k = perf.prefill_ms(8_000, 0);
+    assert!(lat64k > 8.0 * lat8k, "prefill must be superlinear");
+    let thru256 = 256.0 / perf.decode_step_ms(256, 256 * 4_000);
+    let thru16 = 16.0 / perf.decode_step_ms(16, 16 * 4_000);
+    assert!(thru256 > thru16 && thru256 < 16.0 * thru16, "decode throughput sublinear");
+    println!("\nfig2 shape checks OK");
+}

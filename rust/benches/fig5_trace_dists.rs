@@ -1,0 +1,37 @@
+//! Fig 5 — input and output length distributions of the request trace.
+//! Paper: avg input 7,590 tokens, avg output 182 tokens (ratio ~42:1).
+
+use mooncake::bench_util::{banner, fmt, row};
+use mooncake::trace::gen::{generate, TraceGenConfig};
+use mooncake::trace::stats::{length_histograms, summarize};
+
+fn main() {
+    let trace = generate(&TraceGenConfig::default());
+    let s = summarize(&trace);
+
+    banner("Fig 5: trace length distributions");
+    println!("requests: {}", s.n_requests);
+    println!("mean input length:  {:.0} tokens (paper: 7,590)", s.mean_input);
+    println!("mean output length: {:.0} tokens (paper: 182)", s.mean_output);
+
+    let (hin, hout) = length_histograms(&trace, 24);
+    println!("\ninput length histogram:");
+    row(&["mid_tokens".into(), "fraction".into()]);
+    for (mid, frac) in hin.normalized() {
+        if frac > 0.001 {
+            row(&[fmt(mid, 0), fmt(frac, 4)]);
+        }
+    }
+    println!("\noutput length histogram:");
+    row(&["mid_tokens".into(), "fraction".into()]);
+    for (mid, frac) in hout.normalized() {
+        if frac > 0.001 {
+            row(&[fmt(mid, 0), fmt(frac, 4)]);
+        }
+    }
+
+    assert!((s.mean_input / 7_590.0 - 1.0).abs() < 0.35, "input mean calibration");
+    assert!((s.mean_output / 182.0 - 1.0).abs() < 0.35, "output mean calibration");
+    assert!(s.mean_input / s.mean_output > 20.0, "long-context input/output skew");
+    println!("\nfig5 calibration checks OK");
+}

@@ -1,0 +1,50 @@
+//! L3 hot-path micro-benchmarks (the §Perf targets): Algorithm 1
+//! scheduling latency, prefix matching, eviction ops, and end-to-end
+//! simulator event throughput.  The paper notes TTFT estimation "is
+//! computed in parallel, rendering the processing time negligible
+//! compared to the inference time" — Conductor must stay out of the way.
+
+use mooncake::bench_util::{banner, bench};
+use mooncake::config::SimConfig;
+use mooncake::kvcache::{CachePool, PolicyKind};
+use mooncake::sim;
+use mooncake::trace::gen::{generate, TraceGenConfig};
+
+fn main() {
+    banner("hot-path micro-benchmarks");
+
+    // Prefix matching over a warm pool.
+    let mut pool = CachePool::new(PolicyKind::Lru, Some(100_000));
+    for chain in 0..2_000u64 {
+        let blocks: Vec<u64> = (chain * 40..chain * 40 + 30).collect();
+        pool.admit_chain(&blocks, chain as f64);
+    }
+    let probe: Vec<u64> = (40_000..40_030).collect();
+    bench("prefix_match_blocks (30-block chain)", 100, 10_000, || {
+        std::hint::black_box(pool.prefix_match_blocks(&probe));
+    })
+    .print();
+
+    // Eviction-policy churn.
+    let mut lru = CachePool::new(PolicyKind::Lru, Some(10_000));
+    let mut i = 0u64;
+    bench("cache admit_chain under eviction (15 blocks)", 100, 10_000, || {
+        let blocks: Vec<u64> = (i * 15..i * 15 + 15).collect();
+        lru.admit_chain(&blocks, i as f64);
+        i += 1;
+    })
+    .print();
+
+    // Full simulator throughput: events/sec over a 2k-request replay.
+    let trace = generate(&TraceGenConfig { n_requests: 2_000, ..Default::default() });
+    let cfg = SimConfig::default();
+    let s = bench("sim replay 2k requests (8P+8D)", 1, 5, || {
+        std::hint::black_box(sim::run(&cfg, &trace, 2.0));
+    });
+    s.print();
+    let total_tokens: u64 = trace.iter().map(|r| r.output_length).sum();
+    println!(
+        "  -> {:.0} simulated decode tokens/ms of wall time",
+        total_tokens as f64 / s.mean_ms
+    );
+}

@@ -1,0 +1,82 @@
+//! Table 3 — number of requests rejected under the overloaded-scenario
+//! experiment: 8 prefill + 8 decode instances, real trace replayed at 2x.
+//!
+//! Paper: Baseline 4,183 > Early Rejection 3,771 > Early Rejection based
+//! on Prediction 3,589 — early/predictive rejection wastes less prefill
+//! and therefore completes more requests.
+
+use mooncake::bench_util::{banner, fmt, row};
+use mooncake::config::{RejectionPolicy, SimConfig};
+use mooncake::metrics::Outcome;
+use mooncake::sim;
+use mooncake::trace::gen::{generate, TraceGenConfig};
+
+fn main() {
+    let trace = generate(&TraceGenConfig::default()); // 23,608 requests
+    // Decode concurrency is capped at 16 sequences/instance: the paper's
+    // engine bounds batch size so peak long-context batches stay inside
+    // the TBT SLO; our analytic decode model is otherwise optimistic
+    // enough that the 2x replay never contends (see EXPERIMENTS.md).
+    let mk = |rej| SimConfig {
+        rejection: rej,
+        max_decode_batch: 16,
+        ..SimConfig::cluster_8p8d()
+    };
+
+    banner("Table 3: rejected requests (8P+8D, 2x overload replay)");
+    row(&[
+        "policy".into(),
+        "rejected_total".into(),
+        "rejected_after_prefill".into(),
+        "wasted_prefill_tokens".into(),
+        "completed".into(),
+    ]);
+
+    let mut rejected = Vec::new();
+    for (name, rej) in [
+        ("baseline", RejectionPolicy::Baseline),
+        ("early-rejection", RejectionPolicy::Early),
+        ("predictive", RejectionPolicy::Predictive),
+    ] {
+        let cfg = mk(rej);
+        let res = sim::run(&cfg, &trace, 2.0);
+        let rep = res.report(&cfg);
+        let total_rejected = res
+            .metrics
+            .iter()
+            .filter(|m| m.outcome != Outcome::Completed)
+            .count();
+        row(&[
+            name.into(),
+            total_rejected.to_string(),
+            rep.n_rejected_after_prefill.to_string(),
+            rep.wasted_prefill_tokens.to_string(),
+            rep.n_completed.to_string(),
+        ]);
+        rejected.push((name, total_rejected, rep.n_rejected_after_prefill, rep.n_completed));
+    }
+
+    // Shape checks: who wins, and why.
+    let base = rejected[0];
+    let early = rejected[1];
+    let pred = rejected[2];
+    assert!(
+        base.2 > early.2,
+        "baseline must waste more prefills: {} vs {}",
+        base.2,
+        early.2
+    );
+    assert!(
+        early.1 <= base.1 && pred.1 <= base.1,
+        "early/predictive must reject no more than baseline ({} {} vs {})",
+        early.1,
+        pred.1,
+        base.1
+    );
+    assert!(pred.3 >= base.3, "prediction must complete at least as many requests");
+    println!(
+        "\ntable3 shape checks OK (rejected: baseline {} > early {} >= predictive {})",
+        base.1, early.1, pred.1
+    );
+    let _ = fmt(0.0, 0);
+}

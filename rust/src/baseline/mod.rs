@@ -1,0 +1,294 @@
+//! vLLM-like *coupled* serving baseline (§8's comparison system).
+//!
+//! Each instance runs prefill and decode on the same GPUs with continuous
+//! batching: at every iteration boundary the engine either (a) runs the
+//! prefill of the next queued request as an exclusive iteration — during
+//! which every decoding sequence stalls (the long-context TBT spikes the
+//! paper observes in vLLM) — or (b) runs one decode step for the active
+//! batch.  Dispatch across the M instances is least-loaded.
+//!
+//! No disaggregation, no KVCache transfer, no prefix reuse (the paper
+//! notes open-source vLLM's caching is local-only; its end-to-end
+//! baseline runs without Mooncake's global pool).
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::SloConfig;
+use crate::decode::DecodeInstance;
+use crate::metrics::{self, Outcome, RequestMetrics};
+use crate::model::PerfModel;
+use crate::sim::Request;
+use crate::trace::TraceRecord;
+use crate::{RequestId, TimeMs};
+
+#[derive(Debug, Clone)]
+pub struct VllmConfig {
+    pub n_instances: usize,
+    pub max_batch: usize,
+    pub slo: SloConfig,
+    /// §8.1.2: long-context experiments run vLLM "individually, rather
+    /// than in batches" — cap concurrent decodes at 1 when set.
+    pub serial_mode: bool,
+}
+
+impl Default for VllmConfig {
+    fn default() -> Self {
+        VllmConfig {
+            n_instances: 4,
+            max_batch: 128,
+            slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
+            serial_mode: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Instance {
+    decode: DecodeInstance,
+    prefill_queue: VecDeque<(RequestId, u64, u64, TimeMs)>, // rid, in, out, arrival
+    /// In an exclusive prefill iteration until this time (if > now).
+    iterating: bool,
+    seq: u64,
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    Arrival(usize),
+    /// End of an iteration (prefill or decode) on an instance.
+    IterEnd { inst: usize, seq: u64, kind: IterKind },
+}
+
+#[derive(Debug, Clone)]
+enum IterKind {
+    Prefill { rid: RequestId, dur: f64 },
+    Decode { dur: f64 },
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    t: TimeMs,
+    order: u64,
+    ev: Ev,
+}
+impl PartialEq for Event {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.order == o.order
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, o: &Self) -> Ordering {
+        o.t.total_cmp(&self.t).then_with(|| o.order.cmp(&self.order))
+    }
+}
+
+pub struct VllmSim {
+    #[allow(dead_code)]
+    cfg: VllmConfig,
+    perf: PerfModel,
+    instances: Vec<Instance>,
+    events: BinaryHeap<Event>,
+    order: u64,
+    pending: std::collections::HashMap<RequestId, (TimeMs, u64, u64, f64)>,
+    metrics: Vec<RequestMetrics>,
+}
+
+impl VllmSim {
+    pub fn new(cfg: VllmConfig) -> Self {
+        let perf = PerfModel::paper();
+        let max_batch = if cfg.serial_mode { 1 } else { cfg.max_batch };
+        let instances = (0..cfg.n_instances)
+            .map(|_| Instance {
+                decode: DecodeInstance::new(perf.vram_kv_capacity_tokens(), max_batch),
+                prefill_queue: VecDeque::new(),
+                iterating: false,
+                seq: 0,
+            })
+            .collect();
+        VllmSim {
+            cfg,
+            perf,
+            instances,
+            events: BinaryHeap::new(),
+            order: 0,
+            pending: std::collections::HashMap::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, t: TimeMs, ev: Ev) {
+        self.order += 1;
+        self.events.push(Event { t, order: self.order, ev });
+    }
+
+    /// Start the next iteration on an instance, if any work exists.
+    /// Prefill-first matches vLLM's default scheduler.
+    fn kick(&mut self, i: usize, now: TimeMs) {
+        if self.instances[i].iterating {
+            return;
+        }
+        // Admit decoded-waiting first so batch state is current.
+        self.instances[i].decode.admit_waiting();
+        let inst = &mut self.instances[i];
+        inst.seq += 1;
+        let seq = inst.seq;
+        if let Some(&(rid, input, _out, _arr)) = inst.prefill_queue.front() {
+            // VRAM check: prefill KV must fit beside the active batch.
+            let fits = inst.decode.kv_tokens() + input <= inst.decode.kv_capacity_tokens;
+            if fits {
+                inst.prefill_queue.pop_front();
+                inst.iterating = true;
+                let dur = self.perf.prefill_ms(input, 0);
+                self.push(now + dur, Ev::IterEnd { inst: i, seq, kind: IterKind::Prefill { rid, dur } });
+                return;
+            }
+        }
+        if !inst.decode.active.is_empty() {
+            inst.iterating = true;
+            let dur = inst.decode.step_duration_ms(&self.perf);
+            self.push(now + dur, Ev::IterEnd { inst: i, seq, kind: IterKind::Decode { dur } });
+        }
+    }
+
+    pub fn run(mut self, trace: &[TraceRecord], speedup: f64) -> (Vec<RequestMetrics>, TimeMs) {
+        let requests: Vec<Request> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut q = Request::from_trace(i as RequestId, r);
+                q.arrival /= speedup;
+                q
+            })
+            .collect();
+        for (i, r) in requests.iter().enumerate() {
+            self.push(r.arrival, Ev::Arrival(i));
+        }
+
+        let mut now = 0.0;
+        while let Some(Event { t, ev, .. }) = self.events.pop() {
+            now = t;
+            match ev {
+                Ev::Arrival(idx) => {
+                    let r = &requests[idx];
+                    // Least-loaded dispatch (active + queued).
+                    let i = (0..self.instances.len())
+                        .min_by_key(|&i| {
+                            let inst = &self.instances[i];
+                            inst.decode.active.len()
+                                + inst.decode.waiting.len()
+                                + inst.prefill_queue.len()
+                        })
+                        .unwrap();
+                    self.instances[i]
+                        .prefill_queue
+                        .push_back((r.rid, r.input, r.output, r.arrival));
+                    self.pending.insert(r.rid, (r.arrival, r.input, r.output, f64::NAN));
+                    self.kick(i, now);
+                }
+                Ev::IterEnd { inst, seq, kind } => {
+                    if self.instances[inst].seq != seq {
+                        continue;
+                    }
+                    self.instances[inst].iterating = false;
+                    match kind {
+                        IterKind::Prefill { rid, dur } => {
+                            let p = self.pending.get_mut(&rid).unwrap();
+                            p.3 = now - p.0; // TTFT = prefill completion - arrival
+                            let (_, input, out, _) = *self.pending.get(&rid).unwrap();
+                            self.instances[inst].decode.enqueue(rid, input, out, now);
+                            let _ = dur;
+                        }
+                        IterKind::Decode { dur } => {
+                            let done = self.instances[inst].decode.finish_step(now, dur);
+                            for f in done {
+                                let (arr, input, out, ttft) =
+                                    self.pending.remove(&f.rid).unwrap();
+                                self.metrics.push(RequestMetrics {
+                                    id: f.rid,
+                                    arrival: arr,
+                                    input_tokens: input,
+                                    output_tokens: out,
+                                    outcome: Outcome::Completed,
+                                    ttft_ms: ttft,
+                                    max_tbt_ms: f.max_gap,
+                                    mean_tbt_ms: f.mean_gap,
+                                    generated: f.generated,
+                                    finish: now,
+                                });
+                            }
+                        }
+                    }
+                    self.kick(inst, now);
+                }
+            }
+        }
+        assert!(self.pending.is_empty(), "vllm sim left requests unfinished");
+        self.metrics.sort_by(|a, b| a.id.cmp(&b.id));
+        (self.metrics, now)
+    }
+}
+
+/// Run the baseline and aggregate (mirrors `sim::run` + `report`).
+pub fn run(cfg: &VllmConfig, trace: &[TraceRecord], speedup: f64) -> metrics::RunReport {
+    let (ms, wall) = VllmSim::new(cfg.clone()).run(trace, speedup);
+    metrics::report(&ms, cfg.slo.ttft_ms, cfg.slo.tbt_ms, wall)
+}
+
+/// Run and keep the raw per-request metrics (Fig 13 CDFs).
+pub fn run_raw(cfg: &VllmConfig, trace: &[TraceRecord], speedup: f64) -> (Vec<RequestMetrics>, TimeMs) {
+    VllmSim::new(cfg.clone()).run(trace, speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen;
+
+    #[test]
+    fn completes_everything() {
+        let trace = gen::dataset("arxiv", 80, 0.5, 1);
+        let cfg = VllmConfig::default();
+        let rep = run(&cfg, &trace, 1.0);
+        assert_eq!(rep.n_completed, 80);
+        assert_eq!(rep.n_rejected_arrival + rep.n_rejected_after_prefill, 0);
+    }
+
+    #[test]
+    fn long_context_prefill_spikes_tbt() {
+        // Interleave long-context requests with active decodes: the
+        // exclusive prefill iterations must stretch some token gap far
+        // beyond a clean decode step.
+        let trace = gen::dataset("sim64k", 40, 0.5, 2);
+        let cfg = VllmConfig { n_instances: 1, ..Default::default() };
+        let rep = run(&cfg, &trace, 1.0);
+        let clean_step = PerfModel::paper().decode_step_ms(8, 8 * 65_536);
+        assert!(
+            rep.tbt_p90 > clean_step * 3.0,
+            "p90 TBT {} should show prefill stalls >> step {}",
+            rep.tbt_p90,
+            clean_step
+        );
+    }
+
+    #[test]
+    fn serial_mode_limits_batch() {
+        let trace = gen::dataset("sim16k", 30, 2.0, 3);
+        let cfg = VllmConfig { n_instances: 1, serial_mode: true, ..Default::default() };
+        let rep = run(&cfg, &trace, 1.0);
+        assert_eq!(rep.n_completed, 30);
+    }
+
+    #[test]
+    fn more_instances_lower_latency() {
+        let trace = gen::dataset("arxiv", 120, 1.0, 4);
+        let one = run(&VllmConfig { n_instances: 1, ..Default::default() }, &trace, 1.0);
+        let four = run(&VllmConfig { n_instances: 4, ..Default::default() }, &trace, 1.0);
+        assert!(four.ttft_p90 <= one.ttft_p90);
+    }
+}

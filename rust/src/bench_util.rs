@@ -1,0 +1,75 @@
+//! Minimal benchmark harness (criterion is unavailable offline — see
+//! DESIGN.md).  Provides wall-clock timing of closures with warmup and
+//! simple statistics, plus table printing helpers shared by the
+//! per-figure bench binaries under `rust/benches/`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ms: samples.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:40} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={})",
+            self.name, self.mean_ms, self.min_ms, self.max_ms, self.iters
+        );
+    }
+}
+
+/// Print a header banner for a figure/table reproduction.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one row of a markdown-ish table.
+pub fn row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+pub fn fmt(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", 1, 5, || {
+            let v: Vec<u64> = (0..1000).collect();
+            std::hint::black_box(v.iter().sum::<u64>());
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ms >= 0.0);
+        assert!(s.min_ms <= s.mean_ms && s.mean_ms <= s.max_ms + 1e-12);
+    }
+}

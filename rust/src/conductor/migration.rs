@@ -1,0 +1,171 @@
+//! Hot-spot migration heuristics (§6.2).
+//!
+//! The *forwarding* replication path (schedule a request to a non-holder
+//! and pull the prefix) lives in `conductor::schedule`.  This module adds
+//! the standalone proactive view: tracking block heat and deciding, given
+//! NIC backlogs, which blocks deserve an extra replica — used by the Fig 8
+//! "KVCache-centric" configuration and unit-testable in isolation.
+
+use std::collections::HashMap;
+
+use crate::messenger::Messenger;
+use crate::prefill::PrefillPool;
+use crate::{BlockId, TimeMs};
+
+/// Exponentially-decayed access counter per block.
+#[derive(Debug, Default)]
+pub struct HeatTracker {
+    heat: HashMap<BlockId, (f64, TimeMs)>,
+    /// Decay half-life (ms).
+    pub half_life_ms: f64,
+}
+
+impl HeatTracker {
+    pub fn new(half_life_ms: f64) -> Self {
+        HeatTracker { heat: HashMap::new(), half_life_ms }
+    }
+
+    fn decayed(&self, b: BlockId, now: TimeMs) -> f64 {
+        match self.heat.get(&b) {
+            None => 0.0,
+            Some(&(h, t)) => h * 0.5f64.powf((now - t).max(0.0) / self.half_life_ms),
+        }
+    }
+
+    pub fn touch(&mut self, b: BlockId, now: TimeMs) {
+        let h = self.decayed(b, now) + 1.0;
+        self.heat.insert(b, (h, now));
+    }
+
+    pub fn heat_of(&self, b: BlockId, now: TimeMs) -> f64 {
+        self.decayed(b, now)
+    }
+
+    /// Blocks hotter than `threshold`, hottest first.
+    pub fn hot_blocks(&self, now: TimeMs, threshold: f64) -> Vec<(BlockId, f64)> {
+        let mut v: Vec<(BlockId, f64)> = self
+            .heat
+            .keys()
+            .map(|&b| (b, self.decayed(b, now)))
+            .filter(|(_, h)| *h >= threshold)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Decide proactive replications: a hot block held by a congested node
+/// (deep NIC backlog) is copied to the least-loaded non-holder.  Returns
+/// (block, from, to) triples; the caller performs the transfers.
+pub fn plan_replications(
+    tracker: &HeatTracker,
+    pool: &PrefillPool,
+    messenger: &Messenger,
+    now: TimeMs,
+    heat_threshold: f64,
+    backlog_threshold_ms: f64,
+    max_plans: usize,
+) -> Vec<(BlockId, usize, usize)> {
+    let mut plans = Vec::new();
+    for (block, _) in tracker.hot_blocks(now, heat_threshold) {
+        if plans.len() >= max_plans {
+            break;
+        }
+        let holders: Vec<usize> = pool
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.pool.contains(block))
+            .map(|(i, _)| i)
+            .collect();
+        if holders.is_empty() || holders.len() == pool.len() {
+            continue; // nowhere to copy from / already everywhere
+        }
+        // Only replicate when every holder's NIC is congested.
+        let min_backlog = holders
+            .iter()
+            .map(|&h| messenger.backlog_ms(h, now))
+            .fold(f64::INFINITY, f64::min);
+        if min_backlog < backlog_threshold_ms {
+            continue;
+        }
+        let src = *holders
+            .iter()
+            .min_by(|&&a, &&b| {
+                messenger
+                    .backlog_ms(a, now)
+                    .partial_cmp(&messenger.backlog_ms(b, now))
+                    .unwrap()
+            })
+            .unwrap();
+        let dst = (0..pool.len())
+            .filter(|i| !holders.contains(i))
+            .min_by(|&a, &b| {
+                pool.instances[a]
+                    .queue_ms(now)
+                    .partial_cmp(&pool.instances[b].queue_ms(now))
+                    .unwrap()
+            });
+        if let Some(dst) = dst {
+            plans.push((block, src, dst));
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn heat_decays() {
+        let mut t = HeatTracker::new(1_000.0);
+        t.touch(1, 0.0);
+        t.touch(1, 0.0);
+        assert!((t.heat_of(1, 0.0) - 2.0).abs() < 1e-9);
+        assert!((t.heat_of(1, 1_000.0) - 1.0).abs() < 1e-9); // one half-life
+        assert!(t.heat_of(1, 10_000.0) < 0.01);
+        assert_eq!(t.heat_of(99, 0.0), 0.0);
+    }
+
+    #[test]
+    fn hot_blocks_sorted() {
+        let mut t = HeatTracker::new(1e9);
+        for _ in 0..5 {
+            t.touch(1, 0.0);
+        }
+        for _ in 0..2 {
+            t.touch(2, 0.0);
+        }
+        let hot = t.hot_blocks(0.0, 1.5);
+        assert_eq!(hot.len(), 2);
+        assert_eq!(hot[0].0, 1);
+    }
+
+    #[test]
+    fn replication_targets_congested_holders() {
+        let cfg = SimConfig::default();
+        let mut pool = PrefillPool::new(&cfg);
+        let mut msgr = Messenger::new(cfg.n_prefill, 100e9, 1.0);
+        let mut tracker = HeatTracker::new(1e9);
+
+        // Block 7 lives only on instance 0, which is congested.
+        pool.instances[0].pool.insert_replica(&[7], 0.0);
+        for _ in 0..100 {
+            tracker.touch(7, 0.0);
+        }
+        msgr.schedule(0, 0.0, 500_000_000_000); // 5000 ms backlog
+
+        let plans = plan_replications(&tracker, &pool, &msgr, 0.0, 10.0, 100.0, 4);
+        assert_eq!(plans.len(), 1);
+        let (b, src, dst) = plans[0];
+        assert_eq!((b, src), (7, 0));
+        assert_ne!(dst, 0);
+
+        // Without congestion: no replication.
+        let quiet = Messenger::new(cfg.n_prefill, 100e9, 1.0);
+        let plans = plan_replications(&tracker, &pool, &quiet, 0.0, 10.0, 100.0, 4);
+        assert!(plans.is_empty());
+    }
+}

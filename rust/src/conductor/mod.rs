@@ -1,0 +1,465 @@
+//! Conductor — the KVCache-centric global scheduler (§6, Algorithm 1).
+//!
+//! For every arriving request Conductor must pick a (prefill group,
+//! decode instance) pair balancing three objectives: reuse as much
+//! KVCache as possible, balance prefill loads, and guarantee the TTFT /
+//! TBT SLOs — rejecting (HTTP 429) what cannot meet them.  The §6.2
+//! cache-load-balancing extension adds remote prefix fetches and
+//! heuristic hot-spot replication.
+
+pub mod migration;
+
+use crate::config::{SchedulingPolicy, SimConfig};
+use crate::decode::DecodeInstance;
+use crate::messenger::Messenger;
+use crate::model::PerfModel;
+use crate::prefill::PrefillPool;
+use crate::trace::BLOCK_TOKENS;
+use crate::util::rng::Rng;
+use crate::{BlockId, TimeMs};
+
+/// A request as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct SchedRequest {
+    pub rid: u64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub hash_ids: Vec<BlockId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Estimated TTFT exceeds the SLO on every instance (Alg. 1 line 25).
+    TtftSlo,
+    /// Estimated TBT exceeds the SLO on every decode instance.
+    TbtSlo,
+    /// Overload admission control (§7) refused the request.
+    Overload,
+}
+
+/// A successful placement (Algorithm 1's return).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub prefill_group: Vec<usize>,
+    pub decode: usize,
+    /// Prefix blocks served from the primary's local pool.
+    pub local_prefix_blocks: usize,
+    /// Remote fetch performed before prefill (blocks, source instance).
+    pub fetch: Option<(usize, usize)>,
+    /// Prefill starts/ends (group occupied for the span).
+    pub prefill_start: TimeMs,
+    pub prefill_end: TimeMs,
+    /// When the streamed KVCache lands at the decode node (§5.2 overlap).
+    pub kv_arrive: TimeMs,
+    pub est_tbt: f64,
+}
+
+/// Scratch the scheduler needs each call (everything lives in the Sim).
+pub struct Ctx<'a> {
+    pub cfg: &'a SimConfig,
+    pub perf: &'a PerfModel,
+    pub prefill: &'a mut PrefillPool,
+    pub decodes: &'a [DecodeInstance],
+    pub messenger: &'a mut Messenger,
+    pub rng: &'a mut Rng,
+    pub now: TimeMs,
+}
+
+/// Counters for Fig 8-style scheduling studies.
+#[derive(Debug, Default, Clone)]
+pub struct ConductorStats {
+    pub scheduled: u64,
+    pub rejected_ttft: u64,
+    pub rejected_tbt: u64,
+    pub remote_fetches: u64,
+    pub migrations: u64,
+    pub reused_blocks: u64,
+    pub recomputed_blocks: u64,
+}
+
+/// Algorithm 1 (lines 1–23): choose the prefill instance.
+///
+/// Returns (instance, local_prefix_blocks, effective_prefix_blocks,
+/// fetch source, estimated ttft) — `effective` includes a remote fetch
+/// if the balancing branch chose one.
+fn select_prefill(
+    ctx: &mut Ctx,
+    req: &SchedRequest,
+) -> (usize, usize, usize, Option<usize>, f64) {
+    let pools = &ctx.prefill.instances;
+    // FindBestPrefixMatch over every instance's pool.
+    let matches: Vec<usize> =
+        pools.iter().map(|p| p.pool.prefix_match_blocks(&req.hash_ids)).collect();
+    let (best_inst, best_blocks) = matches
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &m)| m)
+        .map(|(i, &m)| (i, m))
+        .unwrap_or((0, 0));
+
+    match ctx.cfg.scheduling {
+        SchedulingPolicy::Random => {
+            let i = ctx.rng.below(pools.len() as u64) as usize;
+            let prefix = matches[i];
+            let t = est_ttft(ctx, req, i, prefix, 0);
+            (i, prefix, prefix, None, t)
+        }
+        SchedulingPolicy::LoadBalance => {
+            let i = (0..pools.len())
+                .min_by(|&a, &b| {
+                    pools[a]
+                        .queue_ms(ctx.now)
+                        .partial_cmp(&pools[b].queue_ms(ctx.now))
+                        .unwrap()
+                })
+                .unwrap();
+            let prefix = matches[i];
+            let t = est_ttft(ctx, req, i, prefix, 0);
+            (i, prefix, prefix, None, t)
+        }
+        SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
+            let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
+            let mut best: (usize, usize, usize, Option<usize>, f64) =
+                (0, 0, 0, None, f64::INFINITY);
+            for i in 0..pools.len() {
+                let local = matches[i];
+                // Line 8: prefer local compute unless the best remote
+                // match dwarfs the local one.
+                let ratio = if local == 0 {
+                    f64::INFINITY
+                } else {
+                    best_blocks as f64 / local as f64
+                };
+                let (prefix, fetch, ttft) = if !balancing
+                    || best_inst == i
+                    || best_blocks == 0
+                    || ratio < ctx.cfg.kvcache_balancing_threshold
+                {
+                    // Cache-aware branch (lines 9–13).
+                    (local, None, est_ttft(ctx, req, i, local, 0))
+                } else {
+                    // Cache-aware and -balancing branch (lines 15–21).
+                    let transfer_blocks = best_blocks - local;
+                    let t = est_ttft(ctx, req, i, best_blocks, transfer_blocks);
+                    (best_blocks, Some(best_inst), t)
+                };
+                if ttft < best.4 {
+                    best = (i, matches[i], prefix, fetch, ttft);
+                }
+            }
+            best
+        }
+    }
+}
+
+/// TTFT estimate for instance `i` with `prefix` reusable blocks and an
+/// optional remote transfer of `fetch_blocks` first.
+fn est_ttft(ctx: &Ctx, req: &SchedRequest, i: usize, prefix: usize, fetch_blocks: usize) -> f64 {
+    let prefix_tokens = (prefix as u64 * BLOCK_TOKENS).min(req.input_tokens);
+    let n_new = req.input_tokens - prefix_tokens;
+    let group = ctx.prefill.cpp_group(ctx.cfg, i, n_new, ctx.now);
+    let t_prefill =
+        ctx.perf
+            .cpp_prefill_ms(n_new, prefix_tokens, ctx.cfg.prefill_chunk, group.len() as u64);
+    let t_queue = ctx.prefill.instances[i].queue_ms(ctx.now);
+    let t_transfer = if fetch_blocks > 0 {
+        ctx.messenger.estimate_ms(
+            i, // conservative: source NIC congestion dominates; use probe of src below
+            ctx.now,
+            fetch_blocks as u64 * BLOCK_TOKENS * ctx.perf.model.kv_bytes_per_token(),
+        )
+    } else {
+        0.0
+    };
+    // Loading the local prefix from DRAM overlaps layer-wise (§5.2) but
+    // bounds the start; include the non-overlapped fraction.
+    let t_load = ctx.perf.dram_load_ms(prefix_tokens) * 0.1;
+    t_transfer + t_queue + t_prefill + t_load
+}
+
+/// Algorithm 1 line 24: pick the decode instance with the smallest
+/// predicted TBT.  With `gate` set (early-rejection admission), only
+/// instances that can hold the request qualify; without it (the §7
+/// *baseline*, which defers the decode load check until the KVCache
+/// actually arrives) the best instance is chosen unconditionally and
+/// over-commitment surfaces at the decode-side double-check instead.
+pub fn select_decode(
+    perf: &PerfModel,
+    decodes: &[DecodeInstance],
+    ctx_tokens: u64,
+    out_tokens: u64,
+    gate: bool,
+) -> Option<(usize, f64)> {
+    let pick = |require_fit: bool| {
+        decodes
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| !require_fit || d.can_fit(ctx_tokens, out_tokens))
+            .map(|(i, d)| (i, d.predicted_step_ms(perf, ctx_tokens)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    };
+    if gate {
+        pick(true)
+    } else {
+        pick(true).or_else(|| pick(false))
+    }
+}
+
+/// Full Algorithm 1.  Mutates the prefill pool (queue occupation +
+/// optimistic cache admission), the messenger (fetch + KV stream), and
+/// the stats.  The *decode* side is only probed here; the Sim owns
+/// decode state transitions.
+pub fn schedule(
+    ctx: &mut Ctx,
+    req: &SchedRequest,
+    stats: &mut ConductorStats,
+) -> Result<Placement, RejectReason> {
+    let (p, local_blocks, eff_blocks, fetch_src, est_ttft_ms) = select_prefill(ctx, req);
+
+    // Line 24–27: decode selection and SLO gate.  The decode-side gate at
+    // arrival is itself an *early rejection* (§7.2), so it only applies
+    // under the early/predictive admission policies; the §7 baseline and
+    // the no-rejection mode defer decode-load problems to the decode-side
+    // double-check / queueing.
+    let gate = matches!(
+        ctx.cfg.rejection,
+        crate::config::RejectionPolicy::Early | crate::config::RejectionPolicy::Predictive
+    );
+    let (d, est_tbt) = match select_decode(
+        ctx.perf,
+        ctx.decodes,
+        req.input_tokens,
+        req.output_tokens,
+        gate,
+    ) {
+        Some(x) => x,
+        None => {
+            stats.rejected_tbt += 1;
+            return Err(RejectReason::TbtSlo);
+        }
+    };
+    if est_ttft_ms > ctx.cfg.slo.ttft_ms {
+        stats.rejected_ttft += 1;
+        return Err(RejectReason::TtftSlo);
+    }
+    if gate && est_tbt > ctx.cfg.slo.tbt_ms {
+        stats.rejected_tbt += 1;
+        return Err(RejectReason::TbtSlo);
+    }
+
+    let prefix_tokens = (eff_blocks as u64 * BLOCK_TOKENS).min(req.input_tokens);
+    let n_new = req.input_tokens - prefix_tokens;
+
+    // Remote prefix fetch (balancing branch): the fetch must land before
+    // prefill starts; it runs on the *source* node's NIC.
+    let mut earliest = ctx.now;
+    let mut fetch = None;
+    if let Some(src) = fetch_src {
+        let blocks = eff_blocks - local_blocks;
+        if blocks > 0 {
+            let bytes = blocks as u64 * BLOCK_TOKENS * ctx.perf.model.kv_bytes_per_token();
+            let tr = ctx.messenger.schedule(src, ctx.now, bytes);
+            earliest = tr.end;
+            fetch = Some((src, blocks));
+            stats.remote_fetches += 1;
+            // The fetched prefix is now replicated on p (hot-spot
+            // replication as a side effect of forwarding, §6.2).
+            let blocks_list: Vec<BlockId> = req.hash_ids[..eff_blocks].to_vec();
+            ctx.prefill.instances[p].pool.insert_replica(&blocks_list, ctx.now);
+            stats.migrations += 1;
+        }
+    }
+
+    // Occupy the prefill group.
+    let group = ctx.prefill.cpp_group(ctx.cfg, p, n_new, ctx.now);
+    let (start, end) =
+        ctx.prefill.run_prefill(ctx.perf, ctx.cfg, &group, n_new, prefix_tokens, earliest);
+
+    // Admit the full chain into p's pool (its KVCache now exists there).
+    ctx.prefill.instances[p].pool.admit_chain(&req.hash_ids, ctx.now);
+
+    // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
+    // prefill; it can finish no earlier than prefill *and* no earlier
+    // than the wire time starting at prefill start.
+    let kv_bytes = req.input_tokens * ctx.perf.model.kv_bytes_per_token();
+    let stream = ctx.messenger.schedule(p, start, kv_bytes);
+    let kv_arrive = stream.end.max(end);
+
+    stats.scheduled += 1;
+    stats.reused_blocks += eff_blocks as u64;
+    stats.recomputed_blocks += (req.hash_ids.len() - eff_blocks) as u64;
+
+    Ok(Placement {
+        prefill_group: group,
+        decode: d,
+        local_prefix_blocks: local_blocks,
+        fetch,
+        prefill_start: start,
+        prefill_end: end,
+        kv_arrive,
+        est_tbt,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn setup(policy: SchedulingPolicy) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Messenger, Rng)
+    {
+        let cfg = SimConfig { scheduling: policy, ..Default::default() };
+        let perf = PerfModel::paper();
+        let prefill = PrefillPool::new(&cfg);
+        let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+            .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+            .collect();
+        let messenger = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+        (cfg, perf, prefill, decodes, messenger, Rng::new(7))
+    }
+
+    fn req(rid: u64, blocks: u64) -> SchedRequest {
+        SchedRequest {
+            rid,
+            input_tokens: blocks * BLOCK_TOKENS,
+            output_tokens: 100,
+            hash_ids: (rid * 1000..rid * 1000 + blocks).collect(),
+        }
+    }
+
+    #[test]
+    fn schedules_and_reuses_prefix() {
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        let mut stats = ConductorStats::default();
+        let r1 = req(1, 16);
+        let mut ctx = Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now: 0.0,
+        };
+        let p1 = schedule(&mut ctx, &r1, &mut stats).unwrap();
+        assert!(p1.prefill_end > p1.prefill_start);
+        assert!(p1.kv_arrive >= p1.prefill_end);
+
+        // Same chain again much later (queue drained): the primary holding
+        // the cache must win, and most blocks must be reused.
+        let mut ctx = Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now: 1e7,
+        };
+        let p2 = schedule(&mut ctx, &r1, &mut stats).unwrap();
+        assert_eq!(p2.prefill_group[0], p1.prefill_group[0]);
+        assert!(p2.prefill_end - p2.prefill_start < (p1.prefill_end - p1.prefill_start) * 0.3);
+        assert!(stats.reused_blocks >= 16);
+    }
+
+    #[test]
+    fn cache_aware_beats_random_on_warm_chain() {
+        // Warm one instance, then compare policies' TTFT estimates.
+        for policy in [SchedulingPolicy::CacheAware, SchedulingPolicy::KvCacheCentric] {
+            let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) = setup(policy);
+            let mut stats = ConductorStats::default();
+            let r = req(3, 32);
+            let mut ctx = Ctx {
+                cfg: &cfg,
+                perf: &perf,
+                prefill: &mut prefill,
+                decodes: &decodes,
+                messenger: &mut msgr,
+                rng: &mut rng,
+                now: 0.0,
+            };
+            let first = schedule(&mut ctx, &r, &mut stats).unwrap();
+            let cold = first.prefill_end - first.prefill_start;
+            let mut ctx = Ctx {
+                cfg: &cfg,
+                perf: &perf,
+                prefill: &mut prefill,
+                decodes: &decodes,
+                messenger: &mut msgr,
+                rng: &mut rng,
+                now: 1e7,
+            };
+            let warm_p = schedule(&mut ctx, &r, &mut stats).unwrap();
+            let warm = warm_p.prefill_end - warm_p.prefill_start;
+            assert!(warm < cold * 0.2, "{policy:?}: warm={warm} cold={cold}");
+        }
+    }
+
+    #[test]
+    fn rejects_when_ttft_unattainable() {
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        cfg.slo.ttft_ms = 1.0; // impossible
+        let mut stats = ConductorStats::default();
+        let mut ctx = Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now: 0.0,
+        };
+        let e = schedule(&mut ctx, &req(9, 64), &mut stats).unwrap_err();
+        assert_eq!(e, RejectReason::TtftSlo);
+        assert_eq!(stats.rejected_ttft, 1);
+    }
+
+    #[test]
+    fn balancing_branch_fetches_remote_prefix() {
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        cfg.kvcache_balancing_threshold = 1.5;
+        let mut stats = ConductorStats::default();
+        let r = req(5, 64);
+        // Warm instance 0 with the chain, then make instance 0 very busy
+        // so the scheduler prefers another node + fetch.
+        {
+            let mut ctx = Ctx {
+                cfg: &cfg,
+                perf: &perf,
+                prefill: &mut prefill,
+                decodes: &decodes,
+                messenger: &mut msgr,
+                rng: &mut rng,
+                now: 0.0,
+            };
+            schedule(&mut ctx, &r, &mut stats).unwrap();
+        }
+        let holder = prefill
+            .instances
+            .iter()
+            .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
+            .unwrap();
+        prefill.instances[holder].busy_until = 1e9; // swamped
+        let mut ctx = Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now: 1e6,
+        };
+        let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_ne!(p.prefill_group[0], holder);
+        assert!(p.fetch.is_some(), "expected remote fetch");
+        assert_eq!(stats.remote_fetches, 1);
+        // Replica now exists on the new node.
+        assert_eq!(
+            prefill.instances[p.prefill_group[0]].pool.prefix_match_blocks(&r.hash_ids),
+            64
+        );
+    }
+}

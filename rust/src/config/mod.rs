@@ -1,0 +1,115 @@
+//! Cluster / scheduling / SLO configuration for simulations and the live
+//! engine.  Every §8 experiment is a point in this config space.
+
+use crate::kvcache::PolicyKind;
+
+/// Latency SLOs (§2): absolute limits derived per-experiment from the
+/// unloaded baseline (×10 for TTFT, ×5 for TBT in §8.1; fixed 30 s / 0.1 s
+/// in §8.1.3).
+#[derive(Debug, Clone, Copy)]
+pub struct SloConfig {
+    pub ttft_ms: f64,
+    pub tbt_ms: f64,
+}
+
+/// Prefill-instance selection policy (Fig 8 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingPolicy {
+    /// Pick a prefill instance uniformly at random.
+    Random,
+    /// Pick the least-loaded instance (shortest queue).
+    LoadBalance,
+    /// §6.1: minimize estimated TTFT using local prefix caches only.
+    CacheAware,
+    /// §6.1 + §6.2: cache-aware + cache load balancing (remote fetch and
+    /// hot-spot replication) — full Algorithm 1.
+    KvCacheCentric,
+}
+
+/// Overload admission policy (§7 / Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectionPolicy {
+    /// Accept everything Algorithm 1 can schedule under SLO.
+    None,
+    /// Check prefill load at arrival and decode load only when the
+    /// request reaches decode — wasting the prefill of late rejections.
+    Baseline,
+    /// §7.2: check max(prefill load, *current* decode load) at arrival.
+    Early,
+    /// §7.4: check prefill load and the *predicted* decode load at the
+    /// moment this request would finish prefill.
+    Predictive,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub n_prefill: usize,
+    pub n_decode: usize,
+    /// Per-instance KVCache pool capacity in 512-token blocks (None=∞).
+    pub cache_capacity_blocks: Option<usize>,
+    pub eviction: PolicyKind,
+    /// §5.1 prefill chunk size in tokens ("typically larger than 1000").
+    pub prefill_chunk: u64,
+    /// Max nodes in a chunked-pipeline-parallel group.
+    pub cpp_group_max: u64,
+    /// Input length above which CPP grouping is attempted.
+    pub cpp_threshold_tokens: u64,
+    /// Algorithm 1's kvcache_balancing_threshold: prefer local compute
+    /// unless best_remote/local exceeds this ratio.
+    pub kvcache_balancing_threshold: f64,
+    pub scheduling: SchedulingPolicy,
+    pub rejection: RejectionPolicy,
+    /// Continuous-batching cap per decode instance (sequences).
+    pub max_decode_batch: usize,
+    pub slo: SloConfig,
+    /// Load threshold (fraction of SLO) above which admission rejects.
+    pub overload_threshold: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_prefill: 8,
+            n_decode: 8,
+            cache_capacity_blocks: Some(50_000),
+            eviction: PolicyKind::Lru,
+            prefill_chunk: 8_192,
+            cpp_group_max: 4,
+            cpp_threshold_tokens: 32_768,
+            kvcache_balancing_threshold: 4.0,
+            scheduling: SchedulingPolicy::KvCacheCentric,
+            rejection: RejectionPolicy::None,
+            max_decode_batch: 128,
+            slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
+            overload_threshold: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's real-workload setup: Mooncake-[10P+10D], TTFT 30 s,
+    /// TBT 0.1 s (§8.1.3).
+    pub fn real_workload_10p10d() -> Self {
+        SimConfig { n_prefill: 10, n_decode: 10, ..Default::default() }
+    }
+
+    /// The §6.2 / Table 3 cluster: 8 prefill + 8 decode.
+    pub fn cluster_8p8d() -> Self {
+        SimConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = SimConfig::default();
+        assert!(c.prefill_chunk > 1_000); // §5.1 constraint
+        assert!(c.kvcache_balancing_threshold >= 1.0);
+        assert_eq!(c.n_prefill, 8);
+    }
+}

@@ -1,0 +1,263 @@
+//! Decode instance pool: continuous batching (§3 step 4).
+//!
+//! Each decode instance holds a set of active sequences in VRAM and runs
+//! fixed iterations; every iteration emits one token for every active
+//! sequence (the iteration duration *is* each sequence's inter-token
+//! time).  Newly arrived KVCaches join at iteration boundaries, subject
+//! to the VRAM capacity and batch cap; completed sequences leave the
+//! batch (continuous batching à la Orca/vLLM).
+
+use std::collections::VecDeque;
+
+use crate::model::PerfModel;
+use crate::{RequestId, TimeMs};
+
+#[derive(Debug, Clone)]
+pub struct ActiveSeq {
+    pub rid: RequestId,
+    /// Current context length (grows by 1 per iteration).
+    pub ctx: u64,
+    /// Output tokens still to generate.
+    pub remaining: u64,
+    /// Arrival time of the KVCache at this instance.
+    pub joined: TimeMs,
+    /// Inter-token gaps experienced (ms) — TBT samples.
+    pub gaps: Vec<f64>,
+    /// Time of last token emission (or join).
+    pub last_token: TimeMs,
+}
+
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub rid: RequestId,
+    pub finish: TimeMs,
+    pub max_gap: f64,
+    pub mean_gap: f64,
+    pub generated: u64,
+}
+
+#[derive(Debug)]
+pub struct DecodeInstance {
+    pub active: Vec<ActiveSeq>,
+    pub waiting: VecDeque<ActiveSeq>,
+    /// Monotonic step counter; stale DecodeStep events are dropped.
+    pub step_seq: u64,
+    /// Whether a step event is currently in flight.
+    pub stepping: bool,
+    /// VRAM KVCache capacity (tokens) and batch cap.
+    pub kv_capacity_tokens: u64,
+    pub max_batch: usize,
+    /// Tokens decoded by this instance (throughput accounting).
+    pub tokens_out: u64,
+    /// Cached sum of active sequences' ctx (kept incrementally — the
+    /// per-step O(batch) re-sum dominated the simulator hot path).
+    kv_cached: u64,
+    /// Busy time accumulated (for utilization / load curves).
+    pub busy_ms: f64,
+}
+
+impl DecodeInstance {
+    pub fn new(kv_capacity_tokens: u64, max_batch: usize) -> Self {
+        DecodeInstance {
+            active: Vec::new(),
+            waiting: VecDeque::new(),
+            step_seq: 0,
+            stepping: false,
+            kv_capacity_tokens,
+            max_batch,
+            tokens_out: 0,
+            kv_cached: 0,
+            busy_ms: 0.0,
+        }
+    }
+
+    pub fn kv_tokens(&self) -> u64 {
+        debug_assert_eq!(self.kv_cached, self.active.iter().map(|s| s.ctx).sum::<u64>());
+        self.kv_cached
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Predicted iteration time if one more sequence of `ctx` tokens
+    /// joined now — Conductor's `SelectDecodingInstance` estimate.
+    pub fn predicted_step_ms(&self, perf: &PerfModel, extra_ctx: u64) -> f64 {
+        perf.decode_step_ms(self.batch_size() as u64 + 1, self.kv_tokens() + extra_ctx)
+    }
+
+    /// Whether a sequence with `ctx` context and `out` output tokens can
+    /// ever fit (VRAM for ctx+out plus what's already resident).
+    pub fn can_fit(&self, ctx: u64, out: u64) -> bool {
+        self.kv_tokens() + ctx + out <= self.kv_capacity_tokens
+            && self.active.len() + self.waiting.len() < self.max_batch
+    }
+
+    /// Enqueue an arrived KVCache; it joins at the next step boundary.
+    pub fn enqueue(&mut self, rid: RequestId, ctx: u64, remaining: u64, now: TimeMs) {
+        self.waiting.push_back(ActiveSeq {
+            rid,
+            ctx,
+            remaining: remaining.max(1),
+            joined: now,
+            gaps: Vec::new(),
+            last_token: now,
+        });
+    }
+
+    /// Pull waiting sequences into the batch (capacity permitting).
+    pub fn admit_waiting(&mut self) {
+        while let Some(seq) = self.waiting.front() {
+            let fits = self.kv_tokens() + seq.ctx + seq.remaining
+                <= self.kv_capacity_tokens
+                && self.active.len() < self.max_batch;
+            if !fits {
+                break;
+            }
+            let seq = self.waiting.pop_front().unwrap();
+            self.kv_cached += seq.ctx;
+            self.active.push(seq);
+        }
+    }
+
+    /// Duration of the iteration that starts now.
+    pub fn step_duration_ms(&self, perf: &PerfModel) -> f64 {
+        perf.decode_step_ms(self.batch_size() as u64, self.kv_tokens())
+    }
+
+    /// Complete one iteration ending at `now` with duration `dur`:
+    /// every active sequence emits a token; finished ones are returned.
+    pub fn finish_step(&mut self, now: TimeMs, dur: f64) -> Vec<FinishedSeq> {
+        self.busy_ms += dur;
+        let mut done = Vec::new();
+        let mut keep = Vec::with_capacity(self.active.len());
+        for mut seq in self.active.drain(..) {
+            seq.gaps.push(now - seq.last_token);
+            seq.last_token = now;
+            seq.ctx += 1;
+            self.kv_cached += 1;
+            seq.remaining -= 1;
+            self.tokens_out += 1;
+            if seq.remaining == 0 {
+                self.kv_cached -= seq.ctx;
+                let max_gap = seq.gaps.iter().cloned().fold(0.0, f64::max);
+                let mean_gap = seq.gaps.iter().sum::<f64>() / seq.gaps.len().max(1) as f64;
+                done.push(FinishedSeq {
+                    rid: seq.rid,
+                    finish: now,
+                    max_gap,
+                    mean_gap,
+                    generated: seq.gaps.len() as u64,
+                });
+            } else {
+                keep.push(seq);
+            }
+        }
+        self.active = keep;
+        done
+    }
+
+    /// Instantaneous load: predicted TBT against the SLO, VRAM occupancy,
+    /// and admission backlog, whichever is tighter (§7.1's SLO-based
+    /// load).  Sequences stuck in `waiting` mean the instance is already
+    /// over-committed, so they push the load past 1.
+    pub fn load(&self, perf: &PerfModel, tbt_slo: f64) -> f64 {
+        if self.active.is_empty() && self.waiting.is_empty() {
+            return 0.0;
+        }
+        let tbt_ratio = self.step_duration_ms(perf) / tbt_slo;
+        let vram_ratio = self.kv_tokens() as f64 / self.kv_capacity_tokens as f64;
+        let backlog = self.waiting.len() as f64 / self.max_batch.max(1) as f64;
+        tbt_ratio.max(vram_ratio) + backlog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> DecodeInstance {
+        DecodeInstance::new(1_000_000, 64)
+    }
+
+    fn perf() -> PerfModel {
+        PerfModel::paper()
+    }
+
+    #[test]
+    fn join_and_finish() {
+        let mut d = inst();
+        d.enqueue(1, 100, 2, 0.0);
+        d.admit_waiting();
+        assert_eq!(d.batch_size(), 1);
+        let done = d.finish_step(10.0, 10.0);
+        assert!(done.is_empty());
+        let done = d.finish_step(20.0, 10.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated, 2);
+        assert_eq!(done[0].finish, 20.0);
+        assert_eq!(d.batch_size(), 0);
+        assert_eq!(d.tokens_out, 2);
+    }
+
+    #[test]
+    fn gaps_are_step_intervals() {
+        let mut d = inst();
+        d.enqueue(1, 100, 3, 5.0);
+        d.admit_waiting();
+        d.finish_step(15.0, 10.0);
+        d.finish_step(40.0, 25.0);
+        let done = d.finish_step(50.0, 10.0);
+        assert_eq!(done[0].max_gap, 25.0);
+        assert!((done[0].mean_gap - (10.0 + 25.0 + 10.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vram_capacity_blocks_admission() {
+        let mut d = DecodeInstance::new(1_000, 64);
+        d.enqueue(1, 800, 10, 0.0);
+        d.enqueue(2, 500, 10, 0.0);
+        d.admit_waiting();
+        assert_eq!(d.batch_size(), 1); // second doesn't fit (800+10+500+10 > 1000)
+        assert_eq!(d.waiting.len(), 1);
+        // After the first finishes, the second fits.
+        for t in 0..10 {
+            d.finish_step((t + 1) as f64, 1.0);
+        }
+        assert_eq!(d.batch_size(), 0);
+        d.admit_waiting();
+        assert_eq!(d.batch_size(), 1);
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let mut d = DecodeInstance::new(u64::MAX, 2);
+        for rid in 0..4 {
+            d.enqueue(rid, 10, 5, 0.0);
+        }
+        d.admit_waiting();
+        assert_eq!(d.batch_size(), 2);
+        assert_eq!(d.waiting.len(), 2);
+    }
+
+    #[test]
+    fn load_zero_when_idle_positive_when_busy() {
+        let p = perf();
+        let mut d = inst();
+        assert_eq!(d.load(&p, 100.0), 0.0);
+        d.enqueue(1, 4_000, 100, 0.0);
+        d.admit_waiting();
+        assert!(d.load(&p, 100.0) > 0.0);
+    }
+
+    #[test]
+    fn predicted_step_grows_with_extra_context() {
+        let p = perf();
+        let mut d = inst();
+        d.enqueue(1, 4_000, 100, 0.0);
+        d.admit_waiting();
+        let small = d.predicted_step_ms(&p, 1_000);
+        let big = d.predicted_step_ms(&p, 100_000);
+        assert!(big > small);
+    }
+}

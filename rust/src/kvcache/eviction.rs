@@ -1,0 +1,225 @@
+//! Block eviction policies from §4.2 / Table 1: LRU, LFU, and
+//! LengthAwareCache ("similar to LFU but prioritizing eviction of cache
+//! blocks occurring later in requests").
+//!
+//! All three share one implementation: a `HashMap` of block metadata plus
+//! a `BTreeSet` ordered by a policy-specific composite key, giving
+//! O(log n) insert/touch/evict.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::BlockId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Lfu,
+    LengthAware,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "LRUCache",
+            PolicyKind::Lfu => "LFUCache",
+            PolicyKind::LengthAware => "LengthAwareCache",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Meta {
+    /// Monotonic use stamp (recency).
+    stamp: u64,
+    /// Access count (frequency).
+    freq: u64,
+    /// Most recent block index within a request (position).
+    pos: usize,
+}
+
+/// Composite eviction key; the BTreeSet's *first* element is the next
+/// eviction victim.
+type Key = (u64, u64, u64, BlockId);
+
+#[derive(Debug)]
+pub struct EvictionPolicy {
+    kind: PolicyKind,
+    capacity: Option<usize>,
+    entries: HashMap<BlockId, Meta>,
+    order: BTreeSet<Key>,
+    tick: u64,
+    pub evictions: u64,
+}
+
+impl EvictionPolicy {
+    pub fn new(kind: PolicyKind, capacity: Option<usize>) -> Self {
+        EvictionPolicy {
+            kind,
+            capacity,
+            entries: HashMap::new(),
+            order: BTreeSet::new(),
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    fn key(&self, b: BlockId, m: &Meta) -> Key {
+        match self.kind {
+            // Oldest stamp first.
+            PolicyKind::Lru => (m.stamp, 0, 0, b),
+            // Lowest frequency first, ties by oldest stamp.
+            PolicyKind::Lfu => (m.freq, m.stamp, 0, b),
+            // Deepest request position first (late blocks = cold tails of
+            // long documents), ties by frequency then stamp.
+            PolicyKind::LengthAware => (u64::MAX - m.pos as u64, m.freq, m.stamp, b),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.entries.contains_key(&b)
+    }
+
+    /// Record a hit: bump recency/frequency/position metadata.
+    pub fn touch(&mut self, b: BlockId, _now_ms: f64, pos: usize) {
+        self.tick += 1;
+        if let Some(m) = self.entries.get(&b).copied() {
+            self.order.remove(&self.key(b, &m));
+            let m2 = Meta { stamp: self.tick, freq: m.freq + 1, pos };
+            self.order.insert(self.key(b, &m2));
+            self.entries.insert(b, m2);
+        }
+    }
+
+    /// Insert a block (miss path), evicting if at capacity.  Returns the
+    /// evicted block, if any.  The victim is chosen among *existing*
+    /// entries before insertion, so a fresh block never evicts itself
+    /// (the standard guard against LFU's new-entry starvation).
+    pub fn insert(&mut self, b: BlockId, _now_ms: f64, pos: usize) -> Option<BlockId> {
+        if self.contains(b) {
+            self.touch(b, _now_ms, pos);
+            return None;
+        }
+        let mut evicted = None;
+        if let Some(cap) = self.capacity {
+            if self.entries.len() >= cap {
+                evicted = self.evict();
+            }
+        }
+        self.tick += 1;
+        let m = Meta { stamp: self.tick, freq: 1, pos };
+        self.entries.insert(b, m);
+        self.order.insert(self.key(b, &m));
+        evicted
+    }
+
+    /// Evict the policy's victim.
+    pub fn evict(&mut self) -> Option<BlockId> {
+        let victim = self.order.iter().next().copied()?;
+        self.order.remove(&victim);
+        let b = victim.3;
+        self.entries.remove(&b);
+        self.evictions += 1;
+        Some(b)
+    }
+
+    /// Remove a specific block (e.g. swapped out by Conductor).
+    pub fn remove(&mut self, b: BlockId) -> bool {
+        if let Some(m) = self.entries.remove(&b) {
+            self.order.remove(&self.key(b, &m));
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.entries.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru, Some(2));
+        p.insert(1, 0.0, 0);
+        p.insert(2, 1.0, 0);
+        p.touch(1, 2.0, 0); // 1 is now newer than 2
+        let evicted = p.insert(3, 3.0, 0);
+        assert_eq!(evicted, Some(2));
+        assert!(p.contains(1) && p.contains(3));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lfu, Some(2));
+        p.insert(1, 0.0, 0);
+        p.insert(2, 1.0, 0);
+        p.touch(1, 2.0, 0);
+        p.touch(1, 3.0, 0);
+        p.touch(2, 4.0, 0); // freq: 1->3, 2->2
+        let evicted = p.insert(3, 5.0, 0);
+        assert_eq!(evicted, Some(2));
+    }
+
+    #[test]
+    fn length_aware_evicts_deepest_position() {
+        let mut p = EvictionPolicy::new(PolicyKind::LengthAware, Some(2));
+        p.insert(1, 0.0, 0); // early block (system prompt)
+        p.insert(2, 1.0, 30); // deep block of a long request
+        p.touch(2, 2.0, 30);
+        p.touch(2, 3.0, 30); // even if block 2 is more frequent...
+        let evicted = p.insert(3, 4.0, 1);
+        assert_eq!(evicted, Some(2)); // ...position dominates
+    }
+
+    #[test]
+    fn insert_existing_is_touch() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru, Some(2));
+        p.insert(1, 0.0, 0);
+        p.insert(2, 1.0, 0);
+        assert_eq!(p.insert(1, 2.0, 0), None); // touch, no eviction
+        assert_eq!(p.len(), 2);
+        let evicted = p.insert(3, 3.0, 0);
+        assert_eq!(evicted, Some(2));
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lfu, Some(10));
+        for i in 0..100 {
+            p.insert(i, i as f64, (i % 7) as usize);
+            assert!(p.len() <= 10);
+        }
+        assert_eq!(p.evictions, 90);
+    }
+
+    #[test]
+    fn remove_unknown_is_false() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru, None);
+        assert!(!p.remove(9));
+        p.insert(9, 0.0, 0);
+        assert!(p.remove(9));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn infinite_capacity_never_evicts() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru, None);
+        for i in 0..10_000 {
+            assert_eq!(p.insert(i, i as f64, 0), None);
+        }
+        assert_eq!(p.len(), 10_000);
+        assert_eq!(p.evictions, 0);
+    }
+}

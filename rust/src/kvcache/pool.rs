@@ -1,0 +1,139 @@
+//! Per-instance KVCache pool: the CPU-DRAM-resident paged block store of
+//! one prefill/decode node (Fig 3), with capacity-bounded eviction and
+//! the prefix matcher Conductor queries during scheduling.
+
+use super::eviction::{EvictionPolicy, PolicyKind};
+use crate::{BlockId, TimeMs};
+
+#[derive(Debug)]
+pub struct CachePool {
+    policy: EvictionPolicy,
+    /// Statistics for cache-efficiency reporting.
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CachePool {
+    pub fn new(kind: PolicyKind, capacity_blocks: Option<usize>) -> Self {
+        CachePool { policy: EvictionPolicy::new(kind, capacity_blocks), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.policy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.policy.is_empty()
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.policy.contains(b)
+    }
+
+    /// Algorithm 1's `prefix_len` (in blocks): longest leading run of the
+    /// request's hash chain present in this pool.  Read-only (hit
+    /// accounting happens on admission, not on probing).
+    pub fn prefix_match_blocks(&self, hash_ids: &[BlockId]) -> usize {
+        hash_ids.iter().take_while(|&&b| self.policy.contains(b)).count()
+    }
+
+    /// Admit a request's block chain after (or during) its prefill: leading
+    /// `matched` blocks are touched as hits, the rest inserted as misses.
+    /// Returns evicted blocks.
+    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> Vec<BlockId> {
+        let matched = self.prefix_match_blocks(hash_ids);
+        let mut evicted = Vec::new();
+        for (i, &b) in hash_ids.iter().enumerate() {
+            if i < matched {
+                self.hits += 1;
+                self.policy.touch(b, now, i);
+            } else {
+                self.misses += 1;
+                if let Some(e) = self.policy.insert(b, now, i) {
+                    evicted.push(e);
+                }
+            }
+        }
+        evicted
+    }
+
+    /// Insert replicated blocks (hot-spot migration §6.2) without hit
+    /// accounting.  Returns evicted blocks.
+    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> Vec<BlockId> {
+        let mut evicted = Vec::new();
+        for (i, &b) in blocks.iter().enumerate() {
+            if !self.policy.contains(b) {
+                if let Some(e) = self.policy.insert(b, now, i) {
+                    evicted.push(e);
+                }
+            }
+        }
+        evicted
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.policy.evictions
+    }
+
+    pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.policy.iter_blocks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_match_stops_at_gap() {
+        let mut p = CachePool::new(PolicyKind::Lru, None);
+        p.admit_chain(&[1, 2, 3], 0.0);
+        assert_eq!(p.prefix_match_blocks(&[1, 2, 9, 3]), 2);
+        assert_eq!(p.prefix_match_blocks(&[9, 1, 2]), 0);
+        assert_eq!(p.prefix_match_blocks(&[1, 2, 3, 4]), 3);
+    }
+
+    #[test]
+    fn admit_counts_hits_and_misses() {
+        let mut p = CachePool::new(PolicyKind::Lru, None);
+        p.admit_chain(&[1, 2], 0.0);
+        assert_eq!((p.hits, p.misses), (0, 2));
+        p.admit_chain(&[1, 2, 3], 1.0);
+        assert_eq!((p.hits, p.misses), (2, 3));
+        assert!((p.hit_rate() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_under_capacity_pressure() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(4));
+        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        let evicted = p.admit_chain(&[5, 6], 1.0);
+        assert_eq!(evicted, vec![1, 2]); // LRU order
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn replica_insert_no_hit_accounting() {
+        let mut p = CachePool::new(PolicyKind::Lru, None);
+        p.insert_replica(&[7, 8], 0.0);
+        assert_eq!((p.hits, p.misses), (0, 0));
+        assert_eq!(p.prefix_match_blocks(&[7, 8]), 2);
+    }
+
+    #[test]
+    fn replica_does_not_duplicate() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(3));
+        p.admit_chain(&[1, 2], 0.0);
+        p.insert_replica(&[1, 2, 3], 1.0);
+        assert_eq!(p.len(), 3);
+    }
+}

@@ -1,0 +1,65 @@
+//! # Mooncake — KVCache-centric disaggregated LLM serving (reproduction)
+//!
+//! This crate reimplements the system described in *"Mooncake: A
+//! KVCache-centric Disaggregated Architecture for LLM Serving"* (Qin et
+//! al., Moonshot AI / Tsinghua, 2024) as the Layer-3 Rust coordinator of a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`conductor`] — the global scheduler (Algorithm 1): cache-aware
+//!   prefill instance selection, decode instance selection, SLO-gated
+//!   admission, and heuristic hot-spot KVCache migration (§6).
+//! * [`kvcache`] — the disaggregated, paged, prefix-hashed KVCache pool
+//!   with pluggable eviction (LRU / LFU / LengthAware) and a global
+//!   block-location registry (§3, §4.2).
+//! * [`messenger`] — the (GPUDirect-)RDMA transfer engine model: per-node
+//!   NIC queues, bandwidth sharing, congestion (§3).
+//! * [`prefill`] / [`decode`] — the disaggregated instance pools: chunked
+//!   pipeline parallelism + layer-wise prefill (§5), continuous-batching
+//!   decode (§3).
+//! * [`overload`] — overload-oriented scheduling: early rejection and
+//!   prediction-based early rejection (§7).
+//! * [`baseline`] — a vLLM-like *coupled* continuous-batching engine used
+//!   as the paper's comparison system (§8).
+//! * [`sim`] — the discrete-event cluster simulator that replays traces
+//!   through either architecture at paper scale (dummy LLaMA2-70B on
+//!   8×A800 nodes, modeled analytically by [`model`]).
+//! * [`runtime`] / [`engine`] — the *live* path: load AOT HLO-text
+//!   artifacts of the small dummy model (JAX + Pallas, compiled once at
+//!   build time) into a PJRT CPU client and actually serve batched
+//!   requests end-to-end. Python never runs on the request path.
+//! * [`trace`] — the open-source Mooncake trace schema (`timestamp`,
+//!   `input_length`, `output_length`, `hash_ids`), a statistical
+//!   generator calibrated to the published trace features, and analyzers.
+//!
+//! See `DESIGN.md` for the paper→module inventory and the experiment
+//! index, and `EXPERIMENTS.md` for reproduced-vs-paper numbers.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod conductor;
+pub mod config;
+pub mod decode;
+pub mod engine;
+pub mod kvcache;
+pub mod messenger;
+pub mod metrics;
+pub mod model;
+pub mod overload;
+pub mod prefill;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Milliseconds since trace start — the simulator's clock unit.
+pub type TimeMs = f64;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Globally unique KVCache block id (a remapped prefix hash, as in the
+/// published trace's `hash_ids` field).
+pub type BlockId = u64;
+
+/// Instance identifier within a pool.
+pub type InstanceId = usize;

@@ -1,0 +1,190 @@
+//! Mooncake CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   gen-trace   — write a calibrated synthetic trace (published schema)
+//!   analyze     — trace statistics (Fig 5/6, Table 1 style)
+//!   simulate    — replay a trace through the Mooncake cluster simulator
+//!   baseline    — replay through the vLLM-like coupled baseline
+//!   serve       — live path: load AOT artifacts, serve prompts via PJRT
+
+use anyhow::{bail, Result};
+
+use mooncake::baseline::{self, VllmConfig};
+use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig};
+use mooncake::engine::{Engine, EngineConfig, GenRequest};
+use mooncake::kvcache::PolicyKind;
+use mooncake::runtime::Runtime;
+use mooncake::sim;
+use mooncake::trace::{gen, jsonl, stats};
+use mooncake::util::args::Args;
+use mooncake::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(String::as_str) {
+        Some("gen-trace") => gen_trace(&args),
+        Some("analyze") => analyze(&args),
+        Some("simulate") => simulate(&args),
+        Some("baseline") => run_baseline(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: mooncake <gen-trace|analyze|simulate|baseline|serve> [--options]\n\
+                 \n\
+                 gen-trace --out trace.jsonl [--requests 23608] [--seed 42]\n\
+                 analyze   --trace trace.jsonl\n\
+                 simulate  --trace trace.jsonl [--prefill 8] [--decode 8] [--speedup 1]\n\
+                 \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
+                 baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
+                 serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
+            );
+            bail!("missing or unknown subcommand")
+        }
+    }
+}
+
+fn gen_trace(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "trace.jsonl");
+    let cfg = gen::TraceGenConfig {
+        n_requests: args.get_usize("requests", 23_608),
+        seed: args.get_u64("seed", 42),
+        ..Default::default()
+    };
+    let trace = gen::generate(&cfg);
+    jsonl::save(&out, &trace)?;
+    let s = stats::summarize(&trace);
+    println!(
+        "wrote {} requests to {out} (mean input {:.0}, mean output {:.0}, {} unique blocks)",
+        s.n_requests, s.mean_input, s.mean_output, s.unique_blocks
+    );
+    Ok(())
+}
+
+fn analyze(args: &Args) -> Result<()> {
+    let path = args.get_or("trace", "trace.jsonl");
+    let trace = jsonl::load(&path)?;
+    let s = stats::summarize(&trace);
+    println!("requests:        {}", s.n_requests);
+    println!("mean input len:  {:.0} tokens", s.mean_input);
+    println!("mean output len: {:.0} tokens", s.mean_output);
+    println!("blocks: {} total refs, {} unique", s.total_blocks, s.unique_blocks);
+    println!("\ncache hit rate (single global pool, Table 1 style):");
+    for kind in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LengthAware] {
+        print!("  {:18}", kind.name());
+        for cap in [None, Some(50_000), Some(10_000), Some(1_000)] {
+            let r = stats::cache_hit_rate(&trace, kind, cap);
+            let label = cap.map(|c| c.to_string()).unwrap_or_else(|| "inf".into());
+            print!("  {label}:{r:.2}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<SchedulingPolicy> {
+    Ok(match s {
+        "random" => SchedulingPolicy::Random,
+        "load" => SchedulingPolicy::LoadBalance,
+        "cache" => SchedulingPolicy::CacheAware,
+        "centric" => SchedulingPolicy::KvCacheCentric,
+        other => bail!("unknown scheduling policy {other}"),
+    })
+}
+
+fn parse_reject(s: &str) -> Result<RejectionPolicy> {
+    Ok(match s {
+        "none" => RejectionPolicy::None,
+        "baseline" => RejectionPolicy::Baseline,
+        "early" => RejectionPolicy::Early,
+        "predictive" => RejectionPolicy::Predictive,
+        other => bail!("unknown rejection policy {other}"),
+    })
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let path = args.get_or("trace", "trace.jsonl");
+    let trace = jsonl::load(&path)?;
+    let cfg = SimConfig {
+        n_prefill: args.get_usize("prefill", 8),
+        n_decode: args.get_usize("decode", 8),
+        scheduling: parse_policy(&args.get_or("policy", "centric"))?,
+        rejection: parse_reject(&args.get_or("reject", "none"))?,
+        seed: args.get_u64("seed", 42),
+        ..Default::default()
+    };
+    let speedup = args.get_f64("speedup", 1.0);
+    let res = sim::run(&cfg, &trace, speedup);
+    let rep = res.report(&cfg);
+    println!("requests:   {} total, {} completed", rep.n_total, rep.n_completed);
+    println!(
+        "rejected:   {} at arrival, {} after prefill (wasted {} prefill tokens)",
+        rep.n_rejected_arrival, rep.n_rejected_after_prefill, rep.wasted_prefill_tokens
+    );
+    println!("TTFT:       mean {:.0} ms, P90 {:.0} ms (SLO {:.0})", rep.ttft_mean, rep.ttft_p90, cfg.slo.ttft_ms);
+    println!("TBT:        P90 {:.1} ms (SLO {:.0})", rep.tbt_p90, cfg.slo.tbt_ms);
+    println!("SLO attainment: {:.1}%", rep.slo_attainment * 100.0);
+    println!("goodput:    {:.2} req/s, {:.0} tok/s", rep.goodput_rps, rep.goodput_tokens_per_sec);
+    println!(
+        "cache:      {} blocks reused, {} recomputed, {} remote fetches, {} migrations",
+        res.conductor.reused_blocks,
+        res.conductor.recomputed_blocks,
+        res.conductor.remote_fetches,
+        res.conductor.migrations
+    );
+    Ok(())
+}
+
+fn run_baseline(args: &Args) -> Result<()> {
+    let path = args.get_or("trace", "trace.jsonl");
+    let trace = jsonl::load(&path)?;
+    let cfg = VllmConfig {
+        n_instances: args.get_usize("instances", 4),
+        serial_mode: args.has_flag("serial"),
+        ..Default::default()
+    };
+    let rep = baseline::run(&cfg, &trace, args.get_f64("speedup", 1.0));
+    println!("vLLM-[{}M]: {} completed", cfg.n_instances, rep.n_completed);
+    println!("TTFT: mean {:.0} ms, P90 {:.0} ms", rep.ttft_mean, rep.ttft_p90);
+    println!("TBT:  P90 {:.1} ms", rep.tbt_p90);
+    println!("SLO attainment: {:.1}%", rep.slo_attainment * 100.0);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let n = args.get_usize("requests", 8);
+    let max_new = args.get_usize("max-new", 32);
+    println!("loading AOT artifacts from {dir} ...");
+    let rt = Runtime::load(&dir)?;
+    let vocab = rt.manifest.vocab;
+    let mut engine = Engine::new(rt, EngineConfig::default());
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    // Shared system-prompt prefix exercises the live prefix cache.
+    let system: Vec<i32> = (0..96).map(|_| rng.below(vocab as u64) as i32).collect();
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            let mut prompt = system.clone();
+            let user_len = 32 + rng.below(96) as usize;
+            prompt.extend((0..user_len).map(|_| rng.below(vocab as u64) as i32));
+            GenRequest { id: i as u64, prompt, max_new }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = engine.serve(&reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut total_tokens = 0usize;
+    for r in &results {
+        total_tokens += r.output.len();
+        println!(
+            "req {:>3}: prompt {:>4} tok ({} reused), {} generated, TTFT {:>8.1} ms, TBT mean {:>6.2} ms max {:>6.2} ms",
+            r.id, r.prompt_tokens, r.reused_tokens, r.output.len(), r.ttft_ms, r.mean_tbt_ms, r.max_tbt_ms
+        );
+    }
+    println!(
+        "\nserved {n} requests in {wall:.2} s — {:.1} tok/s decode throughput, cache {} hits / {} misses",
+        total_tokens as f64 / wall,
+        engine.cache_hits,
+        engine.cache_misses
+    );
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! Messenger — the (GPUDirect-)RDMA KVCache transfer engine (§3).
+//!
+//! Each node runs a Messenger that owns the node's NIC.  Transfers out of
+//! a node serialize on that NIC, which is exactly the congestion effect
+//! §6.1 worries about ("high demand on the KVCache server can lead to
+//! network congestion, prolonging the waiting time") and the reason hot
+//! blocks must be replicated (§6.2).
+//!
+//! The simulator uses [`Messenger::estimate_ms`] for Conductor's
+//! `EstimateKVCacheTransferTime` (a *read-only* probe) and
+//! [`Messenger::schedule`] to actually enqueue the transfer.
+
+use crate::{TimeMs};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub start: TimeMs,
+    pub end: TimeMs,
+    pub bytes: u64,
+}
+
+#[derive(Debug)]
+pub struct Messenger {
+    /// Outgoing-link bandwidth per node, B/ms.
+    bw_per_ms: f64,
+    /// Fixed per-transfer setup latency, ms.
+    latency_ms: f64,
+    /// Each node's NIC is busy (sending) until this time.
+    busy_until: Vec<TimeMs>,
+    pub total_bytes: u64,
+    pub n_transfers: u64,
+    /// Total time transfers spent queued behind earlier ones (congestion).
+    pub queued_ms: f64,
+}
+
+impl Messenger {
+    /// `n_nodes` NICs at `bw_bytes_per_sec` with `latency_ms` setup cost.
+    pub fn new(n_nodes: usize, bw_bytes_per_sec: f64, latency_ms: f64) -> Self {
+        Messenger {
+            bw_per_ms: bw_bytes_per_sec / 1e3,
+            latency_ms,
+            busy_until: vec![0.0; n_nodes],
+            total_bytes: 0,
+            n_transfers: 0,
+            queued_ms: 0.0,
+        }
+    }
+
+    fn serialize_ms(&self, bytes: u64) -> f64 {
+        self.latency_ms + bytes as f64 / self.bw_per_ms
+    }
+
+    /// Estimated completion delay (ms from `now`) if a transfer of
+    /// `bytes` from `src` were enqueued now — includes queueing behind
+    /// in-flight transfers on the source NIC.  Read-only.
+    pub fn estimate_ms(&self, src: usize, now: TimeMs, bytes: u64) -> f64 {
+        let start = self.busy_until[src].max(now);
+        (start - now) + self.serialize_ms(bytes)
+    }
+
+    /// Enqueue a transfer out of `src`; returns its (start, end).
+    pub fn schedule(&mut self, src: usize, now: TimeMs, bytes: u64) -> Transfer {
+        let start = self.busy_until[src].max(now);
+        let end = start + self.serialize_ms(bytes);
+        self.queued_ms += start - now;
+        self.busy_until[src] = end;
+        self.total_bytes += bytes;
+        self.n_transfers += 1;
+        Transfer { start, end, bytes }
+    }
+
+    /// Current outgoing-queue depth of a node in ms (the congestion
+    /// signal for replication decisions).
+    pub fn backlog_ms(&self, src: usize, now: TimeMs) -> f64 {
+        (self.busy_until[src] - now).max(0.0)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.busy_until.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Messenger {
+        // 100 GB/s (800 Gbps), 1 ms latency, 4 nodes.
+        Messenger::new(4, 100e9, 1.0)
+    }
+
+    #[test]
+    fn uncongested_transfer_time() {
+        let mut msg = m();
+        // 5.24 GB (16k tokens of 70B KVCache) -> ~52.4 ms + 1 ms latency.
+        let t = msg.schedule(0, 0.0, 5_242_880_000);
+        assert!((t.end - t.start - 53.4).abs() < 0.5, "{t:?}");
+        assert_eq!(t.start, 0.0);
+    }
+
+    #[test]
+    fn same_nic_serializes() {
+        let mut msg = m();
+        let a = msg.schedule(0, 0.0, 1_000_000_000);
+        let b = msg.schedule(0, 0.0, 1_000_000_000);
+        assert_eq!(b.start, a.end);
+        assert!(msg.queued_ms > 0.0);
+        // Different NIC does not queue.
+        let c = msg.schedule(1, 0.0, 1_000_000_000);
+        assert_eq!(c.start, 0.0);
+    }
+
+    #[test]
+    fn estimate_matches_schedule() {
+        let mut msg = m();
+        msg.schedule(2, 0.0, 2_000_000_000);
+        let est = msg.estimate_ms(2, 5.0, 1_000_000_000);
+        let t = msg.schedule(2, 5.0, 1_000_000_000);
+        assert!((est - (t.end - 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backlog_decays_with_time() {
+        let mut msg = m();
+        msg.schedule(0, 0.0, 10_000_000_000); // 100ms serialize + 1ms
+        assert!(msg.backlog_ms(0, 0.0) > 100.0);
+        assert!(msg.backlog_ms(0, 50.0) < msg.backlog_ms(0, 0.0));
+        assert_eq!(msg.backlog_ms(0, 1_000.0), 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Request-level outcomes and the aggregate measures the paper reports:
+//! P90 TTFT/TBT (normalized against SLO), SLO attainment, goodput
+//! (§2: only *fully completed* requests count — anything rejected or
+//! SLO-violating is wasted work).
+
+use crate::util::stats;
+use crate::{RequestId, TimeMs};
+
+/// Where a request's life ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed all output tokens.
+    Completed,
+    /// Rejected at arrival (Conductor admission / early rejection).
+    RejectedAtArrival,
+    /// Rejected by the decode double-check after prefill (wasted prefill).
+    RejectedAfterPrefill,
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: RequestId,
+    pub arrival: TimeMs,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub outcome: Outcome,
+    /// Time to first token (prefill completion), ms.  NaN if rejected.
+    pub ttft_ms: f64,
+    /// Max inter-token gap during decode, ms.  NaN if no decode happened.
+    pub max_tbt_ms: f64,
+    /// Mean inter-token gap, ms.
+    pub mean_tbt_ms: f64,
+    /// Tokens actually generated (== output_tokens iff completed).
+    pub generated: u64,
+    /// Completion time, ms.
+    pub finish: TimeMs,
+}
+
+impl RequestMetrics {
+    pub fn rejected(id: RequestId, arrival: TimeMs, input: u64, output: u64, at_decode: bool) -> Self {
+        RequestMetrics {
+            id,
+            arrival,
+            input_tokens: input,
+            output_tokens: output,
+            outcome: if at_decode { Outcome::RejectedAfterPrefill } else { Outcome::RejectedAtArrival },
+            ttft_ms: f64::NAN,
+            max_tbt_ms: f64::NAN,
+            mean_tbt_ms: f64::NAN,
+            generated: 0,
+            finish: arrival,
+        }
+    }
+
+    /// SLO check uses the per-request *mean* inter-token time (the
+    /// paper's TBT measure: decode wall time over tokens generated);
+    /// `max_tbt_ms` is kept for tail diagnostics (Fig 13's long tail).
+    pub fn meets_slo(&self, ttft_slo: f64, tbt_slo: f64) -> bool {
+        self.outcome == Outcome::Completed
+            && self.ttft_ms <= ttft_slo
+            && (self.mean_tbt_ms.is_nan() || self.mean_tbt_ms <= tbt_slo)
+    }
+}
+
+/// Aggregates over a run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub n_total: usize,
+    pub n_completed: usize,
+    pub n_rejected_arrival: usize,
+    pub n_rejected_after_prefill: usize,
+    pub ttft_p90: f64,
+    pub tbt_p90: f64,
+    pub ttft_mean: f64,
+    /// Fraction of requests meeting both SLOs (of all submitted).
+    pub slo_attainment: f64,
+    /// Completed-under-SLO requests per second.
+    pub goodput_rps: f64,
+    /// Total generated tokens of SLO-satisfying requests per second.
+    pub goodput_tokens_per_sec: f64,
+    /// Prefill compute (token·ms proxy) spent on requests later rejected.
+    pub wasted_prefill_tokens: u64,
+}
+
+pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
+    let ttfts: Vec<f64> =
+        metrics.iter().filter(|m| !m.ttft_ms.is_nan()).map(|m| m.ttft_ms).collect();
+    let tbts: Vec<f64> =
+        metrics.iter().filter(|m| !m.mean_tbt_ms.is_nan()).map(|m| m.mean_tbt_ms).collect();
+    let ok: Vec<&RequestMetrics> =
+        metrics.iter().filter(|m| m.meets_slo(ttft_slo, tbt_slo)).collect();
+    let wall_s = (wall_ms / 1e3).max(1e-9);
+    RunReport {
+        n_total: metrics.len(),
+        n_completed: metrics.iter().filter(|m| m.outcome == Outcome::Completed).count(),
+        n_rejected_arrival: metrics
+            .iter()
+            .filter(|m| m.outcome == Outcome::RejectedAtArrival)
+            .count(),
+        n_rejected_after_prefill: metrics
+            .iter()
+            .filter(|m| m.outcome == Outcome::RejectedAfterPrefill)
+            .count(),
+        ttft_p90: stats::percentile(&ttfts, 90.0),
+        tbt_p90: stats::percentile(&tbts, 90.0),
+        ttft_mean: stats::mean(&ttfts),
+        slo_attainment: ok.len() as f64 / metrics.len().max(1) as f64,
+        goodput_rps: ok.len() as f64 / wall_s,
+        goodput_tokens_per_sec: ok.iter().map(|m| m.generated as f64).sum::<f64>() / wall_s,
+        wasted_prefill_tokens: metrics
+            .iter()
+            .filter(|m| m.outcome == Outcome::RejectedAfterPrefill)
+            .map(|m| m.input_tokens)
+            .sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(id: u64, ttft: f64, tbt: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival: 0.0,
+            input_tokens: 100,
+            output_tokens: 10,
+            outcome: Outcome::Completed,
+            ttft_ms: ttft,
+            max_tbt_ms: tbt,
+            mean_tbt_ms: tbt,
+            generated: 10,
+            finish: 1_000.0,
+        }
+    }
+
+    #[test]
+    fn slo_check() {
+        assert!(done(1, 100.0, 10.0).meets_slo(200.0, 20.0));
+        assert!(!done(1, 300.0, 10.0).meets_slo(200.0, 20.0));
+        assert!(!done(1, 100.0, 30.0).meets_slo(200.0, 20.0));
+        assert!(!RequestMetrics::rejected(1, 0.0, 10, 1, false).meets_slo(1e9, 1e9));
+    }
+
+    #[test]
+    fn report_counts() {
+        let ms = vec![
+            done(1, 100.0, 10.0),
+            done(2, 300.0, 10.0),
+            RequestMetrics::rejected(3, 0.0, 50, 1, false),
+            RequestMetrics::rejected(4, 0.0, 70, 1, true),
+        ];
+        let r = report(&ms, 200.0, 20.0, 10_000.0);
+        assert_eq!(r.n_total, 4);
+        assert_eq!(r.n_completed, 2);
+        assert_eq!(r.n_rejected_arrival, 1);
+        assert_eq!(r.n_rejected_after_prefill, 1);
+        assert_eq!(r.wasted_prefill_tokens, 70);
+        assert!((r.slo_attainment - 0.25).abs() < 1e-9);
+        assert!((r.goodput_rps - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! Architecture / hardware constants.
+//!
+//! The paper's experiments run a *dummy model with the LLaMA2-70B
+//! architecture* on nodes of 8×NVIDIA A800-SXM4-80GB with NVLink intra-
+//! node and RDMA NICs up to 800 Gbps inter-node (§8.1 Testbed).  These
+//! structs capture exactly the quantities the performance model needs.
+
+/// Transformer architecture description (decoder-only, GQA).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: u64,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub head_dim: u64,
+    pub d_ff: u64,
+    pub vocab: u64,
+    /// Bytes per weight/activation element (bf16 = 2).
+    pub dtype_bytes: u64,
+}
+
+impl ModelSpec {
+    /// LLaMA2-70B — the paper's dummy model architecture.
+    pub fn llama2_70b() -> Self {
+        ModelSpec {
+            name: "llama2-70b",
+            n_layers: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8, // GQA
+            head_dim: 128,
+            d_ff: 28672,
+            vocab: 32000,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Parameter count (dense decoder, untied embeddings).
+    pub fn n_params(&self) -> u64 {
+        let attn = self.d_model * (self.n_heads * self.head_dim) * 2 // wq, wo
+            + self.d_model * (self.n_kv_heads * self.head_dim) * 2; // wk, wv
+        let mlp = 3 * self.d_model * self.d_ff; // gate, up, down
+        let per_layer = attn + mlp + 2 * self.d_model; // + norms
+        self.n_layers * per_layer + 2 * self.vocab * self.d_model + self.d_model
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params() * self.dtype_bytes
+    }
+
+    /// KVCache bytes for one token: K and V per layer per kv-head.
+    /// LLaMA2-70B: 2 * 80 * 8 * 128 * 2B = 327,680 B/token.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * self.dtype_bytes
+    }
+
+    /// Dense-layer FLOPs for one token (matmuls only, fwd): 2 * params.
+    pub fn linear_flops_per_token(&self) -> f64 {
+        2.0 * self.n_params() as f64
+    }
+
+    /// Attention (QK^T + PV) FLOPs for one query token attending over a
+    /// context of `ctx` keys: 4 * ctx * n_heads * head_dim.
+    pub fn attn_flops_per_token(&self, ctx: f64) -> f64 {
+        4.0 * ctx * (self.n_heads * self.head_dim) as f64 * self.n_layers as f64
+    }
+}
+
+/// One inference node (the deployment unit: a prefill or decode instance).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareSpec {
+    pub name: &'static str,
+    /// Aggregate dense bf16 throughput of the node, FLOP/s (peak).
+    pub flops_peak: f64,
+    /// Achievable model FLOPs utilization for prefill (compute-bound).
+    pub prefill_mfu: f64,
+    /// Aggregate HBM bandwidth of the node, B/s.
+    pub hbm_bw: f64,
+    /// Fraction of peak HBM bandwidth achievable in decode.
+    pub hbm_eff: f64,
+    /// Fixed per-iteration overhead in decode (scheduler, kernel
+    /// launches, TP sync) — dominant at small batches on real engines.
+    pub step_overhead_ms: f64,
+    /// VRAM bytes available for KVCache after weights (per node).
+    pub vram_kv_bytes: u64,
+    /// Inter-node RDMA bandwidth, B/s (paper: up to 800 Gbps).
+    pub rdma_bw: f64,
+    /// Intra-node CPU DRAM <-> GPU transfer bandwidth, B/s (PCIe4 x16ish).
+    pub pcie_bw: f64,
+    /// CPU DRAM bytes contributed to the distributed KVCache pool.
+    pub dram_pool_bytes: u64,
+    /// Per-transfer fixed overhead, ms (rendezvous, control plane).
+    pub transfer_latency_ms: f64,
+}
+
+impl HardwareSpec {
+    /// 8×A800-SXM4-80GB node as in §8.1.
+    pub fn a800_node() -> Self {
+        let gpus = 8.0;
+        HardwareSpec {
+            name: "8xA800",
+            flops_peak: gpus * 312e12,      // A100/A800 bf16 dense peak
+            prefill_mfu: 0.55,
+            hbm_bw: gpus * 2.0e12,          // ~2 TB/s per GPU
+            hbm_eff: 0.55,
+            step_overhead_ms: 25.0,
+            // 8*80 GB - 70B bf16 weights (~140 GB) - activations/overheads.
+            vram_kv_bytes: (8 * 80 - 160) as u64 * 1_000_000_000,
+            rdma_bw: 100e9,                 // 800 Gbps
+            pcie_bw: 64e9,                  // GPUDirect staging
+            dram_pool_bytes: 1_000_000_000_000, // 1 TB CPU DRAM pool/node
+            transfer_latency_ms: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama70b_params_close_to_70b() {
+        let m = ModelSpec::llama2_70b();
+        let p = m.n_params() as f64;
+        assert!((p / 70e9 - 1.0).abs() < 0.05, "params = {p:.3e}");
+    }
+
+    #[test]
+    fn kv_bytes_match_paper_math() {
+        let m = ModelSpec::llama2_70b();
+        assert_eq!(m.kv_bytes_per_token(), 327_680);
+    }
+
+    #[test]
+    fn node_kv_capacity_order_of_magnitude() {
+        let m = ModelSpec::llama2_70b();
+        let h = HardwareSpec::a800_node();
+        let tokens = h.vram_kv_bytes / m.kv_bytes_per_token();
+        // ~1.5M tokens of KVCache fit on a node — enough for big batches.
+        assert!(tokens > 1_000_000 && tokens < 3_000_000, "{tokens}");
+    }
+}

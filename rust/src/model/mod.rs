@@ -1,0 +1,8 @@
+//! Model + hardware descriptions and the analytic performance model that
+//! drives the discrete-event simulator (the paper's testbed substitute).
+
+pub mod llama;
+pub mod perf;
+
+pub use llama::{HardwareSpec, ModelSpec};
+pub use perf::PerfModel;

@@ -1,0 +1,217 @@
+//! Analytic performance model: maps (request shape, instance state) to
+//! execution times.  This is the simulator's substitute for the paper's
+//! A800 testbed and the source of Conductor's `EstimatePrefillExecutionTime`
+//! / `EstimateKVCacheTransferTime` estimates (Algorithm 1).
+//!
+//! The shapes follow §2 / Fig 2: prefill time grows *superlinearly* with
+//! input length (quadratic attention + linear MLP, compute-bound), decode
+//! step time grows *sublinearly* in batch size (memory-bound: weights are
+//! re-read once per step regardless of batch).
+
+use super::{HardwareSpec, ModelSpec};
+
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub model: ModelSpec,
+    pub hw: HardwareSpec,
+}
+
+impl PerfModel {
+    pub fn new(model: ModelSpec, hw: HardwareSpec) -> Self {
+        PerfModel { model, hw }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(ModelSpec::llama2_70b(), HardwareSpec::a800_node())
+    }
+
+    /// Prefill execution time (ms) on one node for `n_new` uncached tokens
+    /// given `prefix` reused tokens (their KVCache is loaded, not
+    /// recomputed).  Compute-bound:
+    ///   linear FLOPs: 2 * params * n_new
+    ///   attn FLOPs:   4 * d_attn * L * n_new * (prefix + n_new/2)
+    pub fn prefill_ms(&self, n_new: u64, prefix: u64) -> f64 {
+        if n_new == 0 {
+            return 0.0;
+        }
+        let n = n_new as f64;
+        let avg_ctx = prefix as f64 + (n + 1.0) / 2.0;
+        let flops =
+            self.model.linear_flops_per_token() * n + self.model.attn_flops_per_token(avg_ctx) * n;
+        let eff = self.hw.flops_peak * self.hw.prefill_mfu;
+        flops / eff * 1e3
+    }
+
+    /// One continuous-batching decode iteration (ms) for a batch of
+    /// `batch` sequences whose KVCaches total `kv_tokens` tokens.
+    /// Memory-bound: weights once + the batch's KVCache + small compute.
+    pub fn decode_step_ms(&self, batch: u64, kv_tokens: u64) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let bw = self.hw.hbm_bw * self.hw.hbm_eff;
+        let weight_ms = self.model.weight_bytes() as f64 / bw * 1e3;
+        let kv_ms = (kv_tokens * self.model.kv_bytes_per_token()) as f64 / bw * 1e3;
+        // Dense compute for `batch` tokens (usually negligible vs memory).
+        let compute_ms = self.model.linear_flops_per_token() * batch as f64
+            / (self.hw.flops_peak * 0.6)
+            * 1e3;
+        self.hw.step_overhead_ms + (weight_ms + kv_ms).max(compute_ms)
+    }
+
+    /// Time (ms) to move `tokens` of KVCache across one inter-node RDMA
+    /// link at full bandwidth (queueing/congestion is the Messenger's job).
+    pub fn rdma_transfer_ms(&self, tokens: u64) -> f64 {
+        self.hw.transfer_latency_ms
+            + (tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.rdma_bw * 1e3
+    }
+
+    /// Time (ms) to load `tokens` of KVCache from local CPU DRAM into VRAM.
+    pub fn dram_load_ms(&self, tokens: u64) -> f64 {
+        (tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.pcie_bw * 1e3
+    }
+
+    /// Layer-wise prefill (§5.2): storing KVCache is overlapped with the
+    /// per-layer computation, so the *visible* store latency is the excess
+    /// of transfer over compute, surfacing only at the final layer(s).
+    ///
+    /// Returns (full store latency if serialized, visible latency with
+    /// layer-wise overlap) in ms — the two curves of Fig 7.
+    pub fn layerwise_store_ms(&self, n_tokens: u64) -> (f64, f64) {
+        let total_store = (n_tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.pcie_bw * 1e3;
+        let compute = self.prefill_ms(n_tokens, 0);
+        let per_layer_store = total_store / self.model.n_layers as f64;
+        let per_layer_compute = compute / self.model.n_layers as f64;
+        // Each layer's store overlaps the next layer's compute; only the
+        // slack (if store > compute per layer) plus the last layer's store
+        // remains visible.
+        let visible = if per_layer_store <= per_layer_compute {
+            per_layer_store // just the tail store
+        } else {
+            (per_layer_store - per_layer_compute) * (self.model.n_layers - 1) as f64
+                + per_layer_store
+        };
+        (total_store, visible)
+    }
+
+    /// Max KVCache tokens a decode node can hold in VRAM.
+    pub fn vram_kv_capacity_tokens(&self) -> u64 {
+        self.hw.vram_kv_bytes / self.model.kv_bytes_per_token()
+    }
+
+    /// Chunked-pipeline-parallel prefill (§5.1): a request of `n_new`
+    /// tokens split into chunks of `chunk` across `group` nodes.  The
+    /// pipeline's makespan is roughly the per-node work serialized over
+    /// chunks but overlapped across stages.
+    pub fn cpp_prefill_ms(&self, n_new: u64, prefix: u64, chunk: u64, group: u64) -> f64 {
+        if n_new == 0 {
+            return 0.0;
+        }
+        let n_chunks = n_new.div_ceil(chunk);
+        if group <= 1 || n_chunks <= 1 {
+            return self.prefill_ms(n_new, prefix);
+        }
+        // Per-chunk time varies with its context offset; the pipeline's
+        // makespan ≈ (sum over chunks)/group + (group-1) * max chunk time
+        // (fill/drain).  Cross-node communication happens only at stage
+        // boundaries (activations, d_model per token) — negligible vs
+        // KVCache-sized traffic, matching the paper's motivation for CPP
+        // over SP.
+        let mut times = Vec::with_capacity(n_chunks as usize);
+        let mut done = 0u64;
+        for _ in 0..n_chunks {
+            let this = chunk.min(n_new - done);
+            times.push(self.prefill_ms(this, prefix + done));
+            done += this;
+        }
+        let sum: f64 = times.iter().sum();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        sum / group as f64 + (group - 1) as f64 * max / n_chunks as f64 + max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PerfModel {
+        PerfModel::paper()
+    }
+
+    #[test]
+    fn prefill_superlinear_in_length() {
+        let p = pm();
+        let t8k = p.prefill_ms(8_000, 0);
+        let t64k = p.prefill_ms(64_000, 0);
+        let t128k = p.prefill_ms(128_000, 0);
+        // 8x tokens must cost more than 8x time (attention quadratic term).
+        assert!(t64k > 8.0 * t8k, "{t8k} {t64k}");
+        assert!(t128k > 2.0 * t64k);
+        // Sanity: 8k-token 70B prefill lands near a second on one node.
+        assert!(t8k > 200.0 && t8k < 3_000.0, "{t8k}");
+    }
+
+    #[test]
+    fn prefix_cache_cuts_prefill_time() {
+        let p = pm();
+        let cold = p.prefill_ms(16_000, 0);
+        let warm = p.prefill_ms(8_000, 8_000);
+        assert!(warm < cold * 0.7, "{warm} vs {cold}");
+    }
+
+    #[test]
+    fn decode_throughput_sublinear_in_batch() {
+        let p = pm();
+        // Fixed per-sequence context of 4k tokens.
+        let t1 = p.decode_step_ms(1, 4_000);
+        let t64 = p.decode_step_ms(64, 64 * 4_000);
+        let thru1 = 1.0 / t1;
+        let thru64 = 64.0 / t64;
+        // Throughput improves with batch...
+        assert!(thru64 > 10.0 * thru1);
+        // ...but sublinearly (KV reads grow with batch).
+        assert!(thru64 < 60.0 * thru1);
+        // Latency grows with batch.
+        assert!(t64 > t1);
+    }
+
+    #[test]
+    fn decode_step_dominated_by_weights_at_small_batch() {
+        let p = pm();
+        let t = p.decode_step_ms(1, 1_000);
+        // ~140GB / (16TB/s * 0.55) ≈ 16ms + 25ms iteration overhead
+        assert!(t > 20.0 && t < 60.0, "{t}");
+    }
+
+    #[test]
+    fn transfer_time_scales_with_tokens() {
+        let p = pm();
+        let t16k = p.rdma_transfer_ms(16_000);
+        // 16k tokens * 327,680 B ≈ 5.2 GB over 100 GB/s ≈ 52ms + latency
+        assert!(t16k > 40.0 && t16k < 80.0, "{t16k}");
+        assert!(p.rdma_transfer_ms(32_000) > 1.8 * t16k);
+    }
+
+    #[test]
+    fn layerwise_overlap_hides_most_of_store() {
+        let p = pm();
+        for n in [8_000u64, 32_000, 128_000] {
+            let (full, visible) = p.layerwise_store_ms(n);
+            assert!(visible < full * 0.35, "n={n}: visible={visible} full={full}");
+        }
+    }
+
+    #[test]
+    fn cpp_speeds_up_long_context() {
+        let p = pm();
+        let single = p.prefill_ms(128_000, 0);
+        let cpp2 = p.cpp_prefill_ms(128_000, 0, 8_000, 2);
+        let cpp4 = p.cpp_prefill_ms(128_000, 0, 8_000, 4);
+        assert!(cpp2 < single * 0.75, "{cpp2} vs {single}");
+        assert!(cpp4 < cpp2);
+        // Short requests see no benefit and no big penalty.
+        let short_single = p.prefill_ms(2_000, 0);
+        let short_cpp = p.cpp_prefill_ms(2_000, 0, 8_000, 4);
+        assert!((short_cpp / short_single - 1.0).abs() < 1e-9);
+    }
+}

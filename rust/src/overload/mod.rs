@@ -1,0 +1,299 @@
+//! Overload-oriented scheduling (§7): SLO-based load metrics, early
+//! rejection, and prediction-based early rejection.
+//!
+//! Load is *SLO satisfaction* (§7.1): a prefill instance's load is its
+//! predicted TTFT over `l_ttft`; a decode instance's is its predicted TBT
+//! over `l_tbt` (or VRAM occupancy, whichever is tighter).  Admission
+//! compares pool-level load against a threshold:
+//!
+//! * [`RejectionPolicy::Baseline`] — prefill load at arrival, decode load
+//!   only when the KVCache reaches the decode node (wasting the prefill
+//!   of anything rejected there).
+//! * [`RejectionPolicy::Early`] — §7.2: also check *current* decode load
+//!   at arrival.  Removes most waste but causes the Fig 9/10 anti-phase
+//!   load oscillation (the decode load it reads is stale by one prefill).
+//! * [`RejectionPolicy::Predictive`] — §7.4: check the decode load
+//!   *predicted for the moment this request would finish prefill*, using
+//!   the system-level uniform-`t_d` model.
+
+use std::collections::HashMap;
+
+use crate::config::{RejectionPolicy, SimConfig};
+use crate::decode::DecodeInstance;
+use crate::model::PerfModel;
+use crate::prefill::PrefillPool;
+use crate::TimeMs;
+
+/// An in-flight prefill whose KVCache will land on a decode instance.
+#[derive(Debug, Clone, Copy)]
+pub struct InFlight {
+    pub kv_arrive: TimeMs,
+    pub decode: usize,
+    pub ctx_tokens: u64,
+}
+
+#[derive(Debug)]
+pub struct Admission {
+    pub policy: RejectionPolicy,
+    /// Pool load above which requests are rejected.
+    pub threshold: f64,
+    /// Running estimate of the uniform decode duration t_d (ms), §7.4.
+    t_d_ms: f64,
+    n_obs: u64,
+    pub rejected_at_arrival: u64,
+    pub rejected_at_decode: u64,
+}
+
+impl Admission {
+    pub fn new(policy: RejectionPolicy, threshold: f64) -> Self {
+        Admission {
+            policy,
+            threshold,
+            t_d_ms: 10_000.0, // prior until observations arrive
+            n_obs: 0,
+            rejected_at_arrival: 0,
+            rejected_at_decode: 0,
+        }
+    }
+
+    /// Feed a completed request's decode duration into the t_d estimate.
+    pub fn observe_decode_duration(&mut self, ms: f64) {
+        self.n_obs += 1;
+        let alpha = 1.0 / self.n_obs.min(500) as f64; // EWMA after warmup
+        self.t_d_ms += alpha * (ms - self.t_d_ms);
+    }
+
+    pub fn t_d_ms(&self) -> f64 {
+        self.t_d_ms
+    }
+
+    /// Prefill pool load: the *best* instance's predicted TTFT ratio for
+    /// a request of this size (if even the best can't meet it, the pool
+    /// is loaded).
+    pub fn prefill_load(
+        &self,
+        pool: &PrefillPool,
+        perf: &PerfModel,
+        input_tokens: u64,
+        now: TimeMs,
+        ttft_slo: f64,
+    ) -> f64 {
+        let nominal = perf.prefill_ms(input_tokens, 0);
+        pool.instances
+            .iter()
+            .map(|i| i.load(now, nominal, ttft_slo))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Current decode pool load (average TBT ratio across instances, as
+    /// §7.4 defines it).
+    pub fn decode_load_now(
+        &self,
+        decodes: &[DecodeInstance],
+        perf: &PerfModel,
+        tbt_slo: f64,
+    ) -> f64 {
+        let sum: f64 = decodes.iter().map(|d| d.load(perf, tbt_slo)).sum();
+        sum / decodes.len().max(1) as f64
+    }
+
+    /// §7.4 system-level prediction of decode pool load at `t_future`:
+    /// requests decoding for longer than t_d by then are assumed done;
+    /// in-flight prefills that land before `t_future` are added.
+    pub fn decode_load_predicted(
+        &self,
+        decodes: &[DecodeInstance],
+        in_flight: &HashMap<u64, InFlight>,
+        perf: &PerfModel,
+        t_future: TimeMs,
+        tbt_slo: f64,
+    ) -> f64 {
+        let mut total = 0.0;
+        for (i, d) in decodes.iter().enumerate() {
+            let mut batch = 0u64;
+            let mut kv = 0u64;
+            for s in &d.active {
+                if t_future - s.joined < self.t_d_ms {
+                    batch += 1;
+                    kv += s.ctx;
+                }
+            }
+            for s in &d.waiting {
+                if t_future - s.joined < self.t_d_ms {
+                    batch += 1;
+                    kv += s.ctx;
+                }
+            }
+            for f in in_flight.values().filter(|f| f.decode == i && f.kv_arrive <= t_future) {
+                batch += 1;
+                kv += f.ctx_tokens;
+            }
+            if batch > 0 {
+                // TBT ratio, concurrency-slot pressure, and VRAM pressure
+                // — the same capacity axes as DecodeInstance::load.
+                let tbt = perf.decode_step_ms(batch.min(d.max_batch as u64), kv) / tbt_slo;
+                let slots = batch as f64 / d.max_batch.max(1) as f64;
+                let vram = kv as f64 / d.kv_capacity_tokens.max(1) as f64;
+                total += tbt.max(slots).max(vram);
+            }
+        }
+        total / decodes.len().max(1) as f64
+    }
+
+    /// Arrival-time admission (§7.2 / §7.4).  `est_prefill_ms` is the
+    /// scheduler's estimate for this request.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit_at_arrival(
+        &mut self,
+        cfg: &SimConfig,
+        perf: &PerfModel,
+        pool: &PrefillPool,
+        decodes: &[DecodeInstance],
+        in_flight: &HashMap<u64, InFlight>,
+        input_tokens: u64,
+        now: TimeMs,
+    ) -> bool {
+        if self.policy == RejectionPolicy::None {
+            return true;
+        }
+        let p_load = self.prefill_load(pool, perf, input_tokens, now, cfg.slo.ttft_ms);
+        if p_load > self.threshold {
+            self.rejected_at_arrival += 1;
+            return false;
+        }
+        let d_load = match self.policy {
+            RejectionPolicy::Baseline => return true, // decode checked later
+            RejectionPolicy::Early => self.decode_load_now(decodes, perf, cfg.slo.tbt_ms),
+            RejectionPolicy::Predictive => {
+                let est_prefill = perf.prefill_ms(input_tokens, 0)
+                    + pool.instances.iter().map(|i| i.queue_ms(now)).fold(f64::INFINITY, f64::min);
+                self.decode_load_predicted(
+                    decodes,
+                    in_flight,
+                    perf,
+                    now + est_prefill,
+                    cfg.slo.tbt_ms,
+                )
+            }
+            RejectionPolicy::None => unreachable!(),
+        };
+        if d_load > self.threshold {
+            self.rejected_at_arrival += 1;
+            return false;
+        }
+        true
+    }
+
+    /// Decode-side check when the KVCache lands (§3 step 4).  Under
+    /// early/predictive rejection this assessment already happened at
+    /// arrival (§7.2 "advance the load assessment ... to precede the
+    /// beginning of the prefill stage"), so only the baseline pays here —
+    /// wasting the completed prefill.
+    pub fn admit_at_decode(
+        &mut self,
+        cfg: &SimConfig,
+        perf: &PerfModel,
+        decode: &DecodeInstance,
+        _now: TimeMs,
+    ) -> bool {
+        if self.policy != RejectionPolicy::Baseline {
+            return true;
+        }
+        let load = decode.load(perf, cfg.slo.tbt_ms);
+        if load > self.threshold {
+            self.rejected_at_decode += 1;
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn env() -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>) {
+        let cfg = SimConfig::default();
+        let perf = PerfModel::paper();
+        let pool = PrefillPool::new(&cfg);
+        let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+            .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+            .collect();
+        (cfg, perf, pool, decodes)
+    }
+
+    #[test]
+    fn none_policy_admits_everything() {
+        let (cfg, perf, pool, decodes) = env();
+        let mut adm = Admission::new(RejectionPolicy::None, 1.0);
+        assert!(adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 1_000_000, 0.0));
+    }
+
+    #[test]
+    fn baseline_ignores_decode_at_arrival_early_does_not() {
+        let (cfg, perf, pool, mut decodes) = env();
+        // Saturate decode instances far past the TBT SLO.
+        for d in &mut decodes {
+            for rid in 0..120 {
+                d.enqueue(rid, 120_000, 500, 0.0);
+            }
+            d.admit_waiting();
+        }
+        let mut base = Admission::new(RejectionPolicy::Baseline, 1.0);
+        let mut early = Admission::new(RejectionPolicy::Early, 1.0);
+        assert!(base.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0));
+        assert!(!early.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0));
+        assert_eq!(early.rejected_at_arrival, 1);
+        // The baseline pays at the decode double-check instead.
+        assert!(!base.admit_at_decode(&cfg, &perf, &decodes[0], 0.0));
+        assert_eq!(base.rejected_at_decode, 1);
+    }
+
+    #[test]
+    fn predictive_sees_in_flight_prefills() {
+        let (cfg, perf, pool, decodes) = env();
+        let mut adm = Admission::new(RejectionPolicy::Predictive, 1.0);
+        adm.t_d_ms = 1e9; // nothing finishes
+        // Idle decode pool but a wall of in-flight prefills about to land.
+        let in_flight: HashMap<u64, InFlight> = (0..2_000u64)
+            .map(|i| {
+                (i, InFlight {
+                    kv_arrive: 10.0,
+                    decode: i as usize % cfg.n_decode,
+                    ctx_tokens: 64_000,
+                })
+            })
+            .collect();
+        assert!(!adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &in_flight, 8_000, 0.0));
+        // Early rejection (current load only) would have accepted.
+        let mut early = Admission::new(RejectionPolicy::Early, 1.0);
+        assert!(early.admit_at_arrival(&cfg, &perf, &pool, &decodes, &in_flight, 8_000, 0.0));
+    }
+
+    #[test]
+    fn prefill_saturation_rejects_all_policies() {
+        let (cfg, perf, mut pool, decodes) = env();
+        for i in &mut pool.instances {
+            i.busy_until = 1e9;
+        }
+        for policy in
+            [RejectionPolicy::Baseline, RejectionPolicy::Early, RejectionPolicy::Predictive]
+        {
+            let mut adm = Admission::new(policy, 1.0);
+            assert!(
+                !adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn t_d_estimate_converges() {
+        let mut adm = Admission::new(RejectionPolicy::Predictive, 1.0);
+        for _ in 0..1_000 {
+            adm.observe_decode_duration(4_000.0);
+        }
+        assert!((adm.t_d_ms() - 4_000.0).abs() < 100.0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Layer-wise prefill (§5.2): overlap KVCache load/store with per-layer
+//! computation so the *visible* storage latency nearly vanishes and
+//! prefill scheduling can ignore VRAM size (Fig 7).
+//!
+//! The numeric model lives in `PerfModel::layerwise_store_ms`; this module
+//! provides the per-layer schedule itself (launch/wait pairs) so the live
+//! engine and the Fig 7 bench share one implementation.
+
+use crate::model::PerfModel;
+
+/// Outcome of scheduling one prefill with per-layer async KVCache stores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerwiseSchedule {
+    /// Compute time per layer (ms).
+    pub per_layer_compute_ms: f64,
+    /// Store (dump to DRAM) time per layer (ms).
+    pub per_layer_store_ms: f64,
+    /// Total wall time with overlap (compute + visible store tail).
+    pub total_ms: f64,
+    /// Wall time if stores were serialized after compute.
+    pub serialized_ms: f64,
+}
+
+/// Simulate the §5.2 schedule: layer i's store is launched right after
+/// layer i's attention completes and overlaps layers i+1.. — the wall
+/// clock is the max of the compute stream and the (offset) store stream.
+pub fn schedule(perf: &PerfModel, n_tokens: u64) -> LayerwiseSchedule {
+    let layers = perf.model.n_layers;
+    let compute_total = perf.prefill_ms(n_tokens, 0);
+    let (store_total, _) = perf.layerwise_store_ms(n_tokens);
+    let c = compute_total / layers as f64;
+    let s = store_total / layers as f64;
+
+    // Event-accurate rollout of the two streams.
+    let mut store_free = 0.0f64;
+    let mut t = 0.0f64;
+    for _layer in 0..layers {
+        t += c; // layer compute finishes
+        store_free = store_free.max(t) + s; // its store queues behind prior stores
+    }
+    LayerwiseSchedule {
+        per_layer_compute_ms: c,
+        per_layer_store_ms: s,
+        total_ms: t.max(store_free),
+        serialized_ms: compute_total + store_total,
+    }
+}
+
+/// Fig 7's y-value: added latency of storing KVCache relative to a
+/// prefill that does not store at all.
+pub fn visible_store_latency_ms(perf: &PerfModel, n_tokens: u64) -> f64 {
+    let sched = schedule(perf, n_tokens);
+    sched.total_ms - perf.prefill_ms(n_tokens, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_beats_serialization() {
+        let perf = PerfModel::paper();
+        for n in [4_000u64, 16_000, 64_000, 128_000] {
+            let s = schedule(&perf, n);
+            assert!(s.total_ms < s.serialized_ms, "n={n}");
+            // Visible latency is a small fraction of the full store cost.
+            let visible = visible_store_latency_ms(&perf, n);
+            let (full, _) = perf.layerwise_store_ms(n);
+            assert!(visible <= full * 0.25 + 1e-9, "n={n}: {visible} vs {full}");
+            assert!(visible >= 0.0);
+        }
+    }
+
+    #[test]
+    fn store_tail_at_least_one_layer() {
+        let perf = PerfModel::paper();
+        let s = schedule(&perf, 32_000);
+        let visible = visible_store_latency_ms(&perf, 32_000);
+        // The last layer's store can never be hidden.
+        assert!(visible >= s.per_layer_store_ms * 0.99);
+    }
+
+    #[test]
+    fn longer_inputs_amortize_better() {
+        // Fig 7's point: layer-wise latency stays near-flat relative to
+        // request length while the full store cost grows linearly.
+        let perf = PerfModel::paper();
+        let v8 = visible_store_latency_ms(&perf, 8_000);
+        let v128 = visible_store_latency_ms(&perf, 128_000);
+        let (f8, _) = perf.layerwise_store_ms(8_000);
+        let (f128, _) = perf.layerwise_store_ms(128_000);
+        assert!(f128 / f8 > 10.0);
+        assert!(v128 / v8 < f128 / f8);
+    }
+}

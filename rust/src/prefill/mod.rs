@@ -1,0 +1,192 @@
+//! Prefill instance pool (§5): FIFO prefill queues, chunked pipeline
+//! parallelism for long contexts, and the layer-wise overlap accounting
+//! that lets scheduling ignore VRAM on prefill nodes.
+
+pub mod layerwise;
+
+use crate::config::SimConfig;
+use crate::kvcache::{CachePool, PolicyKind};
+use crate::model::PerfModel;
+use crate::TimeMs;
+
+/// One prefill node: a FIFO queue (modeled by its drain time) plus the
+/// node's CPU-DRAM KVCache pool.
+#[derive(Debug)]
+pub struct PrefillInstance {
+    /// The queue drains at this time; new work starts no earlier.
+    pub busy_until: TimeMs,
+    pub pool: CachePool,
+    /// Requests prefilled and compute-ms spent (utilization accounting).
+    pub n_prefilled: u64,
+    pub busy_ms: f64,
+}
+
+impl PrefillInstance {
+    pub fn new(eviction: PolicyKind, capacity_blocks: Option<usize>) -> Self {
+        PrefillInstance {
+            busy_until: 0.0,
+            pool: CachePool::new(eviction, capacity_blocks),
+            n_prefilled: 0,
+            busy_ms: 0.0,
+        }
+    }
+
+    /// Algorithm 1's `EstimatePrefillQueueTime`.
+    pub fn queue_ms(&self, now: TimeMs) -> f64 {
+        (self.busy_until - now).max(0.0)
+    }
+
+    /// §7.1 load: predicted TTFT of a nominal request against the SLO.
+    pub fn load(&self, now: TimeMs, nominal_prefill_ms: f64, ttft_slo: f64) -> f64 {
+        (self.queue_ms(now) + nominal_prefill_ms) / ttft_slo
+    }
+}
+
+/// The prefill pool with CPP group formation.
+#[derive(Debug)]
+pub struct PrefillPool {
+    pub instances: Vec<PrefillInstance>,
+}
+
+impl PrefillPool {
+    pub fn new(cfg: &SimConfig) -> Self {
+        PrefillPool {
+            instances: (0..cfg.n_prefill)
+                .map(|_| PrefillInstance::new(cfg.eviction, cfg.cache_capacity_blocks))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Decide the CPP group size for an input of `n_new` uncached tokens
+    /// (§5.1): long contexts recruit idle peers, short ones stay local.
+    /// Returns (group_size, member ids) — the primary is always included.
+    pub fn cpp_group(
+        &self,
+        cfg: &SimConfig,
+        primary: usize,
+        n_new: u64,
+        now: TimeMs,
+    ) -> Vec<usize> {
+        let mut group = vec![primary];
+        if n_new < cfg.cpp_threshold_tokens || cfg.cpp_group_max <= 1 {
+            return group;
+        }
+        // Recruit the idlest peers; only nearly-idle nodes join a pipeline
+        // group (recruiting a busy node would delay its own queue).
+        let mut candidates: Vec<(usize, f64)> = self
+            .instances
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != primary)
+            .map(|(i, inst)| (i, inst.queue_ms(now)))
+            .filter(|(_, q)| *q < 1.0)
+            .collect();
+        candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (i, _) in candidates.into_iter().take(cfg.cpp_group_max as usize - 1) {
+            group.push(i);
+        }
+        group
+    }
+
+    /// Execute a prefill job: occupies every group member from
+    /// `start` for the pipeline's makespan.  Returns (start, end).
+    pub fn run_prefill(
+        &mut self,
+        perf: &PerfModel,
+        cfg: &SimConfig,
+        group: &[usize],
+        n_new: u64,
+        prefix_tokens: u64,
+        earliest_start: TimeMs,
+    ) -> (TimeMs, TimeMs) {
+        let queue_free = group
+            .iter()
+            .map(|&i| self.instances[i].busy_until)
+            .fold(0.0f64, f64::max);
+        let start = queue_free.max(earliest_start);
+        let dur = perf.cpp_prefill_ms(n_new, prefix_tokens, cfg.prefill_chunk, group.len() as u64);
+        let end = start + dur;
+        for &i in group {
+            self.instances[i].busy_until = end;
+            self.instances[i].busy_ms += dur;
+        }
+        self.instances[group[0]].n_prefilled += 1;
+        (start, end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn queue_time_accumulates() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let (s1, e1) = pool.run_prefill(&perf, &c, &[0], 8_000, 0, 0.0);
+        assert_eq!(s1, 0.0);
+        let (s2, e2) = pool.run_prefill(&perf, &c, &[0], 8_000, 0, 0.0);
+        assert_eq!(s2, e1);
+        assert!(e2 > e1);
+        assert!(pool.instances[0].queue_ms(0.0) >= e2);
+        // Other instances untouched.
+        assert_eq!(pool.instances[1].queue_ms(0.0), 0.0);
+    }
+
+    #[test]
+    fn cpp_group_only_for_long_inputs() {
+        let c = cfg();
+        let pool = PrefillPool::new(&c);
+        assert_eq!(pool.cpp_group(&c, 0, 8_000, 0.0).len(), 1);
+        let g = pool.cpp_group(&c, 0, 100_000, 0.0);
+        assert!(g.len() > 1 && g.len() <= c.cpp_group_max as usize);
+        assert_eq!(g[0], 0);
+    }
+
+    #[test]
+    fn cpp_group_skips_busy_peers() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        // Make every peer busy.
+        for i in 1..c.n_prefill {
+            pool.run_prefill(&perf, &c, &[i], 64_000, 0, 0.0);
+        }
+        let g = pool.cpp_group(&c, 0, 100_000, 0.0);
+        assert_eq!(g, vec![0]);
+    }
+
+    #[test]
+    fn group_prefill_occupies_all_members() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let (_, end) = pool.run_prefill(&perf, &c, &[0, 1], 100_000, 0, 5.0);
+        assert_eq!(pool.instances[0].busy_until, end);
+        assert_eq!(pool.instances[1].busy_until, end);
+    }
+
+    #[test]
+    fn cpp_shortens_long_prefill() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut solo = PrefillPool::new(&c);
+        let mut duo = PrefillPool::new(&c);
+        let (_, e1) = solo.run_prefill(&perf, &c, &[0], 128_000, 0, 0.0);
+        let (_, e2) = duo.run_prefill(&perf, &c, &[0, 1, 2, 3], 128_000, 0, 0.0);
+        assert!(e2 < e1 * 0.6, "{e2} vs {e1}");
+    }
+}

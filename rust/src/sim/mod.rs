@@ -1,0 +1,473 @@
+//! Discrete-event cluster simulator: replays a trace through the full
+//! Mooncake architecture (Conductor → prefill pool → Messenger → decode
+//! pool) at paper scale, using the analytic [`crate::model::PerfModel`]
+//! as the testbed substitute.  Every §8 experiment is a [`Sim::run`] over
+//! some (config, trace) point.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::conductor::{self, ConductorStats, SchedRequest};
+use crate::config::SimConfig;
+use crate::decode::DecodeInstance;
+use crate::messenger::Messenger;
+use crate::metrics::{self, Outcome, RequestMetrics};
+use crate::model::PerfModel;
+use crate::overload::{Admission, InFlight};
+use crate::prefill::PrefillPool;
+use crate::trace::TraceRecord;
+use crate::util::rng::Rng;
+use crate::{RequestId, TimeMs};
+
+/// A simulation input request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub rid: RequestId,
+    pub arrival: TimeMs,
+    pub input: u64,
+    pub output: u64,
+    pub hash_ids: Vec<u64>,
+}
+
+impl Request {
+    pub fn from_trace(rid: RequestId, r: &TraceRecord) -> Self {
+        Request {
+            rid,
+            arrival: r.timestamp as TimeMs,
+            input: r.input_length,
+            output: r.output_length.max(1),
+            hash_ids: r.hash_ids.clone(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    Arrival(usize),
+    KvArrive { rid: RequestId, decode: usize, ctx: u64, out: u64 },
+    DecodeStep { decode: usize, seq: u64, dur: f64 },
+    Sample,
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    t: TimeMs,
+    order: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.order == other.order
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.order.cmp(&self.order))
+    }
+}
+
+/// One point of the Fig 9/10 load curves.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSample {
+    pub t: TimeMs,
+    pub prefill_load: f64,
+    pub decode_load: f64,
+}
+
+#[derive(Debug)]
+pub struct SimResult {
+    pub metrics: Vec<RequestMetrics>,
+    pub conductor: ConductorStats,
+    pub load_samples: Vec<LoadSample>,
+    pub wall_ms: TimeMs,
+    /// Total bytes moved by the Messenger.
+    pub transfer_bytes: u64,
+    pub rejected_at_arrival: u64,
+    pub rejected_at_decode: u64,
+}
+
+impl SimResult {
+    pub fn report(&self, cfg: &SimConfig) -> metrics::RunReport {
+        metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
+    }
+}
+
+struct Pending {
+    arrival: TimeMs,
+    input: u64,
+    output: u64,
+    ttft: f64,
+}
+
+pub struct Sim<'a> {
+    cfg: &'a SimConfig,
+    perf: PerfModel,
+    prefill: PrefillPool,
+    decodes: Vec<DecodeInstance>,
+    messenger: Messenger,
+    rng: Rng,
+    admission: Admission,
+    events: BinaryHeap<Event>,
+    order: u64,
+    stats: ConductorStats,
+    pending: HashMap<RequestId, Pending>,
+    in_flight: HashMap<RequestId, InFlight>,
+    metrics: Vec<RequestMetrics>,
+    samples: Vec<LoadSample>,
+    sample_interval: f64,
+}
+
+impl<'a> Sim<'a> {
+    pub fn new(cfg: &'a SimConfig) -> Self {
+        let perf = PerfModel::paper();
+        let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+            .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+            .collect();
+        let messenger = Messenger::new(
+            cfg.n_prefill + cfg.n_decode,
+            perf.hw.rdma_bw,
+            perf.hw.transfer_latency_ms,
+        );
+        Sim {
+            cfg,
+            prefill: PrefillPool::new(cfg),
+            decodes,
+            messenger,
+            rng: Rng::new(cfg.seed),
+            admission: Admission::new(cfg.rejection, cfg.overload_threshold),
+            events: BinaryHeap::new(),
+            order: 0,
+            stats: ConductorStats::default(),
+            pending: HashMap::new(),
+            in_flight: HashMap::new(),
+            metrics: Vec::new(),
+            samples: Vec::new(),
+            sample_interval: 10_000.0,
+            perf,
+        }
+    }
+
+    fn push(&mut self, t: TimeMs, kind: EventKind) {
+        self.order += 1;
+        self.events.push(Event { t, order: self.order, kind });
+    }
+
+    fn sample_loads(&mut self, now: TimeMs) {
+        let p = self
+            .prefill
+            .instances
+            .iter()
+            .map(|i| (i.queue_ms(now) / self.cfg.slo.ttft_ms).min(1.0))
+            .sum::<f64>()
+            / self.prefill.len().max(1) as f64;
+        let d = self
+            .decodes
+            .iter()
+            .map(|d| d.load(&self.perf, self.cfg.slo.tbt_ms).min(1.0))
+            .sum::<f64>()
+            / self.decodes.len().max(1) as f64;
+        self.samples.push(LoadSample { t: now, prefill_load: p, decode_load: d });
+    }
+
+    fn start_decode_step(&mut self, d: usize, now: TimeMs) {
+        let inst = &mut self.decodes[d];
+        inst.admit_waiting();
+        if inst.active.is_empty() {
+            inst.stepping = false;
+            return;
+        }
+        inst.stepping = true;
+        inst.step_seq += 1;
+        let dur = inst.step_duration_ms(&self.perf);
+        let seq = inst.step_seq;
+        self.push(now + dur, EventKind::DecodeStep { decode: d, seq, dur });
+    }
+
+    fn handle_arrival(&mut self, req: &Request) {
+        let now = req.arrival;
+        // §7 admission control.
+        if !self.admission.admit_at_arrival(
+            self.cfg,
+            &self.perf,
+            &self.prefill,
+            &self.decodes,
+            &self.in_flight,
+            req.input,
+            now,
+        ) {
+            self.metrics.push(RequestMetrics::rejected(
+                req.rid, now, req.input, req.output, false,
+            ));
+            return;
+        }
+        // Algorithm 1.
+        let sched = SchedRequest {
+            rid: req.rid,
+            input_tokens: req.input,
+            output_tokens: req.output,
+            hash_ids: req.hash_ids.clone(),
+        };
+        let mut ctx = conductor::Ctx {
+            cfg: self.cfg,
+            perf: &self.perf,
+            prefill: &mut self.prefill,
+            decodes: &self.decodes,
+            messenger: &mut self.messenger,
+            rng: &mut self.rng,
+            now,
+        };
+        match conductor::schedule(&mut ctx, &sched, &mut self.stats) {
+            Err(_) => {
+                self.metrics.push(RequestMetrics::rejected(
+                    req.rid, now, req.input, req.output, false,
+                ));
+            }
+            Ok(p) => {
+                self.pending.insert(
+                    req.rid,
+                    Pending {
+                        arrival: now,
+                        input: req.input,
+                        output: req.output,
+                        ttft: p.prefill_end - now,
+                    },
+                );
+                self.in_flight.insert(
+                    req.rid,
+                    InFlight { kv_arrive: p.kv_arrive, decode: p.decode, ctx_tokens: req.input },
+                );
+                self.push(
+                    p.kv_arrive,
+                    EventKind::KvArrive {
+                        rid: req.rid,
+                        decode: p.decode,
+                        ctx: req.input,
+                        out: req.output,
+                    },
+                );
+            }
+        }
+    }
+
+    fn handle_kv_arrive(&mut self, rid: RequestId, d: usize, ctx: u64, out: u64, now: TimeMs) {
+        self.in_flight.remove(&rid);
+        let pend = self.pending.get(&rid).expect("kv for unknown request");
+        // §3 step 4 double-check by the local scheduler.
+        let ok = self.admission.admit_at_decode(self.cfg, &self.perf, &self.decodes[d], now);
+        if !ok {
+            let p = self.pending.remove(&rid).unwrap();
+            self.metrics.push(RequestMetrics::rejected(rid, p.arrival, p.input, p.output, true));
+            return;
+        }
+        let _ = pend;
+        self.decodes[d].enqueue(rid, ctx, out, now);
+        if !self.decodes[d].stepping {
+            self.start_decode_step(d, now);
+        }
+    }
+
+    fn handle_decode_step(&mut self, d: usize, seq: u64, dur: f64, now: TimeMs) {
+        if self.decodes[d].step_seq != seq {
+            return; // stale event
+        }
+        let done = self.decodes[d].finish_step(now, dur);
+        for f in done {
+            let p = self.pending.remove(&f.rid).expect("finish for unknown request");
+            self.admission.observe_decode_duration(now - (p.arrival + p.ttft));
+            self.metrics.push(RequestMetrics {
+                id: f.rid,
+                arrival: p.arrival,
+                input_tokens: p.input,
+                output_tokens: p.output,
+                outcome: Outcome::Completed,
+                ttft_ms: p.ttft,
+                max_tbt_ms: f.max_gap,
+                mean_tbt_ms: f.mean_gap,
+                generated: f.generated,
+                finish: now,
+            });
+        }
+        self.start_decode_step(d, now);
+    }
+
+    /// Replay `trace` to completion; `speedup` rescales arrival times
+    /// (2.0 = the paper's 2× overload replay).
+    pub fn run(mut self, trace: &[TraceRecord], speedup: f64) -> SimResult {
+        let requests: Vec<Request> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut req = Request::from_trace(i as RequestId, r);
+                req.arrival /= speedup;
+                req
+            })
+            .collect();
+        for (i, r) in requests.iter().enumerate() {
+            self.push(r.arrival, EventKind::Arrival(i));
+        }
+        self.push(0.0, EventKind::Sample);
+
+        let mut now = 0.0f64;
+        while let Some(ev) = self.events.pop() {
+            now = ev.t;
+            match ev.kind {
+                EventKind::Arrival(i) => {
+                    let req = requests[i].clone();
+                    self.handle_arrival(&req);
+                }
+                EventKind::KvArrive { rid, decode, ctx, out } => {
+                    self.handle_kv_arrive(rid, decode, ctx, out, now);
+                }
+                EventKind::DecodeStep { decode, seq, dur } => {
+                    self.handle_decode_step(decode, seq, dur, now);
+                }
+                EventKind::Sample => {
+                    self.sample_loads(now);
+                    // Keep sampling while work remains.
+                    if !self.events.is_empty() {
+                        self.push(now + self.sample_interval, EventKind::Sample);
+                    }
+                }
+            }
+        }
+        assert!(self.pending.is_empty(), "requests stuck in flight");
+        self.metrics.sort_by(|a, b| a.id.cmp(&b.id));
+        SimResult {
+            metrics: self.metrics,
+            conductor: self.stats,
+            load_samples: self.samples,
+            wall_ms: now,
+            transfer_bytes: self.messenger.total_bytes,
+            rejected_at_arrival: self.admission.rejected_at_arrival,
+            rejected_at_decode: self.admission.rejected_at_decode,
+        }
+    }
+}
+
+/// Convenience: run a config over a trace.
+pub fn run(cfg: &SimConfig, trace: &[TraceRecord], speedup: f64) -> SimResult {
+    Sim::new(cfg).run(trace, speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{RejectionPolicy, SchedulingPolicy};
+    use crate::metrics::Outcome;
+    use crate::trace::gen::{self, TraceGenConfig};
+
+    fn small_trace(n: usize) -> Vec<TraceRecord> {
+        gen::generate(&TraceGenConfig {
+            n_requests: n,
+            duration_ms: 600_000,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn completes_all_requests_when_unloaded() {
+        let cfg = SimConfig::default();
+        let trace = small_trace(100);
+        let res = run(&cfg, &trace, 1.0);
+        assert_eq!(res.metrics.len(), 100);
+        let completed =
+            res.metrics.iter().filter(|m| m.outcome == Outcome::Completed).count();
+        assert_eq!(completed, 100, "unloaded cluster must finish everything");
+        for m in &res.metrics {
+            assert!(m.ttft_ms > 0.0 && m.ttft_ms.is_finite());
+            assert_eq!(m.generated, m.output_tokens);
+            assert!(m.max_tbt_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn ttft_includes_queueing_under_load() {
+        let trace = small_trace(400);
+        let cfg1 = SimConfig { n_prefill: 1, n_decode: 1, ..Default::default() };
+        let cfg8 = SimConfig::default();
+        let r1 = run(&cfg1, &trace, 4.0);
+        let r8 = run(&cfg8, &trace, 4.0);
+        let rep1 = r1.report(&cfg1);
+        let rep8 = r8.report(&cfg8);
+        assert!(
+            rep1.ttft_p90 > rep8.ttft_p90,
+            "1 instance should queue more: {} vs {}",
+            rep1.ttft_p90,
+            rep8.ttft_p90
+        );
+    }
+
+    #[test]
+    fn cache_aware_lowers_ttft_vs_random() {
+        let trace = small_trace(600);
+        let mk = |pol| SimConfig { scheduling: pol, n_prefill: 4, n_decode: 4, ..Default::default() };
+        let random = run(&mk(SchedulingPolicy::Random), &trace, 1.0);
+        let central = run(&mk(SchedulingPolicy::KvCacheCentric), &trace, 1.0);
+        let tr = random.report(&mk(SchedulingPolicy::Random));
+        let tc = central.report(&mk(SchedulingPolicy::KvCacheCentric));
+        assert!(
+            tc.ttft_mean < tr.ttft_mean,
+            "cache-aware mean TTFT {} !< random {}",
+            tc.ttft_mean,
+            tr.ttft_mean
+        );
+        // And reuses far more blocks.
+        assert!(central.conductor.reused_blocks > random.conductor.reused_blocks);
+    }
+
+    #[test]
+    fn overload_rejections_happen_and_complete_cleanly() {
+        let trace = small_trace(500);
+        let cfg = SimConfig {
+            n_prefill: 2,
+            n_decode: 2,
+            rejection: RejectionPolicy::Early,
+            ..Default::default()
+        };
+        let res = run(&cfg, &trace, 8.0);
+        let rejected = res
+            .metrics
+            .iter()
+            .filter(|m| m.outcome != Outcome::Completed)
+            .count();
+        assert!(rejected > 0, "8x overload on a tiny cluster must reject");
+        assert_eq!(res.metrics.len(), 500);
+    }
+
+    #[test]
+    fn load_samples_recorded() {
+        let cfg = SimConfig::default();
+        let trace = small_trace(200);
+        let res = run(&cfg, &trace, 1.0);
+        assert!(res.load_samples.len() > 5);
+        assert!(res
+            .load_samples
+            .iter()
+            .all(|s| (0.0..=1.0).contains(&s.prefill_load) && (0.0..=1.0).contains(&s.decode_load)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SimConfig::default();
+        let trace = small_trace(150);
+        let a = run(&cfg, &trace, 1.0);
+        let b = run(&cfg, &trace, 1.0);
+        let ta: Vec<f64> = a.metrics.iter().map(|m| m.ttft_ms).collect();
+        let tb: Vec<f64> = b.metrics.iter().map(|m| m.ttft_ms).collect();
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in ta.iter().zip(&tb) {
+            assert!((x.is_nan() && y.is_nan()) || x == y);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! JSONL reader/writer for the published trace format.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::TraceRecord;
+use crate::util::json::{self, Value};
+
+/// Parse a single JSONL line into a record.
+pub fn parse_record(line: &str) -> Result<TraceRecord> {
+    let v = json::parse(line).with_context(|| format!("bad trace line: {line:.80}"))?;
+    let get = |k: &str| -> Result<&Value> {
+        v.get(k).ok_or_else(|| anyhow::anyhow!("missing field {k}"))
+    };
+    let hash_ids = get("hash_ids")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("hash_ids not an array"))?
+        .iter()
+        .map(|x| x.as_u64().ok_or_else(|| anyhow::anyhow!("bad hash id")))
+        .collect::<Result<Vec<_>>>()?;
+    let rec = TraceRecord {
+        timestamp: get("timestamp")?.as_u64().context("timestamp")?,
+        input_length: get("input_length")?.as_u64().context("input_length")?,
+        output_length: get("output_length")?.as_u64().context("output_length")?,
+        hash_ids,
+    };
+    if rec.output_length == 0 {
+        bail!("output_length must be >= 1");
+    }
+    Ok(rec)
+}
+
+pub fn record_to_json(r: &TraceRecord) -> String {
+    json::to_string(&json::obj(vec![
+        ("timestamp", json::num(r.timestamp as f64)),
+        ("input_length", json::num(r.input_length as f64)),
+        ("output_length", json::num(r.output_length as f64)),
+        ("hash_ids", json::arr_u64(&r.hash_ids)),
+    ]))
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Vec<TraceRecord>> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("open trace {:?}", path.as_ref()))?;
+    let mut out = Vec::new();
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(parse_record(&line)?);
+    }
+    // Replay requires time order.
+    out.sort_by_key(|r| r.timestamp);
+    Ok(out)
+}
+
+pub fn save<P: AsRef<Path>>(path: P, records: &[TraceRecord]) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("create trace {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    for r in records {
+        writeln!(w, "{}", record_to_json(r))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_sample() {
+        let line = r#"{"timestamp": 27482, "input_length": 6955, "output_length": 52,
+            "hash_ids": [46, 47, 48, 49, 50, 51, 52, 53, 54, 55, 56, 57, 2353, 2354]}"#;
+        let r = parse_record(line).unwrap();
+        assert_eq!(r.input_length, 6955);
+        assert_eq!(r.hash_ids.len(), 14);
+        assert_eq!(r.hash_ids[12], 2353);
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let recs = vec![
+            TraceRecord { timestamp: 5, input_length: 100, output_length: 3, hash_ids: vec![1] },
+            TraceRecord { timestamp: 2, input_length: 700, output_length: 9, hash_ids: vec![1, 2] },
+        ];
+        let path = std::env::temp_dir().join("mooncake_trace_test.jsonl");
+        save(&path, &recs).unwrap();
+        let loaded = load(&path).unwrap();
+        // Loader sorts by timestamp.
+        assert_eq!(loaded[0].timestamp, 2);
+        assert_eq!(loaded[1], recs[0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_zero_output() {
+        let line = r#"{"timestamp": 1, "input_length": 10, "output_length": 0, "hash_ids": []}"#;
+        assert!(parse_record(line).is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! The Mooncake open-source trace schema (§4) and tooling around it:
+//! JSONL load/store, a statistical generator calibrated to the published
+//! trace features, and analyzers for Figs 5/6 and Table 1.
+
+pub mod gen;
+pub mod jsonl;
+pub mod stats;
+
+use crate::BlockId;
+
+/// Number of tokens hashed into one prefix block in the published trace.
+pub const BLOCK_TOKENS: u64 = 512;
+
+/// One request record — exactly the published schema:
+/// `{"timestamp", "input_length", "output_length", "hash_ids"}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival time, ms since trace start (0..3_600_000 in the paper).
+    pub timestamp: u64,
+    /// Input (prompt) tokens.
+    pub input_length: u64,
+    /// Output (generated) tokens.
+    pub output_length: u64,
+    /// Prefix-chained block hashes remapped to global ids; identical ids
+    /// ⇒ identical 512-token blocks *and* identical preceding context, so
+    /// a shared leading run of ids is a reusable KVCache prefix.
+    pub hash_ids: Vec<BlockId>,
+}
+
+impl TraceRecord {
+    /// Full blocks covered by the input (the trace's hash_ids length).
+    pub fn n_blocks(&self) -> usize {
+        self.hash_ids.len()
+    }
+
+    /// Longest shared prefix (in blocks) with a set of cached block ids,
+    /// scanning leading hash_ids.  This is the `prefix_len` lookup of
+    /// Algorithm 1 expressed on the trace schema.
+    pub fn prefix_match_blocks(&self, contains: impl Fn(BlockId) -> bool) -> usize {
+        self.hash_ids.iter().take_while(|&&b| contains(b)).count()
+    }
+
+    /// Prefix match measured in tokens (capped by input_length).
+    pub fn prefix_match_tokens(&self, matched_blocks: usize) -> u64 {
+        (matched_blocks as u64 * BLOCK_TOKENS).min(self.input_length)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_match_respects_chain_order() {
+        let r = TraceRecord {
+            timestamp: 0,
+            input_length: 2048,
+            output_length: 10,
+            hash_ids: vec![5, 6, 7, 8],
+        };
+        // Cache holds 5,6,8 — the chain breaks at 7.
+        let cached = [5u64, 6, 8];
+        let m = r.prefix_match_blocks(|b| cached.contains(&b));
+        assert_eq!(m, 2);
+        assert_eq!(r.prefix_match_tokens(m), 1024);
+    }
+
+    #[test]
+    fn prefix_tokens_capped_by_input() {
+        let r = TraceRecord {
+            timestamp: 0,
+            input_length: 600, // 1 full block + change
+            output_length: 1,
+            hash_ids: vec![1],
+        };
+        assert_eq!(r.prefix_match_tokens(1), 512);
+    }
+}

@@ -1,0 +1,157 @@
+//! Trace analyzers: the quantities behind Fig 5 (length distributions),
+//! Fig 6 (block-hit CDF) and Table 1 (cache-policy hit rates).
+
+use std::collections::HashMap;
+
+use super::TraceRecord;
+use crate::kvcache::eviction::{EvictionPolicy, PolicyKind};
+use crate::util::stats::Histogram;
+use crate::BlockId;
+
+#[derive(Debug, Clone)]
+pub struct TraceSummary {
+    pub n_requests: usize,
+    pub mean_input: f64,
+    pub mean_output: f64,
+    pub total_blocks: u64,
+    pub unique_blocks: u64,
+    pub duration_ms: u64,
+}
+
+pub fn summarize(trace: &[TraceRecord]) -> TraceSummary {
+    let n = trace.len();
+    let mut unique = std::collections::HashSet::new();
+    let mut total = 0u64;
+    for r in trace {
+        total += r.hash_ids.len() as u64;
+        unique.extend(r.hash_ids.iter().copied());
+    }
+    TraceSummary {
+        n_requests: n,
+        mean_input: trace.iter().map(|r| r.input_length as f64).sum::<f64>() / n.max(1) as f64,
+        mean_output: trace.iter().map(|r| r.output_length as f64).sum::<f64>() / n.max(1) as f64,
+        total_blocks: total,
+        unique_blocks: unique.len() as u64,
+        duration_ms: trace.iter().map(|r| r.timestamp).max().unwrap_or(0),
+    }
+}
+
+/// Fig 5: input/output length histograms (normalized).
+pub fn length_histograms(trace: &[TraceRecord], bins: usize) -> (Histogram, Histogram) {
+    let max_in = trace.iter().map(|r| r.input_length).max().unwrap_or(1) as f64;
+    let max_out = trace.iter().map(|r| r.output_length).max().unwrap_or(1) as f64;
+    let mut hin = Histogram::new(0.0, max_in, bins);
+    let mut hout = Histogram::new(0.0, max_out, bins);
+    for r in trace {
+        hin.add(r.input_length as f64);
+        hout.add(r.output_length as f64);
+    }
+    (hin, hout)
+}
+
+/// Per-block access counts (Fig 6 input).
+pub fn block_hit_counts(trace: &[TraceRecord]) -> HashMap<BlockId, u64> {
+    let mut counts = HashMap::new();
+    for r in trace {
+        for &b in &r.hash_ids {
+            *counts.entry(b).or_default() += 1;
+        }
+    }
+    counts
+}
+
+/// Fig 6: CDF of block hit counts — returns (hit_count, cumulative
+/// fraction of blocks with count <= hit_count), log-spaced points.
+pub fn block_hit_cdf(trace: &[TraceRecord]) -> Vec<(u64, f64)> {
+    let counts = block_hit_counts(trace);
+    let mut vals: Vec<u64> = counts.values().copied().collect();
+    vals.sort_unstable();
+    let n = vals.len().max(1) as f64;
+    let mut points = Vec::new();
+    let mut threshold = 1u64;
+    while threshold <= *vals.last().unwrap_or(&1) {
+        let idx = vals.partition_point(|&v| v <= threshold);
+        points.push((threshold, idx as f64 / n));
+        threshold = (threshold * 2).max(threshold + 1);
+    }
+    points
+}
+
+/// Table 1: replay the trace through a single global cache pool with the
+/// given eviction policy and capacity (None = infinite); returns the block
+/// hit rate.  Mirrors the paper's "simple cache policy analysis".
+pub fn cache_hit_rate(
+    trace: &[TraceRecord],
+    policy: PolicyKind,
+    capacity_blocks: Option<usize>,
+) -> f64 {
+    let mut policy = EvictionPolicy::new(policy, capacity_blocks);
+    let mut hits = 0u64;
+    let mut total = 0u64;
+    for r in trace {
+        for (idx, &b) in r.hash_ids.iter().enumerate() {
+            total += 1;
+            if policy.contains(b) {
+                hits += 1;
+                policy.touch(b, r.timestamp as f64, idx);
+            } else {
+                policy.insert(b, r.timestamp as f64, idx);
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{generate, TraceGenConfig};
+
+    fn trace() -> Vec<TraceRecord> {
+        generate(&TraceGenConfig { n_requests: 3_000, ..Default::default() })
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let t = trace();
+        let s = summarize(&t);
+        assert_eq!(s.n_requests, 3_000);
+        assert!(s.unique_blocks <= s.total_blocks);
+        assert!(s.mean_input > 1_000.0);
+    }
+
+    #[test]
+    fn hit_cdf_monotone_and_bounded() {
+        let t = trace();
+        let cdf = block_hit_cdf(&t);
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(cdf.last().unwrap().1 > 0.999);
+    }
+
+    #[test]
+    fn infinite_cache_beats_finite() {
+        let t = trace();
+        let inf = cache_hit_rate(&t, PolicyKind::Lru, None);
+        let small = cache_hit_rate(&t, PolicyKind::Lru, Some(500));
+        assert!(inf > small, "{inf} vs {small}");
+        assert!(inf <= 1.0 && small >= 0.0);
+    }
+
+    #[test]
+    fn capacity_monotonicity_lru() {
+        // Table 1's rows: hit rate grows with capacity.
+        let t = trace();
+        let r1k = cache_hit_rate(&t, PolicyKind::Lru, Some(1_000));
+        let r10k = cache_hit_rate(&t, PolicyKind::Lru, Some(10_000));
+        let r50k = cache_hit_rate(&t, PolicyKind::Lru, Some(50_000));
+        assert!(r1k <= r10k + 0.02 && r10k <= r50k + 0.02, "{r1k} {r10k} {r50k}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed() {
+        let a = parse("simulate trace.jsonl --rps 2.5 --instances=8 --verbose");
+        assert_eq!(a.positional, vec!["simulate", "trace.jsonl"]);
+        assert_eq!(a.get_f64("rps", 0.0), 2.5);
+        assert_eq!(a.get_usize("instances", 0), 8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn bare_option_before_positional_consumes_it() {
+        // Documented ambiguity: `--flag value` is parsed as an option.
+        let a = parse("--verbose trace.jsonl");
+        assert_eq!(a.get("verbose"), Some("trace.jsonl"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--fast");
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-crate infrastructure: JSON, RNG + distributions, statistics, CLI
+//! argument parsing.  (No serde/clap/rand offline — see DESIGN.md.)
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod stats;

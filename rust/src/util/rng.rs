@@ -1,0 +1,192 @@
+//! Deterministic, seedable RNG (splitmix64 + xoshiro256**) plus the
+//! distributions the workload generators need: uniform, exponential
+//! (Poisson arrivals), lognormal, geometric, and Zipf (block popularity).
+
+/// xoshiro256** seeded via splitmix64 — fast, high-quality, reproducible.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 to expand the seed.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's method without the rejection refinement is fine here
+        // (n << 2^64 for all our uses).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -(-self.f64()).ln_1p() / lambda // -ln(1-u)/λ, u in [0,1)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with the given *mean* and coefficient-of-variation shape
+    /// sigma (of the underlying normal).
+    pub fn lognormal_mean(&mut self, mean: f64, sigma: f64) -> f64 {
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Geometric on {1, 2, ...} with the given mean (>= 1).
+    pub fn geometric_mean(&mut self, mean: f64) -> u64 {
+        let p = 1.0 / mean.max(1.0);
+        let u = self.f64().max(1e-300);
+        (u.ln() / (1.0 - p).ln()).floor() as u64 + 1
+    }
+
+    /// Pick an index from explicit cumulative weights (binary search).
+    pub fn pick_cdf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.f64() * cdf.last().copied().unwrap_or(1.0);
+        match cdf.binary_search_by(|probe| probe.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf sampler over ranks {0..n-1} with exponent `s` (precomputed CDF).
+/// Models the paper's Fig 6 block-popularity skew: a few blocks are hit
+/// tens of thousands of times while >50% go unused.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.pick_cdf(&self.cdf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn lognormal_mean_is_calibrated() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.lognormal_mean(7590.0, 1.0)).sum::<f64>() / n as f64;
+        assert!((mean / 7590.0 - 1.0).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn geometric_mean_close() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.geometric_mean(5.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean / 5.0 - 1.0).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let z = Zipf::new(1000, 1.2);
+        let mut r = Rng::new(5);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Rank 0 must dominate rank 99 by roughly 100^1.2.
+        assert!(counts[0] > counts[99] * 20);
+        // Tail mostly rare.
+        assert!(counts[900..].iter().sum::<u64>() < counts[0]);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(6);
+        for _ in 0..10_000 {
+            let x = r.below(7);
+            assert!(x < 7);
+        }
+        for _ in 0..10_000 {
+            let x = r.range(3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Cross-module integration tests: trace generation -> JSONL roundtrip ->
+//! full cluster simulation -> reports, plus Mooncake-vs-vLLM end-to-end
+//! comparisons that mirror the paper's headline claims at small scale.
+
+use mooncake::baseline::{self, VllmConfig};
+use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
+use mooncake::kvcache::PolicyKind;
+use mooncake::metrics::Outcome;
+use mooncake::model::PerfModel;
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+use mooncake::trace::{jsonl, stats};
+
+fn trace(n: usize) -> Vec<mooncake::trace::TraceRecord> {
+    gen::generate(&TraceGenConfig { n_requests: n, duration_ms: 1_200_000, ..Default::default() })
+}
+
+#[test]
+fn trace_jsonl_roundtrip_preserves_simulation() {
+    let t1 = trace(300);
+    let path = std::env::temp_dir().join("mooncake_integration_trace.jsonl");
+    jsonl::save(&path, &t1).unwrap();
+    let t2 = jsonl::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(t1.len(), t2.len());
+
+    let cfg = SimConfig::default();
+    let r1 = sim::run(&cfg, &t1, 1.0).report(&cfg);
+    let r2 = sim::run(&cfg, &t2, 1.0).report(&cfg);
+    assert_eq!(r1.n_completed, r2.n_completed);
+    assert!((r1.ttft_p90 - r2.ttft_p90).abs() < 1e-6);
+}
+
+#[test]
+fn mooncake_beats_vllm_on_long_context_tbt() {
+    // The paper's central end-to-end claim (Fig 12/13): disaggregation
+    // keeps TBT bounded where coupled prefill wrecks it.
+    let perf = PerfModel::paper();
+    let slo = SloConfig {
+        ttft_ms: 10.0 * perf.prefill_ms(65_536, 0),
+        tbt_ms: 5.0 * perf.decode_step_ms(1, 65_536),
+    };
+    let data = gen::dataset("sim64k", 60, 0.3, 5);
+
+    let vcfg = VllmConfig { n_instances: 4, slo, ..Default::default() };
+    let vrep = baseline::run(&vcfg, &data, 1.0);
+
+    let mcfg = SimConfig { n_prefill: 3, n_decode: 1, slo, ..Default::default() };
+    let mrep = sim::run(&mcfg, &data, 1.0).report(&mcfg);
+
+    assert!(
+        mrep.tbt_p90 < vrep.tbt_p90,
+        "Mooncake P90 TBT {} must beat vLLM {}",
+        mrep.tbt_p90,
+        vrep.tbt_p90
+    );
+    assert!(mrep.tbt_p90 <= slo.tbt_ms, "Mooncake must hold the TBT SLO");
+}
+
+#[test]
+fn rejection_policies_ranked_by_waste() {
+    // Table 3's mechanism: baseline wastes prefill, early rejection does
+    // not, prediction completes at least as many requests.
+    // Decode-contended regime: few decode slots relative to prefill
+    // throughput, so the decode double-check actually fires.
+    let t = trace(1_500);
+    let run = |rej| {
+        let cfg = SimConfig {
+            n_prefill: 3,
+            n_decode: 1,
+            max_decode_batch: 16,
+            rejection: rej,
+            ..Default::default()
+        };
+        let res = sim::run(&cfg, &t, 6.0);
+        let rep = res.report(&cfg);
+        (rep.wasted_prefill_tokens, rep.n_completed, rep.n_rejected_after_prefill)
+    };
+    let (base_waste, base_done, base_after) = run(RejectionPolicy::Baseline);
+    let (early_waste, _early_done, early_after) = run(RejectionPolicy::Early);
+    let (pred_waste, pred_done, _pred_after) = run(RejectionPolicy::Predictive);
+
+    assert!(base_after > 0, "baseline must reject some requests after prefill");
+    assert!(
+        early_after <= base_after && early_waste <= base_waste,
+        "early rejection must waste less: {early_waste} vs {base_waste}"
+    );
+    assert!(pred_waste <= base_waste);
+    assert!(
+        pred_done + 50 >= base_done,
+        "prediction must not complete meaningfully fewer: {pred_done} vs {base_done}"
+    );
+}
+
+#[test]
+fn scheduling_policies_ordered_on_reuse() {
+    let t = trace(800);
+    let run = |pol| {
+        let cfg = SimConfig { scheduling: pol, n_prefill: 4, n_decode: 4, ..Default::default() };
+        let res = sim::run(&cfg, &t, 1.0);
+        (res.report(&cfg).ttft_mean, res.conductor.reused_blocks)
+    };
+    let (ttft_rand, reuse_rand) = run(SchedulingPolicy::Random);
+    let (ttft_lb, _) = run(SchedulingPolicy::LoadBalance);
+    let (ttft_ca, reuse_ca) = run(SchedulingPolicy::CacheAware);
+    let (ttft_kc, reuse_kc) = run(SchedulingPolicy::KvCacheCentric);
+
+    assert!(ttft_ca < ttft_rand, "cache-aware {ttft_ca} !< random {ttft_rand}");
+    assert!(ttft_kc < ttft_rand, "centric {ttft_kc} !< random {ttft_rand}");
+    assert!(ttft_kc < ttft_lb * 1.05, "centric should not lose badly to load-balance");
+    assert!(reuse_ca > reuse_rand && reuse_kc > reuse_rand);
+}
+
+#[test]
+fn eviction_policies_agree_with_table1_ordering() {
+    let t = trace(4_000);
+    // At infinite capacity every policy hits the same ceiling.
+    let inf_lru = stats::cache_hit_rate(&t, PolicyKind::Lru, None);
+    let inf_lfu = stats::cache_hit_rate(&t, PolicyKind::Lfu, None);
+    assert!((inf_lru - inf_lfu).abs() < 1e-9);
+    // At mid capacity LRU should not lose to LFU (temporal locality).
+    let mid_lru = stats::cache_hit_rate(&t, PolicyKind::Lru, Some(5_000));
+    let mid_lfu = stats::cache_hit_rate(&t, PolicyKind::Lfu, Some(5_000));
+    assert!(mid_lru >= mid_lfu - 0.03, "LRU {mid_lru} vs LFU {mid_lfu}");
+}
+
+#[test]
+fn goodput_counts_only_slo_satisfying_completions() {
+    let t = trace(400);
+    let cfg = SimConfig { n_prefill: 1, n_decode: 1, ..Default::default() };
+    let res = sim::run(&cfg, &t, 10.0); // heavy overload, no admission control
+    let rep = res.report(&cfg);
+    let completed = res.metrics.iter().filter(|m| m.outcome == Outcome::Completed).count();
+    let ok = res
+        .metrics
+        .iter()
+        .filter(|m| m.meets_slo(cfg.slo.ttft_ms, cfg.slo.tbt_ms))
+        .count();
+    assert!(ok <= completed);
+    assert!((rep.goodput_rps * res.wall_ms / 1e3 - ok as f64).abs() < 1.0);
+    // Under 10x overload the cluster cannot serve everything within SLO:
+    // either Algorithm 1 rejects (line 25) or completions violate SLO.
+    assert!(
+        ok < res.metrics.len(),
+        "expected rejections or SLO violations under 10x overload"
+    );
+}
+
+#[test]
+fn cpp_reduces_long_context_ttft_end_to_end() {
+    // §5.1: with CPP enabled, 128k-token requests see lower TTFT than
+    // single-node prefill, end to end.
+    let data = gen::dataset("sim128k", 20, 0.05, 9);
+    let mk = |group: u64| SimConfig {
+        n_prefill: 4,
+        n_decode: 2,
+        cpp_group_max: group,
+        slo: SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let solo = sim::run(&mk(1), &data, 1.0).report(&mk(1));
+    let cpp = sim::run(&mk(4), &data, 1.0).report(&mk(4));
+    assert!(
+        cpp.ttft_mean < solo.ttft_mean * 0.75,
+        "CPP mean TTFT {} !<< solo {}",
+        cpp.ttft_mean,
+        solo.ttft_mean
+    );
+}

@@ -1,0 +1,242 @@
+//! Property-based tests (hand-rolled generators — proptest is not
+//! available offline) over coordinator invariants: request conservation,
+//! cache capacity bounds, prefix-chain consistency, JSON roundtrips, and
+//! simulator determinism, across randomized configurations and traces.
+
+use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig};
+use mooncake::kvcache::{chain_hashes, CachePool, EvictionPolicy, PolicyKind};
+use mooncake::metrics::Outcome;
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+use mooncake::trace::jsonl;
+use mooncake::trace::TraceRecord;
+use mooncake::util::json;
+use mooncake::util::rng::Rng;
+
+fn random_trace(rng: &mut Rng, n: usize) -> Vec<TraceRecord> {
+    let cfg = TraceGenConfig {
+        n_requests: n,
+        duration_ms: 300_000 + rng.below(1_200_000),
+        seed: rng.next_u64(),
+        mean_first_input: 1_000.0 + rng.f64() * 15_000.0,
+        session_fraction: rng.f64(),
+        mean_session_turns: 1.0 + rng.f64() * 5.0,
+        ..Default::default()
+    };
+    gen::generate(&cfg)
+}
+
+fn random_sim_config(rng: &mut Rng) -> SimConfig {
+    let scheds = [
+        SchedulingPolicy::Random,
+        SchedulingPolicy::LoadBalance,
+        SchedulingPolicy::CacheAware,
+        SchedulingPolicy::KvCacheCentric,
+    ];
+    let rejects = [
+        RejectionPolicy::None,
+        RejectionPolicy::Baseline,
+        RejectionPolicy::Early,
+        RejectionPolicy::Predictive,
+    ];
+    SimConfig {
+        n_prefill: 1 + rng.below(6) as usize,
+        n_decode: 1 + rng.below(6) as usize,
+        scheduling: scheds[rng.below(4) as usize],
+        rejection: rejects[rng.below(4) as usize],
+        cache_capacity_blocks: if rng.f64() < 0.3 { Some(1 + rng.below(5_000) as usize) } else { None },
+        seed: rng.next_u64(),
+        ..Default::default()
+    }
+}
+
+/// Property: every submitted request is accounted for exactly once, with
+/// a consistent outcome.
+#[test]
+fn prop_request_conservation() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for round in 0..8 {
+        let n = 200 + rng.below(300) as usize;
+        let trace = random_trace(&mut rng, n);
+        let cfg = random_sim_config(&mut rng);
+        let speedup = 1.0 + rng.f64() * 5.0;
+        let res = sim::run(&cfg, &trace, speedup);
+        assert_eq!(res.metrics.len(), trace.len(), "round {round}: {cfg:?}");
+        for m in &res.metrics {
+            match m.outcome {
+                Outcome::Completed => {
+                    assert!(m.ttft_ms.is_finite() && m.ttft_ms >= 0.0);
+                    assert_eq!(m.generated, m.output_tokens);
+                    assert!(m.finish >= m.arrival + m.ttft_ms - 1e-6);
+                }
+                _ => {
+                    assert!(m.ttft_ms.is_nan());
+                    assert_eq!(m.generated, 0);
+                }
+            }
+        }
+        // Block accounting: every scheduled request's blocks are either
+        // reused or recomputed.
+        let scheduled_blocks: u64 = res
+            .metrics
+            .iter()
+            .filter(|m| m.outcome != Outcome::RejectedAtArrival)
+            .map(|m| {
+                trace[m.id as usize].hash_ids.len() as u64
+            })
+            .sum();
+        assert_eq!(
+            res.conductor.reused_blocks + res.conductor.recomputed_blocks,
+            scheduled_blocks,
+            "round {round}"
+        );
+    }
+}
+
+/// Property: simulation is a pure function of (config, trace).
+#[test]
+fn prop_determinism() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..4 {
+        let trace = random_trace(&mut rng, 150);
+        let cfg = random_sim_config(&mut rng);
+        let a = sim::run(&cfg, &trace, 2.0);
+        let b = sim::run(&cfg, &trace, 2.0);
+        assert_eq!(a.metrics.len(), b.metrics.len());
+        for (x, y) in a.metrics.iter().zip(&b.metrics) {
+            assert_eq!(x.outcome, y.outcome);
+            assert!((x.ttft_ms.is_nan() && y.ttft_ms.is_nan()) || x.ttft_ms == y.ttft_ms);
+            assert_eq!(x.finish, y.finish);
+        }
+        assert_eq!(a.transfer_bytes, b.transfer_bytes);
+    }
+}
+
+/// Property: eviction policies never exceed capacity and never lose a
+/// block that wasn't evicted or removed.
+#[test]
+fn prop_eviction_capacity_and_accounting() {
+    let mut rng = Rng::new(0xFEED);
+    for kind in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LengthAware] {
+        for _ in 0..5 {
+            let cap = 1 + rng.below(200) as usize;
+            let mut p = EvictionPolicy::new(kind, Some(cap));
+            let mut inserted = std::collections::HashSet::new();
+            let mut evicted = std::collections::HashSet::new();
+            for step in 0..3_000u64 {
+                let b = rng.below(500);
+                match rng.below(10) {
+                    0 => {
+                        if p.remove(b) {
+                            inserted.remove(&b);
+                        }
+                    }
+                    1..=3 => {
+                        p.touch(b, step as f64, rng.below(40) as usize);
+                    }
+                    _ => {
+                        if let Some(e) = p.insert(b, step as f64, rng.below(40) as usize) {
+                            evicted.insert(e);
+                            inserted.remove(&e);
+                        }
+                        inserted.insert(b);
+                    }
+                }
+                assert!(p.len() <= cap, "{kind:?}: {} > {cap}", p.len());
+                // Everything we believe is inside must be inside.
+                for &x in inserted.iter() {
+                    assert!(p.contains(x), "{kind:?} lost block {x}");
+                }
+            }
+        }
+    }
+}
+
+/// Property: a pool's prefix match length never exceeds the chain length
+/// and is monotone under chain extension.
+#[test]
+fn prop_prefix_match_monotone() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..20 {
+        let mut pool = CachePool::new(PolicyKind::Lru, Some(1_000));
+        let chain: Vec<u64> = (0..rng.range(1, 40)).map(|_| rng.below(10_000)).collect();
+        pool.admit_chain(&chain, 0.0);
+        let m1 = pool.prefix_match_blocks(&chain);
+        assert!(m1 <= chain.len());
+        let mut longer = chain.clone();
+        longer.push(99_999_999);
+        let m2 = pool.prefix_match_blocks(&longer);
+        assert!(m2 >= m1.min(chain.len()));
+        // Divergence at position k caps the match at k.
+        if chain.len() > 2 {
+            let mut diverged = chain.clone();
+            diverged[1] = 77_777_777;
+            assert!(pool.prefix_match_blocks(&diverged) <= 1);
+        }
+    }
+}
+
+/// Property: chain hashes are prefix-stable and divergence-propagating.
+#[test]
+fn prop_chain_hash_prefix_stability() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..30 {
+        let n = rng.range(1, 2_000) as usize;
+        let toks: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        let block = [16usize, 64, 512][rng.below(3) as usize];
+        let h = chain_hashes(&toks, block);
+        assert_eq!(h.len(), n.div_ceil(block));
+        // A prefix of the tokens yields a prefix of the hashes (for the
+        // full blocks it covers).
+        let cut = rng.range(1, n as u64) as usize;
+        let h2 = chain_hashes(&toks[..cut], block);
+        let full = cut / block;
+        assert_eq!(h[..full], h2[..full]);
+    }
+}
+
+/// Property: JSONL roundtrip is the identity on generated traces.
+#[test]
+fn prop_jsonl_roundtrip_identity() {
+    let mut rng = Rng::new(0xD00D);
+    for _ in 0..5 {
+        let trace = random_trace(&mut rng, 100);
+        let path = std::env::temp_dir().join(format!("mc_prop_{}.jsonl", rng.next_u64()));
+        jsonl::save(&path, &trace).unwrap();
+        let loaded = jsonl::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trace.len(), loaded.len());
+        let mut sorted = trace.clone();
+        sorted.sort_by_key(|r| r.timestamp);
+        // Loader sorts by timestamp; compare multisets via sorted order.
+        for (a, b) in sorted.iter().zip(&loaded) {
+            assert_eq!(a.timestamp, b.timestamp);
+        }
+    }
+}
+
+/// Property: arbitrary JSON values survive serialize -> parse.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.f64() < 0.5),
+            2 => json::Value::Num((rng.below(1 << 30) as f64) - (1 << 29) as f64),
+            3 => json::Value::Str(format!("s{}\"\\\n{}", rng.below(100), rng.below(100))),
+            4 => json::Value::Arr((0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => json::Value::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0xFACE);
+    for _ in 0..200 {
+        let v = random_value(&mut rng, 3);
+        let s = json::to_string(&v);
+        let back = json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(v, back, "roundtrip failed for {s}");
+    }
+}

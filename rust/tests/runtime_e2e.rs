@@ -1,0 +1,144 @@
+//! End-to-end tests over the live PJRT path: load the AOT artifacts,
+//! run the real (tiny) dummy model, and check serving semantics —
+//! determinism, prefix-cache equivalence, and chunked-prefill
+//! consistency.  Skipped when `artifacts/` hasn't been built.
+
+use mooncake::engine::{Engine, EngineConfig, GenRequest};
+use mooncake::runtime::Runtime;
+use mooncake::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn prompt(rng: &mut Rng, vocab: usize, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[test]
+fn runtime_loads_and_manifests_agree() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let m = &rt.manifest;
+    assert!(m.vocab > 0 && m.n_layers > 0 && m.max_ctx > 0);
+    assert!(!m.prefill_buckets.is_empty() && !m.decode_buckets.is_empty());
+    assert_eq!(m.kv_elems(), m.n_layers * 2 * m.max_ctx * m.n_kv_heads * m.head_dim);
+    assert!(rt.prefill_bucket(1).is_some());
+    assert!(rt.prefill_bucket(m.prefill_buckets[0]).is_some());
+    assert!(rt.decode_bucket(1).is_some());
+    assert!(rt.decode_bucket(999).is_none());
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let dir = require_artifacts!();
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let rt = Runtime::load(&dir).unwrap();
+        let vocab = rt.manifest.vocab;
+        let mut engine = Engine::new(rt, EngineConfig::default());
+        let mut rng = Rng::new(123);
+        let reqs = vec![GenRequest { id: 0, prompt: prompt(&mut rng, vocab, 50), max_new: 12 }];
+        let res = engine.serve(&reqs).unwrap();
+        outs.push(res[0].output.clone());
+    }
+    assert_eq!(outs[0], outs[1], "greedy decode must be deterministic");
+    assert_eq!(outs[0].len(), 12);
+}
+
+#[test]
+fn prefix_cache_reuse_matches_cold_output() {
+    // The KVCache-reuse path (the paper's core mechanism) must be
+    // *numerically equivalent* to recomputation.
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let vocab = rt.manifest.vocab;
+    let mut engine = Engine::new(rt, EngineConfig { block_tokens: 32, ..Default::default() });
+    let mut rng = Rng::new(77);
+
+    let shared = prompt(&mut rng, vocab, 96); // 3 cache blocks
+    let tail_a = prompt(&mut rng, vocab, 40);
+    let tail_b = prompt(&mut rng, vocab, 40);
+    let mut pa = shared.clone();
+    pa.extend(&tail_a);
+    let mut pb = shared.clone();
+    pb.extend(&tail_b);
+
+    // Cold: request A primes the cache with the shared prefix.
+    let res_a = engine.serve(&[GenRequest { id: 0, prompt: pa, max_new: 8 }]).unwrap();
+    assert_eq!(res_a[0].reused_tokens, 0);
+
+    // Warm: request B must reuse >= 96 tokens...
+    let res_b = engine.serve(&[GenRequest { id: 1, prompt: pb.clone(), max_new: 8 }]).unwrap();
+    assert!(res_b[0].reused_tokens >= 96, "reused {}", res_b[0].reused_tokens);
+
+    // ...and produce exactly what a cold engine produces for B.
+    let rt2 = Runtime::load(&dir).unwrap();
+    let mut cold = Engine::new(rt2, EngineConfig { block_tokens: 32, ..Default::default() });
+    let res_cold = cold.serve(&[GenRequest { id: 2, prompt: pb, max_new: 8 }]).unwrap();
+    assert_eq!(
+        res_b[0].output, res_cold[0].output,
+        "prefix reuse changed the generation"
+    );
+}
+
+#[test]
+fn batched_decode_matches_single() {
+    // Continuous batching must not perturb per-sequence results: serving
+    // two prompts together equals serving them alone.
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let vocab = rt.manifest.vocab;
+    let mut rng = Rng::new(55);
+    let p1 = prompt(&mut rng, vocab, 40);
+    let p2 = prompt(&mut rng, vocab, 70);
+
+    let serve_fresh = |reqs: &[GenRequest]| {
+        let rt = Runtime::load(&dir).unwrap();
+        let mut e = Engine::new(rt, EngineConfig::default());
+        e.serve(reqs).unwrap()
+    };
+    let solo1 = serve_fresh(&[GenRequest { id: 0, prompt: p1.clone(), max_new: 10 }]);
+    let solo2 = serve_fresh(&[GenRequest { id: 1, prompt: p2.clone(), max_new: 10 }]);
+    let both = serve_fresh(&[
+        GenRequest { id: 0, prompt: p1, max_new: 10 },
+        GenRequest { id: 1, prompt: p2, max_new: 10 },
+    ]);
+    assert_eq!(both[0].output, solo1[0].output, "slot 0 diverged in batch");
+    assert_eq!(both[1].output, solo2[0].output, "slot 1 diverged in batch");
+}
+
+#[test]
+fn long_prompt_uses_chunked_prefill() {
+    // A prompt longer than the biggest prefill bucket must be served via
+    // multiple chunks (§5.1) and still generate max_new tokens.
+    let dir = require_artifacts!();
+    let rt = Runtime::load(&dir).unwrap();
+    let vocab = rt.manifest.vocab;
+    let biggest = *rt.manifest.prefill_buckets.last().unwrap();
+    let before = rt.n_prefill_calls.get();
+    let mut engine = Engine::new(rt, EngineConfig::default());
+    let mut rng = Rng::new(99);
+    let long = prompt(&mut rng, vocab, biggest + 100);
+    let res = engine
+        .serve(&[GenRequest { id: 0, prompt: long, max_new: 6 }])
+        .unwrap();
+    assert_eq!(res[0].output.len(), 6);
+    assert!(
+        engine.rt.n_prefill_calls.get() - before >= 2,
+        "expected >= 2 prefill chunks"
+    );
+}
