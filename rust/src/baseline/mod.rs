@@ -216,6 +216,9 @@ impl VllmSim {
                                     output_tokens: out,
                                     outcome: Outcome::Completed,
                                     ttft_ms: ttft,
+                                    // The coupled baseline has no TTFT
+                                    // estimator (no admission gates).
+                                    est_ttft_ms: f64::NAN,
                                     max_tbt_ms: f.max_gap,
                                     mean_tbt_ms: f.mean_gap,
                                     generated: f.generated,

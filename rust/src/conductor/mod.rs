@@ -6,14 +6,23 @@
 //! TBT SLOs — rejecting (HTTP 429) what cannot meet them.  The §6.2
 //! cache-load-balancing extension adds remote prefix fetches and
 //! heuristic hot-spot replication.
+//!
+//! All timing comes from [`crate::costmodel`] — the same API the
+//! simulator's `PrefillStart`/`PrefillDone` events execute against — so
+//! the TTFT a placement predicts is the TTFT the cluster delivers
+//! (`rust/tests/cost_model_agreement.rs` holds this to a tight
+//! tolerance).  Scheduling no longer *runs* the prefill analytically; it
+//! admits a [`crate::prefill::PrefillJob`] onto the group's FIFO queues
+//! and returns the planned window.
 
 pub mod migration;
 
 use crate::config::{SchedulingPolicy, SimConfig};
+use crate::costmodel::{self, PrefillEstimate};
 use crate::decode::DecodeInstance;
 use crate::messenger::Messenger;
 use crate::model::PerfModel;
-use crate::prefill::PrefillPool;
+use crate::prefill::{JobId, PrefillPool};
 use crate::trace::BLOCK_TOKENS;
 use crate::util::rng::Rng;
 use crate::{BlockId, TimeMs};
@@ -25,6 +34,23 @@ pub struct SchedRequest {
     pub input_tokens: u64,
     pub output_tokens: u64,
     pub hash_ids: Vec<BlockId>,
+}
+
+impl SchedRequest {
+    /// Split the input into (reused prefix tokens, tokens to recompute)
+    /// given `prefix_blocks` reusable cache blocks.  The prefix is capped
+    /// by the input length (the last block may be partial).
+    fn split(&self, prefix_blocks: usize) -> (u64, u64) {
+        let prefix_tokens = (prefix_blocks as u64 * BLOCK_TOKENS).min(self.input_tokens);
+        (prefix_tokens, self.input_tokens - prefix_tokens)
+    }
+
+    /// Blocks the prefill actually touches: the hash chain, capped at the
+    /// blocks needed to cover the input (a chain can overhang a
+    /// non-block-aligned input).
+    fn needed_blocks(&self) -> usize {
+        (self.input_tokens.div_ceil(BLOCK_TOKENS) as usize).min(self.hash_ids.len())
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,12 +67,17 @@ pub enum RejectReason {
 #[derive(Debug, Clone)]
 pub struct Placement {
     pub prefill_group: Vec<usize>,
+    /// The admitted queue entry; the simulator drives it through
+    /// `PrefillStart`/`PrefillDone`.
+    pub job: JobId,
     pub decode: usize,
     /// Prefix blocks served from the primary's local pool.
     pub local_prefix_blocks: usize,
-    /// Remote fetch performed before prefill (blocks, source instance).
+    /// Remote fetch performed before prefill (source instance, blocks).
     pub fetch: Option<(usize, usize)>,
-    /// Prefill starts/ends (group occupied for the span).
+    /// Planned prefill window from the unified cost model (the group is
+    /// occupied for the span; `prefill_end - arrival` is the estimated
+    /// TTFT).
     pub prefill_start: TimeMs,
     pub prefill_end: TimeMs,
     /// When the streamed KVCache lands at the decode node (§5.2 overlap).
@@ -77,19 +108,46 @@ pub struct ConductorStats {
     pub recomputed_blocks: u64,
 }
 
+/// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks,
+/// and an optional remote fetch of `(source, blocks)` first.
+fn estimate_for(
+    ctx: &Ctx,
+    req: &SchedRequest,
+    i: usize,
+    prefix_blocks: usize,
+    fetch: Option<(usize, usize)>,
+) -> PrefillEstimate {
+    let (prefix_tokens, n_new) = req.split(prefix_blocks);
+    costmodel::estimate_prefill(
+        ctx.perf,
+        ctx.cfg,
+        &*ctx.prefill,
+        &*ctx.messenger,
+        i,
+        n_new,
+        prefix_tokens,
+        fetch,
+        ctx.now,
+    )
+}
+
 /// Algorithm 1 (lines 1–23): choose the prefill instance.
 ///
 /// Returns (instance, local_prefix_blocks, effective_prefix_blocks,
-/// fetch source, estimated ttft) — `effective` includes a remote fetch
-/// if the balancing branch chose one.
+/// fetch source, estimate) — `effective` includes a remote fetch if the
+/// balancing branch chose one.
 fn select_prefill(
     ctx: &mut Ctx,
     req: &SchedRequest,
-) -> (usize, usize, usize, Option<usize>, f64) {
-    let pools = &ctx.prefill.instances;
+) -> (usize, usize, usize, Option<usize>, PrefillEstimate) {
+    let n = ctx.prefill.len();
     // FindBestPrefixMatch over every instance's pool.
-    let matches: Vec<usize> =
-        pools.iter().map(|p| p.pool.prefix_match_blocks(&req.hash_ids)).collect();
+    let matches: Vec<usize> = ctx
+        .prefill
+        .instances
+        .iter()
+        .map(|p| p.pool.prefix_match_blocks(&req.hash_ids))
+        .collect();
     let (best_inst, best_blocks) = matches
         .iter()
         .enumerate()
@@ -99,29 +157,28 @@ fn select_prefill(
 
     match ctx.cfg.scheduling {
         SchedulingPolicy::Random => {
-            let i = ctx.rng.below(pools.len() as u64) as usize;
+            let i = ctx.rng.below(n as u64) as usize;
             let prefix = matches[i];
-            let t = est_ttft(ctx, req, i, prefix, 0);
-            (i, prefix, prefix, None, t)
+            let est = estimate_for(ctx, req, i, prefix, None);
+            (i, prefix, prefix, None, est)
         }
         SchedulingPolicy::LoadBalance => {
-            let i = (0..pools.len())
+            let i = (0..n)
                 .min_by(|&a, &b| {
-                    pools[a]
+                    ctx.prefill.instances[a]
                         .queue_ms(ctx.now)
-                        .partial_cmp(&pools[b].queue_ms(ctx.now))
+                        .partial_cmp(&ctx.prefill.instances[b].queue_ms(ctx.now))
                         .unwrap()
                 })
                 .unwrap();
             let prefix = matches[i];
-            let t = est_ttft(ctx, req, i, prefix, 0);
-            (i, prefix, prefix, None, t)
+            let est = estimate_for(ctx, req, i, prefix, None);
+            (i, prefix, prefix, None, est)
         }
         SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
             let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
-            let mut best: (usize, usize, usize, Option<usize>, f64) =
-                (0, 0, 0, None, f64::INFINITY);
-            for i in 0..pools.len() {
+            let mut best: Option<(usize, usize, usize, Option<usize>, PrefillEstimate)> = None;
+            for i in 0..n {
                 let local = matches[i];
                 // Line 8: prefer local compute unless the best remote
                 // match dwarfs the local one.
@@ -130,51 +187,34 @@ fn select_prefill(
                 } else {
                     best_blocks as f64 / local as f64
                 };
-                let (prefix, fetch, ttft) = if !balancing
+                let (prefix, fetch, est) = if !balancing
                     || best_inst == i
                     || best_blocks == 0
                     || ratio < ctx.cfg.kvcache_balancing_threshold
                 {
                     // Cache-aware branch (lines 9–13).
-                    (local, None, est_ttft(ctx, req, i, local, 0))
+                    (local, None, estimate_for(ctx, req, i, local, None))
                 } else {
-                    // Cache-aware and -balancing branch (lines 15–21).
+                    // Cache-aware and -balancing branch (lines 15–21):
+                    // fetch the missing blocks from the best holder; the
+                    // transfer runs on the *source* NIC, so the estimate
+                    // charges the source's congestion.
                     let transfer_blocks = best_blocks - local;
-                    let t = est_ttft(ctx, req, i, best_blocks, transfer_blocks);
-                    (best_blocks, Some(best_inst), t)
+                    let est =
+                        estimate_for(ctx, req, i, best_blocks, Some((best_inst, transfer_blocks)));
+                    (best_blocks, Some(best_inst), est)
                 };
-                if ttft < best.4 {
-                    best = (i, matches[i], prefix, fetch, ttft);
+                let better = match &best {
+                    None => true,
+                    Some(b) => est.end < b.4.end,
+                };
+                if better {
+                    best = Some((i, matches[i], prefix, fetch, est));
                 }
             }
-            best
+            best.expect("at least one prefill instance")
         }
     }
-}
-
-/// TTFT estimate for instance `i` with `prefix` reusable blocks and an
-/// optional remote transfer of `fetch_blocks` first.
-fn est_ttft(ctx: &Ctx, req: &SchedRequest, i: usize, prefix: usize, fetch_blocks: usize) -> f64 {
-    let prefix_tokens = (prefix as u64 * BLOCK_TOKENS).min(req.input_tokens);
-    let n_new = req.input_tokens - prefix_tokens;
-    let group = ctx.prefill.cpp_group(ctx.cfg, i, n_new, ctx.now);
-    let t_prefill =
-        ctx.perf
-            .cpp_prefill_ms(n_new, prefix_tokens, ctx.cfg.prefill_chunk, group.len() as u64);
-    let t_queue = ctx.prefill.instances[i].queue_ms(ctx.now);
-    let t_transfer = if fetch_blocks > 0 {
-        ctx.messenger.estimate_ms(
-            i, // conservative: source NIC congestion dominates; use probe of src below
-            ctx.now,
-            fetch_blocks as u64 * BLOCK_TOKENS * ctx.perf.model.kv_bytes_per_token(),
-        )
-    } else {
-        0.0
-    };
-    // Loading the local prefix from DRAM overlaps layer-wise (§5.2) but
-    // bounds the start; include the non-overlapped fraction.
-    let t_load = ctx.perf.dram_load_ms(prefix_tokens) * 0.1;
-    t_transfer + t_queue + t_prefill + t_load
 }
 
 /// Algorithm 1 line 24: pick the decode instance with the smallest
@@ -205,16 +245,17 @@ pub fn select_decode(
     }
 }
 
-/// Full Algorithm 1.  Mutates the prefill pool (queue occupation +
-/// optimistic cache admission), the messenger (fetch + KV stream), and
+/// Full Algorithm 1.  Mutates the prefill pool (job admission +
+/// optimistic cache admission), the messenger (remote prefix fetch), and
 /// the stats.  The *decode* side is only probed here; the Sim owns
-/// decode state transitions.
+/// decode state transitions, and the Sim's `PrefillStart`/`PrefillDone`
+/// events execute the admitted job.
 pub fn schedule(
     ctx: &mut Ctx,
     req: &SchedRequest,
     stats: &mut ConductorStats,
 ) -> Result<Placement, RejectReason> {
-    let (p, local_blocks, eff_blocks, fetch_src, est_ttft_ms) = select_prefill(ctx, req);
+    let (p, local_blocks, eff_blocks, fetch_src, est) = select_prefill(ctx, req);
 
     // Line 24–27: decode selection and SLO gate.  The decode-side gate at
     // arrival is itself an *early rejection* (§7.2), so it only applies
@@ -238,7 +279,7 @@ pub fn schedule(
             return Err(RejectReason::TbtSlo);
         }
     };
-    if est_ttft_ms > ctx.cfg.slo.ttft_ms {
+    if est.ttft_ms(ctx.now) > ctx.cfg.slo.ttft_ms {
         stats.rejected_ttft += 1;
         return Err(RejectReason::TtftSlo);
     }
@@ -247,19 +288,19 @@ pub fn schedule(
         return Err(RejectReason::TbtSlo);
     }
 
-    let prefix_tokens = (eff_blocks as u64 * BLOCK_TOKENS).min(req.input_tokens);
-    let n_new = req.input_tokens - prefix_tokens;
+    let (prefix_tokens, n_new) = req.split(eff_blocks);
 
     // Remote prefix fetch (balancing branch): the fetch must land before
-    // prefill starts; it runs on the *source* node's NIC.
-    let mut earliest = ctx.now;
+    // prefill starts; it runs on the *source* node's NIC — the same NIC
+    // the estimate above probed.
+    let mut fetch_gate = ctx.now;
     let mut fetch = None;
     if let Some(src) = fetch_src {
         let blocks = eff_blocks - local_blocks;
         if blocks > 0 {
-            let bytes = blocks as u64 * BLOCK_TOKENS * ctx.perf.model.kv_bytes_per_token();
+            let bytes = costmodel::fetch_bytes(ctx.perf, blocks);
             let tr = ctx.messenger.schedule(src, ctx.now, bytes);
-            earliest = tr.end;
+            fetch_gate = tr.end;
             fetch = Some((src, blocks));
             stats.remote_fetches += 1;
             // The fetched prefix is now replicated on p (hot-spot
@@ -270,32 +311,55 @@ pub fn schedule(
         }
     }
 
-    // Occupy the prefill group.
-    let group = ctx.prefill.cpp_group(ctx.cfg, p, n_new, ctx.now);
-    let (start, end) =
-        ctx.prefill.run_prefill(ctx.perf, ctx.cfg, &group, n_new, prefix_tokens, earliest);
+    // Admit the job onto the group's FIFO queues.  The planned window is
+    // the estimate: same cost model, same state.
+    let job = ctx.prefill.submit(
+        ctx.perf,
+        ctx.cfg,
+        req.rid,
+        &est.group,
+        n_new,
+        prefix_tokens,
+        fetch_gate,
+        ctx.now,
+    );
+    let (planned_start, planned_end) = {
+        let j = ctx.prefill.job(job);
+        (j.planned_start, j.planned_end)
+    };
 
-    // Admit the full chain into p's pool (its KVCache now exists there).
+    // Admit the full chain into p's pool (its KVCache will exist there).
     ctx.prefill.instances[p].pool.admit_chain(&req.hash_ids, ctx.now);
 
     // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
-    // prefill; it can finish no earlier than prefill *and* no earlier
-    // than the wire time starting at prefill start.
-    let kv_bytes = req.input_tokens * ctx.perf.model.kv_bytes_per_token();
-    let stream = ctx.messenger.schedule(p, start, kv_bytes);
-    let kv_arrive = stream.end.max(end);
+    // prefill; the Sim schedules the actual wire transfer when the job
+    // starts — this is the matching estimate.
+    let kv_arrive = costmodel::estimate_kv_arrival(
+        ctx.perf,
+        &*ctx.messenger,
+        p,
+        planned_start,
+        planned_end,
+        req.input_tokens,
+    );
 
     stats.scheduled += 1;
-    stats.reused_blocks += eff_blocks as u64;
-    stats.recomputed_blocks += (req.hash_ids.len() - eff_blocks) as u64;
+    // Block accounting: clamp to the blocks the input actually needs so
+    // reused + recomputed == needed for every request, including
+    // non-block-aligned inputs whose chain overhangs the input.
+    let needed = req.needed_blocks();
+    let reused = eff_blocks.min(needed);
+    stats.reused_blocks += reused as u64;
+    stats.recomputed_blocks += (needed - reused) as u64;
 
     Ok(Placement {
-        prefill_group: group,
+        prefill_group: est.group,
+        job,
         decode: d,
         local_prefix_blocks: local_blocks,
         fetch,
-        prefill_start: start,
-        prefill_end: end,
+        prefill_start: planned_start,
+        prefill_end: planned_end,
         kv_arrive,
         est_tbt,
     })
@@ -306,8 +370,9 @@ mod tests {
     use super::*;
     use crate::config::SimConfig;
 
-    fn setup(policy: SchedulingPolicy) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Messenger, Rng)
-    {
+    fn setup(
+        policy: SchedulingPolicy,
+    ) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Messenger, Rng) {
         let cfg = SimConfig { scheduling: policy, ..Default::default() };
         let perf = PerfModel::paper();
         let prefill = PrefillPool::new(&cfg);
@@ -327,36 +392,34 @@ mod tests {
         }
     }
 
+    macro_rules! ctx {
+        ($cfg:expr, $perf:expr, $prefill:expr, $decodes:expr, $msgr:expr, $rng:expr, $now:expr) => {
+            Ctx {
+                cfg: &$cfg,
+                perf: &$perf,
+                prefill: &mut $prefill,
+                decodes: &$decodes,
+                messenger: &mut $msgr,
+                rng: &mut $rng,
+                now: $now,
+            }
+        };
+    }
+
     #[test]
     fn schedules_and_reuses_prefix() {
         let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
             setup(SchedulingPolicy::KvCacheCentric);
         let mut stats = ConductorStats::default();
         let r1 = req(1, 16);
-        let mut ctx = Ctx {
-            cfg: &cfg,
-            perf: &perf,
-            prefill: &mut prefill,
-            decodes: &decodes,
-            messenger: &mut msgr,
-            rng: &mut rng,
-            now: 0.0,
-        };
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
         let p1 = schedule(&mut ctx, &r1, &mut stats).unwrap();
         assert!(p1.prefill_end > p1.prefill_start);
         assert!(p1.kv_arrive >= p1.prefill_end);
 
         // Same chain again much later (queue drained): the primary holding
         // the cache must win, and most blocks must be reused.
-        let mut ctx = Ctx {
-            cfg: &cfg,
-            perf: &perf,
-            prefill: &mut prefill,
-            decodes: &decodes,
-            messenger: &mut msgr,
-            rng: &mut rng,
-            now: 1e7,
-        };
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
         let p2 = schedule(&mut ctx, &r1, &mut stats).unwrap();
         assert_eq!(p2.prefill_group[0], p1.prefill_group[0]);
         assert!(p2.prefill_end - p2.prefill_start < (p1.prefill_end - p1.prefill_start) * 0.3);
@@ -370,26 +433,10 @@ mod tests {
             let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) = setup(policy);
             let mut stats = ConductorStats::default();
             let r = req(3, 32);
-            let mut ctx = Ctx {
-                cfg: &cfg,
-                perf: &perf,
-                prefill: &mut prefill,
-                decodes: &decodes,
-                messenger: &mut msgr,
-                rng: &mut rng,
-                now: 0.0,
-            };
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
             let first = schedule(&mut ctx, &r, &mut stats).unwrap();
             let cold = first.prefill_end - first.prefill_start;
-            let mut ctx = Ctx {
-                cfg: &cfg,
-                perf: &perf,
-                prefill: &mut prefill,
-                decodes: &decodes,
-                messenger: &mut msgr,
-                rng: &mut rng,
-                now: 1e7,
-            };
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
             let warm_p = schedule(&mut ctx, &r, &mut stats).unwrap();
             let warm = warm_p.prefill_end - warm_p.prefill_start;
             assert!(warm < cold * 0.2, "{policy:?}: warm={warm} cold={cold}");
@@ -402,15 +449,7 @@ mod tests {
             setup(SchedulingPolicy::KvCacheCentric);
         cfg.slo.ttft_ms = 1.0; // impossible
         let mut stats = ConductorStats::default();
-        let mut ctx = Ctx {
-            cfg: &cfg,
-            perf: &perf,
-            prefill: &mut prefill,
-            decodes: &decodes,
-            messenger: &mut msgr,
-            rng: &mut rng,
-            now: 0.0,
-        };
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
         let e = schedule(&mut ctx, &req(9, 64), &mut stats).unwrap_err();
         assert_eq!(e, RejectReason::TtftSlo);
         assert_eq!(stats.rejected_ttft, 1);
@@ -423,18 +462,10 @@ mod tests {
         cfg.kvcache_balancing_threshold = 1.5;
         let mut stats = ConductorStats::default();
         let r = req(5, 64);
-        // Warm instance 0 with the chain, then make instance 0 very busy
+        // Warm instance 0 with the chain, then make the holder very busy
         // so the scheduler prefers another node + fetch.
         {
-            let mut ctx = Ctx {
-                cfg: &cfg,
-                perf: &perf,
-                prefill: &mut prefill,
-                decodes: &decodes,
-                messenger: &mut msgr,
-                rng: &mut rng,
-                now: 0.0,
-            };
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         let holder = prefill
@@ -442,16 +473,8 @@ mod tests {
             .iter()
             .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
             .unwrap();
-        prefill.instances[holder].busy_until = 1e9; // swamped
-        let mut ctx = Ctx {
-            cfg: &cfg,
-            perf: &perf,
-            prefill: &mut prefill,
-            decodes: &decodes,
-            messenger: &mut msgr,
-            rng: &mut rng,
-            now: 1e6,
-        };
+        prefill.instances[holder].block_until(1e9); // swamped
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_ne!(p.prefill_group[0], holder);
         assert!(p.fetch.is_some(), "expected remote fetch");
@@ -461,5 +484,89 @@ mod tests {
             prefill.instances[p.prefill_group[0]].pool.prefix_match_blocks(&r.hash_ids),
             64
         );
+    }
+
+    #[test]
+    fn fetch_estimate_uses_source_nic_congestion() {
+        // Regression: the estimate used to charge the fetch to the
+        // *destination* NIC while execution ran it on the *source* NIC —
+        // a congested holder made the estimate wildly optimistic.
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        cfg.kvcache_balancing_threshold = 1.5;
+        let mut stats = ConductorStats::default();
+        let r = req(7, 64);
+        {
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            schedule(&mut ctx, &r, &mut stats).unwrap();
+        }
+        let holder = prefill
+            .instances
+            .iter()
+            .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
+            .unwrap();
+        prefill.instances[holder].block_until(1e9); // queue swamped -> fetch branch
+
+        // Source NIC asymmetrically congested far past the TTFT SLO: the
+        // estimate must see it and reject (the old destination-NIC
+        // estimate accepted, then the fetch landed ~2000 s late).
+        msgr.schedule(holder, 1e6, 200_000_000_000_000); // ~2e6 ms of backlog
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e6);
+        let e = schedule(&mut ctx, &r, &mut stats).unwrap_err();
+        assert_eq!(e, RejectReason::TtftSlo);
+
+        // Moderate congestion (under the SLO): accepted, but the planned
+        // start must wait for the source's backlog to drain.
+        let (mut cfg2, perf2, mut prefill2, decodes2, mut msgr2, mut rng2) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        cfg2.kvcache_balancing_threshold = 1.5;
+        let mut stats2 = ConductorStats::default();
+        {
+            let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, 0.0);
+            schedule(&mut ctx, &r, &mut stats2).unwrap();
+        }
+        let holder2 = prefill2
+            .instances
+            .iter()
+            .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
+            .unwrap();
+        prefill2.instances[holder2].block_until(1e9);
+        msgr2.schedule(holder2, 1e6, 1_000_000_000_000); // ~10 s backlog
+        let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, 1e6);
+        let p = schedule(&mut ctx, &r, &mut stats2).unwrap();
+        assert!(p.fetch.is_some());
+        assert!(
+            p.prefill_start >= 1e6 + 9_000.0,
+            "planned start {} must include the source NIC backlog",
+            p.prefill_start
+        );
+    }
+
+    #[test]
+    fn block_accounting_conserved_for_unaligned_inputs() {
+        // Regression: prefix_tokens was clamped to the input but the
+        // reused/recomputed counters were not, so a chain overhanging a
+        // non-block-aligned input broke conservation.
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        let mut stats = ConductorStats::default();
+        // 4-block chain over a 1300-token input (needs only 3 blocks).
+        let r = SchedRequest {
+            rid: 1,
+            input_tokens: 1_300,
+            output_tokens: 10,
+            hash_ids: vec![10, 11, 12, 13],
+        };
+        let needed = 3u64; // ceil(1300 / 512)
+        {
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            schedule(&mut ctx, &r, &mut stats).unwrap();
+        }
+        assert_eq!(stats.reused_blocks + stats.recomputed_blocks, needed);
+        // Warm pass: the whole chain matches (4 blocks) but only 3 count.
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_eq!(stats.reused_blocks + stats.recomputed_blocks, 2 * needed);
+        assert!(stats.reused_blocks >= needed, "warm pass must reuse the needed blocks");
     }
 }

@@ -1,0 +1,227 @@
+//! The unified cost model — the **single source of timing truth** for
+//! prefill scheduling.
+//!
+//! Algorithm 1 (§6) only works if Conductor's TTFT *estimates* agree with
+//! what the cluster actually *does*: SLO-gated admission and early
+//! rejection (§7) both compare an estimate against a limit, so any drift
+//! between the estimator and the executor silently re-tunes every
+//! threshold.  Historically the two were separate code paths
+//! (`conductor::est_ttft` summed queue+transfer+compute analytically
+//! while `PrefillPool::run_prefill` re-derived start/end with different
+//! rules — e.g. the estimate charged the remote-prefix fetch to the
+//! *destination* NIC and added fetch and queue serially, where execution
+//! used the *source* NIC and overlapped the fetch with queue drain).
+//!
+//! Now both sides call this module:
+//!
+//! * [`estimate_prefill`] — Conductor's `EstimatePrefillExecutionTime` +
+//!   `EstimateKVCacheTransferTime` + queue probe, returning an absolute
+//!   planned (start, end) window;
+//! * [`crate::prefill::PrefillPool::submit`] — the executor admits a job
+//!   using the *same* function of the *same* state, so the simulator's
+//!   `PrefillStart`/`PrefillDone` events land exactly where the estimate
+//!   said they would (a property `rust/tests/cost_model_agreement.rs`
+//!   asserts end-to-end).
+
+use crate::config::SimConfig;
+use crate::messenger::Messenger;
+use crate::model::PerfModel;
+use crate::prefill::PrefillPool;
+use crate::trace::BLOCK_TOKENS;
+use crate::TimeMs;
+
+/// Fraction of the local DRAM→VRAM prefix load that stays on the critical
+/// path: loading reused KVCache overlaps layer-wise with computation
+/// (§5.2), but it bounds when the first layer can start, so a small
+/// non-overlapped head remains visible.
+pub const PREFIX_LOAD_VISIBLE_FRACTION: f64 = 0.1;
+
+/// Visible (non-overlapped) latency of loading `prefix_tokens` of reused
+/// KVCache from local CPU DRAM before prefill can run.
+pub fn prefix_load_ms(perf: &PerfModel, prefix_tokens: u64) -> f64 {
+    perf.dram_load_ms(prefix_tokens) * PREFIX_LOAD_VISIBLE_FRACTION
+}
+
+/// Execution makespan of one prefill job on a CPP group of `group_len`
+/// nodes: chunked-pipeline compute plus the visible prefix-load head.
+/// This is the ONE definition of "how long a prefill takes" — both the
+/// estimator and the executor use it.
+pub fn prefill_exec_ms(
+    perf: &PerfModel,
+    cfg: &SimConfig,
+    n_new: u64,
+    prefix_tokens: u64,
+    group_len: u64,
+) -> f64 {
+    perf.cpp_prefill_ms(n_new, prefix_tokens, cfg.prefill_chunk, group_len)
+        + prefix_load_ms(perf, prefix_tokens)
+}
+
+/// Wire bytes of a remote prefix fetch of `blocks` cache blocks (§6.2).
+pub fn fetch_bytes(perf: &PerfModel, blocks: usize) -> u64 {
+    blocks as u64 * BLOCK_TOKENS * perf.model.kv_bytes_per_token()
+}
+
+/// Wire bytes of the layer-wise KVCache stream to the decode node (§5.2).
+pub fn kv_stream_bytes(perf: &PerfModel, input_tokens: u64) -> u64 {
+    input_tokens * perf.model.kv_bytes_per_token()
+}
+
+/// A placement's predicted timing, in absolute simulator time.
+#[derive(Debug, Clone)]
+pub struct PrefillEstimate {
+    /// CPP group the job would run on (primary first).
+    pub group: Vec<usize>,
+    /// Planned start: the job runs when its whole group has drained AND
+    /// any remote prefix fetch has landed (the two overlap — they are
+    /// `max`ed, not summed).
+    pub start: TimeMs,
+    /// Planned completion (start + exec) — the TTFT moment.
+    pub end: TimeMs,
+    /// Wait behind the group's committed FIFO work, ms from now.
+    pub queue_wait_ms: f64,
+    /// Remote-prefix fetch landing delay, ms from now, charged to the
+    /// **source** node's NIC (its congestion is what §6.1 worries about).
+    pub fetch_wait_ms: f64,
+    /// Execution makespan from [`prefill_exec_ms`].
+    pub exec_ms: f64,
+}
+
+impl PrefillEstimate {
+    /// Estimated TTFT relative to `now` (what Algorithm 1 line 25 gates).
+    pub fn ttft_ms(&self, now: TimeMs) -> f64 {
+        self.end - now
+    }
+}
+
+/// Estimate a prefill on `primary` with `n_new` uncached tokens and
+/// `prefix_tokens` reused ones; `fetch = Some((source, blocks))` adds a
+/// remote prefix fetch that must land first.  Read-only: probes the
+/// prefill queues and the source NIC without mutating either.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_prefill(
+    perf: &PerfModel,
+    cfg: &SimConfig,
+    pool: &PrefillPool,
+    messenger: &Messenger,
+    primary: usize,
+    n_new: u64,
+    prefix_tokens: u64,
+    fetch: Option<(usize, usize)>,
+    now: TimeMs,
+) -> PrefillEstimate {
+    let group = pool.cpp_group(cfg, primary, n_new, now);
+    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+    let queue_free = pool.group_free_at(&group).max(now);
+    let fetch_done = match fetch {
+        Some((src, blocks)) if blocks > 0 => {
+            now + messenger.estimate_ms(src, now, fetch_bytes(perf, blocks))
+        }
+        _ => now,
+    };
+    let start = queue_free.max(fetch_done);
+    PrefillEstimate {
+        group,
+        start,
+        end: start + exec_ms,
+        queue_wait_ms: queue_free - now,
+        fetch_wait_ms: fetch_done - now,
+        exec_ms,
+    }
+}
+
+/// When the streamed KVCache lands at the decode node: the layer-wise
+/// stream starts with the prefill and can finish no earlier than the
+/// prefill itself nor than the wire time on the primary's NIC.
+pub fn estimate_kv_arrival(
+    perf: &PerfModel,
+    messenger: &Messenger,
+    primary: usize,
+    start: TimeMs,
+    end: TimeMs,
+    input_tokens: u64,
+) -> TimeMs {
+    let stream_end =
+        start + messenger.estimate_ms(primary, start, kv_stream_bytes(perf, input_tokens));
+    stream_end.max(end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn env() -> (SimConfig, PerfModel, PrefillPool, Messenger) {
+        let cfg = SimConfig::default();
+        let perf = PerfModel::paper();
+        let pool = PrefillPool::new(&cfg);
+        let msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+        (cfg, perf, pool, msgr)
+    }
+
+    #[test]
+    fn exec_includes_visible_prefix_load() {
+        let (cfg, perf, _, _) = env();
+        let cold = prefill_exec_ms(&perf, &cfg, 8_000, 0, 1);
+        assert_eq!(cold, perf.prefill_ms(8_000, 0));
+        // Fully cached input still pays the non-overlapped load head.
+        let warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 1);
+        assert!(warm > 0.0 && warm < cold * 0.05, "warm={warm} cold={cold}");
+        assert!((warm - prefix_load_ms(&perf, 8_000)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_charged_to_source_nic() {
+        let (cfg, perf, pool, mut msgr) = env();
+        // Congest node 2's outgoing NIC; node 5 stays idle.
+        msgr.schedule(2, 0.0, 2_000_000_000_000); // ~20 s backlog
+        let idle =
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((5, 4)), 0.0);
+        let congested =
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((2, 4)), 0.0);
+        assert!(
+            congested.fetch_wait_ms > idle.fetch_wait_ms + 10_000.0,
+            "source congestion must surface: {} vs {}",
+            congested.fetch_wait_ms,
+            idle.fetch_wait_ms
+        );
+        assert!(congested.end > idle.end + 10_000.0);
+    }
+
+    #[test]
+    fn fetch_overlaps_queue_wait() {
+        let (cfg, perf, mut pool, mut msgr) = env();
+        pool.instances[0].block_until(5_000.0);
+        msgr.schedule(3, 0.0, 300_000_000_000); // ~3 s source backlog
+        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((3, 4)), 0.0);
+        // start = max(queue, fetch), not their sum.
+        assert!(est.queue_wait_ms >= 5_000.0);
+        assert!(est.fetch_wait_ms > 2_000.0 && est.fetch_wait_ms < 5_000.0);
+        assert!((est.start - 5_000.0).abs() < 1e-6, "start={}", est.start);
+    }
+
+    #[test]
+    fn estimate_reads_group_queue_not_just_primary() {
+        let (cfg, perf, mut pool, msgr) = env();
+        // Only instance 1 is recruitable (others exceed the 1 ms recruit
+        // threshold); its 0.5 ms backlog must drive the planned start.
+        pool.instances[1].block_until(0.5);
+        for i in 2..pool.len() {
+            pool.instances[i].block_until(10.0);
+        }
+        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 100_000, 0, None, 0.0);
+        assert_eq!(est.group, vec![0, 1]);
+        assert!((est.start - 0.5).abs() < 1e-9, "group max drives start: {}", est.start);
+        assert!((est.queue_wait_ms - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_arrival_no_earlier_than_prefill_end() {
+        let (_, perf, _, msgr) = env();
+        let a = estimate_kv_arrival(&perf, &msgr, 0, 100.0, 5_000.0, 1_000);
+        assert!(a >= 5_000.0);
+        // Huge stream on a short prefill: the wire dominates.
+        let b = estimate_kv_arrival(&perf, &msgr, 0, 100.0, 200.0, 100_000);
+        assert!(b > 200.0 + 100.0);
+    }
+}

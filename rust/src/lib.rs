@@ -8,6 +8,9 @@
 //! * [`conductor`] — the global scheduler (Algorithm 1): cache-aware
 //!   prefill instance selection, decode instance selection, SLO-gated
 //!   admission, and heuristic hot-spot KVCache migration (§6).
+//! * [`costmodel`] — the unified cost model: the single source of timing
+//!   truth consumed by both Conductor's TTFT estimates and the
+//!   simulator's event-driven prefill executor.
 //! * [`kvcache`] — the disaggregated, paged, prefix-hashed KVCache pool
 //!   with pluggable eviction (LRU / LFU / LengthAware) and a global
 //!   block-location registry (§3, §4.2).
@@ -31,13 +34,15 @@
 //!   `input_length`, `output_length`, `hash_ids`), a statistical
 //!   generator calibrated to the published trace features, and analyzers.
 //!
-//! See `DESIGN.md` for the paper→module inventory and the experiment
-//! index, and `EXPERIMENTS.md` for reproduced-vs-paper numbers.
+//! See `DESIGN.md` for the paper→module inventory, the cost-model /
+//! event-driven-prefill architecture, and the experiment index;
+//! `CHANGES.md` tracks what each PR added.
 
 pub mod baseline;
 pub mod bench_util;
 pub mod conductor;
 pub mod config;
+pub mod costmodel;
 pub mod decode;
 pub mod engine;
 pub mod kvcache;

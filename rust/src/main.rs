@@ -121,6 +121,7 @@ fn simulate(args: &Args) -> Result<()> {
         rep.n_rejected_arrival, rep.n_rejected_after_prefill, rep.wasted_prefill_tokens
     );
     println!("TTFT:       mean {:.0} ms, P90 {:.0} ms (SLO {:.0})", rep.ttft_mean, rep.ttft_p90, cfg.slo.ttft_ms);
+    println!("TTFT est:   mean abs drift {:.2} ms (cost-model estimate vs observed)", rep.ttft_est_mae);
     println!("TBT:        P90 {:.1} ms (SLO {:.0})", rep.tbt_p90, cfg.slo.tbt_ms);
     println!("SLO attainment: {:.1}%", rep.slo_attainment * 100.0);
     println!("goodput:    {:.2} req/s, {:.0} tok/s", rep.goodput_rps, rep.goodput_tokens_per_sec);

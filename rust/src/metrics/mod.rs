@@ -24,8 +24,13 @@ pub struct RequestMetrics {
     pub input_tokens: u64,
     pub output_tokens: u64,
     pub outcome: Outcome,
-    /// Time to first token (prefill completion), ms.  NaN if rejected.
+    /// Time to first token (prefill completion), ms, as *observed* by the
+    /// simulator's `PrefillDone` event.  NaN if rejected.
     pub ttft_ms: f64,
+    /// Conductor's TTFT estimate at admission (unified cost model).  NaN
+    /// if rejected or the engine has no estimator (vLLM baseline).  The
+    /// gap to `ttft_ms` is the estimate/actual drift §6-§7 depend on.
+    pub est_ttft_ms: f64,
     /// Max inter-token gap during decode, ms.  NaN if no decode happened.
     pub max_tbt_ms: f64,
     /// Mean inter-token gap, ms.
@@ -45,6 +50,7 @@ impl RequestMetrics {
             output_tokens: output,
             outcome: if at_decode { Outcome::RejectedAfterPrefill } else { Outcome::RejectedAtArrival },
             ttft_ms: f64::NAN,
+            est_ttft_ms: f64::NAN,
             max_tbt_ms: f64::NAN,
             mean_tbt_ms: f64::NAN,
             generated: 0,
@@ -80,6 +86,9 @@ pub struct RunReport {
     pub goodput_tokens_per_sec: f64,
     /// Prefill compute (token·ms proxy) spent on requests later rejected.
     pub wasted_prefill_tokens: u64,
+    /// Mean |estimated − observed| TTFT over completed requests with an
+    /// estimate — the cost-model drift the scheduler's SLO gates ride on.
+    pub ttft_est_mae: f64,
 }
 
 pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
@@ -89,6 +98,11 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
         metrics.iter().filter(|m| !m.mean_tbt_ms.is_nan()).map(|m| m.mean_tbt_ms).collect();
     let ok: Vec<&RequestMetrics> =
         metrics.iter().filter(|m| m.meets_slo(ttft_slo, tbt_slo)).collect();
+    let est_errs: Vec<f64> = metrics
+        .iter()
+        .filter(|m| m.ttft_ms.is_finite() && m.est_ttft_ms.is_finite())
+        .map(|m| (m.est_ttft_ms - m.ttft_ms).abs())
+        .collect();
     let wall_s = (wall_ms / 1e3).max(1e-9);
     RunReport {
         n_total: metrics.len(),
@@ -112,6 +126,9 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
             .filter(|m| m.outcome == Outcome::RejectedAfterPrefill)
             .map(|m| m.input_tokens)
             .sum(),
+        // NaN (not 0.0) when no request carried an estimate, so "no data"
+        // is distinguishable from perfect agreement.
+        ttft_est_mae: stats::mean(&est_errs),
     }
 }
 
@@ -127,6 +144,7 @@ mod tests {
             output_tokens: 10,
             outcome: Outcome::Completed,
             ttft_ms: ttft,
+            est_ttft_ms: ttft,
             max_tbt_ms: tbt,
             mean_tbt_ms: tbt,
             generated: 10,

@@ -69,19 +69,21 @@ impl Admission {
 
     /// Prefill pool load: the *best* instance's predicted TTFT ratio for
     /// a request of this size (if even the best can't meet it, the pool
-    /// is loaded).
+    /// is loaded).  The nominal execution time and the queue drain both
+    /// come from the unified cost model, so this load reads the same
+    /// FIFO queues the simulator executes.
     pub fn prefill_load(
         &self,
+        cfg: &SimConfig,
         pool: &PrefillPool,
         perf: &PerfModel,
         input_tokens: u64,
         now: TimeMs,
-        ttft_slo: f64,
     ) -> f64 {
-        let nominal = perf.prefill_ms(input_tokens, 0);
+        let nominal = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1);
         pool.instances
             .iter()
-            .map(|i| i.load(now, nominal, ttft_slo))
+            .map(|i| i.load(now, nominal, cfg.slo.ttft_ms))
             .fold(f64::INFINITY, f64::min)
     }
 
@@ -156,7 +158,7 @@ impl Admission {
         if self.policy == RejectionPolicy::None {
             return true;
         }
-        let p_load = self.prefill_load(pool, perf, input_tokens, now, cfg.slo.ttft_ms);
+        let p_load = self.prefill_load(cfg, pool, perf, input_tokens, now);
         if p_load > self.threshold {
             self.rejected_at_arrival += 1;
             return false;
@@ -165,7 +167,7 @@ impl Admission {
             RejectionPolicy::Baseline => return true, // decode checked later
             RejectionPolicy::Early => self.decode_load_now(decodes, perf, cfg.slo.tbt_ms),
             RejectionPolicy::Predictive => {
-                let est_prefill = perf.prefill_ms(input_tokens, 0)
+                let est_prefill = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1)
                     + pool.instances.iter().map(|i| i.queue_ms(now)).fold(f64::INFINITY, f64::min);
                 self.decode_load_predicted(
                     decodes,
@@ -275,7 +277,7 @@ mod tests {
     fn prefill_saturation_rejects_all_policies() {
         let (cfg, perf, mut pool, decodes) = env();
         for i in &mut pool.instances {
-            i.busy_until = 1e9;
+            i.block_until(1e9);
         }
         for policy in
             [RejectionPolicy::Baseline, RejectionPolicy::Early, RejectionPolicy::Predictive]

@@ -1,20 +1,83 @@
-//! Prefill instance pool (§5): FIFO prefill queues, chunked pipeline
-//! parallelism for long contexts, and the layer-wise overlap accounting
-//! that lets scheduling ignore VRAM on prefill nodes.
+//! Prefill instance pool (§5): **real per-instance FIFO job queues**
+//! driven by the simulator's `PrefillStart`/`PrefillDone` events, chunked
+//! pipeline parallelism for long contexts, and the layer-wise overlap
+//! accounting that lets scheduling ignore VRAM on prefill nodes.
+//!
+//! Queueing, CPP group occupancy, and the KV stream to decode used to be
+//! analytic side effects of a scalar `busy_until`; they are now
+//! observable events over an explicit queue:
+//!
+//! * [`PrefillPool::submit`] admits a [`PrefillJob`] onto every group
+//!   member's FIFO queue and fixes its execution makespan from the
+//!   unified cost model ([`crate::costmodel::prefill_exec_ms`]) — the
+//!   same function Conductor's estimate used, so the *planned* window
+//!   recorded at admission equals what the events deliver.
+//! * [`PrefillPool::startable`] / [`PrefillPool::start`] /
+//!   [`PrefillPool::finish`] are the executor: a job starts when it is at
+//!   the head of **all** its members' queues, every member is idle, and
+//!   its gate (remote prefix fetch landing, §6.2) has passed.  FIFO order
+//!   per instance is preserved — a gated head blocks its queue, exactly
+//!   like a real dispatch loop.
 
 pub mod layerwise;
 
+use std::collections::{HashMap, VecDeque};
+
 use crate::config::SimConfig;
+use crate::costmodel;
 use crate::kvcache::{CachePool, PolicyKind};
 use crate::model::PerfModel;
-use crate::TimeMs;
+use crate::{RequestId, TimeMs};
 
-/// One prefill node: a FIFO queue (modeled by its drain time) plus the
-/// node's CPU-DRAM KVCache pool.
+/// Monotonically increasing prefill job id (admission order).
+pub type JobId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting in its group's FIFO queues.
+    Queued,
+    /// Occupying every group member.
+    Running,
+    /// Completed (only observed on the job returned by `finish`).
+    Done,
+}
+
+/// One admitted prefill job.
+#[derive(Debug, Clone)]
+pub struct PrefillJob {
+    pub id: JobId,
+    pub rid: RequestId,
+    /// CPP group members (primary first).
+    pub group: Vec<usize>,
+    pub n_new: u64,
+    pub prefix_tokens: u64,
+    /// May not start before this (remote prefix fetch landing).
+    pub gate: TimeMs,
+    /// Execution makespan fixed at admission from the unified cost model.
+    pub exec_ms: f64,
+    pub submitted: TimeMs,
+    /// Planned window from the cost model at admission — kept so
+    /// estimate/actual drift is measurable per job.
+    pub planned_start: TimeMs,
+    pub planned_end: TimeMs,
+    pub state: JobState,
+    /// NaN until the corresponding event happens.
+    pub actual_start: TimeMs,
+    pub actual_end: TimeMs,
+}
+
+/// One prefill node: a FIFO queue of committed jobs plus the node's
+/// CPU-DRAM KVCache pool.
 #[derive(Debug)]
 pub struct PrefillInstance {
-    /// The queue drains at this time; new work starts no earlier.
-    pub busy_until: TimeMs,
+    /// Committed jobs in FIFO order (this instance participates in each).
+    pub queue: VecDeque<JobId>,
+    /// Job currently occupying this instance, if any.
+    pub running: Option<JobId>,
+    /// Drain horizon: when the committed queue is expected to empty.
+    /// Maintained by `submit`/`finish` from the same cost model the
+    /// executor uses, so it doubles as the queue-time estimate.
+    free_at: TimeMs,
     pub pool: CachePool,
     /// Requests prefilled and compute-ms spent (utilization accounting).
     pub n_prefilled: u64,
@@ -24,16 +87,30 @@ pub struct PrefillInstance {
 impl PrefillInstance {
     pub fn new(eviction: PolicyKind, capacity_blocks: Option<usize>) -> Self {
         PrefillInstance {
-            busy_until: 0.0,
+            queue: VecDeque::new(),
+            running: None,
+            free_at: 0.0,
             pool: CachePool::new(eviction, capacity_blocks),
             n_prefilled: 0,
             busy_ms: 0.0,
         }
     }
 
-    /// Algorithm 1's `EstimatePrefillQueueTime`.
+    /// Algorithm 1's `EstimatePrefillQueueTime`: time until this
+    /// instance's committed FIFO work drains.
     pub fn queue_ms(&self, now: TimeMs) -> f64 {
-        (self.busy_until - now).max(0.0)
+        (self.free_at - now).max(0.0)
+    }
+
+    /// Jobs committed but not yet started on this instance.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Test/bench hook: model external load by pushing the drain horizon
+    /// (the estimator sees this instance as busy until `t`).
+    pub fn block_until(&mut self, t: TimeMs) {
+        self.free_at = self.free_at.max(t);
     }
 
     /// §7.1 load: predicted TTFT of a nominal request against the SLO.
@@ -42,10 +119,13 @@ impl PrefillInstance {
     }
 }
 
-/// The prefill pool with CPP group formation.
+/// The prefill pool: instances, their job queues, and CPP group
+/// formation.
 #[derive(Debug)]
 pub struct PrefillPool {
     pub instances: Vec<PrefillInstance>,
+    jobs: HashMap<JobId, PrefillJob>,
+    next_job: JobId,
 }
 
 impl PrefillPool {
@@ -54,6 +134,8 @@ impl PrefillPool {
             instances: (0..cfg.n_prefill)
                 .map(|_| PrefillInstance::new(cfg.eviction, cfg.cache_capacity_blocks))
                 .collect(),
+            jobs: HashMap::new(),
+            next_job: 0,
         }
     }
 
@@ -65,9 +147,25 @@ impl PrefillPool {
         self.instances.is_empty()
     }
 
+    /// Latest drain horizon across a CPP group — when a job admitted now
+    /// could start (gates aside).
+    pub fn group_free_at(&self, group: &[usize]) -> TimeMs {
+        group.iter().map(|&i| self.instances[i].free_at).fold(0.0f64, f64::max)
+    }
+
+    /// Admitted jobs not yet finished (queued or running).
+    pub fn outstanding(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Look up an admitted job.
+    pub fn job(&self, id: JobId) -> &PrefillJob {
+        self.jobs.get(&id).expect("unknown prefill job")
+    }
+
     /// Decide the CPP group size for an input of `n_new` uncached tokens
     /// (§5.1): long contexts recruit idle peers, short ones stay local.
-    /// Returns (group_size, member ids) — the primary is always included.
+    /// Returns the member ids — the primary is always first.
     pub fn cpp_group(
         &self,
         cfg: &SimConfig,
@@ -96,30 +194,134 @@ impl PrefillPool {
         group
     }
 
-    /// Execute a prefill job: occupies every group member from
-    /// `start` for the pipeline's makespan.  Returns (start, end).
-    pub fn run_prefill(
+    /// Admit a prefill job onto every group member's FIFO queue.  The
+    /// execution makespan and planned window come from the unified cost
+    /// model over the current queue state, so they match what Conductor
+    /// just estimated.  Returns the job id; execution happens through
+    /// `startable`/`start`/`finish` (the simulator's
+    /// `PrefillStart`/`PrefillDone` events).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
         &mut self,
         perf: &PerfModel,
         cfg: &SimConfig,
+        rid: RequestId,
         group: &[usize],
         n_new: u64,
         prefix_tokens: u64,
-        earliest_start: TimeMs,
-    ) -> (TimeMs, TimeMs) {
-        let queue_free = group
-            .iter()
-            .map(|&i| self.instances[i].busy_until)
-            .fold(0.0f64, f64::max);
-        let start = queue_free.max(earliest_start);
-        let dur = perf.cpp_prefill_ms(n_new, prefix_tokens, cfg.prefill_chunk, group.len() as u64);
-        let end = start + dur;
-        for &i in group {
-            self.instances[i].busy_until = end;
-            self.instances[i].busy_ms += dur;
+        gate: TimeMs,
+        now: TimeMs,
+    ) -> JobId {
+        debug_assert!(!group.is_empty());
+        let exec_ms =
+            costmodel::prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+        let planned_start = self.group_free_at(group).max(gate).max(now);
+        let planned_end = planned_start + exec_ms;
+        self.next_job += 1;
+        let id = self.next_job;
+        for &m in group {
+            self.instances[m].queue.push_back(id);
+            self.instances[m].free_at = planned_end;
         }
-        self.instances[group[0]].n_prefilled += 1;
-        (start, end)
+        self.jobs.insert(
+            id,
+            PrefillJob {
+                id,
+                rid,
+                group: group.to_vec(),
+                n_new,
+                prefix_tokens,
+                gate,
+                exec_ms,
+                submitted: now,
+                planned_start,
+                planned_end,
+                state: JobState::Queued,
+                actual_start: f64::NAN,
+                actual_end: f64::NAN,
+            },
+        );
+        id
+    }
+
+    /// Jobs that can start at `now`: at the head of every member's queue,
+    /// all members idle, gate passed.  Sorted by admission order.
+    pub fn startable(&self, now: TimeMs) -> Vec<JobId> {
+        let mut out = Vec::new();
+        for inst in &self.instances {
+            if inst.running.is_some() {
+                continue;
+            }
+            let Some(&id) = inst.queue.front() else { continue };
+            if out.contains(&id) {
+                continue;
+            }
+            let job = &self.jobs[&id];
+            if job.gate > now {
+                continue;
+            }
+            let ready = job.group.iter().all(|&m| {
+                self.instances[m].running.is_none()
+                    && self.instances[m].queue.front() == Some(&id)
+            });
+            if ready {
+                out.push(id);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Earliest future gate among queued jobs.  The simulator does not
+    /// need this — it arms a `PrefillStart` event per job at admission —
+    /// but external drivers (tests, future schedulers) use it to know
+    /// when a fully idle pool wakes up next.
+    pub fn min_pending_gate(&self, now: TimeMs) -> Option<TimeMs> {
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Queued && j.gate > now)
+            .map(|j| j.gate)
+            .fold(None, |acc, g| Some(acc.map_or(g, |a: f64| a.min(g))))
+    }
+
+    /// Start a job: pops it from every member's queue and occupies the
+    /// members.  Returns (primary, exec_ms, rid) for the caller to
+    /// schedule the completion event and the decode-bound KV stream.
+    pub fn start(&mut self, id: JobId, now: TimeMs) -> (usize, f64, RequestId) {
+        let (group, exec_ms, rid) = {
+            let job = self.jobs.get_mut(&id).expect("start of unknown job");
+            debug_assert_eq!(job.state, JobState::Queued);
+            debug_assert!(job.gate <= now + 1e-9, "started before its gate");
+            job.state = JobState::Running;
+            job.actual_start = now;
+            (job.group.clone(), job.exec_ms, job.rid)
+        };
+        for &m in &group {
+            let head = self.instances[m].queue.pop_front();
+            debug_assert_eq!(head, Some(id), "job not at queue head on start");
+            debug_assert!(self.instances[m].running.is_none());
+            self.instances[m].running = Some(id);
+        }
+        (group[0], exec_ms, rid)
+    }
+
+    /// Complete a job at `now`: frees the members, records utilization,
+    /// and returns the job (with actual start/end filled in).
+    pub fn finish(&mut self, id: JobId, now: TimeMs) -> PrefillJob {
+        let mut job = self.jobs.remove(&id).expect("finish of unknown job");
+        debug_assert_eq!(job.state, JobState::Running);
+        job.state = JobState::Done;
+        job.actual_end = now;
+        for &m in &job.group {
+            debug_assert_eq!(self.instances[m].running, Some(id));
+            self.instances[m].running = None;
+            self.instances[m].busy_ms += job.exec_ms;
+            if self.instances[m].free_at < now {
+                self.instances[m].free_at = now;
+            }
+        }
+        self.instances[job.group[0]].n_prefilled += 1;
+        job
     }
 }
 
@@ -131,19 +333,156 @@ mod tests {
         SimConfig::default()
     }
 
+    /// Minimal event loop over a pool: starts whatever is startable,
+    /// advances to the next completion or gate, finishes jobs.  Returns
+    /// each job's (id, actual_start, actual_end) in completion order.
+    fn drive(pool: &mut PrefillPool) -> Vec<(JobId, TimeMs, TimeMs)> {
+        let mut now = 0.0f64;
+        let mut running: Vec<(TimeMs, JobId)> = Vec::new();
+        let mut done = Vec::new();
+        loop {
+            for id in pool.startable(now) {
+                let (_, exec, _) = pool.start(id, now);
+                running.push((now + exec, id));
+            }
+            if running.is_empty() {
+                match pool.min_pending_gate(now) {
+                    Some(g) => {
+                        now = g;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            running.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let (t, id) = running.remove(0);
+            now = t;
+            let job = pool.finish(id, now);
+            done.push((id, job.actual_start, job.actual_end));
+        }
+        done
+    }
+
     #[test]
-    fn queue_time_accumulates() {
+    fn fifo_order_preserved_per_instance() {
         let c = cfg();
         let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&c);
-        let (s1, e1) = pool.run_prefill(&perf, &c, &[0], 8_000, 0, 0.0);
-        assert_eq!(s1, 0.0);
-        let (s2, e2) = pool.run_prefill(&perf, &c, &[0], 8_000, 0, 0.0);
-        assert_eq!(s2, e1);
-        assert!(e2 > e1);
-        assert!(pool.instances[0].queue_ms(0.0) >= e2);
+        let ids: Vec<JobId> = [8_000u64, 2_000, 16_000]
+            .iter()
+            .map(|&n| pool.submit(&perf, &c, n, &[0], n, 0, 0.0, 0.0))
+            .collect();
+        let done = drive(&mut pool);
+        // Completion (and start) order == admission order, even though the
+        // second job is the shortest.
+        let order: Vec<JobId> = done.iter().map(|d| d.0).collect();
+        assert_eq!(order, ids);
+        for w in done.windows(2) {
+            assert!(w[1].1 >= w[0].2, "next start {} before prior end {}", w[1].1, w[0].2);
+        }
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn actual_execution_matches_planned_window() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let mut planned = Vec::new();
+        for (i, n) in [8_000u64, 12_000, 4_000, 9_000].iter().enumerate() {
+            let id = pool.submit(&perf, &c, i as u64, &[i % 2], *n, 0, 0.0, 0.0);
+            let j = pool.job(id);
+            planned.push((id, j.planned_start, j.planned_end));
+        }
+        let mut done = drive(&mut pool);
+        done.sort_by_key(|d| d.0);
+        for ((id, ps, pe), (jid, s, e)) in planned.into_iter().zip(done) {
+            assert_eq!(id, jid);
+            assert!((s - ps).abs() < 1e-9, "job {id}: actual start {s} != planned {ps}");
+            assert!((e - pe).abs() < 1e-9, "job {id}: actual end {e} != planned {pe}");
+        }
+    }
+
+    #[test]
+    fn queue_estimate_matches_simulated_drain() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        for n in [8_000u64, 8_000, 8_000] {
+            pool.submit(&perf, &c, n, &[0], n, 0, 0.0, 0.0);
+        }
+        let est_drain = pool.instances[0].queue_ms(0.0);
+        let done = drive(&mut pool);
+        let actual_drain = done.last().unwrap().2;
+        assert!(
+            (est_drain - actual_drain).abs() < 1e-9,
+            "queue estimate {est_drain} != simulated drain {actual_drain}"
+        );
         // Other instances untouched.
         assert_eq!(pool.instances[1].queue_ms(0.0), 0.0);
+    }
+
+    #[test]
+    fn group_job_occupies_all_members() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let id = pool.submit(&perf, &c, 1, &[0, 1], 100_000, 0, 0.0, 0.0);
+        assert_eq!(pool.startable(0.0), vec![id]);
+        let (primary, exec, _) = pool.start(id, 0.0);
+        assert_eq!(primary, 0);
+        assert_eq!(pool.instances[0].running, Some(id));
+        assert_eq!(pool.instances[1].running, Some(id));
+        // Neither member can take other work while occupied.
+        let id2 = pool.submit(&perf, &c, 2, &[1], 8_000, 0, 0.0, 0.0);
+        assert!(pool.startable(0.0).is_empty());
+        let job = pool.finish(id, exec);
+        assert_eq!(job.actual_end, exec);
+        assert!((pool.instances[0].busy_ms - exec).abs() < 1e-9);
+        assert!((pool.instances[1].busy_ms - exec).abs() < 1e-9);
+        assert_eq!(pool.instances[0].n_prefilled, 1);
+        assert_eq!(pool.instances[1].n_prefilled, 0);
+        assert_eq!(pool.startable(exec), vec![id2]);
+    }
+
+    #[test]
+    fn gated_job_waits_for_fetch_and_blocks_its_queue() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let gated = pool.submit(&perf, &c, 1, &[0], 8_000, 0, 500.0, 0.0);
+        let behind = pool.submit(&perf, &c, 2, &[0], 2_000, 0, 0.0, 0.0);
+        // Head-of-line: nothing starts before the gate...
+        assert!(pool.startable(0.0).is_empty());
+        assert_eq!(pool.min_pending_gate(0.0), Some(500.0));
+        // ...and the gated job starts exactly at it, FIFO intact.
+        assert_eq!(pool.startable(500.0), vec![gated]);
+        assert!(pool.job(gated).planned_start >= 500.0);
+        assert!(pool.job(behind).planned_start >= pool.job(gated).planned_end - 1e-9);
+        let done = drive(&mut pool);
+        assert_eq!(done[0].0, gated);
+        assert!((done[0].1 - 500.0).abs() < 1e-9);
+        assert_eq!(done[1].0, behind);
+    }
+
+    #[test]
+    fn no_job_left_behind_under_mixed_load() {
+        let c = cfg();
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&c);
+        let mut submitted = Vec::new();
+        for k in 0..20u64 {
+            let primary = (k % 4) as usize;
+            let group: Vec<usize> = if k % 5 == 0 { vec![primary, (primary + 1) % 4] } else { vec![primary] };
+            let gate = if k % 3 == 0 { 50.0 * k as f64 } else { 0.0 };
+            submitted.push(pool.submit(&perf, &c, k, &group, 4_000 + 500 * k, 0, gate, 0.0));
+        }
+        let done = drive(&mut pool);
+        assert_eq!(done.len(), 20);
+        assert_eq!(pool.outstanding(), 0);
+        let mut finished: Vec<JobId> = done.iter().map(|d| d.0).collect();
+        finished.sort_unstable();
+        assert_eq!(finished, submitted);
     }
 
     #[test]
@@ -161,32 +500,24 @@ mod tests {
         let c = cfg();
         let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&c);
-        // Make every peer busy.
+        // Make every peer busy with committed work.
         for i in 1..c.n_prefill {
-            pool.run_prefill(&perf, &c, &[i], 64_000, 0, 0.0);
+            pool.submit(&perf, &c, i as u64, &[i], 64_000, 0, 0.0, 0.0);
         }
         let g = pool.cpp_group(&c, 0, 100_000, 0.0);
         assert_eq!(g, vec![0]);
     }
 
     #[test]
-    fn group_prefill_occupies_all_members() {
-        let c = cfg();
-        let perf = PerfModel::paper();
-        let mut pool = PrefillPool::new(&c);
-        let (_, end) = pool.run_prefill(&perf, &c, &[0, 1], 100_000, 0, 5.0);
-        assert_eq!(pool.instances[0].busy_until, end);
-        assert_eq!(pool.instances[1].busy_until, end);
-    }
-
-    #[test]
     fn cpp_shortens_long_prefill() {
         let c = cfg();
         let perf = PerfModel::paper();
-        let mut solo = PrefillPool::new(&c);
-        let mut duo = PrefillPool::new(&c);
-        let (_, e1) = solo.run_prefill(&perf, &c, &[0], 128_000, 0, 0.0);
-        let (_, e2) = duo.run_prefill(&perf, &c, &[0, 1, 2, 3], 128_000, 0, 0.0);
-        assert!(e2 < e1 * 0.6, "{e2} vs {e1}");
+        let solo = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 1);
+        let quad = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 4);
+        assert!(quad < solo * 0.6, "{quad} vs {solo}");
+        // And the pool charges the group the same makespan.
+        let mut pool = PrefillPool::new(&c);
+        let id = pool.submit(&perf, &c, 1, &[0, 1, 2, 3], 128_000, 0, 0.0, 0.0);
+        assert!((pool.job(id).exec_ms - quad).abs() < 1e-9);
     }
 }

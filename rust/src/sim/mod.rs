@@ -3,18 +3,28 @@
 //! pool) at paper scale, using the analytic [`crate::model::PerfModel`]
 //! as the testbed substitute.  Every §8 experiment is a [`Sim::run`] over
 //! some (config, trace) point.
+//!
+//! Prefill execution is **event-driven**: Conductor admits a job onto
+//! the group's FIFO queues, a `PrefillStart` event fires when its gate
+//! (remote prefix fetch) passes, the pump starts every job that is at
+//! the head of all its members' queues, and `PrefillDone` completes it —
+//! recording the *actual* TTFT next to Conductor's estimate (both come
+//! from [`crate::costmodel`], so they agree; `cost_model_agreement.rs`
+//! asserts it).  The layer-wise KVCache stream to the decode node is
+//! scheduled on the primary's NIC when the job actually starts (§5.2).
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::conductor::{self, ConductorStats, SchedRequest};
 use crate::config::SimConfig;
+use crate::costmodel;
 use crate::decode::DecodeInstance;
 use crate::messenger::Messenger;
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
-use crate::prefill::PrefillPool;
+use crate::prefill::{JobId, PrefillPool};
 use crate::trace::TraceRecord;
 use crate::util::rng::Rng;
 use crate::{RequestId, TimeMs};
@@ -44,6 +54,10 @@ impl Request {
 #[derive(Debug, Clone)]
 enum EventKind {
     Arrival(usize),
+    /// A job's gate passed (fetch landed): try to start queued work.
+    PrefillStart { jid: JobId },
+    /// A running prefill job completed.
+    PrefillDone { jid: JobId },
     KvArrive { rid: RequestId, decode: usize, ctx: u64, out: u64 },
     DecodeStep { decode: usize, seq: u64, dur: f64 },
     Sample,
@@ -107,7 +121,13 @@ struct Pending {
     arrival: TimeMs,
     input: u64,
     output: u64,
+    decode: usize,
+    /// Conductor's TTFT estimate at admission (cost-model planned end).
+    est_ttft: f64,
+    /// Actual TTFT, set by `PrefillDone` (NaN until then).
     ttft: f64,
+    /// KV stream completion on the wire, set when the job starts.
+    stream_end: TimeMs,
 }
 
 pub struct Sim<'a> {
@@ -194,6 +214,30 @@ impl<'a> Sim<'a> {
         self.push(now + dur, EventKind::DecodeStep { decode: d, seq, dur });
     }
 
+    /// Start every startable prefill job: occupy its group, schedule the
+    /// layer-wise KV stream on the primary's NIC, and arm `PrefillDone`.
+    fn pump_prefill(&mut self, now: TimeMs) {
+        loop {
+            let ready = self.prefill.startable(now);
+            if ready.is_empty() {
+                return;
+            }
+            for jid in ready {
+                let (primary, exec_ms, rid) = self.prefill.start(jid, now);
+                let input = self.pending.get(&rid).map(|p| p.input).unwrap_or(0);
+                let stream = self.messenger.schedule(
+                    primary,
+                    now,
+                    costmodel::kv_stream_bytes(&self.perf, input),
+                );
+                if let Some(p) = self.pending.get_mut(&rid) {
+                    p.stream_end = stream.end;
+                }
+                self.push(now + exec_ms, EventKind::PrefillDone { jid });
+            }
+        }
+    }
+
     fn handle_arrival(&mut self, req: &Request) {
         let now = req.arrival;
         // §7 admission control.
@@ -240,29 +284,45 @@ impl<'a> Sim<'a> {
                         arrival: now,
                         input: req.input,
                         output: req.output,
-                        ttft: p.prefill_end - now,
+                        decode: p.decode,
+                        est_ttft: p.prefill_end - now,
+                        ttft: f64::NAN,
+                        stream_end: f64::NAN,
                     },
                 );
                 self.in_flight.insert(
                     req.rid,
                     InFlight { kv_arrive: p.kv_arrive, decode: p.decode, ctx_tokens: req.input },
                 );
-                self.push(
-                    p.kv_arrive,
-                    EventKind::KvArrive {
-                        rid: req.rid,
-                        decode: p.decode,
-                        ctx: req.input,
-                        out: req.output,
-                    },
-                );
+                // Wake the queue when the job's gate passes (immediately
+                // when there is no remote fetch).
+                let gate = self.prefill.job(p.job).gate;
+                self.push(gate.max(now), EventKind::PrefillStart { jid: p.job });
             }
         }
     }
 
+    fn handle_prefill_done(&mut self, jid: JobId, now: TimeMs) {
+        let job = self.prefill.finish(jid, now);
+        let rid = job.rid;
+        let (kv_arrive, decode, ctx_tokens, out) = {
+            let p = self.pending.get_mut(&rid).expect("prefill done for unknown request");
+            p.ttft = now - p.arrival;
+            let kv_arrive = if p.stream_end.is_nan() { now } else { p.stream_end.max(now) };
+            (kv_arrive, p.decode, p.input, p.output)
+        };
+        // Refresh the in-flight record with the observed landing time
+        // (predictive admission reads it).
+        if let Some(f) = self.in_flight.get_mut(&rid) {
+            f.kv_arrive = kv_arrive;
+        }
+        self.push(kv_arrive, EventKind::KvArrive { rid, decode, ctx: ctx_tokens, out });
+        // The freed group members can take their next queued jobs.
+        self.pump_prefill(now);
+    }
+
     fn handle_kv_arrive(&mut self, rid: RequestId, d: usize, ctx: u64, out: u64, now: TimeMs) {
         self.in_flight.remove(&rid);
-        let pend = self.pending.get(&rid).expect("kv for unknown request");
         // §3 step 4 double-check by the local scheduler.
         let ok = self.admission.admit_at_decode(self.cfg, &self.perf, &self.decodes[d], now);
         if !ok {
@@ -270,7 +330,6 @@ impl<'a> Sim<'a> {
             self.metrics.push(RequestMetrics::rejected(rid, p.arrival, p.input, p.output, true));
             return;
         }
-        let _ = pend;
         self.decodes[d].enqueue(rid, ctx, out, now);
         if !self.decodes[d].stepping {
             self.start_decode_step(d, now);
@@ -292,6 +351,7 @@ impl<'a> Sim<'a> {
                 output_tokens: p.output,
                 outcome: Outcome::Completed,
                 ttft_ms: p.ttft,
+                est_ttft_ms: p.est_ttft,
                 max_tbt_ms: f.max_gap,
                 mean_tbt_ms: f.mean_gap,
                 generated: f.generated,
@@ -326,6 +386,12 @@ impl<'a> Sim<'a> {
                     let req = requests[i].clone();
                     self.handle_arrival(&req);
                 }
+                EventKind::PrefillStart { jid: _ } => {
+                    self.pump_prefill(now);
+                }
+                EventKind::PrefillDone { jid } => {
+                    self.handle_prefill_done(jid, now);
+                }
                 EventKind::KvArrive { rid, decode, ctx, out } => {
                     self.handle_kv_arrive(rid, decode, ctx, out, now);
                 }
@@ -342,6 +408,7 @@ impl<'a> Sim<'a> {
             }
         }
         assert!(self.pending.is_empty(), "requests stuck in flight");
+        assert_eq!(self.prefill.outstanding(), 0, "prefill jobs stuck in queue");
         self.metrics.sort_by(|a, b| a.id.cmp(&b.id));
         SimResult {
             metrics: self.metrics,
@@ -386,6 +453,7 @@ mod tests {
         assert_eq!(completed, 100, "unloaded cluster must finish everything");
         for m in &res.metrics {
             assert!(m.ttft_ms > 0.0 && m.ttft_ms.is_finite());
+            assert!(m.est_ttft_ms > 0.0 && m.est_ttft_ms.is_finite());
             assert_eq!(m.generated, m.output_tokens);
             assert!(m.max_tbt_ms > 0.0);
         }

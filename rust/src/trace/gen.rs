@@ -40,6 +40,21 @@ pub struct TraceGenConfig {
     pub system_prompt_blocks: u64,
     /// Fraction of requests carrying a system prompt.
     pub system_fraction: f64,
+    /// Fraction of sessions/one-shots whose arrival lands inside a burst
+    /// window instead of uniformly over the trace (0.0 = the calibrated
+    /// Poisson-like default).  Bursty replay stresses the Fig 8/9 queue
+    /// dynamics the event-driven prefill executor makes observable.
+    pub burst_fraction: f64,
+    /// Number of burst windows spread evenly over the duration.
+    pub n_bursts: usize,
+    /// Width of each burst window, ms.
+    pub burst_width_ms: u64,
+    /// Probability that a finished session *re-arrives* after a long idle
+    /// gap, re-sending its whole prefix (multi-turn prefix re-arrival: by
+    /// then the cache may have evicted it — the Table 1 capacity story).
+    pub rearrival_fraction: f64,
+    /// Mean idle gap before a session re-arrives (ms, exponential).
+    pub mean_rearrival_gap_ms: f64,
 }
 
 impl Default for TraceGenConfig {
@@ -59,6 +74,11 @@ impl Default for TraceGenConfig {
             n_system_prompts: 24,
             system_prompt_blocks: 2,
             system_fraction: 0.85,
+            burst_fraction: 0.0,
+            n_bursts: 4,
+            burst_width_ms: 20_000,
+            rearrival_fraction: 0.0,
+            mean_rearrival_gap_ms: 900_000.0,
         }
     }
 }
@@ -81,7 +101,18 @@ pub fn generate(cfg: &TraceGenConfig) -> Vec<TraceRecord> {
     let mut out: Vec<TraceRecord> = Vec::with_capacity(cfg.n_requests);
 
     while out.len() < cfg.n_requests {
-        let t0 = rng.below(cfg.duration_ms);
+        // Arrival: uniform over the trace, or — for the bursty-replay
+        // scenario — concentrated into evenly spaced burst windows.  The
+        // guards short-circuit so the default config consumes the exact
+        // RNG stream earlier seeds calibrated against.
+        let t0 = if cfg.burst_fraction > 0.0 && rng.f64() < cfg.burst_fraction {
+            let k = rng.below(cfg.n_bursts.max(1) as u64);
+            let center = (k + 1) * cfg.duration_ms / (cfg.n_bursts as u64 + 1);
+            let start = center.saturating_sub(cfg.burst_width_ms / 2);
+            (start + rng.below(cfg.burst_width_ms.max(1))).min(cfg.duration_ms - 1)
+        } else {
+            rng.below(cfg.duration_ms)
+        };
         let sys: Vec<BlockId> = if rng.f64() < cfg.system_fraction {
             let u = rng.f64();
             let k = ((u * u) * cfg.n_system_prompts as f64) as u64; // skewed to 0
@@ -98,28 +129,47 @@ pub fn generate(cfg: &TraceGenConfig) -> Vec<TraceRecord> {
         if rng.f64() < cfg.session_fraction {
             // Multi-turn session: context grows monotonically, so every
             // turn's hash_ids start with the previous turn's chain.
-            let turns = rng.geometric_mean(cfg.mean_session_turns).min(20);
+            let mut turns = rng.geometric_mean(cfg.mean_session_turns).min(20);
             let mut chain = sys.clone();
             chain.extend(fresh(doc_blocks, &mut next_block));
             let mut t = t0 as f64;
-            for _ in 0..turns {
-                if out.len() >= cfg.n_requests {
+            loop {
+                for _ in 0..turns {
+                    if out.len() >= cfg.n_requests {
+                        break;
+                    }
+                    let output = (rng.lognormal_mean(cfg.mean_output, cfg.sigma_output) as u64)
+                        .clamp(1, 4_000);
+                    out.push(TraceRecord {
+                        timestamp: (t as u64).min(cfg.duration_ms - 1),
+                        input_length: chain.len() as u64 * BLOCK_TOKENS
+                            - rng.below(BLOCK_TOKENS / 2),
+                        output_length: output,
+                        hash_ids: chain.clone(),
+                    });
+                    // Next turn: previous output + fresh user input become
+                    // new blocks appended to the chain.
+                    let add = (rng.exp(1.0 / cfg.mean_new_blocks) as u64).clamp(1, 8);
+                    chain.extend(fresh(add, &mut next_block));
+                    t += rng.exp(1.0 / cfg.mean_turn_gap_ms);
+                }
+                // Prefix re-arrival: the user comes back much later and the
+                // whole grown chain re-arrives (guards short-circuit so the
+                // default config's RNG stream is untouched).
+                if cfg.rearrival_fraction <= 0.0
+                    || out.len() >= cfg.n_requests
+                    || rng.f64() >= cfg.rearrival_fraction
+                {
                     break;
                 }
-                let output =
-                    (rng.lognormal_mean(cfg.mean_output, cfg.sigma_output) as u64).clamp(1, 4_000);
-                out.push(TraceRecord {
-                    timestamp: (t as u64).min(cfg.duration_ms - 1),
-                    input_length: chain.len() as u64 * BLOCK_TOKENS
-                        - rng.below(BLOCK_TOKENS / 2),
-                    output_length: output,
-                    hash_ids: chain.clone(),
-                });
-                // Next turn: previous output + fresh user input become new
-                // blocks appended to the chain.
-                let add = (rng.exp(1.0 / cfg.mean_new_blocks) as u64).clamp(1, 8);
-                chain.extend(fresh(add, &mut next_block));
-                t += rng.exp(1.0 / cfg.mean_turn_gap_ms);
+                t += rng.exp(1.0 / cfg.mean_rearrival_gap_ms);
+                if t >= cfg.duration_ms as f64 {
+                    // The user would come back after the trace ends; do
+                    // not clamp the re-arrival into an artificial burst
+                    // at the final millisecond.
+                    break;
+                }
+                turns = rng.geometric_mean(cfg.mean_session_turns).min(20);
             }
         } else {
             // One-shot request: its document blocks are never reused.
@@ -325,5 +375,95 @@ mod tests {
     fn simulated_lengths_fixed() {
         let trace = dataset("sim64k", 100, 1.0, 3);
         assert!(trace.iter().all(|r| r.input_length == 65_536 && r.output_length == 512));
+    }
+
+    /// Largest request count in any `window` ms of the trace.
+    fn peak_window_count(trace: &[TraceRecord], window: u64) -> usize {
+        let ts: Vec<u64> = trace.iter().map(|r| r.timestamp).collect(); // sorted
+        let mut lo = 0;
+        let mut best = 0;
+        for hi in 0..ts.len() {
+            while ts[hi] - ts[lo] > window {
+                lo += 1;
+            }
+            best = best.max(hi - lo + 1);
+        }
+        best
+    }
+
+    #[test]
+    fn bursty_arrivals_concentrate_load() {
+        let uniform = generate(&TraceGenConfig { n_requests: 4_000, seed: 9, ..Default::default() });
+        let bursty = generate(&TraceGenConfig {
+            n_requests: 4_000,
+            seed: 9,
+            burst_fraction: 0.7,
+            n_bursts: 3,
+            burst_width_ms: 10_000,
+            ..Default::default()
+        });
+        assert_eq!(bursty.len(), 4_000);
+        assert!(bursty.windows(2).all(|w| w[0].timestamp <= w[1].timestamp));
+        let pu = peak_window_count(&uniform, 60_000);
+        let pb = peak_window_count(&bursty, 60_000);
+        assert!(
+            pb > 2 * pu,
+            "bursty peak {pb} must dwarf the uniform peak {pu}"
+        );
+    }
+
+    #[test]
+    fn burst_knob_off_is_bitwise_default() {
+        // burst_fraction = 0.0 must not perturb the RNG stream: seeds and
+        // calibration carry over unchanged.
+        let a = generate(&TraceGenConfig { n_requests: 500, seed: 3, ..Default::default() });
+        let b = generate(&TraceGenConfig {
+            n_requests: 500,
+            seed: 3,
+            n_bursts: 99,          // ignored while burst_fraction == 0
+            burst_width_ms: 1,     // ignored while burst_fraction == 0
+            ..Default::default()
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn session_rearrival_resends_prefix_after_long_gap() {
+        let mk = |rearrival: f64| {
+            generate(&TraceGenConfig {
+                n_requests: 3_000,
+                seed: 11,
+                rearrival_fraction: rearrival,
+                mean_rearrival_gap_ms: 500_000.0,
+                ..Default::default()
+            })
+        };
+        // Sessions that go quiet for > 300 s and then re-send their chain.
+        let long_gap_resumes = |trace: &[TraceRecord]| {
+            let mut by_first: HashMap<u64, Vec<u64>> = HashMap::new();
+            for r in trace {
+                if r.hash_ids[0] >= 1_000 {
+                    by_first.entry(r.hash_ids[0]).or_default().push(r.timestamp);
+                }
+            }
+            let mut n = 0;
+            for ts in by_first.values() {
+                let mut ts = ts.clone();
+                ts.sort_unstable();
+                if ts.windows(2).any(|w| w[1] - w[0] > 300_000) {
+                    n += 1;
+                }
+            }
+            n
+        };
+        let with = long_gap_resumes(&mk(0.6));
+        let without = long_gap_resumes(&mk(0.0));
+        assert!(
+            with > without + 10,
+            "re-arrival must create long-gap prefix reuse: {with} vs {without}"
+        );
+        // Re-arrived turns still extend the same chain (prefix property).
+        let trace = mk(0.6);
+        assert!(trace.windows(2).all(|w| w[0].timestamp <= w[1].timestamp));
     }
 }

@@ -1,0 +1,101 @@
+//! The acceptance property of the unified cost model: Conductor's TTFT
+//! estimate (recorded at admission) and the simulator-observed TTFT
+//! (recorded by the `PrefillDone` event) must agree — on an unloaded
+//! cluster and under heavy queueing — because both are computed by the
+//! same `costmodel` API over the same queue state.
+//!
+//! Stated tolerance: |estimate − observed| ≤ 1 ms + 1% of the observed
+//! TTFT per request.  (The implementation is exact up to f64 noise; the
+//! tolerance leaves room for future stochastic execution models.)
+
+use mooncake::config::{RejectionPolicy, SimConfig};
+use mooncake::metrics::Outcome;
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+use mooncake::trace::TraceRecord;
+
+fn trace(n: usize) -> Vec<TraceRecord> {
+    gen::generate(&TraceGenConfig { n_requests: n, duration_ms: 900_000, ..Default::default() })
+}
+
+fn assert_agreement(cfg: &SimConfig, trace: &[TraceRecord], speedup: f64, min_completed: usize) {
+    let res = sim::run(cfg, trace, speedup);
+    let mut checked = 0;
+    for m in res.metrics.iter().filter(|m| m.outcome == Outcome::Completed) {
+        assert!(m.est_ttft_ms.is_finite(), "request {} lost its estimate", m.id);
+        let err = (m.est_ttft_ms - m.ttft_ms).abs();
+        let tol = 1.0 + 0.01 * m.ttft_ms;
+        assert!(
+            err <= tol,
+            "request {}: estimated TTFT {} vs observed {} (err {err} > tol {tol})",
+            m.id,
+            m.est_ttft_ms,
+            m.ttft_ms
+        );
+        checked += 1;
+    }
+    assert!(
+        checked >= min_completed,
+        "agreement check needs completions to mean anything: {checked} < {min_completed}"
+    );
+    let rep = res.report(cfg);
+    assert!(
+        rep.ttft_est_mae <= 1.0,
+        "mean abs estimate drift {} ms exceeds 1 ms",
+        rep.ttft_est_mae
+    );
+}
+
+#[test]
+fn estimates_match_actuals_unloaded() {
+    let cfg = SimConfig::default();
+    assert_agreement(&cfg, &trace(150), 1.0, 140);
+}
+
+#[test]
+fn estimates_match_actuals_on_loaded_cluster() {
+    // 2 prefill instances at 5x replay: deep FIFO queues, CPP groups, and
+    // remote fetches all in play — the estimate must still track the
+    // events, since queue drift compounds over every queued request.
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    assert_agreement(&cfg, &trace(300), 5.0, 250);
+}
+
+#[test]
+fn estimates_match_under_admission_control() {
+    // Early rejection consults the same queues; whatever it admits must
+    // still land where the estimate said.
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        rejection: RejectionPolicy::Early,
+        ..Default::default()
+    };
+    assert_agreement(&cfg, &trace(300), 4.0, 50);
+}
+
+#[test]
+fn estimates_match_on_bursty_replay() {
+    // Burst windows drive the deepest queues — exactly where a drifting
+    // estimator would be furthest off.
+    let bursty = gen::generate(&TraceGenConfig {
+        n_requests: 250,
+        duration_ms: 900_000,
+        burst_fraction: 0.7,
+        n_bursts: 2,
+        burst_width_ms: 15_000,
+        ..Default::default()
+    });
+    let cfg = SimConfig {
+        n_prefill: 4,
+        n_decode: 4,
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    assert_agreement(&cfg, &bursty, 1.0, 200);
+}

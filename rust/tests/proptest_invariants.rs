@@ -9,7 +9,7 @@ use mooncake::metrics::Outcome;
 use mooncake::sim;
 use mooncake::trace::gen::{self, TraceGenConfig};
 use mooncake::trace::jsonl;
-use mooncake::trace::TraceRecord;
+use mooncake::trace::{TraceRecord, BLOCK_TOKENS};
 use mooncake::util::json;
 use mooncake::util::rng::Rng;
 
@@ -75,14 +75,17 @@ fn prop_request_conservation() {
                 }
             }
         }
-        // Block accounting: every scheduled request's blocks are either
-        // reused or recomputed.
+        // Block accounting: every block a scheduled request *needs* is
+        // either reused or recomputed — needed is the hash chain capped
+        // at the blocks covering the input (a chain may overhang a
+        // non-block-aligned input; the overhang is neither).
         let scheduled_blocks: u64 = res
             .metrics
             .iter()
             .filter(|m| m.outcome != Outcome::RejectedAtArrival)
             .map(|m| {
-                trace[m.id as usize].hash_ids.len() as u64
+                let r = &trace[m.id as usize];
+                (r.hash_ids.len() as u64).min(r.input_length.div_ceil(BLOCK_TOKENS))
             })
             .sum();
         assert_eq!(

@@ -1,0 +1,131 @@
+//! Vendored, dependency-free subset of the `anyhow` crate API surface
+//! used by this repository: [`Error`], [`Result`], [`Context`], and the
+//! `anyhow!` / `bail!` macros.  The build must work fully offline (no
+//! crates.io registry), so this shim stands in for the real crate; it is
+//! string-based (no backtraces, no downcasting) which is all the CLI and
+//! trace tooling need.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context messages.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn from_msg(msg: String) -> Self {
+        Error { msg }
+    }
+
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// std::error::Error so this blanket conversion (enabling `?` on
+// io::Error, ParseError, ...) does not overlap the reflexive From.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow`-style result alias: the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (or missing `Option` values).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::from_msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/mooncake")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e}").starts_with("outer: "));
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+        let s: Option<u32> = Some(7);
+        assert_eq!(s.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "nope 1");
+    }
+}

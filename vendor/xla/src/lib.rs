@@ -1,0 +1,239 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The container image this repo builds in has no XLA/PJRT shared
+//! libraries and no registry access, so the live-serving path
+//! (`mooncake::runtime`) links against this stub instead.  Host-side
+//! [`Literal`] operations (creation, round-tripping, shapes) are fully
+//! functional — they back unit tests — while anything requiring a real
+//! PJRT device client ([`PjRtClient::cpu`], compilation, execution, npz
+//! loading) returns an explicit "unavailable" error.  The e2e tests skip
+//! when `artifacts/` is absent, so the stub never fails a test run; on a
+//! machine with real bindings, point the `xla` dependency at them and the
+//! call sites compile unchanged.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: a message, `Debug`-printable like xla-rs errors.
+#[derive(Clone)]
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("{what} unavailable: built against the stub `xla` crate (vendor/xla)"))
+}
+
+/// Element types the runtime uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+            ElementType::S32 => 4,
+        }
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// A host-resident tensor: shape + raw bytes.  Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a scalar slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+        };
+        Literal { ty: T::TY, dims: vec![v.len()], data: bytes.to_vec() }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != want {
+            return Err(Error(format!(
+                "shape {dims:?} needs {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Literal { ty, dims: dims.to_vec(), data: data.to_vec() }.ok()
+    }
+
+    fn ok(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.ty.byte_width()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!("literal is {:?}, asked for {:?}", self.ty, T::TY)));
+        }
+        let n = self.element_count();
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Tuple literals only exist on-device in the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals"))
+    }
+}
+
+/// Loading host data from serialized containers (npz).
+pub trait FromRawBytes: Sized {
+    fn read_npz(path: impl AsRef<Path>, opts: &()) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz(path: impl AsRef<Path>, _opts: &()) -> Result<Vec<(String, Literal)>> {
+        Err(Error(format!(
+            "read_npz({:?}) unavailable: built against the stub `xla` crate",
+            path.as_ref()
+        )))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "HLO parsing of {:?} unavailable: built against the stub `xla` crate",
+            path.as_ref()
+        )))
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// On-device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device buffers"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// PJRT client.  `cpu()` fails fast so callers surface a clear message.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 3],
+            &[0u8; 24],
+        )
+        .unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.0; 6]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn vec1_preserves_values() {
+        let l = Literal::vec1(&[1i32, -2, 3]);
+        assert_eq!(l.shape(), &[3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 5])
+            .is_err());
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::read_npz("/tmp/nope.npz", &()).is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/nope.hlo").is_err());
+    }
+}
