@@ -14,7 +14,7 @@ fn main() {
     banner("hot-path micro-benchmarks");
 
     // Prefix matching over a warm pool.
-    let mut pool = CachePool::new(PolicyKind::Lru, Some(100_000));
+    let mut pool = CachePool::new(PolicyKind::Lru, Some(100_000), Some(0));
     for chain in 0..2_000u64 {
         let blocks: Vec<u64> = (chain * 40..chain * 40 + 30).collect();
         pool.admit_chain(&blocks, chain as f64);
@@ -25,13 +25,24 @@ fn main() {
     })
     .print();
 
-    // Eviction-policy churn.
-    let mut lru = CachePool::new(PolicyKind::Lru, Some(10_000));
+    // Eviction-policy churn, DRAM-only (evictions drop).
+    let mut lru = CachePool::new(PolicyKind::Lru, Some(10_000), Some(0));
     let mut i = 0u64;
     bench("cache admit_chain under eviction (15 blocks)", 100, 10_000, || {
         let blocks: Vec<u64> = (i * 15..i * 15 + 15).collect();
         lru.admit_chain(&blocks, i as f64);
         i += 1;
+    })
+    .print();
+
+    // Tier churn: same workload but DRAM evictions demote to SSD and the
+    // SSD tier itself overflows — the worst-case two-map path.
+    let mut tiered = CachePool::new(PolicyKind::Lru, Some(10_000), Some(20_000));
+    let mut j = 0u64;
+    bench("tiered admit_chain under demotion (15 blocks)", 100, 10_000, || {
+        let blocks: Vec<u64> = (j * 15..j * 15 + 15).collect();
+        tiered.admit_chain(&blocks, j as f64);
+        j += 1;
     })
     .print();
 

@@ -8,7 +8,7 @@
 use mooncake::bench_util::{banner, fmt, row};
 use mooncake::kvcache::PolicyKind;
 use mooncake::trace::gen::{generate, TraceGenConfig};
-use mooncake::trace::stats::cache_hit_rate;
+use mooncake::trace::stats::{cache_hit_rate, tiered_cache_hit_rate};
 
 fn main() {
     let trace = generate(&TraceGenConfig::default());
@@ -40,4 +40,41 @@ fn main() {
     let lru_50k = rates[&("LRUCache", 50_000)];
     assert!(lru_50k > lru_inf - 0.03, "50k blocks should be near the ceiling");
     println!("\ntable1 shape checks OK (ceiling {lru_inf:.2})");
+
+    // Tier-capacity ablation: fixed DRAM, growing SSD tier underneath.
+    // The SSD tier turns evictions into demotions, so DRAM+SSD at equal
+    // DRAM capacity strictly dominates DRAM-only (§4.2's "underutilized
+    // ... DRAM and SSD resources" claim made measurable).
+    banner("Table 1b: DRAM+SSD tier ablation (LRU)");
+    let ssd_caps: Vec<usize> = vec![0, 10_000, 50_000, 200_000];
+    let header_b: Vec<String> =
+        ["dram", "ssd", "hit", "demote", "promote", "dropped"].iter().map(|s| s.to_string()).collect();
+    row(&header_b);
+    for dram in [1_000usize, 10_000, 30_000] {
+        for &ssd in &ssd_caps {
+            let (r, tc) = tiered_cache_hit_rate(&trace, PolicyKind::Lru, Some(dram), Some(ssd));
+            row(&[
+                dram.to_string(),
+                ssd.to_string(),
+                fmt(r, 3),
+                tc.demotions.to_string(),
+                tc.promotions.to_string(),
+                tc.dropped.to_string(),
+            ]);
+        }
+    }
+    for dram in [1_000usize, 10_000] {
+        let (dram_only, _) = tiered_cache_hit_rate(&trace, PolicyKind::Lru, Some(dram), Some(0));
+        assert!(
+            (dram_only - rates[&("LRUCache", dram)]).abs() < 1e-12,
+            "SSD-disabled tiered replay must equal the DRAM-only replay"
+        );
+        let (tiered, tc) = tiered_cache_hit_rate(&trace, PolicyKind::Lru, Some(dram), Some(200_000));
+        assert!(
+            tiered > dram_only + 0.02,
+            "dram {dram}: DRAM+SSD hit rate {tiered} must beat DRAM-only {dram_only}"
+        );
+        assert!(tc.ssd_hits > 0 && tc.demotions > tc.dropped);
+    }
+    println!("\ntable1b tier ablation OK");
 }

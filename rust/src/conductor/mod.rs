@@ -71,8 +71,11 @@ pub struct Placement {
     /// `PrefillStart`/`PrefillDone`.
     pub job: JobId,
     pub decode: usize,
-    /// Prefix blocks served from the primary's local pool.
+    /// Prefix blocks served from the primary's local pool (either tier).
     pub local_prefix_blocks: usize,
+    /// Of the reused prefix, blocks staged up from the primary's SSD
+    /// tier (0 when the three-way decision chose recompute instead).
+    pub ssd_load_blocks: usize,
     /// Remote fetch performed before prefill (source instance, blocks).
     pub fetch: Option<(usize, usize)>,
     /// Planned prefill window from the unified cost model (the group is
@@ -106,18 +109,28 @@ pub struct ConductorStats {
     pub migrations: u64,
     pub reused_blocks: u64,
     pub recomputed_blocks: u64,
+    /// Placements whose three-way prefix decision chose to stage blocks
+    /// up from the SSD tier, and how many blocks they staged.
+    pub ssd_loads: u64,
+    pub ssd_loaded_blocks: u64,
+    /// Placements that *could* have loaded SSD-resident prefix blocks
+    /// but recomputed them instead (the load was the slower branch).
+    pub ssd_recomputes: u64,
 }
 
-/// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks,
-/// and an optional remote fetch of `(source, blocks)` first.
+/// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks
+/// of which `ssd_blocks` must be staged up from the SSD tier, and an
+/// optional remote fetch of `(source, blocks)` first.
 fn estimate_for(
     ctx: &Ctx,
     req: &SchedRequest,
     i: usize,
     prefix_blocks: usize,
+    ssd_blocks: usize,
     fetch: Option<(usize, usize)>,
 ) -> PrefillEstimate {
     let (prefix_tokens, n_new) = req.split(prefix_blocks);
+    let ssd_tokens = (ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
     costmodel::estimate_prefill(
         ctx.perf,
         ctx.cfg,
@@ -126,41 +139,90 @@ fn estimate_for(
         i,
         n_new,
         prefix_tokens,
+        ssd_tokens,
         fetch,
         ctx.now,
     )
 }
 
-/// Algorithm 1 (lines 1–23): choose the prefill instance.
-///
-/// Returns (instance, local_prefix_blocks, effective_prefix_blocks,
-/// fetch source, estimate) — `effective` includes a remote fetch if the
-/// balancing branch chose one.
-fn select_prefill(
-    ctx: &mut Ctx,
+/// The prefill placement `select_prefill` decided on.
+struct PrefillChoice {
+    inst: usize,
+    /// Prefix blocks resident on `inst` (either tier) — reported in the
+    /// Placement.
+    local_blocks: usize,
+    /// Blocks the placement reuses (local + any remote fetch).
+    eff_blocks: usize,
+    /// Of `eff_blocks`, blocks staged up from `inst`'s SSD tier.
+    ssd_blocks: usize,
+    /// SSD-resident prefix blocks deliberately recomputed because the
+    /// load was priced slower (the "compute, don't load" branch).
+    recomputed_ssd_blocks: usize,
+    /// Blocks pulled over the wire from `fetch_src` (may exceed
+    /// `eff_blocks - local_blocks` when wire-refreshing local SSD copies
+    /// was priced cheaper than staging them).
+    fetch_blocks: usize,
+    fetch_src: Option<usize>,
+    est: PrefillEstimate,
+}
+
+/// Price the local-reuse options on instance `i` and return the cheaper
+/// as a fetch-free [`PrefillChoice`]: (a) reuse the whole matched
+/// prefix, staging its SSD-resident blocks; (b) reuse only the
+/// pure-DRAM prefix and recompute the rest.  This is the
+/// load-vs-recompute half of the three-way prefix decision — the third
+/// option (recompute everything) is what a zero match degenerates to.
+fn local_choice(
+    ctx: &Ctx,
     req: &SchedRequest,
-) -> (usize, usize, usize, Option<usize>, PrefillEstimate) {
+    i: usize,
+    m: crate::kvcache::TierMatch,
+) -> PrefillChoice {
+    let full = estimate_for(ctx, req, i, m.blocks, m.ssd_blocks, None);
+    let mut choice = PrefillChoice {
+        inst: i,
+        local_blocks: m.blocks,
+        eff_blocks: m.blocks,
+        ssd_blocks: m.ssd_blocks,
+        recomputed_ssd_blocks: 0,
+        fetch_blocks: 0,
+        fetch_src: None,
+        est: full,
+    };
+    if m.blocks > m.dram_prefix {
+        let dram_only = estimate_for(ctx, req, i, m.dram_prefix, 0, None);
+        if dram_only.end < choice.est.end {
+            choice.eff_blocks = m.dram_prefix;
+            choice.ssd_blocks = 0;
+            choice.recomputed_ssd_blocks = m.ssd_blocks;
+            choice.est = dram_only;
+        }
+    }
+    choice
+}
+
+/// Algorithm 1 (lines 1–23): choose the prefill instance, including the
+/// tier-aware reuse-from-DRAM / load-from-SSD / recompute decision.
+fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     let n = ctx.prefill.len();
-    // FindBestPrefixMatch over every instance's pool.
-    let matches: Vec<usize> = ctx
+    // FindBestPrefixMatch over every instance's pool, tier-aware.
+    let matches: Vec<crate::kvcache::TierMatch> = ctx
         .prefill
         .instances
         .iter()
-        .map(|p| p.pool.prefix_match_blocks(&req.hash_ids))
+        .map(|p| p.pool.prefix_match(&req.hash_ids))
         .collect();
     let (best_inst, best_blocks) = matches
         .iter()
         .enumerate()
-        .max_by_key(|(_, &m)| m)
-        .map(|(i, &m)| (i, m))
+        .max_by_key(|(_, m)| m.blocks)
+        .map(|(i, m)| (i, m.blocks))
         .unwrap_or((0, 0));
 
     match ctx.cfg.scheduling {
         SchedulingPolicy::Random => {
             let i = ctx.rng.below(n as u64) as usize;
-            let prefix = matches[i];
-            let est = estimate_for(ctx, req, i, prefix, None);
-            (i, prefix, prefix, None, est)
+            local_choice(ctx, req, i, matches[i])
         }
         SchedulingPolicy::LoadBalance => {
             let i = (0..n)
@@ -171,15 +233,13 @@ fn select_prefill(
                         .unwrap()
                 })
                 .unwrap();
-            let prefix = matches[i];
-            let est = estimate_for(ctx, req, i, prefix, None);
-            (i, prefix, prefix, None, est)
+            local_choice(ctx, req, i, matches[i])
         }
         SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
             let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
-            let mut best: Option<(usize, usize, usize, Option<usize>, PrefillEstimate)> = None;
+            let mut best: Option<PrefillChoice> = None;
             for i in 0..n {
-                let local = matches[i];
+                let local = matches[i].blocks;
                 // Line 8: prefer local compute unless the best remote
                 // match dwarfs the local one.
                 let ratio = if local == 0 {
@@ -187,29 +247,71 @@ fn select_prefill(
                 } else {
                     best_blocks as f64 / local as f64
                 };
-                let (prefix, fetch, est) = if !balancing
+                let cand = if !balancing
                     || best_inst == i
                     || best_blocks == 0
                     || ratio < ctx.cfg.kvcache_balancing_threshold
                 {
-                    // Cache-aware branch (lines 9–13).
-                    (local, None, estimate_for(ctx, req, i, local, None))
+                    // Cache-aware branch (lines 9–13), with the
+                    // load-vs-recompute split priced per instance.
+                    local_choice(ctx, req, i, matches[i])
                 } else {
                     // Cache-aware and -balancing branch (lines 15–21):
                     // fetch the missing blocks from the best holder; the
                     // transfer runs on the *source* NIC, so the estimate
-                    // charges the source's congestion.
-                    let transfer_blocks = best_blocks - local;
-                    let est =
-                        estimate_for(ctx, req, i, best_blocks, Some((best_inst, transfer_blocks)));
-                    (best_blocks, Some(best_inst), est)
+                    // charges the source's congestion.  The local
+                    // contribution's SSD-resident blocks are priced both
+                    // ways: staged from the local NVMe, or wire-refreshed
+                    // from the holder along with the missing blocks
+                    // (RDMA is often faster than the local SSD read).
+                    let stage = estimate_for(
+                        ctx,
+                        req,
+                        i,
+                        best_blocks,
+                        matches[i].ssd_blocks,
+                        Some((best_inst, best_blocks - local)),
+                    );
+                    // The wire plan only differs when local SSD copies
+                    // exist — don't pay a second probe otherwise.
+                    let wire_plan = if matches[i].ssd_blocks > 0 {
+                        let wire_blocks = best_blocks - matches[i].dram_blocks;
+                        let wire =
+                            estimate_for(ctx, req, i, best_blocks, 0, Some((best_inst, wire_blocks)));
+                        (wire.end < stage.end).then_some((wire_blocks, wire))
+                    } else {
+                        None
+                    };
+                    if let Some((wire_blocks, wire)) = wire_plan {
+                        PrefillChoice {
+                            inst: i,
+                            local_blocks: local,
+                            eff_blocks: best_blocks,
+                            ssd_blocks: 0,
+                            recomputed_ssd_blocks: 0,
+                            fetch_blocks: wire_blocks,
+                            fetch_src: Some(best_inst),
+                            est: wire,
+                        }
+                    } else {
+                        PrefillChoice {
+                            inst: i,
+                            local_blocks: local,
+                            eff_blocks: best_blocks,
+                            ssd_blocks: matches[i].ssd_blocks,
+                            recomputed_ssd_blocks: 0,
+                            fetch_blocks: best_blocks - local,
+                            fetch_src: Some(best_inst),
+                            est: stage,
+                        }
+                    }
                 };
                 let better = match &best {
                     None => true,
-                    Some(b) => est.end < b.4.end,
+                    Some(b) => cand.est.end < b.est.end,
                 };
                 if better {
-                    best = Some((i, matches[i], prefix, fetch, est));
+                    best = Some(cand);
                 }
             }
             best.expect("at least one prefill instance")
@@ -255,7 +357,8 @@ pub fn schedule(
     req: &SchedRequest,
     stats: &mut ConductorStats,
 ) -> Result<Placement, RejectReason> {
-    let (p, local_blocks, eff_blocks, fetch_src, est) = select_prefill(ctx, req);
+    let choice = select_prefill(ctx, req);
+    let p = choice.inst;
 
     // Line 24–27: decode selection and SLO gate.  The decode-side gate at
     // arrival is itself an *early rejection* (§7.2), so it only applies
@@ -279,7 +382,7 @@ pub fn schedule(
             return Err(RejectReason::TbtSlo);
         }
     };
-    if est.ttft_ms(ctx.now) > ctx.cfg.slo.ttft_ms {
+    if choice.est.ttft_ms(ctx.now) > ctx.cfg.slo.ttft_ms {
         stats.rejected_ttft += 1;
         return Err(RejectReason::TtftSlo);
     }
@@ -288,15 +391,16 @@ pub fn schedule(
         return Err(RejectReason::TbtSlo);
     }
 
-    let (prefix_tokens, n_new) = req.split(eff_blocks);
+    let (prefix_tokens, n_new) = req.split(choice.eff_blocks);
+    let ssd_tokens = (choice.ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
 
     // Remote prefix fetch (balancing branch): the fetch must land before
     // prefill starts; it runs on the *source* node's NIC — the same NIC
     // the estimate above probed.
     let mut fetch_gate = ctx.now;
     let mut fetch = None;
-    if let Some(src) = fetch_src {
-        let blocks = eff_blocks - local_blocks;
+    if let Some(src) = choice.fetch_src {
+        let blocks = choice.fetch_blocks;
         if blocks > 0 {
             let bytes = costmodel::fetch_bytes(ctx.perf, blocks);
             let tr = ctx.messenger.schedule(src, ctx.now, bytes);
@@ -304,22 +408,40 @@ pub fn schedule(
             fetch = Some((src, blocks));
             stats.remote_fetches += 1;
             // The fetched prefix is now replicated on p (hot-spot
-            // replication as a side effect of forwarding, §6.2).
-            let blocks_list: Vec<BlockId> = req.hash_ids[..eff_blocks].to_vec();
+            // replication as a side effect of forwarding, §6.2).  Under
+            // the stage plan the SSD copies *within the local matched
+            // run* are NOT wire-fetched — admission below promotes them
+            // as SSD hits, exactly what the estimate priced as staging —
+            // so they must not be replica-promoted here.  Everything
+            // else (missing blocks, and any stray SSD copies beyond the
+            // match gap, which the wire transfer covered) lands as a
+            // DRAM replica; the wire plan refreshed all SSD copies.
+            let pool = &ctx.prefill.instances[p].pool;
+            let blocks_list: Vec<BlockId> = req.hash_ids[..choice.eff_blocks]
+                .iter()
+                .enumerate()
+                .filter(|&(idx, &b)| {
+                    choice.ssd_blocks == 0
+                        || idx >= choice.local_blocks
+                        || pool.tier_of(b) != Some(crate::kvcache::Tier::Ssd)
+                })
+                .map(|(_, &b)| b)
+                .collect();
             ctx.prefill.instances[p].pool.insert_replica(&blocks_list, ctx.now);
             stats.migrations += 1;
         }
     }
 
     // Admit the job onto the group's FIFO queues.  The planned window is
-    // the estimate: same cost model, same state.
+    // the estimate: same cost model, same state, same SSD staging.
     let job = ctx.prefill.submit(
         ctx.perf,
         ctx.cfg,
         req.rid,
-        &est.group,
+        &choice.est.group,
         n_new,
         prefix_tokens,
+        ssd_tokens,
         fetch_gate,
         ctx.now,
     );
@@ -328,8 +450,19 @@ pub fn schedule(
         (j.planned_start, j.planned_end)
     };
 
-    // Admit the full chain into p's pool (its KVCache will exist there).
-    ctx.prefill.instances[p].pool.admit_chain(&req.hash_ids, ctx.now);
+    // Admit the full chain into p's pool with the reuse decision just
+    // made: reused blocks are tier hits (SSD ones promote), recomputed
+    // ones are misses whose fresh KV supersedes any stale SSD copy.
+    // Clamped to the blocks the input needs.  The reuse accounting below
+    // counts the hits that *actually landed* (a replica insertion under
+    // extreme capacity pressure can drop part of its own chain before
+    // admission reaches it), keeping `dram_hits + ssd_hits ==
+    // reused_blocks` an invariant rather than a best case.
+    let needed = req.needed_blocks();
+    let planned_reuse = choice.eff_blocks.min(needed);
+    let hits_before = ctx.prefill.instances[p].pool.stats.hits();
+    ctx.prefill.instances[p].pool.admit_chain_reusing(&req.hash_ids, planned_reuse, ctx.now);
+    let reused = (ctx.prefill.instances[p].pool.stats.hits() - hits_before) as usize;
 
     // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
     // prefill; the Sim schedules the actual wire transfer when the job
@@ -347,16 +480,23 @@ pub fn schedule(
     // Block accounting: clamp to the blocks the input actually needs so
     // reused + recomputed == needed for every request, including
     // non-block-aligned inputs whose chain overhangs the input.
-    let needed = req.needed_blocks();
-    let reused = eff_blocks.min(needed);
     stats.reused_blocks += reused as u64;
     stats.recomputed_blocks += (needed - reused) as u64;
+    // Tier traffic of the three-way decision, both ways.
+    if choice.ssd_blocks > 0 {
+        stats.ssd_loads += 1;
+        stats.ssd_loaded_blocks += choice.ssd_blocks as u64;
+    }
+    if choice.recomputed_ssd_blocks > 0 {
+        stats.ssd_recomputes += 1;
+    }
 
     Ok(Placement {
-        prefill_group: est.group,
+        prefill_group: choice.est.group,
         job,
         decode: d,
-        local_prefix_blocks: local_blocks,
+        local_prefix_blocks: choice.local_blocks,
+        ssd_load_blocks: choice.ssd_blocks,
         fetch,
         prefill_start: planned_start,
         prefill_end: planned_end,
@@ -540,6 +680,86 @@ mod tests {
             "planned start {} must include the source NIC backlog",
             p.prefill_start
         );
+    }
+
+    #[test]
+    fn ssd_load_chosen_over_recompute_for_deep_prefix() {
+        // A 63-block (~32k-token) chain demoted to the holder's SSD tier:
+        // recomputing it costs quadratic attention, so Algorithm 1's
+        // three-way decision must stage it up from SSD instead.  (63
+        // blocks keeps the recompute alternative below the CPP threshold,
+        // and CacheAware disables the remote-fetch branch — RDMA is an
+        // order of magnitude faster than NVMe, so under KvCacheCentric a
+        // remote DRAM fetch would rightly shadow the local SSD load.)
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::CacheAware);
+        let mut stats = ConductorStats::default();
+        let r = req(1, 63);
+        {
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            schedule(&mut ctx, &r, &mut stats).unwrap();
+        }
+        assert_eq!(stats.ssd_loads, 0, "cold pass has nothing to stage");
+        let holder = prefill
+            .instances
+            .iter()
+            .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 63)
+            .unwrap();
+        // Long idle gap: the whole chain got demoted to the SSD tier.
+        for &b in &r.hash_ids {
+            assert!(prefill.instances[holder].pool.demote_block(b, 1.0));
+        }
+        assert_eq!(prefill.instances[holder].pool.ssd_len(), 63);
+
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_eq!(p.prefill_group[0], holder, "SSD holder must win the placement");
+        assert_eq!(p.ssd_load_blocks, 63, "the whole prefix loads from SSD");
+        assert_eq!(stats.ssd_loads, 1);
+        assert_eq!(stats.ssd_loaded_blocks, 63);
+        assert_eq!(stats.ssd_recomputes, 0);
+        // Reuse accounting: staged blocks count as reused, not recomputed.
+        assert_eq!(stats.reused_blocks, 63);
+        // The staged blocks promoted back to DRAM.
+        assert_eq!(prefill.instances[holder].pool.ssd_len(), 0);
+        assert_eq!(prefill.instances[holder].pool.stats.ssd_hits, 63);
+        assert_eq!(prefill.instances[holder].pool.stats.promotions, 63);
+    }
+
+    #[test]
+    fn recompute_chosen_over_slow_ssd_load_for_shallow_prefix() {
+        // A 2-block (1k-token) chain on SSD: at near-zero context the
+        // recompute is cheaper than the NVMe read, so the decision must
+        // recompute — exercising the "compute, don't load" branch.
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+            setup(SchedulingPolicy::CacheAware);
+        let mut stats = ConductorStats::default();
+        let r = req(2, 2);
+        {
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            schedule(&mut ctx, &r, &mut stats).unwrap();
+        }
+        let holder = prefill
+            .instances
+            .iter()
+            .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 2)
+            .unwrap();
+        for &b in &r.hash_ids {
+            assert!(prefill.instances[holder].pool.demote_block(b, 1.0));
+        }
+
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_eq!(p.ssd_load_blocks, 0, "slow SSD load must lose to recompute");
+        assert_eq!(stats.ssd_loads, 0);
+        assert_eq!(stats.ssd_recomputes, 1);
+        // Recomputed blocks count as recomputed, and the fresh KV
+        // supersedes the stale SSD copies (back in DRAM, one tier only).
+        assert_eq!(stats.reused_blocks, 0);
+        assert_eq!(stats.recomputed_blocks, 4);
+        let pool = &prefill.instances[p.prefill_group[0]].pool;
+        assert_eq!(pool.stats.ssd_hits, 0);
+        assert_eq!(pool.prefix_match(&r.hash_ids).dram_blocks, 2);
     }
 
     #[test]

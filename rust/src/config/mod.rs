@@ -45,8 +45,13 @@ pub enum RejectionPolicy {
 pub struct SimConfig {
     pub n_prefill: usize,
     pub n_decode: usize,
-    /// Per-instance KVCache pool capacity in 512-token blocks (None=∞).
+    /// Per-instance DRAM KVCache tier capacity in 512-token blocks
+    /// (None=∞).
     pub cache_capacity_blocks: Option<usize>,
+    /// Per-instance SSD KVCache tier capacity in 512-token blocks:
+    /// DRAM eviction demotes here instead of dropping.  `Some(0)`
+    /// disables the tier (the pre-tiering DRAM-only cache); None=∞.
+    pub ssd_capacity_blocks: Option<usize>,
     pub eviction: PolicyKind,
     /// §5.1 prefill chunk size in tokens ("typically larger than 1000").
     pub prefill_chunk: u64,
@@ -73,6 +78,7 @@ impl Default for SimConfig {
             n_prefill: 8,
             n_decode: 8,
             cache_capacity_blocks: Some(50_000),
+            ssd_capacity_blocks: Some(250_000),
             eviction: PolicyKind::Lru,
             prefill_chunk: 8_192,
             cpp_group_max: 4,

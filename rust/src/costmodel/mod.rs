@@ -42,19 +42,33 @@ pub fn prefix_load_ms(perf: &PerfModel, prefix_tokens: u64) -> f64 {
     perf.dram_load_ms(prefix_tokens) * PREFIX_LOAD_VISIBLE_FRACTION
 }
 
+/// Staging latency of the SSD-resident part of a reused prefix: the
+/// NVMe read lands the blocks in DRAM *before* the layer-wise DRAM→VRAM
+/// load can touch them, so — unlike the DRAM load — it sits fully on the
+/// critical path.  That asymmetry is exactly what makes recomputation
+/// competitive with loading for shallow prefixes (the "compute or load?"
+/// branch of Algorithm 1's three-way prefix decision).
+pub fn ssd_stage_ms(perf: &PerfModel, ssd_prefix_tokens: u64) -> f64 {
+    perf.ssd_load_ms(ssd_prefix_tokens, ssd_prefix_tokens.div_ceil(BLOCK_TOKENS))
+}
+
 /// Execution makespan of one prefill job on a CPP group of `group_len`
-/// nodes: chunked-pipeline compute plus the visible prefix-load head.
-/// This is the ONE definition of "how long a prefill takes" — both the
-/// estimator and the executor use it.
+/// nodes: chunked-pipeline compute, the visible prefix-load head, and
+/// the SSD staging of the `ssd_prefix_tokens` ⊆ `prefix_tokens` that
+/// live on the slow tier.  This is the ONE definition of "how long a
+/// prefill takes" — both the estimator and the executor use it.
 pub fn prefill_exec_ms(
     perf: &PerfModel,
     cfg: &SimConfig,
     n_new: u64,
     prefix_tokens: u64,
+    ssd_prefix_tokens: u64,
     group_len: u64,
 ) -> f64 {
+    debug_assert!(ssd_prefix_tokens <= prefix_tokens);
     perf.cpp_prefill_ms(n_new, prefix_tokens, cfg.prefill_chunk, group_len)
         + prefix_load_ms(perf, prefix_tokens)
+        + ssd_stage_ms(perf, ssd_prefix_tokens)
 }
 
 /// Wire bytes of a remote prefix fetch of `blocks` cache blocks (§6.2).
@@ -95,9 +109,11 @@ impl PrefillEstimate {
 }
 
 /// Estimate a prefill on `primary` with `n_new` uncached tokens and
-/// `prefix_tokens` reused ones; `fetch = Some((source, blocks))` adds a
-/// remote prefix fetch that must land first.  Read-only: probes the
-/// prefill queues and the source NIC without mutating either.
+/// `prefix_tokens` reused ones, of which `ssd_prefix_tokens` must first
+/// be staged up from the node's SSD tier; `fetch = Some((source,
+/// blocks))` adds a remote prefix fetch that must land first.
+/// Read-only: probes the prefill queues and the source NIC without
+/// mutating either.
 #[allow(clippy::too_many_arguments)]
 pub fn estimate_prefill(
     perf: &PerfModel,
@@ -107,11 +123,13 @@ pub fn estimate_prefill(
     primary: usize,
     n_new: u64,
     prefix_tokens: u64,
+    ssd_prefix_tokens: u64,
     fetch: Option<(usize, usize)>,
     now: TimeMs,
 ) -> PrefillEstimate {
     let group = pool.cpp_group(cfg, primary, n_new, now);
-    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+    let exec_ms =
+        prefill_exec_ms(perf, cfg, n_new, prefix_tokens, ssd_prefix_tokens, group.len() as u64);
     let queue_free = pool.group_free_at(&group).max(now);
     let fetch_done = match fetch {
         Some((src, blocks)) if blocks > 0 => {
@@ -162,12 +180,38 @@ mod tests {
     #[test]
     fn exec_includes_visible_prefix_load() {
         let (cfg, perf, _, _) = env();
-        let cold = prefill_exec_ms(&perf, &cfg, 8_000, 0, 1);
+        let cold = prefill_exec_ms(&perf, &cfg, 8_000, 0, 0, 1);
         assert_eq!(cold, perf.prefill_ms(8_000, 0));
         // Fully cached input still pays the non-overlapped load head.
-        let warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 1);
+        let warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 0, 1);
         assert!(warm > 0.0 && warm < cold * 0.05, "warm={warm} cold={cold}");
         assert!((warm - prefix_load_ms(&perf, 8_000)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ssd_staging_on_critical_path_and_crossover() {
+        let (cfg, perf, _, _) = env();
+        // An SSD-resident prefix pays the full staging latency on top of
+        // the DRAM load head.
+        let dram_warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 0, 1);
+        let ssd_warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 8_000, 1);
+        assert!((ssd_warm - dram_warm - ssd_stage_ms(&perf, 8_000)).abs() < 1e-9);
+        assert!(ssd_warm > 10.0 * dram_warm, "{ssd_warm} vs {dram_warm}");
+        // The load-vs-recompute crossover both ways, through the ONE
+        // makespan definition the scheduler and executor share:
+        // deep prefix — loading from SSD beats recomputing it...
+        let deep = 32_768u64;
+        let load_deep = prefill_exec_ms(&perf, &cfg, 0, deep, deep, 1);
+        let recompute_deep = prefill_exec_ms(&perf, &cfg, deep, 0, 0, 1);
+        assert!(load_deep < recompute_deep, "{load_deep} !< {recompute_deep}");
+        // ...shallow prefix — recomputing beats the NVMe read.
+        let shallow = 512u64;
+        let load_shallow = prefill_exec_ms(&perf, &cfg, 0, shallow, shallow, 1);
+        let recompute_shallow = prefill_exec_ms(&perf, &cfg, shallow, 0, 0, 1);
+        assert!(
+            recompute_shallow < load_shallow,
+            "{recompute_shallow} !< {load_shallow}"
+        );
     }
 
     #[test]
@@ -176,9 +220,9 @@ mod tests {
         // Congest node 2's outgoing NIC; node 5 stays idle.
         msgr.schedule(2, 0.0, 2_000_000_000_000); // ~20 s backlog
         let idle =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((5, 4)), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((5, 4)), 0.0);
         let congested =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((2, 4)), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((2, 4)), 0.0);
         assert!(
             congested.fetch_wait_ms > idle.fetch_wait_ms + 10_000.0,
             "source congestion must surface: {} vs {}",
@@ -193,7 +237,7 @@ mod tests {
         let (cfg, perf, mut pool, mut msgr) = env();
         pool.instances[0].block_until(5_000.0);
         msgr.schedule(3, 0.0, 300_000_000_000); // ~3 s source backlog
-        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, Some((3, 4)), 0.0);
+        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((3, 4)), 0.0);
         // start = max(queue, fetch), not their sum.
         assert!(est.queue_wait_ms >= 5_000.0);
         assert!(est.fetch_wait_ms > 2_000.0 && est.fetch_wait_ms < 5_000.0);
@@ -209,7 +253,7 @@ mod tests {
         for i in 2..pool.len() {
             pool.instances[i].block_until(10.0);
         }
-        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 100_000, 0, None, 0.0);
+        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 100_000, 0, 0, None, 0.0);
         assert_eq!(est.group, vec![0, 1]);
         assert!((est.start - 0.5).abs() < 1e-9, "group max drives start: {}", est.start);
         assert!((est.queue_wait_ms - 0.5).abs() < 1e-9);

@@ -83,8 +83,24 @@ impl EvictionPolicy {
         self.entries.is_empty()
     }
 
+    /// Configured capacity (None = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Whether an insertion of a new block would require an eviction.
+    pub fn at_capacity(&self) -> bool {
+        matches!(self.capacity, Some(cap) if self.entries.len() >= cap)
+    }
+
     pub fn contains(&self, b: BlockId) -> bool {
         self.entries.contains_key(&b)
+    }
+
+    /// Last recorded request position of a resident block (LengthAware's
+    /// eviction key) — lets a tiered caller demote with metadata intact.
+    pub fn pos_of(&self, b: BlockId) -> Option<usize> {
+        self.entries.get(&b).map(|m| m.pos)
     }
 
     /// Record a hit: bump recency/frequency/position metadata.
@@ -122,12 +138,19 @@ impl EvictionPolicy {
 
     /// Evict the policy's victim.
     pub fn evict(&mut self) -> Option<BlockId> {
+        self.evict_entry().map(|(b, _)| b)
+    }
+
+    /// Evict the policy's victim, returning `(block, last request
+    /// position)` so a tiered caller can demote it with its position
+    /// metadata intact (LengthAwareCache keys on position).
+    pub fn evict_entry(&mut self) -> Option<(BlockId, usize)> {
         let victim = self.order.iter().next().copied()?;
         self.order.remove(&victim);
         let b = victim.3;
-        self.entries.remove(&b);
+        let meta = self.entries.remove(&b);
         self.evictions += 1;
-        Some(b)
+        Some((b, meta.map(|m| m.pos).unwrap_or(0)))
     }
 
     /// Remove a specific block (e.g. swapped out by Conductor).

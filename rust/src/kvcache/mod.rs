@@ -1,12 +1,14 @@
 //! The disaggregated KVCache (§3, Fig 3): prefix-hash-chained paged
-//! blocks stored in each node's CPU DRAM pool, with pluggable eviction
-//! and a prefix matcher used by Conductor's cache-aware scheduling.
+//! blocks stored in each node's tiered CPU-DRAM + SSD pool, with
+//! pluggable eviction (DRAM eviction demotes to SSD; reuse promotes
+//! back) and a tier-aware prefix matcher used by Conductor's
+//! cache-aware scheduling.
 
 pub mod eviction;
 pub mod pool;
 
 pub use eviction::{EvictionPolicy, PolicyKind};
-pub use pool::CachePool;
+pub use pool::{CachePool, Tier, TierCounters, TierMatch};
 
 use crate::BlockId;
 

@@ -1,91 +1,352 @@
-//! Per-instance KVCache pool: the CPU-DRAM-resident paged block store of
-//! one prefill/decode node (Fig 3), with capacity-bounded eviction and
-//! the prefix matcher Conductor queries during scheduling.
+//! Tiered per-instance KVCache pool (§3, §4.2): each node contributes a
+//! fast CPU **DRAM** tier and a capacity **SSD** tier to the disaggregated
+//! cache.  Eviction from DRAM *demotes* a block to SSD instead of
+//! destroying it; only SSD overflow actually drops data.  Reusing an
+//! SSD-resident block *promotes* it back to DRAM (its KV is staged up for
+//! the prefill), so heat naturally stratifies the tiers.  Conductor's
+//! scheduling reads the per-tier split through [`CachePool::prefix_match`]
+//! to price the three-way reuse-from-DRAM / load-from-SSD / recompute
+//! decision.
 
 use super::eviction::{EvictionPolicy, PolicyKind};
 use crate::{BlockId, TimeMs};
 
-#[derive(Debug)]
-pub struct CachePool {
-    policy: EvictionPolicy,
-    /// Statistics for cache-efficiency reporting.
-    pub hits: u64,
-    pub misses: u64,
+/// Which tier a resident block currently lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Dram,
+    Ssd,
 }
 
-impl CachePool {
-    pub fn new(kind: PolicyKind, capacity_blocks: Option<usize>) -> Self {
-        CachePool { policy: EvictionPolicy::new(kind, capacity_blocks), hits: 0, misses: 0 }
+/// Per-tier hit and traffic counters.  The invariant the integration
+/// tests pin: `dram_hits + ssd_hits` equals the blocks the scheduler
+/// counted as reused, because hits are only recorded for the reused
+/// prefix the placement actually consumed.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TierCounters {
+    /// Reused blocks served straight from DRAM.
+    pub dram_hits: u64,
+    /// Reused blocks staged up from the SSD tier.
+    pub ssd_hits: u64,
+    /// Blocks admitted without reuse (inserted fresh into DRAM).
+    pub misses: u64,
+    /// DRAM evictions that moved a block down to SSD.
+    pub demotions: u64,
+    /// SSD blocks moved back to DRAM on reuse.
+    pub promotions: u64,
+    /// Blocks destroyed outright (SSD overflow, or DRAM eviction with the
+    /// SSD tier disabled).
+    pub dropped: u64,
+}
+
+impl TierCounters {
+    pub fn hits(&self) -> u64 {
+        self.dram_hits + self.ssd_hits
     }
 
-    pub fn len(&self) -> usize {
-        self.policy.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.policy.is_empty()
-    }
-
-    pub fn contains(&self, b: BlockId) -> bool {
-        self.policy.contains(b)
-    }
-
-    /// Algorithm 1's `prefix_len` (in blocks): longest leading run of the
-    /// request's hash chain present in this pool.  Read-only (hit
-    /// accounting happens on admission, not on probing).
-    pub fn prefix_match_blocks(&self, hash_ids: &[BlockId]) -> usize {
-        hash_ids.iter().take_while(|&&b| self.policy.contains(b)).count()
-    }
-
-    /// Admit a request's block chain after (or during) its prefill: leading
-    /// `matched` blocks are touched as hits, the rest inserted as misses.
-    /// Returns evicted blocks.
-    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> Vec<BlockId> {
-        let matched = self.prefix_match_blocks(hash_ids);
-        let mut evicted = Vec::new();
-        for (i, &b) in hash_ids.iter().enumerate() {
-            if i < matched {
-                self.hits += 1;
-                self.policy.touch(b, now, i);
-            } else {
-                self.misses += 1;
-                if let Some(e) = self.policy.insert(b, now, i) {
-                    evicted.push(e);
-                }
-            }
-        }
-        evicted
-    }
-
-    /// Insert replicated blocks (hot-spot migration §6.2) without hit
-    /// accounting.  Returns evicted blocks.
-    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> Vec<BlockId> {
-        let mut evicted = Vec::new();
-        for (i, &b) in blocks.iter().enumerate() {
-            if !self.policy.contains(b) {
-                if let Some(e) = self.policy.insert(b, now, i) {
-                    evicted.push(e);
-                }
-            }
-        }
-        evicted
+    pub fn accesses(&self) -> u64 {
+        self.hits() + self.misses
     }
 
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.accesses();
         if total == 0 {
             0.0
         } else {
-            self.hits as f64 / total as f64
+            self.hits() as f64 / total as f64
         }
     }
 
+    pub fn merge(&mut self, other: &TierCounters) {
+        self.dram_hits += other.dram_hits;
+        self.ssd_hits += other.ssd_hits;
+        self.misses += other.misses;
+        self.demotions += other.demotions;
+        self.promotions += other.promotions;
+        self.dropped += other.dropped;
+    }
+}
+
+/// The longest usable prefix of a request's hash chain in this pool,
+/// split by tier (Algorithm 1's `prefix_len`, tier-aware).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TierMatch {
+    /// Leading run of chain blocks resident in *either* tier.
+    pub blocks: usize,
+    /// Leading run resident in DRAM before the first SSD (or absent)
+    /// block — the prefix reusable without touching the SSD.
+    pub dram_prefix: usize,
+    /// Of `blocks`, how many are DRAM-resident.
+    pub dram_blocks: usize,
+    /// Of `blocks`, how many would have to be staged up from SSD.
+    pub ssd_blocks: usize,
+}
+
+/// One node's tiered KVCache pool: DRAM + SSD [`EvictionPolicy`] maps
+/// (same policy kind per tier) plus the tier counters.  A block lives in
+/// exactly one tier at a time — `rust/tests/proptest_invariants.rs`
+/// hammers that conservation property.
+#[derive(Debug)]
+pub struct CachePool {
+    dram: EvictionPolicy,
+    ssd: EvictionPolicy,
+    pub stats: TierCounters,
+}
+
+impl CachePool {
+    /// `ssd_capacity_blocks`: `Some(0)` disables the SSD tier (DRAM-only,
+    /// eviction destroys blocks — the pre-tiering behavior), `None` is an
+    /// unbounded SSD.
+    pub fn new(
+        kind: PolicyKind,
+        dram_capacity_blocks: Option<usize>,
+        ssd_capacity_blocks: Option<usize>,
+    ) -> Self {
+        CachePool {
+            dram: EvictionPolicy::new(kind, dram_capacity_blocks),
+            ssd: EvictionPolicy::new(kind, ssd_capacity_blocks),
+            stats: TierCounters::default(),
+        }
+    }
+
+    /// Total resident blocks across both tiers.
+    pub fn len(&self) -> usize {
+        self.dram.len() + self.ssd.len()
+    }
+
+    pub fn dram_len(&self) -> usize {
+        self.dram.len()
+    }
+
+    pub fn ssd_len(&self) -> usize {
+        self.ssd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dram.is_empty() && self.ssd.is_empty()
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.dram.contains(b) || self.ssd.contains(b)
+    }
+
+    pub fn tier_of(&self, b: BlockId) -> Option<Tier> {
+        if self.dram.contains(b) {
+            Some(Tier::Dram)
+        } else if self.ssd.contains(b) {
+            Some(Tier::Ssd)
+        } else {
+            None
+        }
+    }
+
+    fn ssd_enabled(&self) -> bool {
+        self.ssd.capacity() != Some(0)
+    }
+
+    /// Tier-aware prefix match: the leading run of the chain resident in
+    /// either tier, with its DRAM/SSD composition.
+    pub fn prefix_match(&self, hash_ids: &[BlockId]) -> TierMatch {
+        let mut m = TierMatch::default();
+        let mut dram_run = true;
+        for &b in hash_ids {
+            if self.dram.contains(b) {
+                m.blocks += 1;
+                m.dram_blocks += 1;
+                if dram_run {
+                    m.dram_prefix += 1;
+                }
+            } else if self.ssd.contains(b) {
+                m.blocks += 1;
+                m.ssd_blocks += 1;
+                dram_run = false;
+            } else {
+                break;
+            }
+        }
+        m
+    }
+
+    /// Algorithm 1's `prefix_len` (in blocks), tier-blind.  Read-only
+    /// (hit accounting happens on admission, not on probing).
+    pub fn prefix_match_blocks(&self, hash_ids: &[BlockId]) -> usize {
+        self.prefix_match(hash_ids).blocks
+    }
+
+    /// Insert into DRAM, demoting (or, with SSD disabled, dropping) LRU
+    /// victims first so the insert itself never evicts.  Fully dropped
+    /// blocks are appended to `dropped`.
+    fn insert_dram(&mut self, b: BlockId, now: TimeMs, pos: usize, dropped: &mut Vec<BlockId>) {
+        if self.dram.capacity() == Some(0) {
+            // Degenerate no-DRAM config: fresh KV spills straight down to
+            // the SSD tier (or is dropped), keeping the capacity bound
+            // exact instead of holding one block over it.  Not counted as
+            // a demotion — the block was never DRAM-resident.
+            if self.ssd_enabled() {
+                if let Some(dead) = self.ssd.insert(b, now, pos) {
+                    self.stats.dropped += 1;
+                    dropped.push(dead);
+                }
+            } else {
+                self.stats.dropped += 1;
+                dropped.push(b);
+            }
+            return;
+        }
+        while self.dram.at_capacity() {
+            let Some((victim, vpos)) = self.dram.evict_entry() else {
+                break;
+            };
+            if self.ssd_enabled() {
+                self.stats.demotions += 1;
+                if let Some(dead) = self.ssd.insert(victim, now, vpos) {
+                    self.stats.dropped += 1;
+                    dropped.push(dead);
+                }
+            } else {
+                self.stats.dropped += 1;
+                dropped.push(victim);
+            }
+        }
+        // Room was made above (or the tier is unbounded), so this insert
+        // itself cannot evict.
+        let evicted = self.dram.insert(b, now, pos);
+        debug_assert!(evicted.is_none());
+    }
+
+    /// Place one block of an admitted chain.  `reused` says whether the
+    /// scheduler counted this block as reused KVCache: reused blocks are
+    /// hits (promoting from SSD if needed); non-reused blocks are misses
+    /// whose KV gets (re)materialized in DRAM — recomputed blocks shadow
+    /// any stale SSD copy, which is removed so a block never lives in two
+    /// tiers.
+    fn place(
+        &mut self,
+        b: BlockId,
+        pos: usize,
+        now: TimeMs,
+        reused: bool,
+        dropped: &mut Vec<BlockId>,
+    ) {
+        if self.dram.contains(b) {
+            if reused {
+                self.stats.dram_hits += 1;
+            } else {
+                self.stats.misses += 1;
+            }
+            self.dram.touch(b, now, pos);
+        } else if self.ssd.contains(b) {
+            if reused {
+                self.stats.ssd_hits += 1;
+                self.stats.promotions += 1;
+            } else {
+                self.stats.misses += 1;
+            }
+            self.ssd.remove(b);
+            self.insert_dram(b, now, pos, dropped);
+        } else {
+            self.stats.misses += 1;
+            self.insert_dram(b, now, pos, dropped);
+        }
+    }
+
+    /// Admit a request's block chain with the scheduler's reuse decision:
+    /// the leading `reused_blocks` count as hits (DRAM touch or SSD
+    /// promotion), the rest as misses inserted into DRAM (their KV was
+    /// just computed).  Returns blocks dropped from the cache entirely.
+    pub fn admit_chain_reusing(
+        &mut self,
+        hash_ids: &[BlockId],
+        reused_blocks: usize,
+        now: TimeMs,
+    ) -> Vec<BlockId> {
+        let mut dropped = Vec::new();
+        for (i, &b) in hash_ids.iter().enumerate() {
+            self.place(b, i, now, i < reused_blocks, &mut dropped);
+        }
+        dropped
+    }
+
+    /// Admit a chain reusing everything the pool can prefix-match — the
+    /// pre-tiering API, kept for callers without a scheduling decision.
+    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> Vec<BlockId> {
+        let matched = self.prefix_match_blocks(hash_ids);
+        self.admit_chain_reusing(hash_ids, matched, now)
+    }
+
+    /// Admit a single block with per-block (non-prefix) semantics — the
+    /// Table 1 global-pool replays.  A block resident in either tier is a
+    /// hit (promoting from SSD); a miss inserts into DRAM.  Returns
+    /// whether it hit.
+    pub fn admit_block(&mut self, b: BlockId, pos: usize, now: TimeMs) -> bool {
+        let hit = self.contains(b);
+        let mut dropped = Vec::new();
+        self.place(b, pos, now, hit, &mut dropped);
+        hit
+    }
+
+    /// Insert replicated blocks (hot-spot migration §6.2) without hit
+    /// accounting.  Replicas land in DRAM (they arrive hot off the wire);
+    /// a stale SSD copy is superseded.  Returns dropped blocks.
+    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> Vec<BlockId> {
+        let mut dropped = Vec::new();
+        for (i, &b) in blocks.iter().enumerate() {
+            if self.dram.contains(b) {
+                continue;
+            }
+            if self.ssd.contains(b) {
+                self.ssd.remove(b);
+                self.stats.promotions += 1;
+            }
+            self.insert_dram(b, now, i, &mut dropped);
+        }
+        dropped
+    }
+
+    /// Move a DRAM-resident block down to the SSD tier (idle-demotion /
+    /// test hook).  Returns false if the block is not in DRAM or the SSD
+    /// tier is disabled.
+    pub fn demote_block(&mut self, b: BlockId, now: TimeMs) -> bool {
+        if !self.dram.contains(b) || !self.ssd_enabled() {
+            return false;
+        }
+        let pos = self.dram.pos_of(b).unwrap_or(0);
+        self.dram.remove(b);
+        self.stats.demotions += 1;
+        if let Some(dead) = self.ssd.insert(b, now, pos) {
+            self.stats.dropped += 1;
+            debug_assert_ne!(dead, b, "SSD tier evicted the block being demoted");
+        }
+        true
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.stats.hits()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.stats.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.stats.hit_rate()
+    }
+
+    /// Blocks destroyed outright (not demoted).
     pub fn evictions(&self) -> u64 {
-        self.policy.evictions
+        self.stats.dropped
     }
 
     pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
-        self.policy.iter_blocks()
+        self.dram.iter_blocks().chain(self.ssd.iter_blocks())
+    }
+
+    pub fn iter_dram_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.dram.iter_blocks()
+    }
+
+    pub fn iter_ssd_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.ssd.iter_blocks()
     }
 }
 
@@ -95,7 +356,7 @@ mod tests {
 
     #[test]
     fn prefix_match_stops_at_gap() {
-        let mut p = CachePool::new(PolicyKind::Lru, None);
+        let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
         p.admit_chain(&[1, 2, 3], 0.0);
         assert_eq!(p.prefix_match_blocks(&[1, 2, 9, 3]), 2);
         assert_eq!(p.prefix_match_blocks(&[9, 1, 2]), 0);
@@ -104,36 +365,145 @@ mod tests {
 
     #[test]
     fn admit_counts_hits_and_misses() {
-        let mut p = CachePool::new(PolicyKind::Lru, None);
+        let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
         p.admit_chain(&[1, 2], 0.0);
-        assert_eq!((p.hits, p.misses), (0, 2));
+        assert_eq!((p.hits(), p.misses()), (0, 2));
         p.admit_chain(&[1, 2, 3], 1.0);
-        assert_eq!((p.hits, p.misses), (2, 3));
+        assert_eq!((p.hits(), p.misses()), (2, 3));
         assert!((p.hit_rate() - 0.4).abs() < 1e-9);
     }
 
     #[test]
-    fn eviction_under_capacity_pressure() {
-        let mut p = CachePool::new(PolicyKind::Lru, Some(4));
+    fn eviction_without_ssd_drops_blocks() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(0));
         p.admit_chain(&[1, 2, 3, 4], 0.0);
-        let evicted = p.admit_chain(&[5, 6], 1.0);
-        assert_eq!(evicted, vec![1, 2]); // LRU order
+        let dropped = p.admit_chain(&[5, 6], 1.0);
+        assert_eq!(dropped, vec![1, 2]); // LRU order
         assert_eq!(p.len(), 4);
+        assert_eq!(p.stats.demotions, 0);
+        assert_eq!(p.stats.dropped, 2);
+    }
+
+    #[test]
+    fn eviction_with_ssd_demotes_instead_of_dropping() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(8));
+        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        let dropped = p.admit_chain(&[5, 6], 1.0);
+        assert!(dropped.is_empty(), "demotion must not destroy blocks");
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.dram_len(), 4);
+        assert_eq!(p.ssd_len(), 2);
+        assert_eq!(p.tier_of(1), Some(Tier::Ssd));
+        assert_eq!(p.tier_of(2), Some(Tier::Ssd));
+        assert_eq!(p.tier_of(5), Some(Tier::Dram));
+        assert_eq!(p.stats.demotions, 2);
+        assert_eq!(p.stats.dropped, 0);
+        // The whole chain is still prefix-matchable across tiers.
+        assert_eq!(p.prefix_match_blocks(&[1, 2, 3, 4]), 4);
+    }
+
+    #[test]
+    fn ssd_overflow_finally_drops() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(2));
+        p.admit_chain(&[1, 2], 0.0); // DRAM [1,2]
+        p.admit_chain(&[3, 4], 1.0); // DRAM [3,4], SSD [1,2]
+        let dropped = p.admit_chain(&[5, 6], 2.0); // 3,4 demote; 1,2 fall off SSD
+        assert_eq!(dropped, vec![1, 2]);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.stats.dropped, 2);
+        assert_eq!(p.stats.demotions, 4);
+    }
+
+    #[test]
+    fn reuse_promotes_ssd_blocks_back_to_dram() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
+        p.admit_chain(&[1, 2], 0.0);
+        p.admit_chain(&[3, 4], 1.0); // 1,2 now on SSD
+        assert_eq!(p.tier_of(1), Some(Tier::Ssd));
+        let m = p.prefix_match(&[1, 2, 3, 4]);
+        assert_eq!((m.blocks, m.dram_prefix, m.ssd_blocks, m.dram_blocks), (4, 0, 2, 2));
+        p.admit_chain_reusing(&[1, 2], 2, 2.0);
+        assert_eq!(p.tier_of(1), Some(Tier::Dram));
+        assert_eq!(p.tier_of(2), Some(Tier::Dram));
+        assert_eq!(p.stats.ssd_hits, 2);
+        assert_eq!(p.stats.promotions, 2);
+        // 3,4 demoted to make room — conservation: everything resident.
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.prefix_match_blocks(&[1, 2, 3, 4]), 4);
+    }
+
+    #[test]
+    fn recompute_supersedes_stale_ssd_copy() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
+        p.admit_chain(&[1, 2], 0.0);
+        p.admit_chain(&[3, 4], 1.0); // 1,2 on SSD
+        // Scheduler chose to recompute 1,2 rather than load them: misses,
+        // no ssd hits, block moves to DRAM exactly once.
+        p.admit_chain_reusing(&[1, 2], 0, 2.0);
+        assert_eq!(p.stats.ssd_hits, 0);
+        assert_eq!(p.stats.promotions, 0);
+        assert_eq!(p.tier_of(1), Some(Tier::Dram));
+        let dram: Vec<BlockId> = p.iter_dram_blocks().collect();
+        let ssd: Vec<BlockId> = p.iter_ssd_blocks().collect();
+        assert!(!ssd.contains(&1) && !ssd.contains(&2), "stale SSD copies must go");
+        assert_eq!(dram.len() + ssd.len(), p.len());
     }
 
     #[test]
     fn replica_insert_no_hit_accounting() {
-        let mut p = CachePool::new(PolicyKind::Lru, None);
+        let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
         p.insert_replica(&[7, 8], 0.0);
-        assert_eq!((p.hits, p.misses), (0, 0));
+        assert_eq!((p.hits(), p.misses()), (0, 0));
         assert_eq!(p.prefix_match_blocks(&[7, 8]), 2);
     }
 
     #[test]
     fn replica_does_not_duplicate() {
-        let mut p = CachePool::new(PolicyKind::Lru, Some(3));
+        let mut p = CachePool::new(PolicyKind::Lru, Some(3), Some(0));
         p.admit_chain(&[1, 2], 0.0);
         p.insert_replica(&[1, 2, 3], 1.0);
         assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn demote_block_moves_tier() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
+        p.admit_chain(&[1, 2], 0.0);
+        assert!(p.demote_block(1, 1.0));
+        assert!(!p.demote_block(1, 1.0)); // already on SSD
+        assert!(!p.demote_block(99, 1.0)); // unknown
+        assert_eq!(p.tier_of(1), Some(Tier::Ssd));
+        assert_eq!(p.len(), 2);
+        // Disabled SSD refuses demotion.
+        let mut q = CachePool::new(PolicyKind::Lru, Some(8), Some(0));
+        q.admit_chain(&[5], 0.0);
+        assert!(!q.demote_block(5, 1.0));
+        assert_eq!(q.tier_of(5), Some(Tier::Dram));
+    }
+
+    #[test]
+    fn zero_dram_capacity_spills_straight_to_ssd() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(0), Some(4));
+        p.admit_chain(&[1, 2], 0.0);
+        assert_eq!(p.dram_len(), 0, "cap-0 DRAM must hold nothing");
+        assert_eq!(p.ssd_len(), 2);
+        assert_eq!(p.prefix_match_blocks(&[1, 2]), 2);
+        // And with both tiers disabled, nothing is ever resident.
+        let mut q = CachePool::new(PolicyKind::Lru, Some(0), Some(0));
+        q.admit_chain(&[1, 2], 0.0);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.stats.dropped, 2);
+    }
+
+    #[test]
+    fn dram_prefix_stops_at_first_ssd_block() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
+        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        p.demote_block(2, 1.0);
+        let m = p.prefix_match(&[1, 2, 3, 4]);
+        assert_eq!(m.blocks, 4);
+        assert_eq!(m.dram_prefix, 1); // 1 is DRAM, 2 is SSD
+        assert_eq!(m.dram_blocks, 3);
+        assert_eq!(m.ssd_blocks, 1);
     }
 }

@@ -35,6 +35,7 @@ fn main() -> Result<()> {
                  analyze   --trace trace.jsonl\n\
                  simulate  --trace trace.jsonl [--prefill 8] [--decode 8] [--speedup 1]\n\
                  \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
+                 \t[--dram-blocks 50000] [--ssd-blocks 250000]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -104,12 +105,19 @@ fn parse_reject(s: &str) -> Result<RejectionPolicy> {
 fn simulate(args: &Args) -> Result<()> {
     let path = args.get_or("trace", "trace.jsonl");
     let trace = jsonl::load(&path)?;
+    let defaults = SimConfig::default();
     let cfg = SimConfig {
         n_prefill: args.get_usize("prefill", 8),
         n_decode: args.get_usize("decode", 8),
         scheduling: parse_policy(&args.get_or("policy", "centric"))?,
         rejection: parse_reject(&args.get_or("reject", "none"))?,
         seed: args.get_u64("seed", 42),
+        cache_capacity_blocks: Some(
+            args.get_usize("dram-blocks", defaults.cache_capacity_blocks.unwrap_or(50_000)),
+        ),
+        ssd_capacity_blocks: Some(
+            args.get_usize("ssd-blocks", defaults.ssd_capacity_blocks.unwrap_or(250_000)),
+        ),
         ..Default::default()
     };
     let speedup = args.get_f64("speedup", 1.0);
@@ -131,6 +139,17 @@ fn simulate(args: &Args) -> Result<()> {
         res.conductor.recomputed_blocks,
         res.conductor.remote_fetches,
         res.conductor.migrations
+    );
+    println!(
+        "tiers:      {} DRAM hits, {} SSD hits, {} demotions, {} promotions, {} dropped",
+        res.tier.dram_hits, res.tier.ssd_hits, res.tier.demotions, res.tier.promotions, res.tier.dropped
+    );
+    println!(
+        "SSD loads:  {} placements staged {} blocks ({} recompute-overrides, {} MB read)",
+        res.conductor.ssd_loads,
+        res.conductor.ssd_loaded_blocks,
+        res.conductor.ssd_recomputes,
+        res.ssd_loaded_bytes / 1_000_000
     );
     Ok(())
 }

@@ -3,6 +3,7 @@
 //! (§2: only *fully completed* requests count — anything rejected or
 //! SLO-violating is wasted work).
 
+use crate::kvcache::TierCounters;
 use crate::util::stats;
 use crate::{RequestId, TimeMs};
 
@@ -89,6 +90,10 @@ pub struct RunReport {
     /// Mean |estimated − observed| TTFT over completed requests with an
     /// estimate — the cost-model drift the scheduler's SLO gates ride on.
     pub ttft_est_mae: f64,
+    /// Per-tier cache hit/demotion/promotion counters aggregated over
+    /// the cluster's pools (filled by `SimResult::report`; zero for
+    /// engines without a tiered cache, e.g. the vLLM baseline).
+    pub tiers: TierCounters,
 }
 
 pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
@@ -129,6 +134,7 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
         // NaN (not 0.0) when no request carried an estimate, so "no data"
         // is distinguishable from perfect agreement.
         ttft_est_mae: stats::mean(&est_errs),
+        tiers: TierCounters::default(),
     }
 }
 

@@ -90,6 +90,13 @@ pub struct HardwareSpec {
     pub pcie_bw: f64,
     /// CPU DRAM bytes contributed to the distributed KVCache pool.
     pub dram_pool_bytes: u64,
+    /// Sustained local NVMe read bandwidth feeding the SSD cache tier, B/s.
+    pub ssd_read_bw: f64,
+    /// SSD random-read IOPS budget: each cache-block read pays `1/iops`
+    /// seconds of access latency on top of the bandwidth term.
+    pub ssd_iops: f64,
+    /// SSD bytes contributed to the second (capacity) KVCache tier.
+    pub ssd_pool_bytes: u64,
     /// Per-transfer fixed overhead, ms (rendezvous, control plane).
     pub transfer_latency_ms: f64,
 }
@@ -110,6 +117,9 @@ impl HardwareSpec {
             rdma_bw: 100e9,                 // 800 Gbps
             pcie_bw: 64e9,                  // GPUDirect staging
             dram_pool_bytes: 1_000_000_000_000, // 1 TB CPU DRAM pool/node
+            ssd_read_bw: 3e9,                   // NVMe sustained read
+            ssd_iops: 20_000.0,                 // 0.05 ms per block access
+            ssd_pool_bytes: 8_000_000_000_000,  // 8 TB NVMe pool/node
             transfer_latency_ms: 1.0,
         }
     }

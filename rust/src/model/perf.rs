@@ -71,6 +71,20 @@ impl PerfModel {
         (tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.pcie_bw * 1e3
     }
 
+    /// Time (ms) to read `tokens` of KVCache spanning `blocks` cache
+    /// blocks from the node's SSD tier into DRAM (staging ahead of the
+    /// DRAM→VRAM load): a bandwidth term plus a per-block IOPS term.
+    /// This is the fetch side of the load-vs-recompute tradeoff — for
+    /// shallow prefixes recomputation beats the NVMe read, for deep ones
+    /// (where attention makes recompute superlinear) the read wins.
+    pub fn ssd_load_ms(&self, tokens: u64, blocks: u64) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        (tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.ssd_read_bw * 1e3
+            + blocks as f64 / self.hw.ssd_iops * 1e3
+    }
+
     /// Layer-wise prefill (§5.2): storing KVCache is overlapped with the
     /// per-layer computation, so the *visible* store latency is the excess
     /// of transfer over compute, surfacing only at the final layer(s).
@@ -190,6 +204,26 @@ mod tests {
         // 16k tokens * 327,680 B ≈ 5.2 GB over 100 GB/s ≈ 52ms + latency
         assert!(t16k > 40.0 && t16k < 80.0, "{t16k}");
         assert!(p.rdma_transfer_ms(32_000) > 1.8 * t16k);
+    }
+
+    #[test]
+    fn ssd_slower_than_dram_but_crosses_recompute() {
+        let p = pm();
+        // SSD is the slow tier: loading from it costs far more than DRAM.
+        assert!(p.ssd_load_ms(8_000, 16) > 5.0 * p.dram_load_ms(8_000));
+        // Deep prefix: the quadratic attention recompute loses to the read.
+        let deep = 32_768u64;
+        assert!(
+            p.ssd_load_ms(deep, deep / 512) < p.prefill_ms(deep, 0),
+            "deep prefix must favor the SSD load"
+        );
+        // Shallow prefix: recompute at near-zero context wins.
+        let shallow = 512u64;
+        assert!(
+            p.prefill_ms(shallow, 0) < p.ssd_load_ms(shallow, 1),
+            "shallow prefix must favor recompute"
+        );
+        assert_eq!(p.ssd_load_ms(0, 0), 0.0);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::conductor::{self, ConductorStats, SchedRequest};
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
+use crate::kvcache::TierCounters;
 use crate::messenger::Messenger;
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
@@ -58,6 +59,10 @@ enum EventKind {
     PrefillStart { jid: JobId },
     /// A running prefill job completed.
     PrefillDone { jid: JobId },
+    /// An SSD→DRAM staging read finished on `node` (armed when a job
+    /// with SSD-resident prefix starts): tier traffic as observable
+    /// simulator state.
+    SsdLoad { node: usize, bytes: u64 },
     KvArrive { rid: RequestId, decode: usize, ctx: u64, out: u64 },
     DecodeStep { decode: usize, seq: u64, dur: f64 },
     Sample,
@@ -109,11 +114,24 @@ pub struct SimResult {
     pub transfer_bytes: u64,
     pub rejected_at_arrival: u64,
     pub rejected_at_decode: u64,
+    /// Aggregated tier counters over every prefill instance's pool.
+    pub tier: TierCounters,
+    /// SSD staging reads observed via `SsdLoad` events, total and
+    /// per prefill node.
+    pub ssd_load_events: u64,
+    pub ssd_loaded_bytes: u64,
+    pub ssd_loaded_bytes_by_node: Vec<u64>,
+    /// Tokens emitted across all decode instances (continuous-batching
+    /// throughput accounting; equals the sum of completed `generated`).
+    pub decode_tokens_out: u64,
 }
 
 impl SimResult {
     pub fn report(&self, cfg: &SimConfig) -> metrics::RunReport {
-        metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
+        metrics::RunReport {
+            tiers: self.tier,
+            ..metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
+        }
     }
 }
 
@@ -146,6 +164,8 @@ pub struct Sim<'a> {
     metrics: Vec<RequestMetrics>,
     samples: Vec<LoadSample>,
     sample_interval: f64,
+    ssd_load_events: u64,
+    ssd_loaded_bytes_by_node: Vec<u64>,
 }
 
 impl<'a> Sim<'a> {
@@ -174,6 +194,8 @@ impl<'a> Sim<'a> {
             metrics: Vec::new(),
             samples: Vec::new(),
             sample_interval: 10_000.0,
+            ssd_load_events: 0,
+            ssd_loaded_bytes_by_node: vec![0; cfg.n_prefill],
             perf,
         }
     }
@@ -223,7 +245,20 @@ impl<'a> Sim<'a> {
                 return;
             }
             for jid in ready {
+                let ssd_tokens = self.prefill.job(jid).ssd_prefix_tokens;
                 let (primary, exec_ms, rid) = self.prefill.start(jid, now);
+                // SSD→DRAM staging of the reused prefix (the load half of
+                // the load-vs-recompute decision): completes after the
+                // staging latency the cost model charged.
+                if ssd_tokens > 0 {
+                    self.push(
+                        now + costmodel::ssd_stage_ms(&self.perf, ssd_tokens),
+                        EventKind::SsdLoad {
+                            node: primary,
+                            bytes: ssd_tokens * self.perf.model.kv_bytes_per_token(),
+                        },
+                    );
+                }
                 let input = self.pending.get(&rid).map(|p| p.input).unwrap_or(0);
                 let stream = self.messenger.schedule(
                     primary,
@@ -392,6 +427,10 @@ impl<'a> Sim<'a> {
                 EventKind::PrefillDone { jid } => {
                     self.handle_prefill_done(jid, now);
                 }
+                EventKind::SsdLoad { node, bytes } => {
+                    self.ssd_load_events += 1;
+                    self.ssd_loaded_bytes_by_node[node] += bytes;
+                }
                 EventKind::KvArrive { rid, decode, ctx, out } => {
                     self.handle_kv_arrive(rid, decode, ctx, out, now);
                 }
@@ -410,6 +449,10 @@ impl<'a> Sim<'a> {
         assert!(self.pending.is_empty(), "requests stuck in flight");
         assert_eq!(self.prefill.outstanding(), 0, "prefill jobs stuck in queue");
         self.metrics.sort_by(|a, b| a.id.cmp(&b.id));
+        let mut tier = TierCounters::default();
+        for inst in &self.prefill.instances {
+            tier.merge(&inst.pool.stats);
+        }
         SimResult {
             metrics: self.metrics,
             conductor: self.stats,
@@ -418,6 +461,11 @@ impl<'a> Sim<'a> {
             transfer_bytes: self.messenger.total_bytes,
             rejected_at_arrival: self.admission.rejected_at_arrival,
             rejected_at_decode: self.admission.rejected_at_decode,
+            tier,
+            ssd_load_events: self.ssd_load_events,
+            ssd_loaded_bytes: self.ssd_loaded_bytes_by_node.iter().sum(),
+            ssd_loaded_bytes_by_node: self.ssd_loaded_bytes_by_node,
+            decode_tokens_out: self.decodes.iter().map(|d| d.tokens_out).sum(),
         }
     }
 }

@@ -5,6 +5,7 @@ use std::collections::HashMap;
 
 use super::TraceRecord;
 use crate::kvcache::eviction::{EvictionPolicy, PolicyKind};
+use crate::kvcache::{CachePool, TierCounters};
 use crate::util::stats::Histogram;
 use crate::BlockId;
 
@@ -106,6 +107,27 @@ pub fn cache_hit_rate(
     }
 }
 
+/// Table 1 tier ablation: replay the trace through a single tiered
+/// DRAM+SSD pool.  DRAM evictions demote to the SSD tier and SSD-resident
+/// blocks count as hits (promoting on access), so at equal DRAM capacity
+/// the tiered pool's hit rate dominates the DRAM-only replay above.
+/// With `ssd_capacity_blocks = Some(0)` this degenerates *exactly* to
+/// [`cache_hit_rate`] — same victims, same hit sequence.
+pub fn tiered_cache_hit_rate(
+    trace: &[TraceRecord],
+    policy: PolicyKind,
+    dram_capacity_blocks: Option<usize>,
+    ssd_capacity_blocks: Option<usize>,
+) -> (f64, TierCounters) {
+    let mut pool = CachePool::new(policy, dram_capacity_blocks, ssd_capacity_blocks);
+    for r in trace {
+        for (idx, &b) in r.hash_ids.iter().enumerate() {
+            pool.admit_block(b, idx, r.timestamp as f64);
+        }
+    }
+    (pool.hit_rate(), pool.stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +165,24 @@ mod tests {
         let small = cache_hit_rate(&t, PolicyKind::Lru, Some(500));
         assert!(inf > small, "{inf} vs {small}");
         assert!(inf <= 1.0 && small >= 0.0);
+    }
+
+    #[test]
+    fn tiered_replay_degenerates_to_dram_only_and_beats_it() {
+        let t = trace();
+        for cap in [1_000usize, 5_000] {
+            let dram_only = cache_hit_rate(&t, PolicyKind::Lru, Some(cap));
+            let (no_ssd, counters) = tiered_cache_hit_rate(&t, PolicyKind::Lru, Some(cap), Some(0));
+            assert!((no_ssd - dram_only).abs() < 1e-12, "{no_ssd} != {dram_only}");
+            assert_eq!(counters.ssd_hits, 0);
+            assert_eq!(counters.demotions, 0);
+            let (tiered, tc) = tiered_cache_hit_rate(&t, PolicyKind::Lru, Some(cap), Some(20_000));
+            assert!(
+                tiered > dram_only + 0.02,
+                "cap {cap}: tiered {tiered} must beat DRAM-only {dram_only}"
+            );
+            assert!(tc.ssd_hits > 0 && tc.demotions > 0 && tc.promotions > 0);
+        }
     }
 
     #[test]

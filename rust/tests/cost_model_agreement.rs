@@ -18,7 +18,12 @@ fn trace(n: usize) -> Vec<TraceRecord> {
     gen::generate(&TraceGenConfig { n_requests: n, duration_ms: 900_000, ..Default::default() })
 }
 
-fn assert_agreement(cfg: &SimConfig, trace: &[TraceRecord], speedup: f64, min_completed: usize) {
+fn assert_agreement(
+    cfg: &SimConfig,
+    trace: &[TraceRecord],
+    speedup: f64,
+    min_completed: usize,
+) -> sim::SimResult {
     let res = sim::run(cfg, trace, speedup);
     let mut checked = 0;
     for m in res.metrics.iter().filter(|m| m.outcome == Outcome::Completed) {
@@ -44,6 +49,7 @@ fn assert_agreement(cfg: &SimConfig, trace: &[TraceRecord], speedup: f64, min_co
         "mean abs estimate drift {} ms exceeds 1 ms",
         rep.ttft_est_mae
     );
+    res
 }
 
 #[test]
@@ -77,6 +83,40 @@ fn estimates_match_under_admission_control() {
         ..Default::default()
     };
     assert_agreement(&cfg, &trace(300), 4.0, 50);
+}
+
+#[test]
+fn estimates_match_on_cold_start_after_idle_gap() {
+    // Sessions go idle and re-arrive much later (the PR-1 re-arrival
+    // knob) against a DRAM tier far smaller than the working set: by the
+    // time a session returns, its prefix has been demoted to SSD, so the
+    // three-way decision (reuse DRAM / stage from SSD / recompute) is
+    // live — and the estimate must still land exactly where the
+    // `PrefillStart`/`PrefillDone`/`SsdLoad` events put it.
+    let trace = gen::generate(&TraceGenConfig {
+        n_requests: 250,
+        duration_ms: 1_800_000,
+        rearrival_fraction: 0.7,
+        mean_rearrival_gap_ms: 600_000.0,
+        ..Default::default()
+    });
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(100_000),
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let res = assert_agreement(&cfg, &trace, 1.0, 200);
+    // The scenario actually exercised the tier machinery: capacity
+    // pressure demoted blocks, and returning prefixes faced the
+    // load-vs-recompute pricing.
+    assert!(res.tier.demotions > 0, "DRAM pressure must demote to SSD");
+    assert!(
+        res.tier.ssd_hits + res.conductor.ssd_recomputes > 0,
+        "re-arrived prefixes must hit the three-way decision"
+    );
 }
 
 #[test]

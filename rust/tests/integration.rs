@@ -112,6 +112,53 @@ fn scheduling_policies_ordered_on_reuse() {
 }
 
 #[test]
+fn token_and_tier_conservation_end_to_end() {
+    // Two conservation laws over a full simulated run:
+    //  1. every token the decode pool emitted belongs to exactly one
+    //     finished sequence — sum(DecodeInstance::tokens_out) equals the
+    //     total FinishedSeq::generated the metrics recorded;
+    //  2. every block the scheduler counted as reused was served by
+    //     exactly one cache tier — dram_hits + ssd_hits equals
+    //     ConductorStats::reused_blocks.
+    let t = trace(400);
+    let cfg = SimConfig::default();
+    let res = sim::run(&cfg, &t, 1.0);
+    let generated: u64 = res.metrics.iter().map(|m| m.generated).sum();
+    assert!(generated > 0);
+    assert_eq!(res.decode_tokens_out, generated, "decode emitted orphan tokens");
+    assert_eq!(
+        res.tier.dram_hits + res.tier.ssd_hits,
+        res.conductor.reused_blocks,
+        "per-tier hits must sum to the scheduler's reused blocks"
+    );
+    // SSD byte accounting is internally consistent, and the report
+    // carries the same tier counters the simulator aggregated.
+    assert_eq!(res.ssd_loaded_bytes, res.ssd_loaded_bytes_by_node.iter().sum::<u64>());
+    let rep = res.report(&cfg);
+    assert_eq!(rep.tiers, res.tier);
+
+    // The same laws under tier pressure (tiny DRAM, live SSD tier).
+    let cfg2 = SimConfig {
+        cache_capacity_blocks: Some(300),
+        ssd_capacity_blocks: Some(50_000),
+        n_prefill: 2,
+        n_decode: 2,
+        ..Default::default()
+    };
+    let res2 = sim::run(&cfg2, &t, 1.0);
+    let generated2: u64 = res2.metrics.iter().map(|m| m.generated).sum();
+    assert_eq!(res2.decode_tokens_out, generated2);
+    assert_eq!(res2.tier.dram_hits + res2.tier.ssd_hits, res2.conductor.reused_blocks);
+    assert!(res2.tier.demotions > 0, "DRAM pressure must demote");
+    // Staged bytes observed via SsdLoad events match the scheduler's
+    // block decisions exactly (both sides of the same cost model).
+    if res2.conductor.ssd_loads > 0 {
+        assert!(res2.ssd_load_events == res2.conductor.ssd_loads);
+        assert!(res2.ssd_loaded_bytes > 0);
+    }
+}
+
+#[test]
 fn eviction_policies_agree_with_table1_ordering() {
     let t = trace(4_000);
     // At infinite capacity every policy hits the same ceiling.
@@ -122,6 +169,39 @@ fn eviction_policies_agree_with_table1_ordering() {
     let mid_lru = stats::cache_hit_rate(&t, PolicyKind::Lru, Some(5_000));
     let mid_lfu = stats::cache_hit_rate(&t, PolicyKind::Lfu, Some(5_000));
     assert!(mid_lru >= mid_lfu - 0.03, "LRU {mid_lru} vs LFU {mid_lfu}");
+}
+
+/// FNV-1a over every field of the first 1k default-config requests.
+/// The calibrated generator's RNG stream is a repo contract: every
+/// scenario knob added so far (bursts, re-arrival) short-circuits its
+/// RNG draws when disabled so that seeds and calibration carry over
+/// bit-identically.  This golden hash makes that provable — a future
+/// knob that perturbs the default stream changes the hash and fails
+/// here, instead of silently re-rolling every calibrated experiment.
+#[test]
+fn golden_default_trace_stream_pinned() {
+    let trace = gen::generate(&TraceGenConfig { n_requests: 1_000, ..Default::default() });
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mix = |h: &mut u64, v: u64| {
+        for b in v.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for r in &trace {
+        mix(&mut h, r.timestamp);
+        mix(&mut h, r.input_length);
+        mix(&mut h, r.output_length);
+        mix(&mut h, r.hash_ids.len() as u64);
+        for &b in &r.hash_ids {
+            mix(&mut h, b);
+        }
+    }
+    assert_eq!(
+        h, 0x7aa958e3910f7633,
+        "default trace::gen stream changed (got {h:#018x}) — scenario knobs \
+         must leave the calibrated RNG stream bit-identical when disabled"
+    );
 }
 
 #[test]

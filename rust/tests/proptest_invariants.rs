@@ -155,13 +155,106 @@ fn prop_eviction_capacity_and_accounting() {
     }
 }
 
+/// Property: the tiered pool conserves blocks — every resident block
+/// lives in exactly one tier, neither tier exceeds its capacity, and
+/// counter accounting stays consistent — under random interleavings of
+/// chain admission (with arbitrary reuse splits), per-block admission,
+/// replica insertion, and explicit demotion.
+#[test]
+fn prop_tiered_pool_conservation() {
+    let mut rng = Rng::new(0x71E2ED);
+    for round in 0..12 {
+        let kind = [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LengthAware][round % 3];
+        let dram_cap = rng.below(60) as usize; // 0 = degenerate no-DRAM config
+        let ssd_cap = rng.below(120) as usize; // 0 = SSD tier disabled
+        let mut pool = CachePool::new(kind, Some(dram_cap), Some(ssd_cap));
+        for step in 0..1_500u64 {
+            let now = step as f64;
+            match rng.below(8) {
+                0 => {
+                    let b = rng.below(300);
+                    pool.admit_block(b, rng.below(40) as usize, now);
+                }
+                1 => {
+                    let chain: Vec<u64> =
+                        (0..1 + rng.below(10)).map(|_| rng.below(300)).collect();
+                    pool.insert_replica(&chain, now);
+                }
+                2 => {
+                    pool.demote_block(rng.below(300), now);
+                }
+                _ => {
+                    let len = 1 + rng.below(24) as usize;
+                    let start = rng.below(280);
+                    let chain: Vec<u64> = (start..start + len as u64).collect();
+                    let reused = rng.below(len as u64 + 1) as usize;
+                    pool.admit_chain_reusing(&chain, reused, now);
+                }
+            }
+            // Capacity bounds per tier.
+            assert!(pool.dram_len() <= dram_cap, "round {round}: DRAM over capacity");
+            assert!(pool.ssd_len() <= ssd_cap, "round {round}: SSD over capacity");
+            // Conservation: tiers are disjoint and partition the pool.
+            let dram: std::collections::HashSet<u64> = pool.iter_dram_blocks().collect();
+            let ssd: std::collections::HashSet<u64> = pool.iter_ssd_blocks().collect();
+            assert!(dram.is_disjoint(&ssd), "round {round}: block in both tiers");
+            assert_eq!(dram.len() + ssd.len(), pool.len());
+            assert_eq!(pool.dram_len() + pool.ssd_len(), pool.len());
+        }
+        // Counter sanity: hits split cleanly and nothing was dropped
+        // unless a finite tier actually overflowed.
+        let s = pool.stats;
+        assert_eq!(s.hits() + s.misses, s.accesses());
+        if ssd_cap == 0 {
+            assert_eq!(s.demotions, 0);
+            assert_eq!(s.ssd_hits, 0);
+            assert_eq!(s.promotions, 0);
+        }
+    }
+}
+
+/// Property: a demote + promote round trip preserves the prefix hash
+/// chain — a chain pushed down to SSD by capacity pressure still prefix-
+/// matches in full across tiers, and re-admitting it promotes every
+/// block back without losing any.
+#[test]
+fn prop_demote_promote_round_trip_preserves_chain() {
+    let mut rng = Rng::new(0x0DE11);
+    for _ in 0..15 {
+        let len = 4 + rng.below(40) as usize;
+        // DRAM smaller than the chain forces demotion; SSD holds the rest
+        // with slack so nothing is dropped.
+        let dram_cap = 1 + rng.below(len as u64 - 1) as usize;
+        let mut pool = CachePool::new(PolicyKind::Lru, Some(dram_cap), Some(2 * len));
+        let chain: Vec<u64> = (0..len as u64).map(|i| 1_000 + i * 7).collect();
+        pool.admit_chain_reusing(&chain, 0, 0.0);
+        // The tail fits in DRAM, the head demoted to SSD — but the whole
+        // chain must still be resident and prefix-matchable.
+        assert_eq!(pool.dram_len(), dram_cap);
+        assert_eq!(pool.ssd_len(), len - dram_cap);
+        let m = pool.prefix_match(&chain);
+        assert_eq!(m.blocks, len, "demotion must not break the chain");
+        assert_eq!(m.ssd_blocks, len - dram_cap);
+        // Re-admit with full reuse: every SSD block promotes (an SSD hit),
+        // every DRAM block touches, and the chain stays whole.
+        let before = pool.stats;
+        pool.admit_chain_reusing(&chain, len, 1.0);
+        let s = pool.stats;
+        assert_eq!(s.dram_hits + s.ssd_hits - (before.dram_hits + before.ssd_hits), len as u64);
+        assert!(s.ssd_hits - before.ssd_hits >= (len - dram_cap) as u64);
+        assert_eq!(s.dropped, 0, "round trip must not destroy blocks");
+        assert_eq!(pool.prefix_match(&chain).blocks, len);
+        assert_eq!(pool.len(), len);
+    }
+}
+
 /// Property: a pool's prefix match length never exceeds the chain length
 /// and is monotone under chain extension.
 #[test]
 fn prop_prefix_match_monotone() {
     let mut rng = Rng::new(0xABCD);
     for _ in 0..20 {
-        let mut pool = CachePool::new(PolicyKind::Lru, Some(1_000));
+        let mut pool = CachePool::new(PolicyKind::Lru, Some(1_000), Some(2_000));
         let chain: Vec<u64> = (0..rng.range(1, 40)).map(|_| rng.below(10_000)).collect();
         pool.admit_chain(&chain, 0.0);
         let m1 = pool.prefix_match_blocks(&chain);
