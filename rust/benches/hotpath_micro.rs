@@ -5,8 +5,10 @@
 //! compared to the inference time" — Conductor must stay out of the way.
 
 use mooncake::bench_util::{banner, bench};
+use mooncake::conductor;
 use mooncake::config::SimConfig;
 use mooncake::kvcache::{CachePool, PolicyKind};
+use mooncake::prefill::PrefillPool;
 use mooncake::sim;
 use mooncake::trace::gen::{generate, TraceGenConfig};
 
@@ -43,6 +45,31 @@ fn main() {
         let blocks: Vec<u64> = (j * 15..j * 15 + 15).collect();
         tiered.admit_chain(&blocks, j as f64);
         j += 1;
+    })
+    .print();
+
+    // FindBestPrefixMatch: per-pool scan vs the global prefix index on a
+    // 16-node cluster where every node holds the probe chain — the
+    // scan's worst case (no early miss terminates the walk).  The
+    // deeper asymptotic sweep lives in the `sched_throughput` bench.
+    let cfg16 = SimConfig {
+        n_prefill: 16,
+        cache_capacity_blocks: None,
+        ssd_capacity_blocks: None,
+        ..Default::default()
+    };
+    let mut pfpool = PrefillPool::new(&cfg16);
+    let probe512: Vec<u64> = (0..512).collect();
+    for inst in pfpool.instances.iter_mut() {
+        inst.pool.admit_chain(&probe512, 0.0);
+    }
+    let idx = pfpool.build_prefix_index();
+    bench("find_prefix_matches scan (16n x 512blk)", 100, 2_000, || {
+        std::hint::black_box(conductor::find_prefix_matches(&pfpool, None, &probe512));
+    })
+    .print();
+    bench("find_prefix_matches index (16n x 512blk)", 100, 2_000, || {
+        std::hint::black_box(conductor::find_prefix_matches(&pfpool, Some(&idx), &probe512));
     })
     .print();
 

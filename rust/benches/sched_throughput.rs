@@ -1,0 +1,265 @@
+//! Scheduling-throughput benchmark — the perf stake for the global
+//! prefix index (ISSUE 3): Conductor must stay out of the way (§6 notes
+//! TTFT estimation is "negligible compared to the inference time"), yet
+//! the per-pool `FindBestPrefixMatch` scan costs O(nodes × chain)
+//! HashMap probes per decision — worst exactly in the long-context
+//! regime the paper targets.
+//!
+//! Measures, at nodes ∈ {4, 16, 64} × chain ∈ {64, 512, 4096} blocks:
+//!
+//! * **scheduling decisions/sec** — full Algorithm 1 (`conductor::
+//!   schedule`) over a cluster whose every node holds the request's
+//!   chain (the scan's worst case), in SLO-rejecting steady state so
+//!   both variants price identical cluster state every iteration;
+//! * **simulator events/sec** — end-to-end `sim::run` over a synthetic
+//!   chain-sharing trace, index on vs off.
+//!
+//! Emits `BENCH_sched.json` (the trajectory artifact CI uploads) and, in
+//! full mode, asserts the ≥5× decision-throughput target on the 64-node
+//! × 4096-block cell.  `--smoke` runs tiny sizes for CI.
+
+use std::time::Instant;
+
+use mooncake::bench_util::{banner, row};
+use mooncake::conductor::{self, ConductorStats, SchedRequest};
+use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
+use mooncake::decode::DecodeInstance;
+use mooncake::kvcache::PrefixIndex;
+use mooncake::messenger::Messenger;
+use mooncake::model::PerfModel;
+use mooncake::prefill::PrefillPool;
+use mooncake::sim;
+use mooncake::trace::{TraceRecord, BLOCK_TOKENS};
+use mooncake::util::json::{self, Value};
+use mooncake::util::rng::Rng;
+use mooncake::BlockId;
+
+const TARGET_NODES: usize = 64;
+const TARGET_CHAIN: usize = 4096;
+const TARGET_SPEEDUP: f64 = 5.0;
+
+const FULL_NODES: &[usize] = &[4, 16, 64];
+const FULL_CHAINS: &[usize] = &[64, 512, 4096];
+const SMOKE_NODES: &[usize] = &[4, 8];
+const SMOKE_CHAINS: &[usize] = &[64, 256];
+
+struct Cell {
+    nodes: usize,
+    chain: usize,
+    dec_scan: f64,
+    dec_index: f64,
+    dec_speedup: f64,
+    ev_scan: f64,
+    ev_index: f64,
+    ev_speedup: f64,
+}
+
+fn cfg_for(nodes: usize) -> SimConfig {
+    SimConfig {
+        n_prefill: nodes,
+        n_decode: 4,
+        scheduling: SchedulingPolicy::KvCacheCentric,
+        rejection: RejectionPolicy::None,
+        cache_capacity_blocks: None,
+        ssd_capacity_blocks: None,
+        ..Default::default()
+    }
+}
+
+/// Warm every node with the probe chain plus filler chains, so the scan
+/// pays its worst case (no early miss) against realistically loaded
+/// maps.  Chain ids are disjoint from the probe except the probe itself.
+fn warm_env(cfg: &SimConfig, chain: usize) -> (PrefillPool, Vec<BlockId>) {
+    let mut pool = PrefillPool::new(cfg);
+    let probe: Vec<BlockId> = (0..chain as u64).collect();
+    for (node, inst) in pool.instances.iter_mut().enumerate() {
+        inst.pool.admit_chain(&probe, 0.0);
+        for f in 0..2u64 {
+            let base = 1_000_000 + (node as u64 * 2 + f) * chain as u64;
+            let filler: Vec<BlockId> = (base..base + chain as u64).collect();
+            inst.pool.admit_chain(&filler, 0.0);
+        }
+    }
+    (pool, probe)
+}
+
+/// Algorithm-1 decisions/sec in SLO-rejecting steady state (the gate
+/// fires *after* the full prefill+decode selection, before any
+/// mutation), so every iteration prices identical cluster state.
+fn bench_decisions(cfg: &SimConfig, chain: usize, iters: usize, use_index: bool) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    let perf = PerfModel::paper();
+    let (mut pool, probe) = warm_env(&cfg, chain);
+    let mut index = use_index.then(|| pool.build_prefix_index());
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+    let mut rng = Rng::new(7);
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..iters.min(10) {
+        run_one(w as f64);
+    }
+    let t = Instant::now();
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    iters as f64 / t.elapsed().as_secs_f64()
+}
+
+/// Synthetic chain-sharing trace: `n` requests cycling over 8 base
+/// chains of `chain` blocks each, spread over 300 s.  The input length
+/// is capped below decode VRAM capacity so every request can finish —
+/// the hash chain keeps its full length, which is what the matcher
+/// walks (admission caches the whole chain regardless).
+fn synth_trace(n: usize, chain: usize) -> Vec<TraceRecord> {
+    (0..n)
+        .map(|k| {
+            let c = (k % 8) as u64;
+            TraceRecord {
+                timestamp: (k as u64 * 300_000) / n as u64,
+                input_length: (chain as u64 * BLOCK_TOKENS).min(1_000_000),
+                output_length: 4,
+                hash_ids: (c * 10_000_000..c * 10_000_000 + chain as u64).collect(),
+            }
+        })
+        .collect()
+}
+
+fn bench_sim_events(cfg: &SimConfig, trace: &[TraceRecord], use_index: bool) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.use_prefix_index = use_index;
+    cfg.slo = SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 };
+    let t = Instant::now();
+    let res = sim::run(&cfg, trace, 1.0);
+    res.n_events as f64 / t.elapsed().as_secs_f64()
+}
+
+fn run_cell(nodes: usize, chain: usize, n_trace: usize) -> Cell {
+    let cfg = cfg_for(nodes);
+    // Bound total probe work per side to ~30M node·block visits.
+    let iters = (30_000_000 / (nodes * chain)).clamp(100, 5_000);
+    let dec_scan = bench_decisions(&cfg, chain, iters, false);
+    let dec_index = bench_decisions(&cfg, chain, iters, true);
+    let trace = synth_trace(n_trace, chain);
+    let ev_scan = bench_sim_events(&cfg, &trace, false);
+    let ev_index = bench_sim_events(&cfg, &trace, true);
+    Cell {
+        nodes,
+        chain,
+        dec_scan,
+        dec_index,
+        dec_speedup: dec_index / dec_scan,
+        ev_scan,
+        ev_index,
+        ev_speedup: ev_index / ev_scan,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    banner(if smoke {
+        "scheduling throughput (smoke): global prefix index vs per-pool scan"
+    } else {
+        "scheduling throughput: global prefix index vs per-pool scan"
+    });
+    let (node_counts, chains, n_trace) =
+        if smoke { (SMOKE_NODES, SMOKE_CHAINS, 40) } else { (FULL_NODES, FULL_CHAINS, 150) };
+
+    let header = [
+        "nodes", "chain", "dec/s scan", "dec/s index", "speedup", "ev/s scan", "ev/s index",
+        "speedup",
+    ];
+    row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let mut cells = Vec::new();
+    for &nodes in node_counts {
+        for &chain in chains {
+            let c = run_cell(nodes, chain, n_trace);
+            row(&[
+                c.nodes.to_string(),
+                c.chain.to_string(),
+                format!("{:.0}", c.dec_scan),
+                format!("{:.0}", c.dec_index),
+                format!("{:.2}x", c.dec_speedup),
+                format!("{:.0}", c.ev_scan),
+                format!("{:.0}", c.ev_index),
+                format!("{:.2}x", c.ev_speedup),
+            ]);
+            cells.push(c);
+        }
+    }
+
+    let target = cells.iter().find(|c| c.nodes == TARGET_NODES && c.chain == TARGET_CHAIN);
+    let mut obj = vec![
+        ("bench", Value::Str("sched_throughput".into())),
+        ("mode", Value::Str(if smoke { "smoke" } else { "full" }.into())),
+        (
+            "cells",
+            Value::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("nodes", json::num(c.nodes as f64)),
+                            ("chain_blocks", json::num(c.chain as f64)),
+                            ("decisions_per_sec_scan", json::num(c.dec_scan)),
+                            ("decisions_per_sec_index", json::num(c.dec_index)),
+                            ("decision_speedup", json::num(c.dec_speedup)),
+                            ("sim_events_per_sec_scan", json::num(c.ev_scan)),
+                            ("sim_events_per_sec_index", json::num(c.ev_index)),
+                            ("sim_event_speedup", json::num(c.ev_speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(c) = target {
+        obj.push((
+            "target",
+            json::obj(vec![
+                ("nodes", json::num(TARGET_NODES as f64)),
+                ("chain_blocks", json::num(TARGET_CHAIN as f64)),
+                ("min_speedup", json::num(TARGET_SPEEDUP)),
+                ("decision_speedup", json::num(c.dec_speedup)),
+                ("pass", Value::Bool(c.dec_speedup >= TARGET_SPEEDUP)),
+            ]),
+        ));
+    }
+    std::fs::write("BENCH_sched.json", json::to_string(&json::obj(obj)) + "\n")
+        .expect("write BENCH_sched.json");
+    println!("\nwrote BENCH_sched.json");
+
+    if let Some(c) = target {
+        assert!(
+            c.dec_speedup >= TARGET_SPEEDUP,
+            "64-node x 4096-block scheduling speedup {:.2}x below the {TARGET_SPEEDUP}x target",
+            c.dec_speedup
+        );
+        println!(
+            "target cell {TARGET_NODES} nodes x {TARGET_CHAIN} blocks: {:.2}x (>= {TARGET_SPEEDUP}x)",
+            c.dec_speedup
+        );
+    }
+}

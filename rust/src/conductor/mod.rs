@@ -18,8 +18,9 @@
 pub mod migration;
 
 use crate::config::{SchedulingPolicy, SimConfig};
-use crate::costmodel::{self, PrefillEstimate};
+use crate::costmodel::{self, FetchPlan, PrefillEstimate};
 use crate::decode::DecodeInstance;
+use crate::kvcache::{PrefixIndex, Tier, TierMatch};
 use crate::messenger::Messenger;
 use crate::model::PerfModel;
 use crate::prefill::{JobId, PrefillPool};
@@ -78,6 +79,9 @@ pub struct Placement {
     pub ssd_load_blocks: usize,
     /// Remote fetch performed before prefill (source instance, blocks).
     pub fetch: Option<(usize, usize)>,
+    /// Of the fetched blocks, how many the source staged up from its own
+    /// SSD tier before its NIC could serialize them (§6.2 + tiering).
+    pub fetch_ssd_stage_blocks: usize,
     /// Planned prefill window from the unified cost model (the group is
     /// occupied for the span; `prefill_end - arrival` is the estimated
     /// TTFT).
@@ -97,10 +101,16 @@ pub struct Ctx<'a> {
     pub messenger: &'a mut Messenger,
     pub rng: &'a mut Rng,
     pub now: TimeMs,
+    /// The global prefix index (§5): when present, `FindBestPrefixMatch`
+    /// is one O(chain) walk instead of a scan of every pool, and every
+    /// pool mutation's [`crate::kvcache::TierDelta`] is applied back to
+    /// it.  `None` falls back to the per-node scan — results are
+    /// bit-for-bit identical either way (a debug assert checks it).
+    pub index: Option<&'a mut PrefixIndex>,
 }
 
 /// Counters for Fig 8-style scheduling studies.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct ConductorStats {
     pub scheduled: u64,
     pub rejected_ttft: u64,
@@ -116,18 +126,23 @@ pub struct ConductorStats {
     /// Placements that *could* have loaded SSD-resident prefix blocks
     /// but recomputed them instead (the load was the slower branch).
     pub ssd_recomputes: u64,
+    /// Remote fetches whose *source* first had to stage blocks up from
+    /// its SSD tier before the wire transfer could start, and how many
+    /// blocks those stagings covered.
+    pub fetch_stagings: u64,
+    pub fetch_staged_blocks: u64,
 }
 
 /// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks
 /// of which `ssd_blocks` must be staged up from the SSD tier, and an
-/// optional remote fetch of `(source, blocks)` first.
+/// optional remote fetch first.
 fn estimate_for(
     ctx: &Ctx,
     req: &SchedRequest,
     i: usize,
     prefix_blocks: usize,
     ssd_blocks: usize,
-    fetch: Option<(usize, usize)>,
+    fetch: Option<FetchPlan>,
 ) -> PrefillEstimate {
     let (prefix_tokens, n_new) = req.split(prefix_blocks);
     let ssd_tokens = (ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
@@ -158,11 +173,11 @@ struct PrefillChoice {
     /// SSD-resident prefix blocks deliberately recomputed because the
     /// load was priced slower (the "compute, don't load" branch).
     recomputed_ssd_blocks: usize,
-    /// Blocks pulled over the wire from `fetch_src` (may exceed
+    /// Remote fetch (balancing branch): `blocks` may exceed
     /// `eff_blocks - local_blocks` when wire-refreshing local SSD copies
-    /// was priced cheaper than staging them).
-    fetch_blocks: usize,
-    fetch_src: Option<usize>,
+    /// was priced cheaper than staging them, and `src_ssd_blocks` is the
+    /// source-side SSD staging the transfer pays first.
+    fetch: Option<FetchPlan>,
     est: PrefillEstimate,
 }
 
@@ -172,12 +187,7 @@ struct PrefillChoice {
 /// pure-DRAM prefix and recompute the rest.  This is the
 /// load-vs-recompute half of the three-way prefix decision — the third
 /// option (recompute everything) is what a zero match degenerates to.
-fn local_choice(
-    ctx: &Ctx,
-    req: &SchedRequest,
-    i: usize,
-    m: crate::kvcache::TierMatch,
-) -> PrefillChoice {
+fn local_choice(ctx: &Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> PrefillChoice {
     let full = estimate_for(ctx, req, i, m.blocks, m.ssd_blocks, None);
     let mut choice = PrefillChoice {
         inst: i,
@@ -185,8 +195,7 @@ fn local_choice(
         eff_blocks: m.blocks,
         ssd_blocks: m.ssd_blocks,
         recomputed_ssd_blocks: 0,
-        fetch_blocks: 0,
-        fetch_src: None,
+        fetch: None,
         est: full,
     };
     if m.blocks > m.dram_prefix {
@@ -201,17 +210,42 @@ fn local_choice(
     choice
 }
 
+/// `FindBestPrefixMatch` over every instance, tier-aware: one O(chain)
+/// walk of the global [`PrefixIndex`] when available, the per-pool scan
+/// otherwise.  The two are interchangeable bit-for-bit — the index is a
+/// pure optimization, and a debug build cross-checks every call.
+pub fn find_prefix_matches(
+    prefill: &PrefillPool,
+    index: Option<&PrefixIndex>,
+    hash_ids: &[BlockId],
+) -> Vec<TierMatch> {
+    let scan = || -> Vec<TierMatch> {
+        prefill.instances.iter().map(|p| p.pool.prefix_match(hash_ids)).collect()
+    };
+    match index {
+        Some(idx) => {
+            let m = idx.best_prefix(hash_ids);
+            debug_assert_eq!(m, scan(), "prefix index diverged from the per-pool scan");
+            m
+        }
+        None => scan(),
+    }
+}
+
+/// Residency of one chain block on one node, through the index when
+/// present (one probe for all nodes) or the node's pool otherwise.
+fn tier_on(ctx: &Ctx, node: usize, b: BlockId) -> Option<Tier> {
+    match ctx.index.as_deref() {
+        Some(idx) => idx.tier_on(node, b),
+        None => ctx.prefill.instances[node].pool.tier_of(b),
+    }
+}
+
 /// Algorithm 1 (lines 1–23): choose the prefill instance, including the
 /// tier-aware reuse-from-DRAM / load-from-SSD / recompute decision.
 fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     let n = ctx.prefill.len();
-    // FindBestPrefixMatch over every instance's pool, tier-aware.
-    let matches: Vec<crate::kvcache::TierMatch> = ctx
-        .prefill
-        .instances
-        .iter()
-        .map(|p| p.pool.prefix_match(&req.hash_ids))
-        .collect();
+    let matches = find_prefix_matches(ctx.prefill, ctx.index.as_deref(), &req.hash_ids);
     let (best_inst, best_blocks) = matches
         .iter()
         .enumerate()
@@ -237,6 +271,21 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
         }
         SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
             let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
+            // §6.2 fetches serialize on the *source*: when the holder's
+            // copy is partly SSD-resident, the transfer also pays the
+            // source's NVMe staging.  One suffix-count pass lets every
+            // candidate price its own fetch range in O(1).
+            let src_ssd_suffix: Option<Vec<usize>> =
+                (balancing && best_blocks > 0 && matches[best_inst].ssd_blocks > 0).then(|| {
+                    let mut suf = vec![0usize; best_blocks + 1];
+                    for j in (0..best_blocks).rev() {
+                        let on_ssd = tier_on(ctx, best_inst, req.hash_ids[j]) == Some(Tier::Ssd);
+                        suf[j] = suf[j + 1] + usize::from(on_ssd);
+                    }
+                    suf
+                });
+            let src_ssd_from =
+                |k: usize| src_ssd_suffix.as_ref().map_or(0, |s| s[k.min(best_blocks)]);
             let mut best: Option<PrefillChoice> = None;
             for i in 0..n {
                 let local = matches[i].blocks;
@@ -258,39 +307,47 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                 } else {
                     // Cache-aware and -balancing branch (lines 15–21):
                     // fetch the missing blocks from the best holder; the
-                    // transfer runs on the *source* NIC, so the estimate
-                    // charges the source's congestion.  The local
+                    // transfer runs on the *source* NIC — and first pays
+                    // the source's NVMe staging for any of the missing
+                    // blocks the holder keeps on SSD.  The local
                     // contribution's SSD-resident blocks are priced both
                     // ways: staged from the local NVMe, or wire-refreshed
                     // from the holder along with the missing blocks
                     // (RDMA is often faster than the local SSD read).
+                    let stage_fetch = FetchPlan {
+                        src: best_inst,
+                        blocks: best_blocks - local,
+                        src_ssd_blocks: src_ssd_from(local),
+                    };
                     let stage = estimate_for(
                         ctx,
                         req,
                         i,
                         best_blocks,
                         matches[i].ssd_blocks,
-                        Some((best_inst, best_blocks - local)),
+                        Some(stage_fetch),
                     );
                     // The wire plan only differs when local SSD copies
                     // exist — don't pay a second probe otherwise.
                     let wire_plan = if matches[i].ssd_blocks > 0 {
-                        let wire_blocks = best_blocks - matches[i].dram_blocks;
-                        let wire =
-                            estimate_for(ctx, req, i, best_blocks, 0, Some((best_inst, wire_blocks)));
-                        (wire.end < stage.end).then_some((wire_blocks, wire))
+                        let wire_fetch = FetchPlan {
+                            src: best_inst,
+                            blocks: best_blocks - matches[i].dram_blocks,
+                            src_ssd_blocks: src_ssd_from(local),
+                        };
+                        let wire = estimate_for(ctx, req, i, best_blocks, 0, Some(wire_fetch));
+                        (wire.end < stage.end).then_some((wire_fetch, wire))
                     } else {
                         None
                     };
-                    if let Some((wire_blocks, wire)) = wire_plan {
+                    if let Some((wire_fetch, wire)) = wire_plan {
                         PrefillChoice {
                             inst: i,
                             local_blocks: local,
                             eff_blocks: best_blocks,
                             ssd_blocks: 0,
                             recomputed_ssd_blocks: 0,
-                            fetch_blocks: wire_blocks,
-                            fetch_src: Some(best_inst),
+                            fetch: Some(wire_fetch),
                             est: wire,
                         }
                     } else {
@@ -300,8 +357,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                             eff_blocks: best_blocks,
                             ssd_blocks: matches[i].ssd_blocks,
                             recomputed_ssd_blocks: 0,
-                            fetch_blocks: best_blocks - local,
-                            fetch_src: Some(best_inst),
+                            fetch: Some(stage_fetch),
                             est: stage,
                         }
                     }
@@ -396,17 +452,25 @@ pub fn schedule(
 
     // Remote prefix fetch (balancing branch): the fetch must land before
     // prefill starts; it runs on the *source* node's NIC — the same NIC
-    // the estimate above probed.
+    // the estimate above probed — after the source stages any of the
+    // transferred blocks it keeps on SSD (same staging the estimate
+    // charged).
     let mut fetch_gate = ctx.now;
     let mut fetch = None;
-    if let Some(src) = choice.fetch_src {
-        let blocks = choice.fetch_blocks;
-        if blocks > 0 {
-            let bytes = costmodel::fetch_bytes(ctx.perf, blocks);
-            let tr = ctx.messenger.schedule(src, ctx.now, bytes);
+    let mut fetch_ssd_stage_blocks = 0;
+    if let Some(plan) = choice.fetch {
+        if plan.blocks > 0 {
+            let bytes = costmodel::fetch_bytes(ctx.perf, plan.blocks);
+            let wire_start = ctx.now + plan.src_stage_ms(ctx.perf);
+            let tr = ctx.messenger.schedule(plan.src, wire_start, bytes);
             fetch_gate = tr.end;
-            fetch = Some((src, blocks));
+            fetch = Some((plan.src, plan.blocks));
+            fetch_ssd_stage_blocks = plan.src_ssd_blocks;
             stats.remote_fetches += 1;
+            if plan.src_ssd_blocks > 0 {
+                stats.fetch_stagings += 1;
+                stats.fetch_staged_blocks += plan.src_ssd_blocks as u64;
+            }
             // The fetched prefix is now replicated on p (hot-spot
             // replication as a side effect of forwarding, §6.2).  Under
             // the stage plan the SSD copies *within the local matched
@@ -416,18 +480,20 @@ pub fn schedule(
             // else (missing blocks, and any stray SSD copies beyond the
             // match gap, which the wire transfer covered) lands as a
             // DRAM replica; the wire plan refreshed all SSD copies.
-            let pool = &ctx.prefill.instances[p].pool;
             let blocks_list: Vec<BlockId> = req.hash_ids[..choice.eff_blocks]
                 .iter()
                 .enumerate()
                 .filter(|&(idx, &b)| {
                     choice.ssd_blocks == 0
                         || idx >= choice.local_blocks
-                        || pool.tier_of(b) != Some(crate::kvcache::Tier::Ssd)
+                        || tier_on(ctx, p, b) != Some(Tier::Ssd)
                 })
                 .map(|(_, &b)| b)
                 .collect();
-            ctx.prefill.instances[p].pool.insert_replica(&blocks_list, ctx.now);
+            let delta = ctx.prefill.instances[p].pool.insert_replica(&blocks_list, ctx.now);
+            if let Some(idx) = ctx.index.as_deref_mut() {
+                idx.apply(p, &delta);
+            }
             stats.migrations += 1;
         }
     }
@@ -461,7 +527,11 @@ pub fn schedule(
     let needed = req.needed_blocks();
     let planned_reuse = choice.eff_blocks.min(needed);
     let hits_before = ctx.prefill.instances[p].pool.stats.hits();
-    ctx.prefill.instances[p].pool.admit_chain_reusing(&req.hash_ids, planned_reuse, ctx.now);
+    let delta =
+        ctx.prefill.instances[p].pool.admit_chain_reusing(&req.hash_ids, planned_reuse, ctx.now);
+    if let Some(idx) = ctx.index.as_deref_mut() {
+        idx.apply(p, &delta);
+    }
     let reused = (ctx.prefill.instances[p].pool.stats.hits() - hits_before) as usize;
 
     // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
@@ -498,6 +568,7 @@ pub fn schedule(
         local_prefix_blocks: choice.local_blocks,
         ssd_load_blocks: choice.ssd_blocks,
         fetch,
+        fetch_ssd_stage_blocks,
         prefill_start: planned_start,
         prefill_end: planned_end,
         kv_arrive,
@@ -542,6 +613,7 @@ mod tests {
                 messenger: &mut $msgr,
                 rng: &mut $rng,
                 now: $now,
+                index: None,
             }
         };
     }
@@ -707,7 +779,7 @@ mod tests {
             .unwrap();
         // Long idle gap: the whole chain got demoted to the SSD tier.
         for &b in &r.hash_ids {
-            assert!(prefill.instances[holder].pool.demote_block(b, 1.0));
+            assert!(prefill.instances[holder].pool.demote_block(b, 1.0).is_some());
         }
         assert_eq!(prefill.instances[holder].pool.ssd_len(), 63);
 
@@ -745,7 +817,7 @@ mod tests {
             .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 2)
             .unwrap();
         for &b in &r.hash_ids {
-            assert!(prefill.instances[holder].pool.demote_block(b, 1.0));
+            assert!(prefill.instances[holder].pool.demote_block(b, 1.0).is_some());
         }
 
         let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
@@ -760,6 +832,57 @@ mod tests {
         let pool = &prefill.instances[p.prefill_group[0]].pool;
         assert_eq!(pool.stats.ssd_hits, 0);
         assert_eq!(pool.prefix_match(&r.hash_ids).dram_blocks, 2);
+    }
+
+    #[test]
+    fn index_backed_scheduling_matches_scan_backed() {
+        // The global prefix index is a pure optimization: the same
+        // request stream against two identical clusters — one scheduling
+        // through the index, one through the per-pool scan — must
+        // produce identical placements, stats, and pool states.
+        let (cfg_a, perf_a, mut pf_a, dec_a, mut ms_a, mut rng_a) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        let (cfg_b, perf_b, mut pf_b, dec_b, mut ms_b, mut rng_b) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        let mut idx = pf_b.build_prefix_index();
+        let mut sa = ConductorStats::default();
+        let mut sb = ConductorStats::default();
+        for k in 0..24u64 {
+            let r = req(k % 5, 8 + (k % 3) * 17); // overlapping chains
+            let now = k as f64 * 2_000.0;
+            let pa = {
+                let mut ctx = ctx!(cfg_a, perf_a, pf_a, dec_a, ms_a, rng_a, now);
+                schedule(&mut ctx, &r, &mut sa)
+            };
+            let pb = {
+                let mut ctx = Ctx {
+                    cfg: &cfg_b,
+                    perf: &perf_b,
+                    prefill: &mut pf_b,
+                    decodes: &dec_b,
+                    messenger: &mut ms_b,
+                    rng: &mut rng_b,
+                    now,
+                    index: Some(&mut idx),
+                };
+                schedule(&mut ctx, &r, &mut sb)
+            };
+            match (pa, pb) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.prefill_group, b.prefill_group, "request {k}");
+                    assert_eq!(a.local_prefix_blocks, b.local_prefix_blocks);
+                    assert_eq!(a.ssd_load_blocks, b.ssd_load_blocks);
+                    assert_eq!(a.fetch, b.fetch);
+                    assert_eq!(a.prefill_start.to_bits(), b.prefill_start.to_bits());
+                    assert_eq!(a.prefill_end.to_bits(), b.prefill_end.to_bits());
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (a, b) => panic!("request {k} diverged: {a:?} vs {b:?}"),
+            }
+        }
+        assert_eq!(sa, sb);
+        // The incrementally maintained index still equals a rebuild.
+        assert!(idx.equals_rebuild_of(pf_b.instances.iter().map(|i| &i.pool)));
     }
 
     #[test]

@@ -69,6 +69,18 @@ pub struct SimConfig {
     pub slo: SloConfig,
     /// Load threshold (fraction of SLO) above which admission rejects.
     pub overload_threshold: f64,
+    /// Conductor keeps a global block→node prefix index so
+    /// `FindBestPrefixMatch` is one O(chain) walk instead of a scan of
+    /// every pool.  Pure optimization: results are bit-for-bit identical
+    /// either way.  `false` restores the per-node scan, and clusters
+    /// beyond `PrefixIndex::MAX_NODES` prefill nodes fall back to it
+    /// automatically.
+    pub use_prefix_index: bool,
+    /// Proactive background demotion: a low-priority sweep moves DRAM
+    /// blocks idle at least this long (ms) down to the SSD tier instead
+    /// of waiting for eviction pressure.  `None` = off (the default —
+    /// demotion stays eviction-driven).
+    pub demote_after_ms: Option<f64>,
     pub seed: u64,
 }
 
@@ -89,6 +101,8 @@ impl Default for SimConfig {
             max_decode_batch: 128,
             slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
             overload_threshold: 1.0,
+            use_prefix_index: true,
+            demote_after_ms: None,
             seed: 42,
         }
     }

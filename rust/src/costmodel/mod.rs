@@ -76,6 +76,24 @@ pub fn fetch_bytes(perf: &PerfModel, blocks: usize) -> u64 {
     blocks as u64 * BLOCK_TOKENS * perf.model.kv_bytes_per_token()
 }
 
+/// A remote §6.2 prefix fetch: `blocks` cache blocks pulled from `src`,
+/// of which `src_ssd_blocks` live on the **source's SSD tier** and must
+/// be staged into its DRAM before the NIC can serialize them — so the
+/// fetch pays `ssd_stage_ms` *and then* the wire, both on the source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchPlan {
+    pub src: usize,
+    pub blocks: usize,
+    pub src_ssd_blocks: usize,
+}
+
+impl FetchPlan {
+    /// Staging latency on the source before its NIC can start (ms).
+    pub fn src_stage_ms(&self, perf: &PerfModel) -> f64 {
+        ssd_stage_ms(perf, self.src_ssd_blocks as u64 * BLOCK_TOKENS)
+    }
+}
+
 /// Wire bytes of the layer-wise KVCache stream to the decode node (§5.2).
 pub fn kv_stream_bytes(perf: &PerfModel, input_tokens: u64) -> u64 {
     input_tokens * perf.model.kv_bytes_per_token()
@@ -110,10 +128,10 @@ impl PrefillEstimate {
 
 /// Estimate a prefill on `primary` with `n_new` uncached tokens and
 /// `prefix_tokens` reused ones, of which `ssd_prefix_tokens` must first
-/// be staged up from the node's SSD tier; `fetch = Some((source,
-/// blocks))` adds a remote prefix fetch that must land first.
-/// Read-only: probes the prefill queues and the source NIC without
-/// mutating either.
+/// be staged up from the node's SSD tier; `fetch` adds a remote prefix
+/// fetch that must land first — charged to the source's NVMe (staging)
+/// and then its NIC.  Read-only: probes the prefill queues and the
+/// source NIC without mutating either.
 #[allow(clippy::too_many_arguments)]
 pub fn estimate_prefill(
     perf: &PerfModel,
@@ -124,7 +142,7 @@ pub fn estimate_prefill(
     n_new: u64,
     prefix_tokens: u64,
     ssd_prefix_tokens: u64,
-    fetch: Option<(usize, usize)>,
+    fetch: Option<FetchPlan>,
     now: TimeMs,
 ) -> PrefillEstimate {
     let group = pool.cpp_group(cfg, primary, n_new, now);
@@ -132,8 +150,9 @@ pub fn estimate_prefill(
         prefill_exec_ms(perf, cfg, n_new, prefix_tokens, ssd_prefix_tokens, group.len() as u64);
     let queue_free = pool.group_free_at(&group).max(now);
     let fetch_done = match fetch {
-        Some((src, blocks)) if blocks > 0 => {
-            now + messenger.estimate_ms(src, now, fetch_bytes(perf, blocks))
+        Some(f) if f.blocks > 0 => {
+            let stage_done = now + f.src_stage_ms(perf);
+            stage_done + messenger.estimate_ms(f.src, stage_done, fetch_bytes(perf, f.blocks))
         }
         _ => now,
     };
@@ -219,10 +238,11 @@ mod tests {
         let (cfg, perf, pool, mut msgr) = env();
         // Congest node 2's outgoing NIC; node 5 stays idle.
         msgr.schedule(2, 0.0, 2_000_000_000_000); // ~20 s backlog
+        let dram_fetch = |src| Some(FetchPlan { src, blocks: 4, src_ssd_blocks: 0 });
         let idle =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((5, 4)), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, dram_fetch(5), 0.0);
         let congested =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((2, 4)), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, dram_fetch(2), 0.0);
         assert!(
             congested.fetch_wait_ms > idle.fetch_wait_ms + 10_000.0,
             "source congestion must surface: {} vs {}",
@@ -237,11 +257,34 @@ mod tests {
         let (cfg, perf, mut pool, mut msgr) = env();
         pool.instances[0].block_until(5_000.0);
         msgr.schedule(3, 0.0, 300_000_000_000); // ~3 s source backlog
-        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, Some((3, 4)), 0.0);
+        let fetch = Some(FetchPlan { src: 3, blocks: 4, src_ssd_blocks: 0 });
+        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, fetch, 0.0);
         // start = max(queue, fetch), not their sum.
         assert!(est.queue_wait_ms >= 5_000.0);
         assert!(est.fetch_wait_ms > 2_000.0 && est.fetch_wait_ms < 5_000.0);
         assert!((est.start - 5_000.0).abs() < 1e-6, "start={}", est.start);
+    }
+
+    #[test]
+    fn fetch_charges_source_ssd_staging_before_the_wire() {
+        // A source holding the fetched prefix on its SSD tier must stage
+        // it into DRAM before the NIC can serialize — the estimate pays
+        // NVMe *then* wire, serially, on the source.
+        let (cfg, perf, pool, msgr) = env();
+        let blocks = 64usize;
+        let dram = FetchPlan { src: 3, blocks, src_ssd_blocks: 0 };
+        let ssd = FetchPlan { src: 3, blocks, src_ssd_blocks: blocks };
+        let a = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 0, 0, Some(dram), 0.0);
+        let b = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 0, 0, Some(ssd), 0.0);
+        let stage = ssd.src_stage_ms(&perf);
+        assert!(stage > 0.0);
+        assert!(
+            (b.fetch_wait_ms - a.fetch_wait_ms - stage).abs() < 1e-9,
+            "SSD-held source must add exactly the staging latency: {} vs {} (+{stage})",
+            b.fetch_wait_ms,
+            a.fetch_wait_ms
+        );
+        assert!((b.end - a.end - stage).abs() < 1e-9);
     }
 
     #[test]

@@ -35,6 +35,9 @@ struct Meta {
     freq: u64,
     /// Most recent block index within a request (position).
     pos: usize,
+    /// Wall-clock time of the last touch/insert (ms) — the idleness
+    /// signal proactive background demotion sweeps on.
+    last_used_ms: f64,
 }
 
 /// Composite eviction key; the BTreeSet's *first* element is the next
@@ -103,12 +106,26 @@ impl EvictionPolicy {
         self.entries.get(&b).map(|m| m.pos)
     }
 
+    /// Blocks whose last touch/insert is at least `idle_ms` before `now`
+    /// — the candidate set for proactive background demotion.  Sorted by
+    /// id so sweeps are deterministic despite HashMap iteration order.
+    pub fn idle_blocks(&self, now_ms: f64, idle_ms: f64) -> Vec<BlockId> {
+        let mut v: Vec<BlockId> = self
+            .entries
+            .iter()
+            .filter(|(_, m)| now_ms - m.last_used_ms >= idle_ms)
+            .map(|(&b, _)| b)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Record a hit: bump recency/frequency/position metadata.
-    pub fn touch(&mut self, b: BlockId, _now_ms: f64, pos: usize) {
+    pub fn touch(&mut self, b: BlockId, now_ms: f64, pos: usize) {
         self.tick += 1;
         if let Some(m) = self.entries.get(&b).copied() {
             self.order.remove(&self.key(b, &m));
-            let m2 = Meta { stamp: self.tick, freq: m.freq + 1, pos };
+            let m2 = Meta { stamp: self.tick, freq: m.freq + 1, pos, last_used_ms: now_ms };
             self.order.insert(self.key(b, &m2));
             self.entries.insert(b, m2);
         }
@@ -118,9 +135,9 @@ impl EvictionPolicy {
     /// evicted block, if any.  The victim is chosen among *existing*
     /// entries before insertion, so a fresh block never evicts itself
     /// (the standard guard against LFU's new-entry starvation).
-    pub fn insert(&mut self, b: BlockId, _now_ms: f64, pos: usize) -> Option<BlockId> {
+    pub fn insert(&mut self, b: BlockId, now_ms: f64, pos: usize) -> Option<BlockId> {
         if self.contains(b) {
-            self.touch(b, _now_ms, pos);
+            self.touch(b, now_ms, pos);
             return None;
         }
         let mut evicted = None;
@@ -130,7 +147,7 @@ impl EvictionPolicy {
             }
         }
         self.tick += 1;
-        let m = Meta { stamp: self.tick, freq: 1, pos };
+        let m = Meta { stamp: self.tick, freq: 1, pos, last_used_ms: now_ms };
         self.entries.insert(b, m);
         self.order.insert(self.key(b, &m));
         evicted
@@ -234,6 +251,18 @@ mod tests {
         p.insert(9, 0.0, 0);
         assert!(p.remove(9));
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn idle_blocks_by_wall_clock_and_sorted() {
+        let mut p = EvictionPolicy::new(PolicyKind::Lru, None);
+        p.insert(3, 0.0, 0);
+        p.insert(1, 0.0, 0);
+        p.insert(2, 900.0, 0);
+        p.touch(3, 950.0, 0); // refreshed: no longer idle
+        assert_eq!(p.idle_blocks(1_000.0, 500.0), vec![1]);
+        assert_eq!(p.idle_blocks(1_000.0, 50.0), vec![1, 2, 3]);
+        assert!(p.idle_blocks(1_000.0, 2_000.0).is_empty());
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! The Conductor's **global prefix index** (§5, §6): one map from
+//! `BlockId` to a per-node, tier-aware residency bitset, replacing the
+//! per-request scan of every prefill instance's pool.
+//!
+//! `FindBestPrefixMatch` used to cost O(nodes × chain) HashMap probes
+//! per scheduling decision — worst in exactly the long-context regime
+//! the paper targets (128K ctx ≈ thousands of blocks).  With the index,
+//! [`PrefixIndex::best_prefix`] touches each chain block **once** and
+//! advances every candidate node's match simultaneously with bitmask
+//! arithmetic: per block, one probe plus O(words) mask ops plus work
+//! proportional only to the nodes whose state *changes* at that block
+//! (death, DRAM-run end, SSD copy).
+//!
+//! Consistency protocol: the index is owned next to the scheduler (the
+//! `Sim`), not by the pools — pools stay self-contained LRU structures
+//! and every mutation ([`CachePool::admit_chain_reusing`],
+//! [`CachePool::insert_replica`], [`CachePool::demote_block`],
+//! [`CachePool::demote_idle`], …) *returns* a [`TierDelta`] of residency
+//! changes which the owner applies via [`PrefixIndex::apply`].  A
+//! debug-mode invariant ([`PrefixIndex::equals_rebuild_of`]) checks the
+//! incremental index against a brute-force rebuild.
+//!
+//! The bitset is a single `u64` per tier per block, so one index shard
+//! covers up to [`PrefixIndex::MAX_NODES`] prefill nodes; the Conductor
+//! falls back to the per-pool scan beyond that (`PrefixIndex::supports`).
+
+use std::collections::HashMap;
+
+use super::pool::{CachePool, Tier, TierDelta, TierMatch};
+use crate::BlockId;
+
+/// Which nodes hold a block, split by tier.  A node's bit is set in at
+/// most one of the two masks (a block lives in exactly one tier per
+/// pool).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+struct Residency {
+    dram: u64,
+    ssd: u64,
+}
+
+#[derive(Debug)]
+pub struct PrefixIndex {
+    n_nodes: usize,
+    map: HashMap<BlockId, Residency>,
+}
+
+impl PrefixIndex {
+    /// One `u64` bitset word per tier per block.
+    pub const MAX_NODES: usize = 64;
+
+    /// Whether a single index shard can cover `n_nodes` prefill nodes.
+    pub fn supports(n_nodes: usize) -> bool {
+        n_nodes <= Self::MAX_NODES
+    }
+
+    pub fn new(n_nodes: usize) -> Self {
+        assert!(Self::supports(n_nodes), "PrefixIndex shard covers at most 64 nodes");
+        PrefixIndex { n_nodes, map: HashMap::new() }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Distinct blocks resident anywhere in the cluster.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Record `node`'s residency for one block (`None` = not resident).
+    /// Setting one tier clears the other — a block lives in exactly one
+    /// tier per pool — and entries with no holders are removed so the
+    /// index stays equal to a fresh rebuild.
+    pub fn set(&mut self, node: usize, b: BlockId, loc: Option<Tier>) {
+        debug_assert!(node < self.n_nodes);
+        let bit = 1u64 << node;
+        let r = self.map.entry(b).or_default();
+        r.dram &= !bit;
+        r.ssd &= !bit;
+        match loc {
+            Some(Tier::Dram) => r.dram |= bit,
+            Some(Tier::Ssd) => r.ssd |= bit,
+            None => {}
+        }
+        if r.dram == 0 && r.ssd == 0 {
+            self.map.remove(&b);
+        }
+    }
+
+    /// Apply a pool mutation's residency changes for `node`, in order.
+    pub fn apply(&mut self, node: usize, delta: &TierDelta) {
+        for &(b, loc) in &delta.changes {
+            self.set(node, b, loc);
+        }
+    }
+
+    /// `node`'s residency for one block, as the pool would report it.
+    pub fn tier_on(&self, node: usize, b: BlockId) -> Option<Tier> {
+        debug_assert!(node < self.n_nodes);
+        let r = self.map.get(&b)?;
+        let bit = 1u64 << node;
+        if r.dram & bit != 0 {
+            Some(Tier::Dram)
+        } else if r.ssd & bit != 0 {
+            Some(Tier::Ssd)
+        } else {
+            None
+        }
+    }
+
+    /// Bulk-load one node's pool (brute-force rebuild path).
+    pub fn insert_pool(&mut self, node: usize, pool: &CachePool) {
+        for b in pool.iter_dram_blocks() {
+            self.set(node, b, Some(Tier::Dram));
+        }
+        for b in pool.iter_ssd_blocks() {
+            self.set(node, b, Some(Tier::Ssd));
+        }
+    }
+
+    /// `FindBestPrefixMatch` for **all** nodes in one chain walk:
+    /// `out[n]` equals `pools[n].prefix_match(hash_ids)` exactly, but the
+    /// whole cluster costs one HashMap probe per chain block instead of
+    /// one per (node, block) pair.
+    pub fn best_prefix_into(&self, hash_ids: &[BlockId], out: &mut Vec<TierMatch>) {
+        out.clear();
+        out.resize(self.n_nodes, TierMatch::default());
+        if self.n_nodes == 0 {
+            return;
+        }
+        let all: u64 = if self.n_nodes == 64 { u64::MAX } else { (1u64 << self.n_nodes) - 1 };
+        // Nodes whose match still extends / whose match is still a pure
+        // DRAM run.  A cleared bit means that node's `blocks` (resp.
+        // `dram_prefix`) has been finalized in `out`.
+        let mut alive = all;
+        let mut dram_run = all;
+        for (i, &b) in hash_ids.iter().enumerate() {
+            if alive == 0 {
+                break;
+            }
+            let r = self.map.get(&b).copied().unwrap_or_default();
+            let resident = (r.dram | r.ssd) & alive;
+            // Nodes missing this block: their match ends at i blocks.
+            let mut died = alive & !resident;
+            while died != 0 {
+                let n = died.trailing_zeros() as usize;
+                died &= died - 1;
+                out[n].blocks = i;
+                if dram_run & (1u64 << n) != 0 {
+                    out[n].dram_prefix = i;
+                }
+            }
+            alive = resident;
+            dram_run &= alive;
+            // Nodes whose block is SSD-resident: their pure-DRAM leading
+            // run ends here (and the block counts as an SSD copy).
+            let mut run_end = dram_run & !r.dram;
+            while run_end != 0 {
+                let n = run_end.trailing_zeros() as usize;
+                run_end &= run_end - 1;
+                out[n].dram_prefix = i;
+            }
+            dram_run &= r.dram;
+            let mut on_ssd = alive & r.ssd;
+            while on_ssd != 0 {
+                let n = on_ssd.trailing_zeros() as usize;
+                on_ssd &= on_ssd - 1;
+                out[n].ssd_blocks += 1;
+            }
+        }
+        // Survivors matched the whole chain.
+        let full = hash_ids.len();
+        let mut still = alive;
+        while still != 0 {
+            let n = still.trailing_zeros() as usize;
+            still &= still - 1;
+            out[n].blocks = full;
+            if dram_run & (1u64 << n) != 0 {
+                out[n].dram_prefix = full;
+            }
+        }
+        for m in out.iter_mut() {
+            m.dram_blocks = m.blocks - m.ssd_blocks;
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::best_prefix_into`].
+    pub fn best_prefix(&self, hash_ids: &[BlockId]) -> Vec<TierMatch> {
+        let mut out = Vec::new();
+        self.best_prefix_into(hash_ids, &mut out);
+        out
+    }
+
+    /// Debug invariant: the incrementally maintained index equals a
+    /// brute-force rebuild from the pools (in node order).
+    pub fn equals_rebuild_of<'a>(&self, pools: impl Iterator<Item = &'a CachePool>) -> bool {
+        let mut fresh = PrefixIndex::new(self.n_nodes);
+        let mut count = 0usize;
+        for (n, pool) in pools.enumerate() {
+            fresh.insert_pool(n, pool);
+            count = n + 1;
+        }
+        count == self.n_nodes && fresh.map == self.map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PolicyKind;
+
+    fn pools(n: usize) -> Vec<CachePool> {
+        (0..n).map(|_| CachePool::new(PolicyKind::Lru, Some(64), Some(64))).collect()
+    }
+
+    fn scan(pools: &[CachePool], chain: &[BlockId]) -> Vec<TierMatch> {
+        pools.iter().map(|p| p.prefix_match(chain)).collect()
+    }
+
+    #[test]
+    fn best_prefix_matches_per_pool_scan() {
+        let mut ps = pools(3);
+        let mut idx = PrefixIndex::new(3);
+        let chain: Vec<BlockId> = (10..20).collect();
+        // Node 0: full chain in DRAM; node 1: first half, with one block
+        // demoted to SSD; node 2: nothing.
+        idx.apply(0, &ps[0].admit_chain(&chain, 0.0));
+        idx.apply(1, &ps[1].admit_chain(&chain[..5], 0.0));
+        idx.apply(1, &ps[1].demote_block(12, 1.0).unwrap());
+        let got = idx.best_prefix(&chain);
+        let want = scan(&ps, &chain);
+        assert_eq!(got, want);
+        assert_eq!(got[0].blocks, 10);
+        assert_eq!(got[1], TierMatch { blocks: 5, dram_prefix: 2, dram_blocks: 4, ssd_blocks: 1 });
+        assert_eq!(got[2], TierMatch::default());
+        assert!(idx.equals_rebuild_of(ps.iter()));
+    }
+
+    #[test]
+    fn tier_on_tracks_moves_and_drops() {
+        let mut ps = pools(2);
+        let mut idx = PrefixIndex::new(2);
+        idx.apply(0, &ps[0].admit_chain(&[1, 2], 0.0));
+        idx.apply(1, &ps[1].admit_chain(&[2], 0.0));
+        assert_eq!(idx.tier_on(0, 1), Some(Tier::Dram));
+        assert_eq!(idx.tier_on(1, 1), None);
+        assert_eq!(idx.tier_on(1, 2), Some(Tier::Dram));
+        idx.apply(0, &ps[0].demote_block(1, 1.0).unwrap());
+        assert_eq!(idx.tier_on(0, 1), Some(Tier::Ssd));
+        // A drop removes the node's bit; the last holder's drop removes
+        // the entry entirely.
+        idx.set(0, 1, None);
+        assert_eq!(idx.tier_on(0, 1), None);
+        assert_eq!(idx.len(), 1); // only block 2 remains
+    }
+
+    #[test]
+    fn eviction_pressure_keeps_index_consistent() {
+        // A 4-block DRAM tier over a 6-block SSD tier: admissions demote
+        // and eventually drop; the deltas must keep the index equal to a
+        // rebuild at every step, and best_prefix equal to the scan.
+        let mut ps = vec![CachePool::new(PolicyKind::Lru, Some(4), Some(6))];
+        let mut idx = PrefixIndex::new(1);
+        for round in 0..8u64 {
+            let chain: Vec<BlockId> = (round * 3..round * 3 + 4).collect();
+            let delta = ps[0].admit_chain(&chain, round as f64);
+            idx.apply(0, &delta);
+            assert!(idx.equals_rebuild_of(ps.iter()), "round {round}");
+            assert_eq!(idx.best_prefix(&chain), scan(&ps, &chain), "round {round}");
+        }
+    }
+
+    #[test]
+    fn sixty_four_node_masks_have_no_shift_overflow() {
+        let mut idx = PrefixIndex::new(64);
+        idx.set(63, 7, Some(Tier::Ssd));
+        assert_eq!(idx.tier_on(63, 7), Some(Tier::Ssd));
+        let m = idx.best_prefix(&[7]);
+        assert_eq!(m[63], TierMatch { blocks: 1, dram_prefix: 0, dram_blocks: 0, ssd_blocks: 1 });
+        assert_eq!(m[0], TierMatch::default());
+        assert!(!PrefixIndex::supports(65));
+    }
+
+    #[test]
+    fn empty_chain_and_empty_index() {
+        let idx = PrefixIndex::new(2);
+        assert!(idx.is_empty());
+        let m = idx.best_prefix(&[]);
+        assert_eq!(m, vec![TierMatch::default(), TierMatch::default()]);
+        let m = idx.best_prefix(&[99]);
+        assert_eq!(m, vec![TierMatch::default(), TierMatch::default()]);
+    }
+}

@@ -1,14 +1,18 @@
 //! The disaggregated KVCache (§3, Fig 3): prefix-hash-chained paged
 //! blocks stored in each node's tiered CPU-DRAM + SSD pool, with
 //! pluggable eviction (DRAM eviction demotes to SSD; reuse promotes
-//! back) and a tier-aware prefix matcher used by Conductor's
-//! cache-aware scheduling.
+//! back), a tier-aware prefix matcher, and the Conductor-side global
+//! [`PrefixIndex`] that answers `FindBestPrefixMatch` for every node in
+//! one O(chain) walk, kept consistent by the [`TierDelta`]s every pool
+//! mutation returns.
 
 pub mod eviction;
+pub mod index;
 pub mod pool;
 
 pub use eviction::{EvictionPolicy, PolicyKind};
-pub use pool::{CachePool, Tier, TierCounters, TierMatch};
+pub use index::PrefixIndex;
+pub use pool::{CachePool, Tier, TierCounters, TierDelta, TierMatch};
 
 use crate::BlockId;
 

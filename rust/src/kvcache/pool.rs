@@ -67,9 +67,34 @@ impl TierCounters {
     }
 }
 
+/// Residency changes a pool mutation caused, in application order — the
+/// feed that keeps the Conductor's global [`crate::kvcache::PrefixIndex`]
+/// consistent with the per-node pools without rescanning them.  `None`
+/// means the block left the pool entirely (dropped).
+#[derive(Debug, Default, Clone)]
+pub struct TierDelta {
+    pub changes: Vec<(BlockId, Option<Tier>)>,
+}
+
+impl TierDelta {
+    pub fn is_empty(&self) -> bool {
+        self.changes.is_empty()
+    }
+
+    /// Blocks destroyed outright, in drop order (the pre-delta return
+    /// value of the `admit_*` family, kept for accounting tests).
+    pub fn dropped(&self) -> Vec<BlockId> {
+        self.changes.iter().filter(|(_, t)| t.is_none()).map(|(b, _)| *b).collect()
+    }
+
+    fn push(&mut self, b: BlockId, t: Option<Tier>) {
+        self.changes.push((b, t));
+    }
+}
+
 /// The longest usable prefix of a request's hash chain in this pool,
 /// split by tier (Algorithm 1's `prefix_len`, tier-aware).
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TierMatch {
     /// Leading run of chain blocks resident in *either* tier.
     pub blocks: usize,
@@ -174,9 +199,9 @@ impl CachePool {
     }
 
     /// Insert into DRAM, demoting (or, with SSD disabled, dropping) LRU
-    /// victims first so the insert itself never evicts.  Fully dropped
-    /// blocks are appended to `dropped`.
-    fn insert_dram(&mut self, b: BlockId, now: TimeMs, pos: usize, dropped: &mut Vec<BlockId>) {
+    /// victims first so the insert itself never evicts.  Every residency
+    /// change (demotion, drop, the insert itself) is recorded in `delta`.
+    fn insert_dram(&mut self, b: BlockId, now: TimeMs, pos: usize, delta: &mut TierDelta) {
         if self.dram.capacity() == Some(0) {
             // Degenerate no-DRAM config: fresh KV spills straight down to
             // the SSD tier (or is dropped), keeping the capacity bound
@@ -185,11 +210,12 @@ impl CachePool {
             if self.ssd_enabled() {
                 if let Some(dead) = self.ssd.insert(b, now, pos) {
                     self.stats.dropped += 1;
-                    dropped.push(dead);
+                    delta.push(dead, None);
                 }
+                delta.push(b, Some(Tier::Ssd));
             } else {
                 self.stats.dropped += 1;
-                dropped.push(b);
+                delta.push(b, None);
             }
             return;
         }
@@ -201,17 +227,19 @@ impl CachePool {
                 self.stats.demotions += 1;
                 if let Some(dead) = self.ssd.insert(victim, now, vpos) {
                     self.stats.dropped += 1;
-                    dropped.push(dead);
+                    delta.push(dead, None);
                 }
+                delta.push(victim, Some(Tier::Ssd));
             } else {
                 self.stats.dropped += 1;
-                dropped.push(victim);
+                delta.push(victim, None);
             }
         }
         // Room was made above (or the tier is unbounded), so this insert
         // itself cannot evict.
         let evicted = self.dram.insert(b, now, pos);
         debug_assert!(evicted.is_none());
+        delta.push(b, Some(Tier::Dram));
     }
 
     /// Place one block of an admitted chain.  `reused` says whether the
@@ -220,14 +248,7 @@ impl CachePool {
     /// whose KV gets (re)materialized in DRAM — recomputed blocks shadow
     /// any stale SSD copy, which is removed so a block never lives in two
     /// tiers.
-    fn place(
-        &mut self,
-        b: BlockId,
-        pos: usize,
-        now: TimeMs,
-        reused: bool,
-        dropped: &mut Vec<BlockId>,
-    ) {
+    fn place(&mut self, b: BlockId, pos: usize, now: TimeMs, reused: bool, delta: &mut TierDelta) {
         if self.dram.contains(b) {
             if reused {
                 self.stats.dram_hits += 1;
@@ -243,33 +264,34 @@ impl CachePool {
                 self.stats.misses += 1;
             }
             self.ssd.remove(b);
-            self.insert_dram(b, now, pos, dropped);
+            self.insert_dram(b, now, pos, delta);
         } else {
             self.stats.misses += 1;
-            self.insert_dram(b, now, pos, dropped);
+            self.insert_dram(b, now, pos, delta);
         }
     }
 
     /// Admit a request's block chain with the scheduler's reuse decision:
     /// the leading `reused_blocks` count as hits (DRAM touch or SSD
     /// promotion), the rest as misses inserted into DRAM (their KV was
-    /// just computed).  Returns blocks dropped from the cache entirely.
+    /// just computed).  Returns the residency changes (drops, demotions,
+    /// promotions, inserts) for the caller's index maintenance.
     pub fn admit_chain_reusing(
         &mut self,
         hash_ids: &[BlockId],
         reused_blocks: usize,
         now: TimeMs,
-    ) -> Vec<BlockId> {
-        let mut dropped = Vec::new();
+    ) -> TierDelta {
+        let mut delta = TierDelta::default();
         for (i, &b) in hash_ids.iter().enumerate() {
-            self.place(b, i, now, i < reused_blocks, &mut dropped);
+            self.place(b, i, now, i < reused_blocks, &mut delta);
         }
-        dropped
+        delta
     }
 
     /// Admit a chain reusing everything the pool can prefix-match — the
     /// pre-tiering API, kept for callers without a scheduling decision.
-    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> Vec<BlockId> {
+    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> TierDelta {
         let matched = self.prefix_match_blocks(hash_ids);
         self.admit_chain_reusing(hash_ids, matched, now)
     }
@@ -277,19 +299,19 @@ impl CachePool {
     /// Admit a single block with per-block (non-prefix) semantics — the
     /// Table 1 global-pool replays.  A block resident in either tier is a
     /// hit (promoting from SSD); a miss inserts into DRAM.  Returns
-    /// whether it hit.
-    pub fn admit_block(&mut self, b: BlockId, pos: usize, now: TimeMs) -> bool {
+    /// whether it hit plus the residency changes.
+    pub fn admit_block(&mut self, b: BlockId, pos: usize, now: TimeMs) -> (bool, TierDelta) {
         let hit = self.contains(b);
-        let mut dropped = Vec::new();
-        self.place(b, pos, now, hit, &mut dropped);
-        hit
+        let mut delta = TierDelta::default();
+        self.place(b, pos, now, hit, &mut delta);
+        (hit, delta)
     }
 
     /// Insert replicated blocks (hot-spot migration §6.2) without hit
     /// accounting.  Replicas land in DRAM (they arrive hot off the wire);
-    /// a stale SSD copy is superseded.  Returns dropped blocks.
-    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> Vec<BlockId> {
-        let mut dropped = Vec::new();
+    /// a stale SSD copy is superseded.  Returns the residency changes.
+    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> TierDelta {
+        let mut delta = TierDelta::default();
         for (i, &b) in blocks.iter().enumerate() {
             if self.dram.contains(b) {
                 continue;
@@ -298,26 +320,46 @@ impl CachePool {
                 self.ssd.remove(b);
                 self.stats.promotions += 1;
             }
-            self.insert_dram(b, now, i, &mut dropped);
+            self.insert_dram(b, now, i, &mut delta);
         }
-        dropped
+        delta
     }
 
     /// Move a DRAM-resident block down to the SSD tier (idle-demotion /
-    /// test hook).  Returns false if the block is not in DRAM or the SSD
-    /// tier is disabled.
-    pub fn demote_block(&mut self, b: BlockId, now: TimeMs) -> bool {
+    /// test hook).  Returns `None` if the block is not in DRAM or the SSD
+    /// tier is disabled, the residency changes otherwise.
+    pub fn demote_block(&mut self, b: BlockId, now: TimeMs) -> Option<TierDelta> {
         if !self.dram.contains(b) || !self.ssd_enabled() {
-            return false;
+            return None;
         }
+        let mut delta = TierDelta::default();
         let pos = self.dram.pos_of(b).unwrap_or(0);
         self.dram.remove(b);
         self.stats.demotions += 1;
         if let Some(dead) = self.ssd.insert(b, now, pos) {
             self.stats.dropped += 1;
             debug_assert_ne!(dead, b, "SSD tier evicted the block being demoted");
+            delta.push(dead, None);
         }
-        true
+        delta.push(b, Some(Tier::Ssd));
+        Some(delta)
+    }
+
+    /// Proactive background demotion (the low-priority sweep behind
+    /// `SimConfig::demote_after_ms`): move every DRAM block idle for at
+    /// least `idle_ms` down to the SSD tier without waiting for capacity
+    /// pressure.  Deterministic (idle candidates are sorted by id).
+    pub fn demote_idle(&mut self, now: TimeMs, idle_ms: f64) -> TierDelta {
+        let mut delta = TierDelta::default();
+        if !self.ssd_enabled() {
+            return delta;
+        }
+        for b in self.dram.idle_blocks(now, idle_ms) {
+            if let Some(d) = self.demote_block(b, now) {
+                delta.changes.extend(d.changes);
+            }
+        }
+        delta
     }
 
     pub fn hits(&self) -> u64 {
@@ -377,7 +419,7 @@ mod tests {
     fn eviction_without_ssd_drops_blocks() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(0));
         p.admit_chain(&[1, 2, 3, 4], 0.0);
-        let dropped = p.admit_chain(&[5, 6], 1.0);
+        let dropped = p.admit_chain(&[5, 6], 1.0).dropped();
         assert_eq!(dropped, vec![1, 2]); // LRU order
         assert_eq!(p.len(), 4);
         assert_eq!(p.stats.demotions, 0);
@@ -388,8 +430,11 @@ mod tests {
     fn eviction_with_ssd_demotes_instead_of_dropping() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(8));
         p.admit_chain(&[1, 2, 3, 4], 0.0);
-        let dropped = p.admit_chain(&[5, 6], 1.0);
-        assert!(dropped.is_empty(), "demotion must not destroy blocks");
+        let delta = p.admit_chain(&[5, 6], 1.0);
+        assert!(delta.dropped().is_empty(), "demotion must not destroy blocks");
+        // The delta reports the demotions and inserts it caused.
+        assert!(delta.changes.contains(&(1, Some(Tier::Ssd))));
+        assert!(delta.changes.contains(&(5, Some(Tier::Dram))));
         assert_eq!(p.len(), 6);
         assert_eq!(p.dram_len(), 4);
         assert_eq!(p.ssd_len(), 2);
@@ -407,7 +452,7 @@ mod tests {
         let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(2));
         p.admit_chain(&[1, 2], 0.0); // DRAM [1,2]
         p.admit_chain(&[3, 4], 1.0); // DRAM [3,4], SSD [1,2]
-        let dropped = p.admit_chain(&[5, 6], 2.0); // 3,4 demote; 1,2 fall off SSD
+        let dropped = p.admit_chain(&[5, 6], 2.0).dropped(); // 3,4 demote; 1,2 fall off SSD
         assert_eq!(dropped, vec![1, 2]);
         assert_eq!(p.len(), 4);
         assert_eq!(p.stats.dropped, 2);
@@ -469,16 +514,37 @@ mod tests {
     fn demote_block_moves_tier() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
         p.admit_chain(&[1, 2], 0.0);
-        assert!(p.demote_block(1, 1.0));
-        assert!(!p.demote_block(1, 1.0)); // already on SSD
-        assert!(!p.demote_block(99, 1.0)); // unknown
+        let d = p.demote_block(1, 1.0).expect("DRAM block must demote");
+        assert_eq!(d.changes, vec![(1, Some(Tier::Ssd))]);
+        assert!(p.demote_block(1, 1.0).is_none()); // already on SSD
+        assert!(p.demote_block(99, 1.0).is_none()); // unknown
         assert_eq!(p.tier_of(1), Some(Tier::Ssd));
         assert_eq!(p.len(), 2);
         // Disabled SSD refuses demotion.
         let mut q = CachePool::new(PolicyKind::Lru, Some(8), Some(0));
         q.admit_chain(&[5], 0.0);
-        assert!(!q.demote_block(5, 1.0));
+        assert!(q.demote_block(5, 1.0).is_none());
         assert_eq!(q.tier_of(5), Some(Tier::Dram));
+    }
+
+    #[test]
+    fn demote_idle_sweeps_only_stale_dram() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
+        p.admit_chain(&[1, 2, 3], 0.0);
+        p.admit_chain(&[3], 900.0); // refresh 3
+        let delta = p.demote_idle(1_000.0, 500.0);
+        assert_eq!(delta.changes, vec![(1, Some(Tier::Ssd)), (2, Some(Tier::Ssd))]);
+        assert_eq!(p.tier_of(1), Some(Tier::Ssd));
+        assert_eq!(p.tier_of(2), Some(Tier::Ssd));
+        assert_eq!(p.tier_of(3), Some(Tier::Dram));
+        assert_eq!(p.stats.demotions, 2);
+        // Sweeping again moves nothing (already demoted / not idle).
+        assert!(p.demote_idle(1_000.0, 500.0).is_empty());
+        // Disabled SSD tier: the sweep is a no-op.
+        let mut q = CachePool::new(PolicyKind::Lru, Some(8), Some(0));
+        q.admit_chain(&[7], 0.0);
+        assert!(q.demote_idle(1e9, 1.0).is_empty());
+        assert_eq!(q.tier_of(7), Some(Tier::Dram));
     }
 
     #[test]
@@ -499,7 +565,7 @@ mod tests {
     fn dram_prefix_stops_at_first_ssd_block() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
         p.admit_chain(&[1, 2, 3, 4], 0.0);
-        p.demote_block(2, 1.0);
+        let _ = p.demote_block(2, 1.0);
         let m = p.prefix_match(&[1, 2, 3, 4]);
         assert_eq!(m.blocks, 4);
         assert_eq!(m.dram_prefix, 1); // 1 is DRAM, 2 is SSD

@@ -35,7 +35,8 @@ fn main() -> Result<()> {
                  analyze   --trace trace.jsonl\n\
                  simulate  --trace trace.jsonl [--prefill 8] [--decode 8] [--speedup 1]\n\
                  \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
-                 \t[--dram-blocks 50000] [--ssd-blocks 250000]\n\
+                 \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
+                 \t[--no-prefix-index]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -106,6 +107,19 @@ fn simulate(args: &Args) -> Result<()> {
     let path = args.get_or("trace", "trace.jsonl");
     let trace = jsonl::load(&path)?;
     let defaults = SimConfig::default();
+    // Proactive background demotion sweep (off unless given).  Reject
+    // bad values loudly — silently disabling a requested feature would
+    // fake a demotions=0 measurement.
+    let demote_after_ms = match args.get("demote-after-ms") {
+        None if args.has_flag("demote-after-ms") => {
+            bail!("--demote-after-ms requires a value (positive ms)")
+        }
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v > 0.0 && v.is_finite() => Some(v),
+            _ => bail!("invalid --demote-after-ms {s} (expected a positive ms value)"),
+        },
+    };
     let cfg = SimConfig {
         n_prefill: args.get_usize("prefill", 8),
         n_decode: args.get_usize("decode", 8),
@@ -118,6 +132,10 @@ fn simulate(args: &Args) -> Result<()> {
         ssd_capacity_blocks: Some(
             args.get_usize("ssd-blocks", defaults.ssd_capacity_blocks.unwrap_or(250_000)),
         ),
+        // Pure optimization — `--no-prefix-index` restores the per-pool
+        // scan (bit-for-bit identical results, for A/B timing).
+        use_prefix_index: !args.has_flag("no-prefix-index"),
+        demote_after_ms,
         ..Default::default()
     };
     let speedup = args.get_f64("speedup", 1.0);

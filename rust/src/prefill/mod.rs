@@ -25,7 +25,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::config::SimConfig;
 use crate::costmodel;
-use crate::kvcache::{CachePool, PolicyKind};
+use crate::kvcache::{CachePool, PolicyKind, PrefixIndex};
 use crate::model::PerfModel;
 use crate::{RequestId, TimeMs};
 
@@ -160,6 +160,19 @@ impl PrefillPool {
 
     pub fn is_empty(&self) -> bool {
         self.instances.is_empty()
+    }
+
+    /// Brute-force build of the Conductor's global [`PrefixIndex`] from
+    /// the current pools.  Incremental maintenance afterwards goes
+    /// through the [`crate::kvcache::TierDelta`]s the pool mutators
+    /// return — this rebuild is the debug invariant's ground truth and
+    /// the cold-start path.
+    pub fn build_prefix_index(&self) -> PrefixIndex {
+        let mut idx = PrefixIndex::new(self.len());
+        for (node, inst) in self.instances.iter().enumerate() {
+            idx.insert_pool(node, &inst.pool);
+        }
+        idx
     }
 
     /// Latest drain horizon across a CPP group — when a job admitted now

@@ -20,13 +20,13 @@ use crate::conductor::{self, ConductorStats, SchedRequest};
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
-use crate::kvcache::TierCounters;
+use crate::kvcache::{PrefixIndex, TierCounters};
 use crate::messenger::Messenger;
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
 use crate::prefill::{JobId, PrefillPool};
-use crate::trace::TraceRecord;
+use crate::trace::{TraceRecord, BLOCK_TOKENS};
 use crate::util::rng::Rng;
 use crate::{RequestId, TimeMs};
 
@@ -60,11 +60,15 @@ enum EventKind {
     /// A running prefill job completed.
     PrefillDone { jid: JobId },
     /// An SSD→DRAM staging read finished on `node` (armed when a job
-    /// with SSD-resident prefix starts): tier traffic as observable
-    /// simulator state.
+    /// with SSD-resident prefix starts, or when a remote fetch forces
+    /// the *source* to stage transferred blocks): tier traffic as
+    /// observable simulator state.
     SsdLoad { node: usize, bytes: u64 },
     KvArrive { rid: RequestId, decode: usize, ctx: u64, out: u64 },
     DecodeStep { decode: usize, seq: u64, dur: f64 },
+    /// Low-priority proactive demotion sweep (`demote_after_ms`): move
+    /// idle DRAM blocks down to the SSD tier ahead of eviction pressure.
+    DemoteSweep,
     Sample,
 }
 
@@ -124,6 +128,9 @@ pub struct SimResult {
     /// Tokens emitted across all decode instances (continuous-batching
     /// throughput accounting; equals the sum of completed `generated`).
     pub decode_tokens_out: u64,
+    /// Discrete events processed over the run (the `sched_throughput`
+    /// bench's events/sec denominator).
+    pub n_events: u64,
 }
 
 impl SimResult {
@@ -166,6 +173,19 @@ pub struct Sim<'a> {
     sample_interval: f64,
     ssd_load_events: u64,
     ssd_loaded_bytes_by_node: Vec<u64>,
+    /// The Conductor's global prefix index (§5) — `None` when disabled
+    /// or when the cluster exceeds one shard's node capacity.
+    index: Option<PrefixIndex>,
+    n_events: u64,
+    /// Outstanding non-bookkeeping events.  `Sample` and `DemoteSweep`
+    /// re-arm themselves only while real work remains — gating on this
+    /// count (not heap emptiness) so the two cannot keep each other
+    /// alive forever.
+    real_events: usize,
+    /// Sanitized `cfg.demote_after_ms`: a sweep interval must be a
+    /// positive finite time or the re-armed event would never advance
+    /// the clock (infinite loop at zero, time travel when negative).
+    demote_after: Option<f64>,
 }
 
 impl<'a> Sim<'a> {
@@ -196,11 +216,19 @@ impl<'a> Sim<'a> {
             sample_interval: 10_000.0,
             ssd_load_events: 0,
             ssd_loaded_bytes_by_node: vec![0; cfg.n_prefill],
+            index: (cfg.use_prefix_index && PrefixIndex::supports(cfg.n_prefill))
+                .then(|| PrefixIndex::new(cfg.n_prefill)),
+            n_events: 0,
+            real_events: 0,
+            demote_after: cfg.demote_after_ms.filter(|&x| x > 0.0 && x.is_finite()),
             perf,
         }
     }
 
     fn push(&mut self, t: TimeMs, kind: EventKind) {
+        if !matches!(kind, EventKind::Sample | EventKind::DemoteSweep) {
+            self.real_events += 1;
+        }
         self.order += 1;
         self.events.push(Event { t, order: self.order, kind });
     }
@@ -234,6 +262,18 @@ impl<'a> Sim<'a> {
         let dur = inst.step_duration_ms(&self.perf);
         let seq = inst.step_seq;
         self.push(now + dur, EventKind::DecodeStep { decode: d, seq, dur });
+    }
+
+    /// Debug invariant of the tentpole: the incrementally maintained
+    /// prefix index must equal a brute-force rebuild of the pools.
+    /// Compiles to a no-op in release builds.
+    fn validate_index(&self) {
+        if let Some(idx) = &self.index {
+            debug_assert!(
+                idx.equals_rebuild_of(self.prefill.instances.iter().map(|i| &i.pool)),
+                "global prefix index diverged from the pools"
+            );
+        }
     }
 
     /// Start every startable prefill job: occupy its group, schedule the
@@ -305,6 +345,7 @@ impl<'a> Sim<'a> {
             messenger: &mut self.messenger,
             rng: &mut self.rng,
             now,
+            index: self.index.as_mut(),
         };
         match conductor::schedule(&mut ctx, &sched, &mut self.stats) {
             Err(_) => {
@@ -313,6 +354,20 @@ impl<'a> Sim<'a> {
                 ));
             }
             Ok(p) => {
+                // The remote fetch's source-side SSD staging (§6.2 +
+                // tiering) is observable tier traffic: the NVMe read on
+                // the source lands just before its NIC starts.
+                if p.fetch_ssd_stage_blocks > 0 {
+                    let (src, _) = p.fetch.expect("staging implies a fetch");
+                    let tokens = p.fetch_ssd_stage_blocks as u64 * BLOCK_TOKENS;
+                    self.push(
+                        now + costmodel::ssd_stage_ms(&self.perf, tokens),
+                        EventKind::SsdLoad {
+                            node: src,
+                            bytes: tokens * self.perf.model.kv_bytes_per_token(),
+                        },
+                    );
+                }
                 self.pending.insert(
                     req.rid,
                     Pending {
@@ -412,10 +467,20 @@ impl<'a> Sim<'a> {
             self.push(r.arrival, EventKind::Arrival(i));
         }
         self.push(0.0, EventKind::Sample);
+        if let Some(idle) = self.demote_after {
+            self.push(idle, EventKind::DemoteSweep);
+        }
 
         let mut now = 0.0f64;
         while let Some(ev) = self.events.pop() {
             now = ev.t;
+            self.n_events += 1;
+            if !matches!(ev.kind, EventKind::Sample | EventKind::DemoteSweep) {
+                self.real_events -= 1;
+            }
+            if self.n_events % 1024 == 0 {
+                self.validate_index();
+            }
             match ev.kind {
                 EventKind::Arrival(i) => {
                     let req = requests[i].clone();
@@ -437,10 +502,24 @@ impl<'a> Sim<'a> {
                 EventKind::DecodeStep { decode, seq, dur } => {
                     self.handle_decode_step(decode, seq, dur, now);
                 }
+                EventKind::DemoteSweep => {
+                    let idle = self.demote_after.expect("sweep without a config");
+                    for node in 0..self.prefill.len() {
+                        let delta = self.prefill.instances[node].pool.demote_idle(now, idle);
+                        if let Some(idx) = self.index.as_mut() {
+                            idx.apply(node, &delta);
+                        }
+                    }
+                    // Low priority: keep sweeping only while real work
+                    // remains.
+                    if self.real_events > 0 {
+                        self.push(now + idle, EventKind::DemoteSweep);
+                    }
+                }
                 EventKind::Sample => {
                     self.sample_loads(now);
-                    // Keep sampling while work remains.
-                    if !self.events.is_empty() {
+                    // Keep sampling while real work remains.
+                    if self.real_events > 0 {
                         self.push(now + self.sample_interval, EventKind::Sample);
                     }
                 }
@@ -448,6 +527,7 @@ impl<'a> Sim<'a> {
         }
         assert!(self.pending.is_empty(), "requests stuck in flight");
         assert_eq!(self.prefill.outstanding(), 0, "prefill jobs stuck in queue");
+        self.validate_index();
         self.metrics.sort_by(|a, b| a.id.cmp(&b.id));
         let mut tier = TierCounters::default();
         for inst in &self.prefill.instances {
@@ -466,6 +546,7 @@ impl<'a> Sim<'a> {
             ssd_loaded_bytes: self.ssd_loaded_bytes_by_node.iter().sum(),
             ssd_loaded_bytes_by_node: self.ssd_loaded_bytes_by_node,
             decode_tokens_out: self.decodes.iter().map(|d| d.tokens_out).sum(),
+            n_events: self.n_events,
         }
     }
 }
@@ -571,6 +652,32 @@ mod tests {
             .load_samples
             .iter()
             .all(|s| (0.0..=1.0).contains(&s.prefill_load) && (0.0..=1.0).contains(&s.decode_load)));
+    }
+
+    #[test]
+    fn proactive_demotion_sweeps_idle_blocks() {
+        // Uncontended capacity: without the sweep nothing ever demotes;
+        // with `demote_after_ms` set, idle DRAM blocks move down to SSD
+        // proactively — and the cluster still completes everything.
+        let trace = small_trace(120);
+        let base = SimConfig::default();
+        let swept = SimConfig { demote_after_ms: Some(60_000.0), ..Default::default() };
+        let r0 = run(&base, &trace, 1.0);
+        let r1 = run(&swept, &trace, 1.0);
+        assert_eq!(r0.tier.demotions, 0, "no pressure and no sweep -> no demotions");
+        assert!(r1.tier.demotions > 0, "the sweep must demote idle blocks");
+        let done = r1.metrics.iter().filter(|m| m.outcome == Outcome::Completed).count();
+        assert_eq!(done, trace.len(), "proactive demotion must not lose requests");
+        // Default-off: the knob changes nothing unless opted into.
+        let r2 = run(&base, &trace, 1.0);
+        assert_eq!(r0.tier, r2.tier);
+        // Degenerate intervals are sanitized to "off" — a zero/negative
+        // period would otherwise re-arm the sweep at `now` forever.
+        for bad in [0.0, -5.0, f64::NAN] {
+            let cfg = SimConfig { demote_after_ms: Some(bad), ..Default::default() };
+            let r = run(&cfg, &trace[..20], 1.0);
+            assert_eq!(r.tier.demotions, 0, "demote_after_ms={bad} must disable the sweep");
+        }
     }
 
     #[test]

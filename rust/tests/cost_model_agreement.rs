@@ -120,6 +120,97 @@ fn estimates_match_on_cold_start_after_idle_gap() {
 }
 
 #[test]
+fn remote_fetch_estimate_charges_source_ssd_staging() {
+    // ROADMAP follow-up (PR 2): a §6.2 remote prefix fetch whose source
+    // holds the prefix on its SSD tier must charge the *source's* NVMe
+    // staging before the wire — estimate and execution alike.  Wire-only
+    // pricing would put the planned start seconds early (NVMe is ~30×
+    // slower than RDMA here), exactly the estimate/actual drift the
+    // unified cost model exists to prevent.
+    use mooncake::conductor::{self, ConductorStats, SchedRequest};
+    use mooncake::costmodel;
+    use mooncake::decode::DecodeInstance;
+    use mooncake::messenger::Messenger;
+    use mooncake::model::PerfModel;
+    use mooncake::prefill::PrefillPool;
+    use mooncake::trace::BLOCK_TOKENS;
+    use mooncake::util::rng::Rng;
+
+    let cfg = SimConfig { kvcache_balancing_threshold: 1.5, ..Default::default() };
+    let perf = PerfModel::paper();
+    let mut prefill = PrefillPool::new(&cfg);
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+    let mut rng = Rng::new(7);
+    let mut stats = ConductorStats::default();
+    let blocks = 64u64;
+    let r = SchedRequest {
+        rid: 5,
+        input_tokens: blocks * BLOCK_TOKENS,
+        output_tokens: 100,
+        hash_ids: (5_000..5_000 + blocks).collect(),
+    };
+    // Warm one holder with the chain.
+    {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            messenger: &mut msgr,
+            rng: &mut rng,
+            now: 0.0,
+            index: None,
+        };
+        conductor::schedule(&mut ctx, &r, &mut stats).unwrap();
+    }
+    let holder = prefill
+        .instances
+        .iter()
+        .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == blocks as usize)
+        .unwrap();
+    // Demote the whole chain to the holder's SSD tier, then swamp the
+    // holder so the balancing branch fetches the prefix remotely.
+    for &b in &r.hash_ids {
+        assert!(prefill.instances[holder].pool.demote_block(b, 1.0).is_some());
+    }
+    prefill.instances[holder].block_until(1e9);
+
+    let now = 1e6;
+    let mut ctx = conductor::Ctx {
+        cfg: &cfg,
+        perf: &perf,
+        prefill: &mut prefill,
+        decodes: &decodes,
+        messenger: &mut msgr,
+        rng: &mut rng,
+        now,
+        index: None,
+    };
+    let p = conductor::schedule(&mut ctx, &r, &mut stats).unwrap();
+    assert_ne!(p.prefill_group[0], holder, "swamped holder must lose the placement");
+    assert_eq!(p.fetch, Some((holder, blocks as usize)));
+    assert_eq!(p.fetch_ssd_stage_blocks, blocks as usize, "whole prefix staged at source");
+    assert_eq!(stats.fetch_stagings, 1);
+    assert_eq!(stats.fetch_staged_blocks, blocks);
+
+    // Estimate == execution, to the millisecond term: with the source
+    // NIC and the target queue idle, the planned start is exactly
+    // source staging + wire serialization.
+    let stage = costmodel::ssd_stage_ms(&perf, blocks * BLOCK_TOKENS);
+    let bytes = costmodel::fetch_bytes(&perf, blocks as usize);
+    let wire = 1.0 + bytes as f64 / (perf.hw.rdma_bw / 1e3);
+    assert!(stage > 1_000.0, "NVMe staging must be material: {stage}");
+    assert!(
+        (p.prefill_start - (now + stage + wire)).abs() < 1e-6,
+        "planned start {} != now + stage {stage} + wire {wire}",
+        p.prefill_start
+    );
+}
+
+#[test]
 fn estimates_match_on_bursty_replay() {
     // Burst windows drive the deepest queues — exactly where a drifting
     // estimator would be furthest off.

@@ -151,11 +151,74 @@ fn token_and_tier_conservation_end_to_end() {
     assert_eq!(res2.tier.dram_hits + res2.tier.ssd_hits, res2.conductor.reused_blocks);
     assert!(res2.tier.demotions > 0, "DRAM pressure must demote");
     // Staged bytes observed via SsdLoad events match the scheduler's
-    // block decisions exactly (both sides of the same cost model).
+    // block decisions exactly (both sides of the same cost model): one
+    // event per local staging decision plus one per fetch whose source
+    // staged from its own SSD tier.
     if res2.conductor.ssd_loads > 0 {
-        assert!(res2.ssd_load_events == res2.conductor.ssd_loads);
+        assert!(
+            res2.ssd_load_events == res2.conductor.ssd_loads + res2.conductor.fetch_stagings
+        );
         assert!(res2.ssd_loaded_bytes > 0);
     }
+}
+
+/// Bit-for-bit equality of two runs that must be indistinguishable.
+fn assert_runs_identical(a: &sim::SimResult, b: &sim::SimResult) {
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.outcome, y.outcome, "request {}", x.id);
+        assert_eq!(x.ttft_ms.to_bits(), y.ttft_ms.to_bits(), "request {}", x.id);
+        assert_eq!(x.est_ttft_ms.to_bits(), y.est_ttft_ms.to_bits());
+        assert_eq!(x.max_tbt_ms.to_bits(), y.max_tbt_ms.to_bits());
+        assert_eq!(x.mean_tbt_ms.to_bits(), y.mean_tbt_ms.to_bits());
+        assert_eq!(x.generated, y.generated);
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+    }
+    assert_eq!(a.conductor, b.conductor);
+    assert_eq!(a.tier, b.tier);
+    assert_eq!(a.wall_ms.to_bits(), b.wall_ms.to_bits());
+    assert_eq!(a.transfer_bytes, b.transfer_bytes);
+    assert_eq!(a.rejected_at_arrival, b.rejected_at_arrival);
+    assert_eq!(a.rejected_at_decode, b.rejected_at_decode);
+    assert_eq!(a.ssd_load_events, b.ssd_load_events);
+    assert_eq!(a.ssd_loaded_bytes_by_node, b.ssd_loaded_bytes_by_node);
+    assert_eq!(a.decode_tokens_out, b.decode_tokens_out);
+    assert_eq!(a.n_events, b.n_events);
+    assert_eq!(a.load_samples.len(), b.load_samples.len());
+    for (x, y) in a.load_samples.iter().zip(&b.load_samples) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+        assert_eq!(x.prefill_load.to_bits(), y.prefill_load.to_bits());
+        assert_eq!(x.decode_load.to_bits(), y.decode_load.to_bits());
+    }
+}
+
+#[test]
+fn prefix_index_is_a_pure_optimization_bit_for_bit() {
+    // The tentpole acceptance criterion: the seeded default trace must
+    // produce a bit-for-bit identical SimResult with the global prefix
+    // index on (default) and off (per-pool scan).
+    let t = trace(500);
+    let on = SimConfig::default();
+    assert!(on.use_prefix_index, "the index is the default path");
+    let off = SimConfig { use_prefix_index: false, ..Default::default() };
+    assert_runs_identical(&sim::run(&on, &t, 1.0), &sim::run(&off, &t, 1.0));
+
+    // And under tier pressure — evictions, demotions, SSD staging,
+    // remote fetches, and the proactive sweep all feeding the index.
+    let mk = |use_idx| SimConfig {
+        use_prefix_index: use_idx,
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(50_000),
+        demote_after_ms: Some(120_000.0),
+        n_prefill: 4,
+        n_decode: 4,
+        ..Default::default()
+    };
+    let a = sim::run(&mk(true), &t, 2.0);
+    let b = sim::run(&mk(false), &t, 2.0);
+    assert!(a.tier.demotions > 0, "pressure scenario must exercise demotion");
+    assert_runs_identical(&a, &b);
 }
 
 #[test]

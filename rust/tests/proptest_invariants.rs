@@ -181,7 +181,7 @@ fn prop_tiered_pool_conservation() {
                     pool.insert_replica(&chain, now);
                 }
                 2 => {
-                    pool.demote_block(rng.below(300), now);
+                    let _ = pool.demote_block(rng.below(300), now);
                 }
                 _ => {
                     let len = 1 + rng.below(24) as usize;
@@ -245,6 +245,67 @@ fn prop_demote_promote_round_trip_preserves_chain() {
         assert_eq!(s.dropped, 0, "round trip must not destroy blocks");
         assert_eq!(pool.prefix_match(&chain).blocks, len);
         assert_eq!(pool.len(), len);
+    }
+}
+
+/// Property: the Conductor's global prefix index — maintained *only*
+/// from the `TierDelta`s the pool mutators return — agrees with the
+/// brute-force per-node `prefix_match` and with a full rebuild, after an
+/// arbitrary interleaving of admit / evict / demote / promote / replica
+/// / idle-sweep operations across every eviction policy.
+#[test]
+fn prop_prefix_index_agrees_with_per_node_scan() {
+    use mooncake::kvcache::PrefixIndex;
+    let mut rng = Rng::new(0x1DE7);
+    for round in 0..9 {
+        let n_nodes = 1 + rng.below(6) as usize;
+        let kind = [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LengthAware][round % 3];
+        let dram_cap = 1 + rng.below(40) as usize;
+        let ssd_cap = rng.below(80) as usize; // 0 = tier disabled
+        let mut pools: Vec<CachePool> = (0..n_nodes)
+            .map(|_| CachePool::new(kind, Some(dram_cap), Some(ssd_cap)))
+            .collect();
+        let mut idx = PrefixIndex::new(n_nodes);
+        for step in 0..1_200u64 {
+            let now = step as f64;
+            let node = rng.below(n_nodes as u64) as usize;
+            let delta = match rng.below(8) {
+                0 => pools[node].admit_block(rng.below(200), rng.below(30) as usize, now).1,
+                1 => {
+                    let chain: Vec<u64> =
+                        (0..1 + rng.below(8)).map(|_| rng.below(200)).collect();
+                    pools[node].insert_replica(&chain, now)
+                }
+                2 => pools[node].demote_block(rng.below(200), now).unwrap_or_default(),
+                3 => pools[node].demote_idle(now, 1.0 + rng.f64() * 50.0),
+                _ => {
+                    let len = 1 + rng.below(16) as usize;
+                    let start = rng.below(180);
+                    let chain: Vec<u64> = (start..start + len as u64).collect();
+                    let reused = rng.below(len as u64 + 1) as usize;
+                    pools[node].admit_chain_reusing(&chain, reused, now)
+                }
+            };
+            idx.apply(node, &delta);
+            if step % 100 == 0 {
+                assert!(
+                    idx.equals_rebuild_of(pools.iter()),
+                    "round {round} step {step}: incremental index != rebuild"
+                );
+            }
+            // The one-walk match equals every node's own scan.
+            let start = rng.below(180);
+            let probe: Vec<u64> = (start..start + 1 + rng.below(20)).collect();
+            let got = idx.best_prefix(&probe);
+            for (n, pool) in pools.iter().enumerate() {
+                assert_eq!(
+                    got[n],
+                    pool.prefix_match(&probe),
+                    "round {round} step {step} node {n}"
+                );
+            }
+        }
+        assert!(idx.equals_rebuild_of(pools.iter()), "round {round}: final state diverged");
     }
 }
 
