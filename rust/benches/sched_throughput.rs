@@ -14,9 +14,16 @@
 //! * **simulator events/sec** — end-to-end `sim::run` over a synthetic
 //!   chain-sharing trace, index on vs off.
 //!
-//! Emits `BENCH_sched.json` (the trajectory artifact CI uploads) and, in
-//! full mode, asserts the ≥5× decision-throughput target on the 64-node
-//! × 4096-block cell.  `--smoke` runs tiny sizes for CI.
+//! A **congestion cell** (ISSUE 4) rides along: one hot source holds
+//! the probe chain (half demoted to SSD) behind deep NVMe and NIC-tx
+//! backlogs, so every candidate's pricing walks the new resource-queue
+//! probes (source NVMe, source tx, destination rx) — decisions/sec with
+//! index on vs off, plus an end-to-end finite-rx sim.
+//!
+//! Emits `BENCH_sched.json` (the trajectory artifact CI uploads — the
+//! congestion cell writes into the same file, no parallel artifacts)
+//! and, in full mode, asserts the ≥5× decision-throughput target on the
+//! 64-node × 4096-block cell.  `--smoke` runs tiny sizes for CI.
 
 use std::time::Instant;
 
@@ -25,9 +32,9 @@ use mooncake::conductor::{self, ConductorStats, SchedRequest};
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
 use mooncake::decode::DecodeInstance;
 use mooncake::kvcache::PrefixIndex;
-use mooncake::messenger::Messenger;
 use mooncake::model::PerfModel;
 use mooncake::prefill::PrefillPool;
+use mooncake::resource::Resources;
 use mooncake::sim;
 use mooncake::trace::{TraceRecord, BLOCK_TOKENS};
 use mooncake::util::json::{self, Value};
@@ -95,7 +102,7 @@ fn bench_decisions(cfg: &SimConfig, chain: usize, iters: usize, use_index: bool)
     let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
         .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
         .collect();
-    let mut msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+    let mut res = Resources::new(&cfg, &perf);
     let mut rng = Rng::new(7);
     let mut stats = ConductorStats::default();
     let req = SchedRequest {
@@ -110,7 +117,7 @@ fn bench_decisions(cfg: &SimConfig, chain: usize, iters: usize, use_index: bool)
             perf: &perf,
             prefill: &mut pool,
             decodes: &decodes,
-            messenger: &mut msgr,
+            res: &mut res,
             rng: &mut rng,
             now,
             index: index.as_mut(),
@@ -154,6 +161,73 @@ fn bench_sim_events(cfg: &SimConfig, trace: &[TraceRecord], use_index: bool) -> 
     let t = Instant::now();
     let res = sim::run(&cfg, trace, 1.0);
     res.n_events as f64 / t.elapsed().as_secs_f64()
+}
+
+/// Congestion-cell decisions/sec: only node 0 holds the probe chain
+/// (every other block demoted to its SSD tier) and its NVMe + NIC-tx
+/// queues carry deep standing backlogs, so every candidate prices a
+/// fetch-from-0 through the contended resource probes — source NVMe,
+/// source tx, destination rx (finite rx bandwidth) — in SLO-rejecting
+/// steady state ("many nodes staging against one hot source").
+fn bench_congested_decisions(nodes: usize, chain: usize, iters: usize, use_index: bool) -> f64 {
+    let mut cfg = cfg_for(nodes);
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    cfg.kvcache_balancing_threshold = 1.5;
+    cfg.nic_rx_bw = Some(10e9);
+    let perf = PerfModel::paper();
+    let mut pool = PrefillPool::new(&cfg);
+    let probe: Vec<BlockId> = (0..chain as u64).collect();
+    pool.instances[0].pool.admit_chain(&probe, 0.0);
+    for (k, &b) in probe.iter().enumerate() {
+        if k % 2 == 1 {
+            let _ = pool.instances[0].pool.demote_block(b, 1.0);
+        }
+    }
+    for (node, inst) in pool.instances.iter_mut().enumerate() {
+        for f in 0..2u64 {
+            let base = 1_000_000 + (node as u64 * 2 + f) * chain as u64;
+            let filler: Vec<BlockId> = (base..base + chain as u64).collect();
+            inst.pool.admit_chain(&filler, 0.0);
+        }
+    }
+    let mut index = use_index.then(|| pool.build_prefix_index());
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    // Deep standing backlogs on the hot source's devices.
+    res.nvme.schedule(0, 0.0, 1_000_000_000_000, 0.0);
+    res.nic.schedule(0, 1, 0.0, 1_000_000_000_000);
+    let mut rng = Rng::new(7);
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..iters.min(10) {
+        run_one(w as f64);
+    }
+    let t = Instant::now();
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    iters as f64 / t.elapsed().as_secs_f64()
 }
 
 fn run_cell(nodes: usize, chain: usize, n_trace: usize) -> Cell {
@@ -210,6 +284,30 @@ fn main() {
         }
     }
 
+    // Congestion cell on the largest configured size: hot-source
+    // contention on every probe of the pricing path, plus an end-to-end
+    // finite-rx sim (incast congestion live in the event loop).
+    let (cg_nodes, cg_chain) = (*node_counts.last().unwrap(), *chains.last().unwrap());
+    let cg_iters = (10_000_000 / (cg_nodes * cg_chain)).clamp(50, 2_000);
+    let cg_scan = bench_congested_decisions(cg_nodes, cg_chain, cg_iters, false);
+    let cg_index = bench_congested_decisions(cg_nodes, cg_chain, cg_iters, true);
+    let mut cg_cfg = cfg_for(cg_nodes);
+    cg_cfg.nic_rx_bw = Some(10e9);
+    let cg_trace = synth_trace(n_trace, cg_chain);
+    let cg_ev_scan = bench_sim_events(&cg_cfg, &cg_trace, false);
+    let cg_ev_index = bench_sim_events(&cg_cfg, &cg_trace, true);
+    row(&[
+        format!("{cg_nodes}*"),
+        cg_chain.to_string(),
+        format!("{cg_scan:.0}"),
+        format!("{cg_index:.0}"),
+        format!("{:.2}x", cg_index / cg_scan),
+        format!("{cg_ev_scan:.0}"),
+        format!("{cg_ev_index:.0}"),
+        format!("{:.2}x", cg_ev_index / cg_ev_scan),
+    ]);
+    println!("(* = congestion cell: hot source with NVMe/tx backlogs, finite rx)");
+
     let target = cells.iter().find(|c| c.nodes == TARGET_NODES && c.chain == TARGET_CHAIN);
     let mut obj = vec![
         ("bench", Value::Str("sched_throughput".into())),
@@ -235,6 +333,19 @@ fn main() {
             ),
         ),
     ];
+    obj.push((
+        "congestion",
+        json::obj(vec![
+            ("nodes", json::num(cg_nodes as f64)),
+            ("chain_blocks", json::num(cg_chain as f64)),
+            ("decisions_per_sec_scan", json::num(cg_scan)),
+            ("decisions_per_sec_index", json::num(cg_index)),
+            ("decision_speedup", json::num(cg_index / cg_scan)),
+            ("sim_events_per_sec_scan", json::num(cg_ev_scan)),
+            ("sim_events_per_sec_index", json::num(cg_ev_index)),
+            ("sim_event_speedup", json::num(cg_ev_index / cg_ev_scan)),
+        ]),
+    ));
     if let Some(c) = target {
         obj.push((
             "target",

@@ -5,12 +5,18 @@
 //! the standalone proactive view: tracking block heat and deciding, given
 //! NIC backlogs, which blocks deserve an extra replica — used by the Fig 8
 //! "KVCache-centric" configuration and unit-testable in isolation.
+//!
+//! Holder sets come from the Conductor's global
+//! [`PrefixIndex`] — one probe per block for the whole
+//! cluster — instead of a `contains` scan of every pool, and congestion
+//! is read off the NIC-tx resource queues.
+
+use crate::kvcache::PrefixIndex;
+use crate::prefill::PrefillPool;
+use crate::resource::Resources;
+use crate::{BlockId, TimeMs};
 
 use std::collections::HashMap;
-
-use crate::messenger::Messenger;
-use crate::prefill::PrefillPool;
-use crate::{BlockId, TimeMs};
 
 /// Exponentially-decayed access counter per block.
 #[derive(Debug, Default)]
@@ -55,12 +61,16 @@ impl HeatTracker {
 }
 
 /// Decide proactive replications: a hot block held by a congested node
-/// (deep NIC backlog) is copied to the least-loaded non-holder.  Returns
-/// (block, from, to) triples; the caller performs the transfers.
+/// (deep NIC-tx backlog) is copied to the least-loaded non-holder.
+/// Holder sets come from the global `index`; destination load from the
+/// prefill queues.  Returns (block, from, to) triples; the caller
+/// performs the transfers.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_replications(
     tracker: &HeatTracker,
     pool: &PrefillPool,
-    messenger: &Messenger,
+    index: &PrefixIndex,
+    res: &Resources,
     now: TimeMs,
     heat_threshold: f64,
     backlog_threshold_ms: f64,
@@ -71,20 +81,14 @@ pub fn plan_replications(
         if plans.len() >= max_plans {
             break;
         }
-        let holders: Vec<usize> = pool
-            .instances
-            .iter()
-            .enumerate()
-            .filter(|(_, i)| i.pool.contains(block))
-            .map(|(i, _)| i)
-            .collect();
+        let holders = index.holders(block);
         if holders.is_empty() || holders.len() == pool.len() {
             continue; // nowhere to copy from / already everywhere
         }
         // Only replicate when every holder's NIC is congested.
         let min_backlog = holders
             .iter()
-            .map(|&h| messenger.backlog_ms(h, now))
+            .map(|&h| res.nic.backlog_ms(h, now))
             .fold(f64::INFINITY, f64::min);
         if min_backlog < backlog_threshold_ms {
             continue;
@@ -92,9 +96,9 @@ pub fn plan_replications(
         let src = *holders
             .iter()
             .min_by(|&&a, &&b| {
-                messenger
+                res.nic
                     .backlog_ms(a, now)
-                    .partial_cmp(&messenger.backlog_ms(b, now))
+                    .partial_cmp(&res.nic.backlog_ms(b, now))
                     .unwrap()
             })
             .unwrap();
@@ -117,6 +121,8 @@ pub fn plan_replications(
 mod tests {
     use super::*;
     use crate::config::SimConfig;
+    use crate::model::PerfModel;
+    use crate::resource::Resources;
 
     #[test]
     fn heat_decays() {
@@ -146,26 +152,30 @@ mod tests {
     #[test]
     fn replication_targets_congested_holders() {
         let cfg = SimConfig::default();
+        let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&cfg);
-        let mut msgr = Messenger::new(cfg.n_prefill, 100e9, 1.0);
+        let mut res = Resources::new(&cfg, &perf);
         let mut tracker = HeatTracker::new(1e9);
 
-        // Block 7 lives only on instance 0, which is congested.
+        // Block 7 lives only on instance 0, which is congested.  The
+        // planner reads holders off the index, not the pools.
         pool.instances[0].pool.insert_replica(&[7], 0.0);
+        let idx = pool.build_prefix_index();
+        assert_eq!(idx.holders(7), vec![0]);
         for _ in 0..100 {
             tracker.touch(7, 0.0);
         }
-        msgr.schedule(0, 0.0, 500_000_000_000); // 5000 ms backlog
+        res.nic.schedule(0, 1, 0.0, 500_000_000_000); // 5000 ms backlog
 
-        let plans = plan_replications(&tracker, &pool, &msgr, 0.0, 10.0, 100.0, 4);
+        let plans = plan_replications(&tracker, &pool, &idx, &res, 0.0, 10.0, 100.0, 4);
         assert_eq!(plans.len(), 1);
         let (b, src, dst) = plans[0];
         assert_eq!((b, src), (7, 0));
         assert_ne!(dst, 0);
 
         // Without congestion: no replication.
-        let quiet = Messenger::new(cfg.n_prefill, 100e9, 1.0);
-        let plans = plan_replications(&tracker, &pool, &quiet, 0.0, 10.0, 100.0, 4);
+        let quiet = Resources::new(&cfg, &perf);
+        let plans = plan_replications(&tracker, &pool, &idx, &quiet, 0.0, 10.0, 100.0, 4);
         assert!(plans.is_empty());
     }
 }

@@ -21,9 +21,9 @@ use crate::config::{SchedulingPolicy, SimConfig};
 use crate::costmodel::{self, FetchPlan, PrefillEstimate};
 use crate::decode::DecodeInstance;
 use crate::kvcache::{PrefixIndex, Tier, TierMatch};
-use crate::messenger::Messenger;
 use crate::model::PerfModel;
 use crate::prefill::{JobId, PrefillPool};
+use crate::resource::Resources;
 use crate::trace::BLOCK_TOKENS;
 use crate::util::rng::Rng;
 use crate::{BlockId, TimeMs};
@@ -77,11 +77,18 @@ pub struct Placement {
     /// Of the reused prefix, blocks staged up from the primary's SSD
     /// tier (0 when the three-way decision chose recompute instead).
     pub ssd_load_blocks: usize,
+    /// Tokens the local staging read covers (`ssd_load_blocks` clamped
+    /// to the input), and when the read — reserved on the primary's
+    /// NVMe queue at admission — lands.
+    pub ssd_stage_tokens: u64,
+    pub ssd_stage_done: Option<TimeMs>,
     /// Remote fetch performed before prefill (source instance, blocks).
     pub fetch: Option<(usize, usize)>,
     /// Of the fetched blocks, how many the source staged up from its own
-    /// SSD tier before its NIC could serialize them (§6.2 + tiering).
+    /// SSD tier before its NIC could serialize them (§6.2 + tiering),
+    /// and when that read — reserved on the source's NVMe queue — lands.
     pub fetch_ssd_stage_blocks: usize,
+    pub fetch_stage_done: Option<TimeMs>,
     /// Planned prefill window from the unified cost model (the group is
     /// occupied for the span; `prefill_end - arrival` is the estimated
     /// TTFT).
@@ -98,7 +105,9 @@ pub struct Ctx<'a> {
     pub perf: &'a PerfModel,
     pub prefill: &'a mut PrefillPool,
     pub decodes: &'a [DecodeInstance],
-    pub messenger: &'a mut Messenger,
+    /// The per-node resource banks (NIC tx/rx + NVMe): estimates probe
+    /// them read-only; the committed placement reserves on them.
+    pub res: &'a mut Resources,
     pub rng: &'a mut Rng,
     pub now: TimeMs,
     /// The global prefix index (§5): when present, `FindBestPrefixMatch`
@@ -150,7 +159,7 @@ fn estimate_for(
         ctx.perf,
         ctx.cfg,
         &*ctx.prefill,
-        &*ctx.messenger,
+        &*ctx.res,
         i,
         n_new,
         prefix_tokens,
@@ -330,10 +339,35 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                     // The wire plan only differs when local SSD copies
                     // exist — don't pay a second probe otherwise.
                     let wire_plan = if matches[i].ssd_blocks > 0 {
+                        // Exact source-SSD accounting: the wire plan also
+                        // re-fetches the candidate's own SSD copies inside
+                        // its matched head, and the *source* may hold some
+                        // of those on its SSD too — each one is a staging
+                        // read the source pays before its NIC can start.
+                        // (They were formerly assumed DRAM-resident on the
+                        // source, underpricing the wire plan exactly when
+                        // both ends had demoted the same blocks.)  The
+                        // source side reuses the suffix array (SSD at j ⟺
+                        // suf[j] > suf[j+1]), so only the candidate's own
+                        // tier is probed — and only when the source holds
+                        // any SSD copy inside this head at all.
+                        let head_overlap = match &src_ssd_suffix {
+                            Some(suf) if suf[0] > suf[local.min(best_blocks)] => {
+                                req.hash_ids[..local]
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|&(j, &b)| {
+                                        suf[j] > suf[j + 1]
+                                            && tier_on(ctx, i, b) == Some(Tier::Ssd)
+                                    })
+                                    .count()
+                            }
+                            _ => 0,
+                        };
                         let wire_fetch = FetchPlan {
                             src: best_inst,
                             blocks: best_blocks - matches[i].dram_blocks,
-                            src_ssd_blocks: src_ssd_from(local),
+                            src_ssd_blocks: src_ssd_from(local) + head_overlap,
                         };
                         let wire = estimate_for(ctx, req, i, best_blocks, 0, Some(wire_fetch));
                         (wire.end < stage.end).then_some((wire_fetch, wire))
@@ -404,8 +438,9 @@ pub fn select_decode(
 }
 
 /// Full Algorithm 1.  Mutates the prefill pool (job admission +
-/// optimistic cache admission), the messenger (remote prefix fetch), and
-/// the stats.  The *decode* side is only probed here; the Sim owns
+/// optimistic cache admission), the resource banks (remote prefix fetch
+/// on NIC tx/rx, staging reads and demotion writes on NVMe), and the
+/// stats.  The *decode* side is only probed here; the Sim owns
 /// decode state transitions, and the Sim's `PrefillStart`/`PrefillDone`
 /// events execute the admitted job.
 pub fn schedule(
@@ -450,19 +485,42 @@ pub fn schedule(
     let (prefix_tokens, n_new) = req.split(choice.eff_blocks);
     let ssd_tokens = (choice.ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
 
+    // Local SSD→DRAM staging (the load half of the three-way decision):
+    // reserve the read on the primary's NVMe queue — the same probe the
+    // estimate priced, reserved first so admission-driven demotion
+    // writes below queue *behind* it, not ahead of it.  It overlaps both
+    // the FIFO drain and any remote fetch (independent devices).
+    let mut ssd_stage_done = None;
+    if ssd_tokens > 0 {
+        let op = costmodel::schedule_stage(ctx.perf, &mut ctx.res.nvme, p, ctx.now, ssd_tokens);
+        ssd_stage_done = Some(op.end);
+    }
+
     // Remote prefix fetch (balancing branch): the fetch must land before
-    // prefill starts; it runs on the *source* node's NIC — the same NIC
-    // the estimate above probed — after the source stages any of the
-    // transferred blocks it keeps on SSD (same staging the estimate
-    // charged).
+    // prefill starts.  Reserve exactly what the estimate probed, in the
+    // same order: the source's NVMe queue for any transferred blocks it
+    // keeps on SSD, then the wire — source tx, destination rx.
     let mut fetch_gate = ctx.now;
     let mut fetch = None;
     let mut fetch_ssd_stage_blocks = 0;
+    let mut fetch_stage_done = None;
     if let Some(plan) = choice.fetch {
         if plan.blocks > 0 {
             let bytes = costmodel::fetch_bytes(ctx.perf, plan.blocks);
-            let wire_start = ctx.now + plan.src_stage_ms(ctx.perf);
-            let tr = ctx.messenger.schedule(plan.src, wire_start, bytes);
+            let wire_start = if plan.src_ssd_blocks > 0 {
+                let op = costmodel::schedule_stage(
+                    ctx.perf,
+                    &mut ctx.res.nvme,
+                    plan.src,
+                    ctx.now,
+                    plan.src_ssd_blocks as u64 * BLOCK_TOKENS,
+                );
+                fetch_stage_done = Some(op.end);
+                op.end
+            } else {
+                ctx.now
+            };
+            let tr = ctx.res.nic.schedule(plan.src, p, wire_start, bytes);
             fetch_gate = tr.end;
             fetch = Some((plan.src, plan.blocks));
             fetch_ssd_stage_blocks = plan.src_ssd_blocks;
@@ -494,12 +552,18 @@ pub fn schedule(
             if let Some(idx) = ctx.index.as_deref_mut() {
                 idx.apply(p, &delta);
             }
+            // Replica insertion under capacity pressure demotes victims:
+            // those writes share the destination's NVMe device.
+            let _ = ctx.res.schedule_demote_writes(ctx.perf, p, ctx.now, delta.demoted_to_ssd());
             stats.migrations += 1;
         }
     }
 
+    // The job may not start before both gates have landed.
+    let job_gate = fetch_gate.max(ssd_stage_done.unwrap_or(ctx.now));
+
     // Admit the job onto the group's FIFO queues.  The planned window is
-    // the estimate: same cost model, same state, same SSD staging.
+    // the estimate: same cost model, same queue state, same gates.
     let job = ctx.prefill.submit(
         ctx.perf,
         ctx.cfg,
@@ -507,8 +571,7 @@ pub fn schedule(
         &choice.est.group,
         n_new,
         prefix_tokens,
-        ssd_tokens,
-        fetch_gate,
+        job_gate,
         ctx.now,
     );
     let (planned_start, planned_end) = {
@@ -532,15 +595,19 @@ pub fn schedule(
     if let Some(idx) = ctx.index.as_deref_mut() {
         idx.apply(p, &delta);
     }
+    // Eviction pressure from this admission demoted blocks: the NVMe
+    // writes queue behind the staging reads reserved above.
+    let _ = ctx.res.schedule_demote_writes(ctx.perf, p, ctx.now, delta.demoted_to_ssd());
     let reused = (ctx.prefill.instances[p].pool.stats.hits() - hits_before) as usize;
 
     // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
     // prefill; the Sim schedules the actual wire transfer when the job
-    // starts — this is the matching estimate.
+    // starts — this is the matching estimate (primary tx, decode rx).
     let kv_arrive = costmodel::estimate_kv_arrival(
         ctx.perf,
-        &*ctx.messenger,
+        &*ctx.res,
         p,
+        ctx.cfg.n_prefill + d,
         planned_start,
         planned_end,
         req.input_tokens,
@@ -567,8 +634,11 @@ pub fn schedule(
         decode: d,
         local_prefix_blocks: choice.local_blocks,
         ssd_load_blocks: choice.ssd_blocks,
+        ssd_stage_tokens: ssd_tokens,
+        ssd_stage_done,
         fetch,
         fetch_ssd_stage_blocks,
+        fetch_stage_done,
         prefill_start: planned_start,
         prefill_end: planned_end,
         kv_arrive,
@@ -583,15 +653,15 @@ mod tests {
 
     fn setup(
         policy: SchedulingPolicy,
-    ) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Messenger, Rng) {
+    ) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Resources, Rng) {
         let cfg = SimConfig { scheduling: policy, ..Default::default() };
         let perf = PerfModel::paper();
         let prefill = PrefillPool::new(&cfg);
         let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
             .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
             .collect();
-        let messenger = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
-        (cfg, perf, prefill, decodes, messenger, Rng::new(7))
+        let res = Resources::new(&cfg, &perf);
+        (cfg, perf, prefill, decodes, res, Rng::new(7))
     }
 
     fn req(rid: u64, blocks: u64) -> SchedRequest {
@@ -604,13 +674,13 @@ mod tests {
     }
 
     macro_rules! ctx {
-        ($cfg:expr, $perf:expr, $prefill:expr, $decodes:expr, $msgr:expr, $rng:expr, $now:expr) => {
+        ($cfg:expr, $perf:expr, $prefill:expr, $decodes:expr, $res:expr, $rng:expr, $now:expr) => {
             Ctx {
                 cfg: &$cfg,
                 perf: &$perf,
                 prefill: &mut $prefill,
                 decodes: &$decodes,
-                messenger: &mut $msgr,
+                res: &mut $res,
                 rng: &mut $rng,
                 now: $now,
                 index: None,
@@ -722,7 +792,7 @@ mod tests {
         // Source NIC asymmetrically congested far past the TTFT SLO: the
         // estimate must see it and reject (the old destination-NIC
         // estimate accepted, then the fetch landed ~2000 s late).
-        msgr.schedule(holder, 1e6, 200_000_000_000_000); // ~2e6 ms of backlog
+        msgr.nic.schedule(holder, holder + 1, 1e6, 200_000_000_000_000); // ~2e6 ms of backlog
         let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e6);
         let e = schedule(&mut ctx, &r, &mut stats).unwrap_err();
         assert_eq!(e, RejectReason::TtftSlo);
@@ -743,7 +813,7 @@ mod tests {
             .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
             .unwrap();
         prefill2.instances[holder2].block_until(1e9);
-        msgr2.schedule(holder2, 1e6, 1_000_000_000_000); // ~10 s backlog
+        msgr2.nic.schedule(holder2, holder2 + 1, 1e6, 1_000_000_000_000); // ~10 s backlog
         let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats2).unwrap();
         assert!(p.fetch.is_some());
@@ -860,7 +930,7 @@ mod tests {
                     perf: &perf_b,
                     prefill: &mut pf_b,
                     decodes: &dec_b,
-                    messenger: &mut ms_b,
+                    res: &mut ms_b,
                     rng: &mut rng_b,
                     now,
                     index: Some(&mut idx),
@@ -883,6 +953,86 @@ mod tests {
         assert_eq!(sa, sb);
         // The incrementally maintained index still equals a rebuild.
         assert!(idx.equals_rebuild_of(pf_b.instances.iter().map(|i| &i.pool)));
+    }
+
+    #[test]
+    fn wire_refresh_prices_source_ssd_copies_in_matched_head() {
+        // ROADMAP PR 3 follow-up: the balancing branch's *wire plan*
+        // re-fetches the candidate's own SSD copies inside its matched
+        // head — and when the source ALSO holds those blocks on SSD,
+        // each one is a staging read the source pays before its NIC can
+        // start.  They used to be assumed DRAM-resident on the source,
+        // underpricing the wire plan exactly when both ends had demoted
+        // the same blocks.
+        let mk = || {
+            let cfg = SimConfig {
+                scheduling: SchedulingPolicy::KvCacheCentric,
+                n_prefill: 2,
+                n_decode: 2,
+                kvcache_balancing_threshold: 1.5,
+                ..Default::default()
+            };
+            let perf = PerfModel::paper();
+            let prefill = PrefillPool::new(&cfg);
+            let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+                .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+                .collect();
+            let res = Resources::new(&cfg, &perf);
+            (cfg, perf, prefill, decodes, res, Rng::new(7))
+        };
+        let chain: Vec<BlockId> = (100..108).collect();
+        let r = SchedRequest {
+            rid: 1,
+            input_tokens: 8 * BLOCK_TOKENS,
+            output_tokens: 10,
+            hash_ids: chain.clone(),
+        };
+
+        // Case A: the source keeps two of the candidate's three SSD-held
+        // head blocks on its own SSD too.  Wire-refreshing them costs
+        // the source three NVMe stagings serialized before the wire —
+        // slower than staging locally (which overlaps the fetch), so the
+        // exact accounting must flip the decision to the stage plan.
+        let (cfg, perf, mut prefill, decodes, mut res, mut rng) = mk();
+        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        for b in [chain[2], chain[3], chain[6]] {
+            assert!(prefill.instances[0].pool.demote_block(b, 1.0).is_some());
+        }
+        prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
+        for b in [chain[1], chain[2], chain[3]] {
+            assert!(prefill.instances[1].pool.demote_block(b, 1.0).is_some());
+        }
+        prefill.instances[0].block_until(1e9); // swamp the holder
+        let mut stats = ConductorStats::default();
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, 1e6);
+        let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_eq!(p.prefill_group[0], 1, "swamped holder must lose the placement");
+        assert_eq!(
+            (p.fetch, p.ssd_load_blocks, p.fetch_ssd_stage_blocks),
+            (Some((0, 4)), 3, 1),
+            "overlapping SSD copies must push the decision to the stage plan"
+        );
+
+        // Case B: the source holds the candidate's SSD head blocks in
+        // DRAM (only a gap block on SSD) — the wire refresh stays cheap
+        // and must win, with exactly the gap block staged at the source.
+        let (cfg, perf, mut prefill, decodes, mut res, mut rng) = mk();
+        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        assert!(prefill.instances[0].pool.demote_block(chain[6], 1.0).is_some());
+        prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
+        for b in [chain[1], chain[2], chain[3]] {
+            assert!(prefill.instances[1].pool.demote_block(b, 1.0).is_some());
+        }
+        prefill.instances[0].block_until(1e9);
+        let mut stats = ConductorStats::default();
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, 1e6);
+        let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+        assert_eq!(p.prefill_group[0], 1);
+        assert_eq!(
+            (p.fetch, p.ssd_load_blocks, p.fetch_ssd_stage_blocks),
+            (Some((0, 7)), 0, 1),
+            "DRAM-resident head copies on the source keep the wire plan cheap"
+        );
     }
 
     #[test]

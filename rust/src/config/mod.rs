@@ -72,10 +72,21 @@ pub struct SimConfig {
     /// Conductor keeps a global block→node prefix index so
     /// `FindBestPrefixMatch` is one O(chain) walk instead of a scan of
     /// every pool.  Pure optimization: results are bit-for-bit identical
-    /// either way.  `false` restores the per-node scan, and clusters
-    /// beyond `PrefixIndex::MAX_NODES` prefill nodes fall back to it
-    /// automatically.
+    /// either way.  `false` restores the per-node scan; the widened
+    /// `[u64; W]` bitsets cover up to `PrefixIndex::MAX_NODES` prefill
+    /// nodes with no automatic fallback.
     pub use_prefix_index: bool,
+    /// Per-node NIC *receive* bandwidth in B/s.  A transfer completes at
+    /// the max of source-tx and destination-rx availability, so a finite
+    /// value makes fan-in onto one hot node (incast, §6.1) congest.
+    /// `None` = unconstrained ingress — bit-for-bit the pre-rx-queue
+    /// behavior (the default).
+    pub nic_rx_bw: Option<f64>,
+    /// Per-node NVMe *write* bandwidth in B/s: demotion writes occupy
+    /// the same device queue staging reads contend on.  `None` =
+    /// demotion writes are free (the default, preserving the
+    /// pre-NVMe-queue behavior).
+    pub ssd_write_bw: Option<f64>,
     /// Proactive background demotion: a low-priority sweep moves DRAM
     /// blocks idle at least this long (ms) down to the SSD tier instead
     /// of waiting for eviction pressure.  `None` = off (the default —
@@ -102,6 +113,8 @@ impl Default for SimConfig {
             slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
             overload_threshold: 1.0,
             use_prefix_index: true,
+            nic_rx_bw: None,
+            ssd_write_bw: None,
             demote_after_ms: None,
             seed: 42,
         }

@@ -12,21 +12,30 @@
 //! *destination* NIC and added fetch and queue serially, where execution
 //! used the *source* NIC and overlapped the fetch with queue drain).
 //!
-//! Now both sides call this module:
+//! Now both sides call this module, and **every device term is a queue
+//! probe, not a closed form**: NIC-tx, NIC-rx, and NVMe time all flows
+//! through [`crate::resource::BwQueue`] banks, so estimates stay honest
+//! even under concurrent stagings and incast:
 //!
 //! * [`estimate_prefill`] — Conductor's `EstimatePrefillExecutionTime` +
-//!   `EstimateKVCacheTransferTime` + queue probe, returning an absolute
-//!   planned (start, end) window;
+//!   `EstimateKVCacheTransferTime` + queue probes (prefill FIFO, source
+//!   tx, destination rx, both ends' NVMe), returning an absolute planned
+//!   (start, end) window;
 //! * [`crate::prefill::PrefillPool::submit`] — the executor admits a job
 //!   using the *same* function of the *same* state, so the simulator's
 //!   `PrefillStart`/`PrefillDone` events land exactly where the estimate
 //!   said they would (a property `rust/tests/cost_model_agreement.rs`
 //!   asserts end-to-end).
+//!
+//! SSD staging is a **gate**, like the remote fetch: the NVMe read is
+//! reserved on the node's queue at admission and the job may not start
+//! before it lands (it overlaps queue drain and any fetch — independent
+//! devices), which is also what makes concurrent stagings contend.
 
 use crate::config::SimConfig;
-use crate::messenger::Messenger;
 use crate::model::PerfModel;
 use crate::prefill::PrefillPool;
+use crate::resource::{BwQueue, Op, Resources};
 use crate::trace::BLOCK_TOKENS;
 use crate::TimeMs;
 
@@ -42,33 +51,62 @@ pub fn prefix_load_ms(perf: &PerfModel, prefix_tokens: u64) -> f64 {
     perf.dram_load_ms(prefix_tokens) * PREFIX_LOAD_VISIBLE_FRACTION
 }
 
-/// Staging latency of the SSD-resident part of a reused prefix: the
-/// NVMe read lands the blocks in DRAM *before* the layer-wise DRAM→VRAM
-/// load can touch them, so — unlike the DRAM load — it sits fully on the
-/// critical path.  That asymmetry is exactly what makes recomputation
-/// competitive with loading for shallow prefixes (the "compute or load?"
-/// branch of Algorithm 1's three-way prefix decision).
-pub fn ssd_stage_ms(perf: &PerfModel, ssd_prefix_tokens: u64) -> f64 {
-    perf.ssd_load_ms(ssd_prefix_tokens, ssd_prefix_tokens.div_ceil(BLOCK_TOKENS))
+/// Wire bytes of `tokens` of KVCache (an NVMe staging read or write
+/// moves the same bytes the wire would).
+pub fn stage_bytes(perf: &PerfModel, tokens: u64) -> u64 {
+    tokens * perf.model.kv_bytes_per_token()
+}
+
+/// Per-op setup of an NVMe staging read spanning `tokens`: the
+/// random-access IOPS term, one seek per cache block.
+pub fn stage_setup_ms(perf: &PerfModel, tokens: u64) -> f64 {
+    tokens.div_ceil(BLOCK_TOKENS) as f64 / perf.hw.ssd_iops * 1e3
+}
+
+/// Absolute landing time of an SSD→DRAM staging read of `tokens` on
+/// `node`, **through the node's NVMe queue** — concurrent stagings (and
+/// demotion writes) on the same device serialize.  Read-only;
+/// [`schedule_stage`] is the matching reservation and returns the same
+/// time bit-for-bit.
+pub fn estimate_stage_done(
+    perf: &PerfModel,
+    nvme: &BwQueue,
+    node: usize,
+    now: TimeMs,
+    tokens: u64,
+) -> TimeMs {
+    if tokens == 0 {
+        return now;
+    }
+    nvme.estimate_done(node, now, stage_bytes(perf, tokens), stage_setup_ms(perf, tokens))
+}
+
+/// Reserve the staging read [`estimate_stage_done`] priced.
+pub fn schedule_stage(
+    perf: &PerfModel,
+    nvme: &mut BwQueue,
+    node: usize,
+    now: TimeMs,
+    tokens: u64,
+) -> Op {
+    nvme.schedule(node, now, stage_bytes(perf, tokens), stage_setup_ms(perf, tokens))
 }
 
 /// Execution makespan of one prefill job on a CPP group of `group_len`
-/// nodes: chunked-pipeline compute, the visible prefix-load head, and
-/// the SSD staging of the `ssd_prefix_tokens` ⊆ `prefix_tokens` that
-/// live on the slow tier.  This is the ONE definition of "how long a
-/// prefill takes" — both the estimator and the executor use it.
+/// nodes: chunked-pipeline compute plus the visible prefix-load head.
+/// SSD staging is *not* part of the makespan — it is a gate reserved on
+/// the node's NVMe queue, overlapping queue drain.  This is the ONE
+/// definition of "how long a running prefill takes" — both the
+/// estimator and the executor use it.
 pub fn prefill_exec_ms(
     perf: &PerfModel,
     cfg: &SimConfig,
     n_new: u64,
     prefix_tokens: u64,
-    ssd_prefix_tokens: u64,
     group_len: u64,
 ) -> f64 {
-    debug_assert!(ssd_prefix_tokens <= prefix_tokens);
     perf.cpp_prefill_ms(n_new, prefix_tokens, cfg.prefill_chunk, group_len)
         + prefix_load_ms(perf, prefix_tokens)
-        + ssd_stage_ms(perf, ssd_prefix_tokens)
 }
 
 /// Wire bytes of a remote prefix fetch of `blocks` cache blocks (§6.2).
@@ -79,19 +117,13 @@ pub fn fetch_bytes(perf: &PerfModel, blocks: usize) -> u64 {
 /// A remote §6.2 prefix fetch: `blocks` cache blocks pulled from `src`,
 /// of which `src_ssd_blocks` live on the **source's SSD tier** and must
 /// be staged into its DRAM before the NIC can serialize them — so the
-/// fetch pays `ssd_stage_ms` *and then* the wire, both on the source.
+/// fetch pays the source's NVMe queue *and then* the wire (source tx,
+/// destination rx).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FetchPlan {
     pub src: usize,
     pub blocks: usize,
     pub src_ssd_blocks: usize,
-}
-
-impl FetchPlan {
-    /// Staging latency on the source before its NIC can start (ms).
-    pub fn src_stage_ms(&self, perf: &PerfModel) -> f64 {
-        ssd_stage_ms(perf, self.src_ssd_blocks as u64 * BLOCK_TOKENS)
-    }
 }
 
 /// Wire bytes of the layer-wise KVCache stream to the decode node (§5.2).
@@ -105,16 +137,20 @@ pub struct PrefillEstimate {
     /// CPP group the job would run on (primary first).
     pub group: Vec<usize>,
     /// Planned start: the job runs when its whole group has drained AND
-    /// any remote prefix fetch has landed (the two overlap — they are
-    /// `max`ed, not summed).
+    /// any remote prefix fetch has landed AND any local SSD staging has
+    /// landed (the three overlap — they are `max`ed, not summed).
     pub start: TimeMs,
     /// Planned completion (start + exec) — the TTFT moment.
     pub end: TimeMs,
     /// Wait behind the group's committed FIFO work, ms from now.
     pub queue_wait_ms: f64,
-    /// Remote-prefix fetch landing delay, ms from now, charged to the
-    /// **source** node's NIC (its congestion is what §6.1 worries about).
+    /// Remote-prefix fetch landing delay, ms from now: the source's NVMe
+    /// queue (SSD-held blocks), then its tx queue, then the
+    /// destination's rx queue.
     pub fetch_wait_ms: f64,
+    /// Local SSD→DRAM staging landing delay, ms from now, through the
+    /// primary's NVMe queue.
+    pub stage_wait_ms: f64,
     /// Execution makespan from [`prefill_exec_ms`].
     pub exec_ms: f64,
 }
@@ -128,16 +164,17 @@ impl PrefillEstimate {
 
 /// Estimate a prefill on `primary` with `n_new` uncached tokens and
 /// `prefix_tokens` reused ones, of which `ssd_prefix_tokens` must first
-/// be staged up from the node's SSD tier; `fetch` adds a remote prefix
-/// fetch that must land first — charged to the source's NVMe (staging)
-/// and then its NIC.  Read-only: probes the prefill queues and the
-/// source NIC without mutating either.
+/// be staged up through the node's NVMe queue; `fetch` adds a remote
+/// prefix fetch that must land first — charged to the source's NVMe
+/// queue (staging), its tx queue, and the destination's rx queue.
+/// Read-only: probes the prefill queues and every resource bank without
+/// mutating any of them.
 #[allow(clippy::too_many_arguments)]
 pub fn estimate_prefill(
     perf: &PerfModel,
     cfg: &SimConfig,
     pool: &PrefillPool,
-    messenger: &Messenger,
+    res: &Resources,
     primary: usize,
     n_new: u64,
     prefix_tokens: u64,
@@ -145,41 +182,51 @@ pub fn estimate_prefill(
     fetch: Option<FetchPlan>,
     now: TimeMs,
 ) -> PrefillEstimate {
+    debug_assert!(ssd_prefix_tokens <= prefix_tokens);
     let group = pool.cpp_group(cfg, primary, n_new, now);
-    let exec_ms =
-        prefill_exec_ms(perf, cfg, n_new, prefix_tokens, ssd_prefix_tokens, group.len() as u64);
+    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
     let queue_free = pool.group_free_at(&group).max(now);
+    let stage_done = estimate_stage_done(perf, &res.nvme, primary, now, ssd_prefix_tokens);
     let fetch_done = match fetch {
         Some(f) if f.blocks > 0 => {
-            let stage_done = now + f.src_stage_ms(perf);
-            stage_done + messenger.estimate_ms(f.src, stage_done, fetch_bytes(perf, f.blocks))
+            let wire_from = estimate_stage_done(
+                perf,
+                &res.nvme,
+                f.src,
+                now,
+                f.src_ssd_blocks as u64 * BLOCK_TOKENS,
+            );
+            res.nic.estimate_done(f.src, primary, wire_from, fetch_bytes(perf, f.blocks))
         }
         _ => now,
     };
-    let start = queue_free.max(fetch_done);
+    let start = queue_free.max(stage_done).max(fetch_done);
     PrefillEstimate {
         group,
         start,
         end: start + exec_ms,
         queue_wait_ms: queue_free - now,
         fetch_wait_ms: fetch_done - now,
+        stage_wait_ms: stage_done - now,
         exec_ms,
     }
 }
 
 /// When the streamed KVCache lands at the decode node: the layer-wise
 /// stream starts with the prefill and can finish no earlier than the
-/// prefill itself nor than the wire time on the primary's NIC.
+/// prefill itself, than the wire time on the primary's tx queue, nor
+/// than the decode node's rx queue.
 pub fn estimate_kv_arrival(
     perf: &PerfModel,
-    messenger: &Messenger,
+    res: &Resources,
     primary: usize,
+    decode_node: usize,
     start: TimeMs,
     end: TimeMs,
     input_tokens: u64,
 ) -> TimeMs {
     let stream_end =
-        start + messenger.estimate_ms(primary, start, kv_stream_bytes(perf, input_tokens));
+        res.nic.estimate_done(primary, decode_node, start, kv_stream_bytes(perf, input_tokens));
     stream_end.max(end)
 }
 
@@ -188,61 +235,92 @@ mod tests {
     use super::*;
     use crate::config::SimConfig;
 
-    fn env() -> (SimConfig, PerfModel, PrefillPool, Messenger) {
+    fn env() -> (SimConfig, PerfModel, PrefillPool, Resources) {
         let cfg = SimConfig::default();
         let perf = PerfModel::paper();
         let pool = PrefillPool::new(&cfg);
-        let msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
-        (cfg, perf, pool, msgr)
+        let res = Resources::new(&cfg, &perf);
+        (cfg, perf, pool, res)
     }
 
     #[test]
     fn exec_includes_visible_prefix_load() {
         let (cfg, perf, _, _) = env();
-        let cold = prefill_exec_ms(&perf, &cfg, 8_000, 0, 0, 1);
+        let cold = prefill_exec_ms(&perf, &cfg, 8_000, 0, 1);
         assert_eq!(cold, perf.prefill_ms(8_000, 0));
         // Fully cached input still pays the non-overlapped load head.
-        let warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 0, 1);
+        let warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 1);
         assert!(warm > 0.0 && warm < cold * 0.05, "warm={warm} cold={cold}");
         assert!((warm - prefix_load_ms(&perf, 8_000)).abs() < 1e-9);
     }
 
     #[test]
-    fn ssd_staging_on_critical_path_and_crossover() {
-        let (cfg, perf, _, _) = env();
-        // An SSD-resident prefix pays the full staging latency on top of
-        // the DRAM load head.
-        let dram_warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 0, 1);
-        let ssd_warm = prefill_exec_ms(&perf, &cfg, 0, 8_000, 8_000, 1);
-        assert!((ssd_warm - dram_warm - ssd_stage_ms(&perf, 8_000)).abs() < 1e-9);
-        assert!(ssd_warm > 10.0 * dram_warm, "{ssd_warm} vs {dram_warm}");
+    fn ssd_staging_gates_the_start_and_crossover_holds() {
+        let (cfg, perf, pool, res) = env();
+        // An SSD-resident prefix delays the planned start by exactly the
+        // NVMe queue probe (idle queue here), on top of the DRAM head.
+        let dram_warm = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 0, None, 0.0);
+        let ssd_warm = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        let stage = estimate_stage_done(&perf, &res.nvme, 0, 0.0, 8_000);
+        assert!(stage > 10.0 * dram_warm.end, "{stage} vs {}", dram_warm.end);
+        assert!((ssd_warm.stage_wait_ms - stage).abs() < 1e-9);
+        assert!((ssd_warm.end - dram_warm.exec_ms - stage).abs() < 1e-9);
         // The load-vs-recompute crossover both ways, through the ONE
-        // makespan definition the scheduler and executor share:
+        // timing API the scheduler and executor share (single node, so
+        // CPP grouping doesn't shrink the recompute side):
         // deep prefix — loading from SSD beats recomputing it...
         let deep = 32_768u64;
-        let load_deep = prefill_exec_ms(&perf, &cfg, 0, deep, deep, 1);
-        let recompute_deep = prefill_exec_ms(&perf, &cfg, deep, 0, 0, 1);
+        let load_deep = estimate_stage_done(&perf, &res.nvme, 0, 0.0, deep)
+            + prefill_exec_ms(&perf, &cfg, 0, deep, 1);
+        let recompute_deep = prefill_exec_ms(&perf, &cfg, deep, 0, 1);
         assert!(load_deep < recompute_deep, "{load_deep} !< {recompute_deep}");
         // ...shallow prefix — recomputing beats the NVMe read.
         let shallow = 512u64;
-        let load_shallow = prefill_exec_ms(&perf, &cfg, 0, shallow, shallow, 1);
-        let recompute_shallow = prefill_exec_ms(&perf, &cfg, shallow, 0, 0, 1);
+        let load_shallow = estimate_stage_done(&perf, &res.nvme, 0, 0.0, shallow)
+            + prefill_exec_ms(&perf, &cfg, 0, shallow, 1);
+        let recompute_shallow = prefill_exec_ms(&perf, &cfg, shallow, 0, 1);
+        assert!(recompute_shallow < load_shallow, "{recompute_shallow} !< {load_shallow}");
+    }
+
+    #[test]
+    fn staging_overlaps_queue_wait() {
+        // The gate semantics: the NVMe read proceeds while the job waits
+        // in the FIFO — start = max(queue, stage), not their sum.
+        let (cfg, perf, mut pool, res) = env();
+        pool.instances[0].block_until(100_000.0);
+        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        assert!(est.queue_wait_ms >= 100_000.0);
+        assert!(est.stage_wait_ms > 100.0 && est.stage_wait_ms < 100_000.0);
+        assert!((est.start - 100_000.0).abs() < 1e-6, "start={}", est.start);
+    }
+
+    #[test]
+    fn concurrent_stagings_contend_on_the_nvme_queue() {
+        let (cfg, perf, pool, mut res) = env();
+        // Reserve one staging on node 0's NVMe; a second estimate on the
+        // same node queues behind it, a different node does not.
+        let first = schedule_stage(&perf, &mut res.nvme, 0, 0.0, 8_000);
+        let queued = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        let fresh = estimate_prefill(&perf, &cfg, &pool, &res, 1, 0, 8_000, 8_000, None, 0.0);
         assert!(
-            recompute_shallow < load_shallow,
-            "{recompute_shallow} !< {load_shallow}"
+            (queued.stage_wait_ms - fresh.stage_wait_ms - (first.end - first.start)).abs() < 1e-6,
+            "second staging must wait out the first: {} vs {}",
+            queued.stage_wait_ms,
+            fresh.stage_wait_ms
         );
+        assert!((queued.end - fresh.end - (first.end - first.start)).abs() < 1e-6);
     }
 
     #[test]
     fn fetch_charged_to_source_nic() {
-        let (cfg, perf, pool, mut msgr) = env();
+        let (cfg, perf, pool, mut res) = env();
         // Congest node 2's outgoing NIC; node 5 stays idle.
-        msgr.schedule(2, 0.0, 2_000_000_000_000); // ~20 s backlog
+        res.nic.schedule(2, 0, 0.0, 2_000_000_000_000); // ~20 s backlog
         let dram_fetch = |src| Some(FetchPlan { src, blocks: 4, src_ssd_blocks: 0 });
         let idle =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, dram_fetch(5), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(5), 0.0);
         let congested =
-            estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, dram_fetch(2), 0.0);
+            estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(2), 0.0);
         assert!(
             congested.fetch_wait_ms > idle.fetch_wait_ms + 10_000.0,
             "source congestion must surface: {} vs {}",
@@ -253,12 +331,34 @@ mod tests {
     }
 
     #[test]
-    fn fetch_overlaps_queue_wait() {
-        let (cfg, perf, mut pool, mut msgr) = env();
-        pool.instances[0].block_until(5_000.0);
-        msgr.schedule(3, 0.0, 300_000_000_000); // ~3 s source backlog
+    fn fetch_charged_to_destination_rx() {
+        // Incast: with finite rx bandwidth, a fetch into a destination
+        // already receiving another transfer queues on the rx side even
+        // though the sources differ.
+        let cfg = SimConfig { nic_rx_bw: Some(10e9), ..SimConfig::default() };
+        let perf = PerfModel::paper();
+        let pool = PrefillPool::new(&cfg);
+        let mut res = Resources::new(&cfg, &perf);
+        // Node 5 is already pushing 10 GB into node 0 (~1 s of rx).
+        res.nic.schedule(5, 0, 0.0, 10_000_000_000);
         let fetch = Some(FetchPlan { src: 3, blocks: 4, src_ssd_blocks: 0 });
-        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 2_048, 0, fetch, 0.0);
+        let onto_hot = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
+        let onto_cold = estimate_prefill(&perf, &cfg, &pool, &res, 1, 4_096, 2_048, 0, fetch, 0.0);
+        assert!(
+            onto_hot.fetch_wait_ms > onto_cold.fetch_wait_ms + 500.0,
+            "incast onto the hot node must surface: {} vs {}",
+            onto_hot.fetch_wait_ms,
+            onto_cold.fetch_wait_ms
+        );
+    }
+
+    #[test]
+    fn fetch_overlaps_queue_wait() {
+        let (cfg, perf, mut pool, mut res) = env();
+        pool.instances[0].block_until(5_000.0);
+        res.nic.schedule(3, 1, 0.0, 300_000_000_000); // ~3 s source backlog
+        let fetch = Some(FetchPlan { src: 3, blocks: 4, src_ssd_blocks: 0 });
+        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
         // start = max(queue, fetch), not their sum.
         assert!(est.queue_wait_ms >= 5_000.0);
         assert!(est.fetch_wait_ms > 2_000.0 && est.fetch_wait_ms < 5_000.0);
@@ -269,15 +369,15 @@ mod tests {
     fn fetch_charges_source_ssd_staging_before_the_wire() {
         // A source holding the fetched prefix on its SSD tier must stage
         // it into DRAM before the NIC can serialize — the estimate pays
-        // NVMe *then* wire, serially, on the source.
-        let (cfg, perf, pool, msgr) = env();
+        // the source's NVMe queue *then* the wire, serially.
+        let (cfg, perf, pool, res) = env();
         let blocks = 64usize;
         let dram = FetchPlan { src: 3, blocks, src_ssd_blocks: 0 };
         let ssd = FetchPlan { src: 3, blocks, src_ssd_blocks: blocks };
-        let a = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 0, 0, Some(dram), 0.0);
-        let b = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 4_096, 0, 0, Some(ssd), 0.0);
-        let stage = ssd.src_stage_ms(&perf);
-        assert!(stage > 0.0);
+        let a = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(dram), 0.0);
+        let b = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(ssd), 0.0);
+        let stage = estimate_stage_done(&perf, &res.nvme, 3, 0.0, blocks as u64 * BLOCK_TOKENS);
+        assert!(stage > 1_000.0);
         assert!(
             (b.fetch_wait_ms - a.fetch_wait_ms - stage).abs() < 1e-9,
             "SSD-held source must add exactly the staging latency: {} vs {} (+{stage})",
@@ -289,14 +389,14 @@ mod tests {
 
     #[test]
     fn estimate_reads_group_queue_not_just_primary() {
-        let (cfg, perf, mut pool, msgr) = env();
+        let (cfg, perf, mut pool, res) = env();
         // Only instance 1 is recruitable (others exceed the 1 ms recruit
         // threshold); its 0.5 ms backlog must drive the planned start.
         pool.instances[1].block_until(0.5);
         for i in 2..pool.len() {
             pool.instances[i].block_until(10.0);
         }
-        let est = estimate_prefill(&perf, &cfg, &pool, &msgr, 0, 100_000, 0, 0, None, 0.0);
+        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 100_000, 0, 0, None, 0.0);
         assert_eq!(est.group, vec![0, 1]);
         assert!((est.start - 0.5).abs() < 1e-9, "group max drives start: {}", est.start);
         assert!((est.queue_wait_ms - 0.5).abs() < 1e-9);
@@ -304,11 +404,11 @@ mod tests {
 
     #[test]
     fn kv_arrival_no_earlier_than_prefill_end() {
-        let (_, perf, _, msgr) = env();
-        let a = estimate_kv_arrival(&perf, &msgr, 0, 100.0, 5_000.0, 1_000);
+        let (_, perf, _, res) = env();
+        let a = estimate_kv_arrival(&perf, &res, 0, 9, 100.0, 5_000.0, 1_000);
         assert!(a >= 5_000.0);
         // Huge stream on a short prefill: the wire dominates.
-        let b = estimate_kv_arrival(&perf, &msgr, 0, 100.0, 200.0, 100_000);
+        let b = estimate_kv_arrival(&perf, &res, 0, 9, 100.0, 200.0, 100_000);
         assert!(b > 200.0 + 100.0);
     }
 }

@@ -20,33 +20,47 @@
 //! debug-mode invariant ([`PrefixIndex::equals_rebuild_of`]) checks the
 //! incremental index against a brute-force rebuild.
 //!
-//! The bitset is a single `u64` per tier per block, so one index shard
-//! covers up to [`PrefixIndex::MAX_NODES`] prefill nodes; the Conductor
-//! falls back to the per-pool scan beyond that (`PrefixIndex::supports`).
+//! The bitset is `[u64; WORDS]` per tier per block, so one index shard
+//! covers up to [`PrefixIndex::MAX_NODES`] prefill nodes — wide enough
+//! that the old ≤64-node automatic scan fallback is gone; only the
+//! explicit `use_prefix_index: false` knob restores the per-pool scan.
+//! Word loops run over `n_nodes.div_ceil(64)` words, so small clusters
+//! pay for one.
 
 use std::collections::HashMap;
 
 use super::pool::{CachePool, Tier, TierDelta, TierMatch};
 use crate::BlockId;
 
+/// Bitset words per tier per block.
+const WORDS: usize = 4;
+
 /// Which nodes hold a block, split by tier.  A node's bit is set in at
 /// most one of the two masks (a block lives in exactly one tier per
 /// pool).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 struct Residency {
-    dram: u64,
-    ssd: u64,
+    dram: [u64; WORDS],
+    ssd: [u64; WORDS],
+}
+
+impl Residency {
+    fn is_empty(&self) -> bool {
+        self.dram.iter().all(|&w| w == 0) && self.ssd.iter().all(|&w| w == 0)
+    }
 }
 
 #[derive(Debug)]
 pub struct PrefixIndex {
     n_nodes: usize,
+    /// Words actually carrying bits: `n_nodes.div_ceil(64)`.
+    n_words: usize,
     map: HashMap<BlockId, Residency>,
 }
 
 impl PrefixIndex {
-    /// One `u64` bitset word per tier per block.
-    pub const MAX_NODES: usize = 64;
+    /// `WORDS` bitset words per tier per block.
+    pub const MAX_NODES: usize = 64 * WORDS;
 
     /// Whether a single index shard can cover `n_nodes` prefill nodes.
     pub fn supports(n_nodes: usize) -> bool {
@@ -54,8 +68,12 @@ impl PrefixIndex {
     }
 
     pub fn new(n_nodes: usize) -> Self {
-        assert!(Self::supports(n_nodes), "PrefixIndex shard covers at most 64 nodes");
-        PrefixIndex { n_nodes, map: HashMap::new() }
+        assert!(
+            Self::supports(n_nodes),
+            "PrefixIndex shard covers at most {} nodes",
+            Self::MAX_NODES
+        );
+        PrefixIndex { n_nodes, n_words: n_nodes.div_ceil(64).max(1), map: HashMap::new() }
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -71,22 +89,27 @@ impl PrefixIndex {
         self.map.is_empty()
     }
 
+    #[inline]
+    fn word_bit(node: usize) -> (usize, u64) {
+        (node >> 6, 1u64 << (node & 63))
+    }
+
     /// Record `node`'s residency for one block (`None` = not resident).
     /// Setting one tier clears the other — a block lives in exactly one
     /// tier per pool — and entries with no holders are removed so the
     /// index stays equal to a fresh rebuild.
     pub fn set(&mut self, node: usize, b: BlockId, loc: Option<Tier>) {
         debug_assert!(node < self.n_nodes);
-        let bit = 1u64 << node;
+        let (w, bit) = Self::word_bit(node);
         let r = self.map.entry(b).or_default();
-        r.dram &= !bit;
-        r.ssd &= !bit;
+        r.dram[w] &= !bit;
+        r.ssd[w] &= !bit;
         match loc {
-            Some(Tier::Dram) => r.dram |= bit,
-            Some(Tier::Ssd) => r.ssd |= bit,
+            Some(Tier::Dram) => r.dram[w] |= bit,
+            Some(Tier::Ssd) => r.ssd[w] |= bit,
             None => {}
         }
-        if r.dram == 0 && r.ssd == 0 {
+        if r.is_empty() {
             self.map.remove(&b);
         }
     }
@@ -102,14 +125,31 @@ impl PrefixIndex {
     pub fn tier_on(&self, node: usize, b: BlockId) -> Option<Tier> {
         debug_assert!(node < self.n_nodes);
         let r = self.map.get(&b)?;
-        let bit = 1u64 << node;
-        if r.dram & bit != 0 {
+        let (w, bit) = Self::word_bit(node);
+        if r.dram[w] & bit != 0 {
             Some(Tier::Dram)
-        } else if r.ssd & bit != 0 {
+        } else if r.ssd[w] & bit != 0 {
             Some(Tier::Ssd)
         } else {
             None
         }
+    }
+
+    /// Every node holding `b` (either tier), ascending — one probe for
+    /// the whole cluster, replacing per-pool `contains` scans
+    /// (`conductor::migration` reads holder sets through this).
+    pub fn holders(&self, b: BlockId) -> Vec<usize> {
+        let mut out = Vec::new();
+        if let Some(r) = self.map.get(&b) {
+            for w in 0..self.n_words {
+                let mut bits = r.dram[w] | r.ssd[w];
+                while bits != 0 {
+                    out.push(w * 64 + bits.trailing_zeros() as usize);
+                    bits &= bits - 1;
+                }
+            }
+        }
+        out
     }
 
     /// Bulk-load one node's pool (brute-force rebuild path).
@@ -132,55 +172,70 @@ impl PrefixIndex {
         if self.n_nodes == 0 {
             return;
         }
-        let all: u64 = if self.n_nodes == 64 { u64::MAX } else { (1u64 << self.n_nodes) - 1 };
         // Nodes whose match still extends / whose match is still a pure
         // DRAM run.  A cleared bit means that node's `blocks` (resp.
         // `dram_prefix`) has been finalized in `out`.
-        let mut alive = all;
-        let mut dram_run = all;
+        let mut alive = [0u64; WORDS];
+        for w in 0..self.n_words {
+            let bits = self.n_nodes - w * 64;
+            alive[w] = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        }
+        let mut dram_run = alive;
         for (i, &b) in hash_ids.iter().enumerate() {
-            if alive == 0 {
+            if alive[..self.n_words].iter().all(|&w| w == 0) {
                 break;
             }
             let r = self.map.get(&b).copied().unwrap_or_default();
-            let resident = (r.dram | r.ssd) & alive;
-            // Nodes missing this block: their match ends at i blocks.
-            let mut died = alive & !resident;
-            while died != 0 {
-                let n = died.trailing_zeros() as usize;
-                died &= died - 1;
-                out[n].blocks = i;
-                if dram_run & (1u64 << n) != 0 {
+            for w in 0..self.n_words {
+                if alive[w] == 0 {
+                    continue;
+                }
+                let base = w * 64;
+                let resident = (r.dram[w] | r.ssd[w]) & alive[w];
+                // Nodes missing this block: their match ends at i blocks.
+                let mut died = alive[w] & !resident;
+                while died != 0 {
+                    let bit = died & died.wrapping_neg();
+                    let n = base + bit.trailing_zeros() as usize;
+                    died ^= bit;
+                    out[n].blocks = i;
+                    if dram_run[w] & bit != 0 {
+                        out[n].dram_prefix = i;
+                    }
+                }
+                alive[w] = resident;
+                dram_run[w] &= resident;
+                // Nodes whose block is SSD-resident: their pure-DRAM
+                // leading run ends here (and the block counts as an SSD
+                // copy).
+                let mut run_end = dram_run[w] & !r.dram[w];
+                while run_end != 0 {
+                    let n = base + run_end.trailing_zeros() as usize;
+                    run_end &= run_end - 1;
                     out[n].dram_prefix = i;
                 }
-            }
-            alive = resident;
-            dram_run &= alive;
-            // Nodes whose block is SSD-resident: their pure-DRAM leading
-            // run ends here (and the block counts as an SSD copy).
-            let mut run_end = dram_run & !r.dram;
-            while run_end != 0 {
-                let n = run_end.trailing_zeros() as usize;
-                run_end &= run_end - 1;
-                out[n].dram_prefix = i;
-            }
-            dram_run &= r.dram;
-            let mut on_ssd = alive & r.ssd;
-            while on_ssd != 0 {
-                let n = on_ssd.trailing_zeros() as usize;
-                on_ssd &= on_ssd - 1;
-                out[n].ssd_blocks += 1;
+                dram_run[w] &= r.dram[w];
+                let mut on_ssd = alive[w] & r.ssd[w];
+                while on_ssd != 0 {
+                    let n = base + on_ssd.trailing_zeros() as usize;
+                    on_ssd &= on_ssd - 1;
+                    out[n].ssd_blocks += 1;
+                }
             }
         }
         // Survivors matched the whole chain.
         let full = hash_ids.len();
-        let mut still = alive;
-        while still != 0 {
-            let n = still.trailing_zeros() as usize;
-            still &= still - 1;
-            out[n].blocks = full;
-            if dram_run & (1u64 << n) != 0 {
-                out[n].dram_prefix = full;
+        for w in 0..self.n_words {
+            let base = w * 64;
+            let mut still = alive[w];
+            while still != 0 {
+                let bit = still & still.wrapping_neg();
+                let n = base + bit.trailing_zeros() as usize;
+                still ^= bit;
+                out[n].blocks = full;
+                if dram_run[w] & bit != 0 {
+                    out[n].dram_prefix = full;
+                }
             }
         }
         for m in out.iter_mut() {
@@ -238,6 +293,10 @@ mod tests {
         assert_eq!(got[1], TierMatch { blocks: 5, dram_prefix: 2, dram_blocks: 4, ssd_blocks: 1 });
         assert_eq!(got[2], TierMatch::default());
         assert!(idx.equals_rebuild_of(ps.iter()));
+        // Holder probes agree with the pools.
+        assert_eq!(idx.holders(12), vec![0, 1]);
+        assert_eq!(idx.holders(17), vec![0]);
+        assert_eq!(idx.holders(999), Vec::<usize>::new());
     }
 
     #[test]
@@ -275,14 +334,45 @@ mod tests {
     }
 
     #[test]
-    fn sixty_four_node_masks_have_no_shift_overflow() {
-        let mut idx = PrefixIndex::new(64);
-        idx.set(63, 7, Some(Tier::Ssd));
-        assert_eq!(idx.tier_on(63, 7), Some(Tier::Ssd));
+    fn wide_clusters_cross_word_boundaries() {
+        // ROADMAP PR 3 follow-up: the residency bitset is [u64; W], so a
+        // shard covers well past 64 prefill nodes with no fallback.
+        assert!(PrefixIndex::supports(65));
+        assert!(PrefixIndex::supports(PrefixIndex::MAX_NODES));
+        assert!(!PrefixIndex::supports(PrefixIndex::MAX_NODES + 1));
+        let n = 130; // three words, last one partial
+        let mut ps = pools(n);
+        let mut idx = PrefixIndex::new(n);
+        let chain: Vec<BlockId> = (1_000..1_016).collect();
+        // Holders straddling every word: 0, 63, 64, 77, 127, 128, 129.
+        for &node in &[0usize, 63, 64, 77, 127, 128, 129] {
+            let len = 4 + node % 12;
+            idx.apply(node, &ps[node].admit_chain(&chain[..len], 0.0));
+        }
+        idx.apply(77, &ps[77].demote_block(1_001, 1.0).unwrap());
+        idx.apply(129, &ps[129].demote_block(1_000, 1.0).unwrap());
+        assert_eq!(idx.best_prefix(&chain), scan(&ps, &chain));
+        assert!(idx.equals_rebuild_of(ps.iter()));
+        assert_eq!(idx.tier_on(77, 1_001), Some(Tier::Ssd));
+        assert_eq!(idx.tier_on(129, 1_000), Some(Tier::Ssd));
+        assert_eq!(idx.holders(1_000), vec![0, 63, 64, 77, 127, 128, 129]);
+        // Bit 63 of a full word and bit 0 of the next stay distinct.
+        assert_eq!(idx.tier_on(63, 1_003), Some(Tier::Dram));
+        assert_eq!(idx.tier_on(64, 1_003), Some(Tier::Dram));
+        assert_eq!(idx.tier_on(65, 1_003), None);
+    }
+
+    #[test]
+    fn max_width_masks_have_no_shift_overflow() {
+        let last = PrefixIndex::MAX_NODES - 1;
+        let mut idx = PrefixIndex::new(PrefixIndex::MAX_NODES);
+        idx.set(last, 7, Some(Tier::Ssd));
+        idx.set(63, 7, Some(Tier::Dram));
+        assert_eq!(idx.tier_on(last, 7), Some(Tier::Ssd));
         let m = idx.best_prefix(&[7]);
-        assert_eq!(m[63], TierMatch { blocks: 1, dram_prefix: 0, dram_blocks: 0, ssd_blocks: 1 });
+        assert_eq!(m[last], TierMatch { blocks: 1, dram_prefix: 0, dram_blocks: 0, ssd_blocks: 1 });
+        assert_eq!(m[63], TierMatch { blocks: 1, dram_prefix: 1, dram_blocks: 1, ssd_blocks: 0 });
         assert_eq!(m[0], TierMatch::default());
-        assert!(!PrefixIndex::supports(65));
     }
 
     #[test]

@@ -87,6 +87,14 @@ impl TierDelta {
         self.changes.iter().filter(|(_, t)| t.is_none()).map(|(b, _)| *b).collect()
     }
 
+    /// Blocks this mutation moved down to the SSD tier — each one is an
+    /// NVMe *write* the resource model charges to the node's device
+    /// queue (the one definition shared by admission-time and
+    /// sweep-time accounting).
+    pub fn demoted_to_ssd(&self) -> usize {
+        self.changes.iter().filter(|&&(_, t)| t == Some(Tier::Ssd)).count()
+    }
+
     fn push(&mut self, b: BlockId, t: Option<Tier>) {
         self.changes.push((b, t));
     }

@@ -14,8 +14,13 @@
 //! * [`kvcache`] — the disaggregated, paged, prefix-hashed KVCache pool
 //!   with pluggable eviction (LRU / LFU / LengthAware) and a global
 //!   block-location registry (§3, §4.2).
-//! * [`messenger`] — the (GPUDirect-)RDMA transfer engine model: per-node
-//!   NIC queues, bandwidth sharing, congestion (§3).
+//! * [`resource`] — the per-node contended-bandwidth queues (generic
+//!   [`resource::BwQueue`]) instantiated as three banks per node: NIC-tx,
+//!   NIC-rx (incast), and NVMe (staging reads + demotion writes share
+//!   the device).  Every device time in the system flows through them.
+//! * [`messenger`] — the (GPUDirect-)RDMA transfer engine model, a thin
+//!   wrapper over the NIC tx/rx banks: bandwidth sharing, congestion
+//!   (§3), incast.
 //! * [`prefill`] / [`decode`] — the disaggregated instance pools: chunked
 //!   pipeline parallelism + layer-wise prefill (§5), continuous-batching
 //!   decode (§3).
@@ -51,6 +56,7 @@ pub mod metrics;
 pub mod model;
 pub mod overload;
 pub mod prefill;
+pub mod resource;
 pub mod runtime;
 pub mod sim;
 pub mod trace;

@@ -36,6 +36,7 @@ fn main() -> Result<()> {
                  simulate  --trace trace.jsonl [--prefill 8] [--decode 8] [--speedup 1]\n\
                  \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
                  \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
+                 \t[--rx-bw BYTES_PER_SEC] [--ssd-write-bw BYTES_PER_SEC]\n\
                  \t[--no-prefix-index]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
@@ -120,6 +121,19 @@ fn simulate(args: &Args) -> Result<()> {
             _ => bail!("invalid --demote-after-ms {s} (expected a positive ms value)"),
         },
     };
+    // Optional contention knobs (B/s), off by default: a finite rx
+    // bandwidth makes incast congest; a finite NVMe write bandwidth
+    // makes demotion writes contend with staging reads.
+    let parse_bw = |key: &str| -> Result<Option<f64>> {
+        match args.get(key) {
+            None if args.has_flag(key) => bail!("--{key} requires a value (bytes/sec)"),
+            None => Ok(None),
+            Some(s) => match s.parse::<f64>() {
+                Ok(v) if v > 0.0 => Ok(Some(v)),
+                _ => bail!("invalid --{key} {s} (expected a positive bytes/sec value)"),
+            },
+        }
+    };
     let cfg = SimConfig {
         n_prefill: args.get_usize("prefill", 8),
         n_decode: args.get_usize("decode", 8),
@@ -135,9 +149,21 @@ fn simulate(args: &Args) -> Result<()> {
         // Pure optimization — `--no-prefix-index` restores the per-pool
         // scan (bit-for-bit identical results, for A/B timing).
         use_prefix_index: !args.has_flag("no-prefix-index"),
+        nic_rx_bw: parse_bw("rx-bw")?,
+        ssd_write_bw: parse_bw("ssd-write-bw")?,
         demote_after_ms,
         ..Default::default()
     };
+    // The widened prefix index covers up to `PrefixIndex::MAX_NODES`
+    // prefill nodes with no automatic scan fallback — reject a bigger
+    // cluster cleanly instead of panicking inside the library.
+    if cfg.use_prefix_index && !mooncake::kvcache::PrefixIndex::supports(cfg.n_prefill) {
+        bail!(
+            "--prefill {} exceeds the prefix index's {}-node shard; pass --no-prefix-index",
+            cfg.n_prefill,
+            mooncake::kvcache::PrefixIndex::MAX_NODES
+        );
+    }
     let speedup = args.get_f64("speedup", 1.0);
     let res = sim::run(&cfg, &trace, speedup);
     let rep = res.report(&cfg);
@@ -169,6 +195,23 @@ fn simulate(args: &Args) -> Result<()> {
         res.conductor.ssd_recomputes,
         res.ssd_loaded_bytes / 1_000_000
     );
+    // Utilization denominators: NIC banks span every node; NVMe traffic
+    // only ever lands on prefill nodes (staging reads, demotion writes),
+    // so its device utilization is per prefill node.
+    let n_nodes = cfg.n_prefill + cfg.n_decode;
+    for (name, bank, devices) in [
+        ("NIC-tx", &res.resources.nic_tx, n_nodes),
+        ("NIC-rx", &res.resources.nic_rx, n_nodes),
+        ("NVMe", &res.resources.nvme, cfg.n_prefill),
+    ] {
+        println!(
+            "{name:7} {} ops, {} MB, queued {:.0} ms, utilization {:.1}%",
+            bank.n_ops,
+            bank.total_bytes / 1_000_000,
+            bank.queued_ms,
+            bank.utilization(res.wall_ms, devices) * 100.0
+        );
+    }
     Ok(())
 }
 

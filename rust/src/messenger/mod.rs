@@ -1,82 +1,126 @@
-//! Messenger — the (GPUDirect-)RDMA KVCache transfer engine (§3).
+//! Messenger — the (GPUDirect-)RDMA KVCache transfer engine (§3), now a
+//! thin wrapper over two [`BwQueue`] NIC banks.
 //!
-//! Each node runs a Messenger that owns the node's NIC.  Transfers out of
-//! a node serialize on that NIC, which is exactly the congestion effect
-//! §6.1 worries about ("high demand on the KVCache server can lead to
-//! network congestion, prolonging the waiting time") and the reason hot
-//! blocks must be replicated (§6.2).
+//! Each node runs a Messenger endpoint that owns the node's NIC.
+//! Transfers out of a node serialize on its **tx** queue — the
+//! congestion effect §6.1 worries about ("high demand on the KVCache
+//! server can lead to network congestion, prolonging the waiting time")
+//! and the reason hot blocks must be replicated (§6.2).  Transfers into
+//! a node additionally serialize on its **rx** queue, so fan-in onto one
+//! hot node (incast — many holders pushing prefixes at a single prefill
+//! instance) congests too: a transfer completes at the **max** of its
+//! source-tx and destination-rx completion.
 //!
-//! The simulator uses [`Messenger::estimate_ms`] for Conductor's
+//! With infinite rx bandwidth (the default — `SimConfig::nic_rx_bw` is
+//! `None`) the rx side never contributes and behavior is bit-for-bit the
+//! pre-refactor source-NIC-only model.
+//!
+//! The simulator uses [`Messenger::estimate_done`] for Conductor's
 //! `EstimateKVCacheTransferTime` (a *read-only* probe) and
 //! [`Messenger::schedule`] to actually enqueue the transfer.
 
-use crate::{TimeMs};
+use crate::resource::BwQueue;
+use crate::TimeMs;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Transfer {
+    /// When the source NIC begins serializing.
     pub start: TimeMs,
+    /// When the transfer has fully landed: max(source-tx, destination-rx).
     pub end: TimeMs,
     pub bytes: u64,
 }
 
 #[derive(Debug)]
 pub struct Messenger {
-    /// Outgoing-link bandwidth per node, B/ms.
-    bw_per_ms: f64,
-    /// Fixed per-transfer setup latency, ms.
-    latency_ms: f64,
-    /// Each node's NIC is busy (sending) until this time.
-    busy_until: Vec<TimeMs>,
-    pub total_bytes: u64,
-    pub n_transfers: u64,
-    /// Total time transfers spent queued behind earlier ones (congestion).
-    pub queued_ms: f64,
+    /// Outgoing (source-side) NIC queues: setup latency + wire
+    /// serialization.
+    pub tx: BwQueue,
+    /// Incoming (destination-side) NIC queues: pure bandwidth, no extra
+    /// setup (the rendezvous was paid on the tx side).
+    pub rx: BwQueue,
+    /// Finite ingress bandwidth?  When false (unconstrained, the
+    /// default) the rx bank is a true no-op — no ops recorded, no state
+    /// touched — so default runs are the pre-rx model *exactly*.
+    rx_active: bool,
 }
 
 impl Messenger {
-    /// `n_nodes` NICs at `bw_bytes_per_sec` with `latency_ms` setup cost.
-    pub fn new(n_nodes: usize, bw_bytes_per_sec: f64, latency_ms: f64) -> Self {
+    /// `n_nodes` NICs sending at `tx_bw` B/s and receiving at `rx_bw`
+    /// B/s (`f64::INFINITY` = unconstrained ingress), with `latency_ms`
+    /// per-transfer setup cost.
+    pub fn new(n_nodes: usize, tx_bw: f64, rx_bw: f64, latency_ms: f64) -> Self {
         Messenger {
-            bw_per_ms: bw_bytes_per_sec / 1e3,
-            latency_ms,
-            busy_until: vec![0.0; n_nodes],
-            total_bytes: 0,
-            n_transfers: 0,
-            queued_ms: 0.0,
+            tx: BwQueue::new(n_nodes, tx_bw, latency_ms),
+            rx: BwQueue::new(n_nodes, rx_bw, 0.0),
+            rx_active: rx_bw.is_finite(),
         }
     }
 
-    fn serialize_ms(&self, bytes: u64) -> f64 {
-        self.latency_ms + bytes as f64 / self.bw_per_ms
+    /// Absolute landing time if a transfer of `bytes` from `src` to
+    /// `dst` were enqueued now — includes queueing behind in-flight
+    /// transfers on the source tx queue *and* the destination rx queue.
+    /// Read-only, and bit-for-bit what [`Self::schedule`] would return.
+    ///
+    /// Modeling note: ingress capacity is reserved in admission order
+    /// from the probe time, like every other `BwQueue` — a transfer
+    /// admitted behind a deep tx backlog holds its rx slot from
+    /// admission even though its bytes arrive later.  That is a
+    /// deliberate store-and-forward-style simplification: a per-op
+    /// interval model could interleave later senders into the gap, but
+    /// would give up the one-scalar FIFO the estimate==schedule
+    /// contract is built on.
+    pub fn estimate_done(&self, src: usize, dst: usize, now: TimeMs, bytes: u64) -> TimeMs {
+        let tx_end = self.tx.estimate_done(src, now, bytes, 0.0);
+        if !self.rx_active {
+            return tx_end;
+        }
+        tx_end.max(self.rx.estimate_done(dst, now, bytes, 0.0))
     }
 
-    /// Estimated completion delay (ms from `now`) if a transfer of
-    /// `bytes` from `src` were enqueued now — includes queueing behind
-    /// in-flight transfers on the source NIC.  Read-only.
-    pub fn estimate_ms(&self, src: usize, now: TimeMs, bytes: u64) -> f64 {
-        let start = self.busy_until[src].max(now);
-        (start - now) + self.serialize_ms(bytes)
+    /// Landing delay (ms from `now`) of the same probe.
+    pub fn estimate_ms(&self, src: usize, dst: usize, now: TimeMs, bytes: u64) -> f64 {
+        self.estimate_done(src, dst, now, bytes) - now
     }
 
-    /// Enqueue a transfer out of `src`; returns its (start, end).
-    pub fn schedule(&mut self, src: usize, now: TimeMs, bytes: u64) -> Transfer {
-        let start = self.busy_until[src].max(now);
-        let end = start + self.serialize_ms(bytes);
-        self.queued_ms += start - now;
-        self.busy_until[src] = end;
-        self.total_bytes += bytes;
-        self.n_transfers += 1;
-        Transfer { start, end, bytes }
+    /// Enqueue a transfer from `src` to `dst`; returns its (start, end).
+    pub fn schedule(&mut self, src: usize, dst: usize, now: TimeMs, bytes: u64) -> Transfer {
+        let tx = self.tx.schedule(src, now, bytes, 0.0);
+        let end = if self.rx_active {
+            tx.end.max(self.rx.schedule(dst, now, bytes, 0.0).end)
+        } else {
+            tx.end
+        };
+        Transfer { start: tx.start, end, bytes }
     }
 
     /// Current outgoing-queue depth of a node in ms (the congestion
     /// signal for replication decisions).
     pub fn backlog_ms(&self, src: usize, now: TimeMs) -> f64 {
-        (self.busy_until[src] - now).max(0.0)
+        self.tx.backlog_ms(src, now)
+    }
+
+    /// Current incoming-queue depth of a node in ms (the incast signal).
+    pub fn rx_backlog_ms(&self, dst: usize, now: TimeMs) -> f64 {
+        self.rx.backlog_ms(dst, now)
+    }
+
+    /// Wire bytes moved (each transfer counted once, on the tx side).
+    pub fn total_bytes(&self) -> u64 {
+        self.tx.total_bytes
+    }
+
+    pub fn n_transfers(&self) -> u64 {
+        self.tx.n_ops
+    }
+
+    /// Total time transfers spent queued (tx and rx congestion).
+    pub fn queued_ms(&self) -> f64 {
+        self.tx.queued_ms + self.rx.queued_ms
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.busy_until.len()
+        self.tx.n_nodes()
     }
 }
 
@@ -85,15 +129,15 @@ mod tests {
     use super::*;
 
     fn m() -> Messenger {
-        // 100 GB/s (800 Gbps), 1 ms latency, 4 nodes.
-        Messenger::new(4, 100e9, 1.0)
+        // 100 GB/s tx (800 Gbps), unconstrained rx, 1 ms latency, 4 nodes.
+        Messenger::new(4, 100e9, f64::INFINITY, 1.0)
     }
 
     #[test]
     fn uncongested_transfer_time() {
         let mut msg = m();
         // 5.24 GB (16k tokens of 70B KVCache) -> ~52.4 ms + 1 ms latency.
-        let t = msg.schedule(0, 0.0, 5_242_880_000);
+        let t = msg.schedule(0, 1, 0.0, 5_242_880_000);
         assert!((t.end - t.start - 53.4).abs() < 0.5, "{t:?}");
         assert_eq!(t.start, 0.0);
     }
@@ -101,30 +145,65 @@ mod tests {
     #[test]
     fn same_nic_serializes() {
         let mut msg = m();
-        let a = msg.schedule(0, 0.0, 1_000_000_000);
-        let b = msg.schedule(0, 0.0, 1_000_000_000);
+        let a = msg.schedule(0, 1, 0.0, 1_000_000_000);
+        let b = msg.schedule(0, 2, 0.0, 1_000_000_000);
         assert_eq!(b.start, a.end);
-        assert!(msg.queued_ms > 0.0);
+        assert!(msg.queued_ms() > 0.0);
         // Different NIC does not queue.
-        let c = msg.schedule(1, 0.0, 1_000_000_000);
+        let c = msg.schedule(1, 2, 0.0, 1_000_000_000);
         assert_eq!(c.start, 0.0);
     }
 
     #[test]
     fn estimate_matches_schedule() {
         let mut msg = m();
-        msg.schedule(2, 0.0, 2_000_000_000);
-        let est = msg.estimate_ms(2, 5.0, 1_000_000_000);
-        let t = msg.schedule(2, 5.0, 1_000_000_000);
-        assert!((est - (t.end - 5.0)).abs() < 1e-9);
+        msg.schedule(2, 0, 0.0, 2_000_000_000);
+        let est = msg.estimate_done(2, 0, 5.0, 1_000_000_000);
+        let t = msg.schedule(2, 0, 5.0, 1_000_000_000);
+        assert_eq!(est.to_bits(), t.end.to_bits());
     }
 
     #[test]
     fn backlog_decays_with_time() {
         let mut msg = m();
-        msg.schedule(0, 0.0, 10_000_000_000); // 100ms serialize + 1ms
+        msg.schedule(0, 1, 0.0, 10_000_000_000); // 100ms serialize + 1ms
         assert!(msg.backlog_ms(0, 0.0) > 100.0);
         assert!(msg.backlog_ms(0, 50.0) < msg.backlog_ms(0, 0.0));
         assert_eq!(msg.backlog_ms(0, 1_000.0), 0.0);
+    }
+
+    #[test]
+    fn infinite_rx_never_contributes() {
+        // The pre-refactor pin: with unconstrained ingress, fan-in onto
+        // one destination is timed purely by each source's tx queue and
+        // the rx bank records nothing at all.
+        let mut msg = m();
+        let a = msg.schedule(0, 3, 0.0, 1_000_000_000);
+        let b = msg.schedule(1, 3, 0.0, 1_000_000_000);
+        assert_eq!(a.end.to_bits(), b.end.to_bits());
+        assert_eq!(msg.rx_backlog_ms(3, 0.0), 0.0);
+        assert_eq!(msg.rx.n_ops, 0);
+    }
+
+
+    #[test]
+    fn finite_rx_serializes_incast() {
+        // 100 GB/s tx but only 10 GB/s rx: two senders converging on one
+        // destination land one after the other on the rx queue.
+        let mut msg = Messenger::new(4, 100e9, 10e9, 1.0);
+        let bytes = 1_000_000_000u64; // 100 ms at rx speed, 10 ms at tx
+        let a = msg.schedule(0, 3, 0.0, bytes);
+        let b = msg.schedule(1, 3, 0.0, bytes);
+        assert!((a.end - 100.0).abs() < 1e-6, "rx-bound landing: {a:?}");
+        assert!((b.end - 200.0).abs() < 1e-6, "incast serializes: {b:?}");
+        assert!(msg.rx_backlog_ms(3, 0.0) > 100.0);
+        // A transfer to an idle destination is unaffected.
+        let c = msg.schedule(2, 0, 0.0, bytes);
+        assert!((c.end - 100.0).abs() < 1e-6);
+        // Estimates see the rx queue exactly.
+        let est = msg.estimate_done(2, 3, 0.0, bytes);
+        let d = msg.schedule(2, 3, 0.0, bytes);
+        assert_eq!(est.to_bits(), d.end.to_bits());
+        assert!((d.end - 300.0).abs() < 1e-6);
     }
 }

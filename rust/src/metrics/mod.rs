@@ -4,6 +4,7 @@
 //! SLO-violating is wasted work).
 
 use crate::kvcache::TierCounters;
+use crate::resource::ResourceStats;
 use crate::util::stats;
 use crate::{RequestId, TimeMs};
 
@@ -94,6 +95,11 @@ pub struct RunReport {
     /// the cluster's pools (filled by `SimResult::report`; zero for
     /// engines without a tiered cache, e.g. the vLLM baseline).
     pub tiers: TierCounters,
+    /// Per-resource (NIC tx, NIC rx, NVMe) queued-ms / busy-ms / byte
+    /// counters (filled by `SimResult::report`; use
+    /// `BankStats::utilization` with the run's wall time for device
+    /// utilization).
+    pub resources: ResourceStats,
 }
 
 pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
@@ -135,6 +141,7 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
         // is distinguishable from perfect agreement.
         ttft_est_mae: stats::mean(&est_errs),
         tiers: TierCounters::default(),
+        resources: ResourceStats::default(),
     }
 }
 

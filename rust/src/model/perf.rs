@@ -71,10 +71,13 @@ impl PerfModel {
         (tokens * self.model.kv_bytes_per_token()) as f64 / self.hw.pcie_bw * 1e3
     }
 
-    /// Time (ms) to read `tokens` of KVCache spanning `blocks` cache
-    /// blocks from the node's SSD tier into DRAM (staging ahead of the
-    /// DRAM→VRAM load): a bandwidth term plus a per-block IOPS term.
-    /// This is the fetch side of the load-vs-recompute tradeoff — for
+    /// Analytic reference for one *uncontended* NVMe staging read of
+    /// `tokens` spanning `blocks` cache blocks: a bandwidth term plus a
+    /// per-block IOPS term.  Execution paths do NOT call this — all NVMe
+    /// time flows through the per-node `resource::BwQueue` bank
+    /// (`costmodel::estimate_stage_done`/`schedule_stage`), which charges
+    /// the same serialization behind the device's queue.  Kept as the
+    /// shape documentation of the load-vs-recompute tradeoff — for
     /// shallow prefixes recomputation beats the NVMe read, for deep ones
     /// (where attention makes recompute superlinear) the read wins.
     pub fn ssd_load_ms(&self, tokens: u64, blocks: u64) -> f64 {

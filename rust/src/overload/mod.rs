@@ -80,7 +80,7 @@ impl Admission {
         input_tokens: u64,
         now: TimeMs,
     ) -> f64 {
-        let nominal = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 0, 1);
+        let nominal = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1);
         pool.instances
             .iter()
             .map(|i| i.load(now, nominal, cfg.slo.ttft_ms))
@@ -167,7 +167,7 @@ impl Admission {
             RejectionPolicy::Baseline => return true, // decode checked later
             RejectionPolicy::Early => self.decode_load_now(decodes, perf, cfg.slo.tbt_ms),
             RejectionPolicy::Predictive => {
-                let est_prefill = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 0, 1)
+                let est_prefill = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1)
                     + pool.instances.iter().map(|i| i.queue_ms(now)).fold(f64::INFINITY, f64::min);
                 self.decode_load_predicted(
                     decodes,

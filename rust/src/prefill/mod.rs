@@ -15,9 +15,10 @@
 //! * [`PrefillPool::startable`] / [`PrefillPool::start`] /
 //!   [`PrefillPool::finish`] are the executor: a job starts when it is at
 //!   the head of **all** its members' queues, every member is idle, and
-//!   its gate (remote prefix fetch landing, §6.2) has passed.  FIFO order
-//!   per instance is preserved — a gated head blocks its queue, exactly
-//!   like a real dispatch loop.
+//!   its gate (remote prefix fetch landing §6.2, and/or the local
+//!   SSD→DRAM staging read reserved on the NVMe queue) has passed.  FIFO
+//!   order per instance is preserved — a gated head blocks its queue,
+//!   exactly like a real dispatch loop.
 
 pub mod layerwise;
 
@@ -51,12 +52,9 @@ pub struct PrefillJob {
     pub group: Vec<usize>,
     pub n_new: u64,
     pub prefix_tokens: u64,
-    /// Of `prefix_tokens`, tokens staged up from the primary's SSD tier
-    /// (the scheduler's load-over-recompute choice); the staging latency
-    /// is part of `exec_ms` and the simulator's `SsdLoad` event tracks
-    /// the tier traffic.
-    pub ssd_prefix_tokens: u64,
-    /// May not start before this (remote prefix fetch landing).
+    /// May not start before this: the latest of the remote prefix fetch
+    /// landing and the local SSD→DRAM staging read, both reserved on
+    /// their resource queues at admission.
     pub gate: TimeMs,
     /// Execution makespan fixed at admission from the unified cost model.
     pub exec_ms: f64,
@@ -237,19 +235,12 @@ impl PrefillPool {
         group: &[usize],
         n_new: u64,
         prefix_tokens: u64,
-        ssd_prefix_tokens: u64,
         gate: TimeMs,
         now: TimeMs,
     ) -> JobId {
         debug_assert!(!group.is_empty());
-        let exec_ms = costmodel::prefill_exec_ms(
-            perf,
-            cfg,
-            n_new,
-            prefix_tokens,
-            ssd_prefix_tokens,
-            group.len() as u64,
-        );
+        let exec_ms =
+            costmodel::prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
         let planned_start = self.group_free_at(group).max(gate).max(now);
         let planned_end = planned_start + exec_ms;
         self.next_job += 1;
@@ -266,7 +257,6 @@ impl PrefillPool {
                 group: group.to_vec(),
                 n_new,
                 prefix_tokens,
-                ssd_prefix_tokens,
                 gate,
                 exec_ms,
                 submitted: now,
@@ -406,7 +396,7 @@ mod tests {
         let mut pool = PrefillPool::new(&c);
         let ids: Vec<JobId> = [8_000u64, 2_000, 16_000]
             .iter()
-            .map(|&n| pool.submit(&perf, &c, n, &[0], n, 0, 0, 0.0, 0.0))
+            .map(|&n| pool.submit(&perf, &c, n, &[0], n, 0, 0.0, 0.0))
             .collect();
         let done = drive(&mut pool);
         // Completion (and start) order == admission order, even though the
@@ -426,7 +416,7 @@ mod tests {
         let mut pool = PrefillPool::new(&c);
         let mut planned = Vec::new();
         for (i, n) in [8_000u64, 12_000, 4_000, 9_000].iter().enumerate() {
-            let id = pool.submit(&perf, &c, i as u64, &[i % 2], *n, 0, 0, 0.0, 0.0);
+            let id = pool.submit(&perf, &c, i as u64, &[i % 2], *n, 0, 0.0, 0.0);
             let j = pool.job(id);
             planned.push((id, j.planned_start, j.planned_end));
         }
@@ -445,7 +435,7 @@ mod tests {
         let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&c);
         for n in [8_000u64, 8_000, 8_000] {
-            pool.submit(&perf, &c, n, &[0], n, 0, 0, 0.0, 0.0);
+            pool.submit(&perf, &c, n, &[0], n, 0, 0.0, 0.0);
         }
         let est_drain = pool.instances[0].queue_ms(0.0);
         let done = drive(&mut pool);
@@ -463,14 +453,14 @@ mod tests {
         let c = cfg();
         let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&c);
-        let id = pool.submit(&perf, &c, 1, &[0, 1], 100_000, 0, 0, 0.0, 0.0);
+        let id = pool.submit(&perf, &c, 1, &[0, 1], 100_000, 0, 0.0, 0.0);
         assert_eq!(pool.startable(0.0), vec![id]);
         let (primary, exec, _) = pool.start(id, 0.0);
         assert_eq!(primary, 0);
         assert_eq!(pool.instances[0].running, Some(id));
         assert_eq!(pool.instances[1].running, Some(id));
         // Neither member can take other work while occupied.
-        let id2 = pool.submit(&perf, &c, 2, &[1], 8_000, 0, 0, 0.0, 0.0);
+        let id2 = pool.submit(&perf, &c, 2, &[1], 8_000, 0, 0.0, 0.0);
         assert!(pool.startable(0.0).is_empty());
         let job = pool.finish(id, exec);
         assert_eq!(job.actual_end, exec);
@@ -486,8 +476,8 @@ mod tests {
         let c = cfg();
         let perf = PerfModel::paper();
         let mut pool = PrefillPool::new(&c);
-        let gated = pool.submit(&perf, &c, 1, &[0], 8_000, 0, 0, 500.0, 0.0);
-        let behind = pool.submit(&perf, &c, 2, &[0], 2_000, 0, 0, 0.0, 0.0);
+        let gated = pool.submit(&perf, &c, 1, &[0], 8_000, 0, 500.0, 0.0);
+        let behind = pool.submit(&perf, &c, 2, &[0], 2_000, 0, 0.0, 0.0);
         // Head-of-line: nothing starts before the gate...
         assert!(pool.startable(0.0).is_empty());
         assert_eq!(pool.min_pending_gate(0.0), Some(500.0));
@@ -511,7 +501,7 @@ mod tests {
             let primary = (k % 4) as usize;
             let group: Vec<usize> = if k % 5 == 0 { vec![primary, (primary + 1) % 4] } else { vec![primary] };
             let gate = if k % 3 == 0 { 50.0 * k as f64 } else { 0.0 };
-            submitted.push(pool.submit(&perf, &c, k, &group, 4_000 + 500 * k, 0, 0, gate, 0.0));
+            submitted.push(pool.submit(&perf, &c, k, &group, 4_000 + 500 * k, 0, gate, 0.0));
         }
         let done = drive(&mut pool);
         assert_eq!(done.len(), 20);
@@ -538,7 +528,7 @@ mod tests {
         let mut pool = PrefillPool::new(&c);
         // Make every peer busy with committed work.
         for i in 1..c.n_prefill {
-            pool.submit(&perf, &c, i as u64, &[i], 64_000, 0, 0, 0.0, 0.0);
+            pool.submit(&perf, &c, i as u64, &[i], 64_000, 0, 0.0, 0.0);
         }
         let g = pool.cpp_group(&c, 0, 100_000, 0.0);
         assert_eq!(g, vec![0]);
@@ -548,12 +538,12 @@ mod tests {
     fn cpp_shortens_long_prefill() {
         let c = cfg();
         let perf = PerfModel::paper();
-        let solo = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 0, 1);
-        let quad = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 0, 4);
+        let solo = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 1);
+        let quad = costmodel::prefill_exec_ms(&perf, &c, 128_000, 0, 4);
         assert!(quad < solo * 0.6, "{quad} vs {solo}");
         // And the pool charges the group the same makespan.
         let mut pool = PrefillPool::new(&c);
-        let id = pool.submit(&perf, &c, 1, &[0, 1, 2, 3], 128_000, 0, 0, 0.0, 0.0);
+        let id = pool.submit(&perf, &c, 1, &[0, 1, 2, 3], 128_000, 0, 0.0, 0.0);
         assert!((pool.job(id).exec_ms - quad).abs() < 1e-9);
     }
 }

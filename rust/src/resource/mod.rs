@@ -1,0 +1,348 @@
+//! Per-node contended-bandwidth resource queues — the one primitive
+//! behind every timed device in the cluster.
+//!
+//! Mooncake's §6.1 congestion warning ("high demand on the KVCache
+//! server can lead to network congestion, prolonging the waiting time")
+//! is not NIC-specific: an NVMe device staging several prefixes at once
+//! serializes exactly the way a NIC serializing several transfers does.
+//! [`BwQueue`] models that shape once — a per-node FIFO whose ops pay a
+//! fixed setup latency plus `bytes / bandwidth` serialization — and the
+//! cluster instantiates **three banks per node**:
+//!
+//! * **NIC-tx** — transfers *out of* a node (the original `Messenger`
+//!   queue);
+//! * **NIC-rx** — transfers *into* a node: a transfer completes at the
+//!   max of its source-tx and destination-rx completion, so fan-in onto
+//!   one hot node (incast) finally congests;
+//! * **NVMe** — SSD staging reads *and* demotion writes share the
+//!   device.
+//!
+//! The contract that makes the unified cost model work: for any op,
+//! [`BwQueue::estimate_done`] (read-only) returns **bit-for-bit** the
+//! completion time [`BwQueue::schedule`] (mutating) would produce from
+//! the same state — so Conductor's TTFT estimates and the simulator's
+//! execution cannot drift (`rust/tests/proptest_invariants.rs` hammers
+//! the property under arbitrary op interleavings).
+
+use crate::config::SimConfig;
+use crate::messenger::Messenger;
+use crate::model::PerfModel;
+use crate::trace::BLOCK_TOKENS;
+use crate::TimeMs;
+
+/// One scheduled queue occupation (a transfer, a staging read, a
+/// demotion write).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Op {
+    pub start: TimeMs,
+    pub end: TimeMs,
+    pub bytes: u64,
+}
+
+/// A per-node FIFO bandwidth queue: each op occupies its node's device
+/// for `latency + setup + bytes/bw` and queues behind every earlier op
+/// on the same node.  `estimate_done` is the read-only probe the cost
+/// model plans with; `schedule` is the mutating reservation execution
+/// commits; `backlog_ms` is the congestion signal replication decisions
+/// read.
+#[derive(Debug)]
+pub struct BwQueue {
+    /// Serialization bandwidth, B/ms (`f64::INFINITY` = the device never
+    /// serializes — ops cost only their latency/setup).
+    bw_per_ms: f64,
+    /// Fixed per-op setup latency, ms.
+    latency_ms: f64,
+    /// Each node's device is busy until this time.
+    busy_until: Vec<TimeMs>,
+    pub total_bytes: u64,
+    pub n_ops: u64,
+    /// Total time ops spent queued behind earlier ones (congestion).
+    pub queued_ms: f64,
+    /// Total device occupation scheduled (the utilization numerator).
+    pub busy_ms: f64,
+}
+
+impl BwQueue {
+    /// `n_nodes` devices at `bw_bytes_per_sec` with `latency_ms` setup
+    /// cost per op.
+    pub fn new(n_nodes: usize, bw_bytes_per_sec: f64, latency_ms: f64) -> Self {
+        BwQueue {
+            bw_per_ms: bw_bytes_per_sec / 1e3,
+            latency_ms,
+            busy_until: vec![0.0; n_nodes],
+            total_bytes: 0,
+            n_ops: 0,
+            queued_ms: 0.0,
+            busy_ms: 0.0,
+        }
+    }
+
+    /// Device occupation of one op: setup latencies plus bandwidth
+    /// serialization.  `setup_ms` carries op-specific setup on top of
+    /// the bank's fixed latency (e.g. the NVMe per-block IOPS term).
+    pub fn serialize_ms(&self, bytes: u64, setup_ms: f64) -> f64 {
+        self.latency_ms + setup_ms + bytes as f64 / self.bw_per_ms
+    }
+
+    /// Absolute completion time if an op of `bytes` were scheduled on
+    /// `node` now — **bit-for-bit** what [`Self::schedule`] would
+    /// return.  Read-only.
+    pub fn estimate_done(&self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> TimeMs {
+        self.estimate_done_dur(node, now, self.serialize_ms(bytes, setup_ms))
+    }
+
+    /// Completion delay (ms from `now`) of the same probe.
+    pub fn estimate_ms(&self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> f64 {
+        self.estimate_done(node, now, bytes, setup_ms) - now
+    }
+
+    /// Read-only probe for an op whose duration the caller computed (an
+    /// op at a non-default rate, e.g. an NVMe *write* on the read-bw
+    /// bank).
+    pub fn estimate_done_dur(&self, node: usize, now: TimeMs, dur_ms: f64) -> TimeMs {
+        self.busy_until[node].max(now) + dur_ms
+    }
+
+    /// Enqueue an op of `bytes` on `node`; returns its (start, end).
+    pub fn schedule(&mut self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> Op {
+        let dur = self.serialize_ms(bytes, setup_ms);
+        self.schedule_dur(node, now, dur, bytes)
+    }
+
+    /// Enqueue an op with a caller-computed duration.
+    pub fn schedule_dur(&mut self, node: usize, now: TimeMs, dur_ms: f64, bytes: u64) -> Op {
+        let start = self.busy_until[node].max(now);
+        let end = start + dur_ms;
+        self.queued_ms += start - now;
+        self.busy_ms += dur_ms;
+        self.busy_until[node] = end;
+        self.total_bytes += bytes;
+        self.n_ops += 1;
+        Op { start, end, bytes }
+    }
+
+    /// Current queue depth of a node in ms (the congestion signal for
+    /// replication decisions).
+    pub fn backlog_ms(&self, node: usize, now: TimeMs) -> f64 {
+        (self.busy_until[node] - now).max(0.0)
+    }
+
+    /// When the node's device drains (absolute).
+    pub fn free_at(&self, node: usize) -> TimeMs {
+        self.busy_until[node]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    pub fn stats(&self) -> BankStats {
+        BankStats {
+            n_ops: self.n_ops,
+            total_bytes: self.total_bytes,
+            queued_ms: self.queued_ms,
+            busy_ms: self.busy_ms,
+        }
+    }
+}
+
+/// Aggregate counters of one resource bank over a run.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct BankStats {
+    pub n_ops: u64,
+    pub total_bytes: u64,
+    /// Total time ops waited behind earlier ops (the congestion cost).
+    pub queued_ms: f64,
+    /// Total device occupation scheduled.
+    pub busy_ms: f64,
+}
+
+impl BankStats {
+    /// Mean device utilization over `n_nodes` devices for `wall_ms`.
+    pub fn utilization(&self, wall_ms: f64, n_nodes: usize) -> f64 {
+        if wall_ms <= 0.0 || n_nodes == 0 {
+            0.0
+        } else {
+            self.busy_ms / (wall_ms * n_nodes as f64)
+        }
+    }
+}
+
+/// Per-resource counters of a run (`SimResult::resources`,
+/// `RunReport::resources`).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ResourceStats {
+    pub nic_tx: BankStats,
+    pub nic_rx: BankStats,
+    pub nvme: BankStats,
+}
+
+/// The cluster's resource banks: the NIC tx/rx pair (wrapped by
+/// [`Messenger`]) and the per-node NVMe queue.  All banks cover
+/// `n_prefill + n_decode` nodes (prefill nodes first, matching the
+/// instance numbering everywhere else).
+#[derive(Debug)]
+pub struct Resources {
+    pub nic: Messenger,
+    pub nvme: BwQueue,
+    /// NVMe write bandwidth, B/ms.  Infinite (the default) means
+    /// demotion writes are free and untracked — the pre-queue behavior.
+    ssd_write_per_ms: f64,
+}
+
+impl Resources {
+    pub fn new(cfg: &SimConfig, perf: &PerfModel) -> Self {
+        let n = cfg.n_prefill + cfg.n_decode;
+        Resources {
+            nic: Messenger::new(
+                n,
+                perf.hw.rdma_bw,
+                cfg.nic_rx_bw.unwrap_or(f64::INFINITY),
+                perf.hw.transfer_latency_ms,
+            ),
+            nvme: BwQueue::new(n, perf.hw.ssd_read_bw, 0.0),
+            ssd_write_per_ms: cfg.ssd_write_bw.unwrap_or(f64::INFINITY) / 1e3,
+        }
+    }
+
+    /// Charge `n_blocks` of demotion writes to `node`'s NVMe queue —
+    /// writes share the device with staging reads, so a demotion burst
+    /// delays the next prefix staging.  Sequential writes pay bandwidth
+    /// only (no per-block IOPS term).  With infinite write bandwidth
+    /// (the default) demotion stays free: no op is recorded at all, so
+    /// default runs are bit-identical to the pre-queue model.
+    pub fn schedule_demote_writes(
+        &mut self,
+        perf: &PerfModel,
+        node: usize,
+        now: TimeMs,
+        n_blocks: usize,
+    ) -> Option<Op> {
+        if n_blocks == 0 || self.ssd_write_per_ms.is_infinite() {
+            return None;
+        }
+        let bytes = n_blocks as u64 * BLOCK_TOKENS * perf.model.kv_bytes_per_token();
+        let dur = bytes as f64 / self.ssd_write_per_ms;
+        Some(self.nvme.schedule_dur(node, now, dur, bytes))
+    }
+
+    pub fn stats(&self) -> ResourceStats {
+        ResourceStats {
+            nic_tx: self.nic.tx.stats(),
+            nic_rx: self.nic.rx.stats(),
+            nvme: self.nvme.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q() -> BwQueue {
+        // 100 GB/s, 1 ms setup, 4 nodes — the Messenger NIC shape.
+        BwQueue::new(4, 100e9, 1.0)
+    }
+
+    #[test]
+    fn serialize_matches_pre_refactor_messenger_formula() {
+        // The formula pin of the refactor: `latency + bytes / (bw/1e3)`
+        // exactly, so a BwQueue-backed Messenger times transfers
+        // bit-for-bit like the pre-refactor one.
+        let q = q();
+        let bytes = 5_242_880_000u64;
+        let want = 1.0 + bytes as f64 / (100e9 / 1e3);
+        assert_eq!(q.serialize_ms(bytes, 0.0).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn fifo_serializes_per_node_only() {
+        let mut q = q();
+        let a = q.schedule(0, 0.0, 1_000_000_000, 0.0);
+        let b = q.schedule(0, 0.0, 1_000_000_000, 0.0);
+        assert_eq!(b.start, a.end);
+        assert!(q.queued_ms > 0.0);
+        let c = q.schedule(1, 0.0, 1_000_000_000, 0.0);
+        assert_eq!(c.start, 0.0);
+        assert_eq!(q.n_ops, 3);
+        assert_eq!(q.total_bytes, 3_000_000_000);
+    }
+
+    #[test]
+    fn estimate_equals_schedule_bit_for_bit() {
+        let mut q = q();
+        q.schedule(2, 0.0, 2_000_000_000, 0.0);
+        let est = q.estimate_done(2, 5.0, 1_000_000_000, 0.25);
+        let op = q.schedule(2, 5.0, 1_000_000_000, 0.25);
+        assert_eq!(est.to_bits(), op.end.to_bits());
+        // And the duration form.
+        let est = q.estimate_done_dur(2, 7.0, 42.0);
+        let op = q.schedule_dur(2, 7.0, 42.0, 10);
+        assert_eq!(est.to_bits(), op.end.to_bits());
+    }
+
+    #[test]
+    fn backlog_decays_and_busy_accumulates() {
+        let mut q = q();
+        q.schedule(0, 0.0, 10_000_000_000, 0.0); // 100 ms + 1 ms setup
+        assert!(q.backlog_ms(0, 0.0) > 100.0);
+        assert!(q.backlog_ms(0, 50.0) < q.backlog_ms(0, 0.0));
+        assert_eq!(q.backlog_ms(0, 1_000.0), 0.0);
+        assert!((q.busy_ms - 101.0).abs() < 1e-6);
+        let s = q.stats();
+        assert!((s.utilization(1_010.0, 4) - 101.0 / 4_040.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_bandwidth_ops_never_occupy() {
+        let mut q = BwQueue::new(2, f64::INFINITY, 0.0);
+        let a = q.schedule(0, 5.0, u64::MAX, 0.0);
+        assert_eq!(a.start, 5.0);
+        assert_eq!(a.end, 5.0);
+        // A later op sees no backlog.
+        let b = q.schedule(0, 5.0, 1, 0.0);
+        assert_eq!(b.start, 5.0);
+        assert_eq!(q.backlog_ms(0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn setup_term_rides_on_top_of_bandwidth() {
+        let q = BwQueue::new(1, 3e9, 0.0); // the NVMe read shape
+        let bw_only = q.serialize_ms(3_000_000, 0.0);
+        assert!((bw_only - 1.0).abs() < 1e-9);
+        let with_iops = q.serialize_ms(3_000_000, 0.05);
+        assert!((with_iops - 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn demote_writes_share_the_nvme_queue() {
+        let cfg = SimConfig {
+            ssd_write_bw: Some(2e9),
+            ..SimConfig::default()
+        };
+        let perf = PerfModel::paper();
+        let mut res = Resources::new(&cfg, &perf);
+        let w = res.schedule_demote_writes(&perf, 0, 0.0, 4).unwrap();
+        assert!(w.end > 0.0);
+        // A staging read on the same node queues behind the write...
+        let r = res.nvme.schedule(0, 0.0, 1_000_000, 0.0);
+        assert_eq!(r.start, w.end);
+        // ...and an infinite-write-bw config records nothing at all.
+        let mut free = Resources::new(&SimConfig::default(), &perf);
+        assert!(free.schedule_demote_writes(&perf, 0, 0.0, 4).is_none());
+        assert_eq!(free.nvme.n_ops, 0);
+    }
+
+    #[test]
+    fn resources_default_knobs_are_infinite() {
+        let cfg = SimConfig::default();
+        let perf = PerfModel::paper();
+        let mut res = Resources::new(&cfg, &perf);
+        // Default rx bandwidth is infinite: a transfer's completion is
+        // exactly the tx side, and incast cannot congest.
+        let t = res.nic.schedule(0, 1, 0.0, 1_000_000_000);
+        let u = res.nic.schedule(2, 1, 0.0, 1_000_000_000);
+        assert_eq!(t.end.to_bits(), u.end.to_bits());
+        assert_eq!(res.nic.rx.backlog_ms(1, 0.0), 0.0);
+    }
+}

@@ -6,12 +6,14 @@
 //!
 //! Prefill execution is **event-driven**: Conductor admits a job onto
 //! the group's FIFO queues, a `PrefillStart` event fires when its gate
-//! (remote prefix fetch) passes, the pump starts every job that is at
-//! the head of all its members' queues, and `PrefillDone` completes it —
-//! recording the *actual* TTFT next to Conductor's estimate (both come
-//! from [`crate::costmodel`], so they agree; `cost_model_agreement.rs`
-//! asserts it).  The layer-wise KVCache stream to the decode node is
-//! scheduled on the primary's NIC when the job actually starts (§5.2).
+//! (remote prefix fetch and/or local SSD staging, both reserved on the
+//! per-node resource queues at admission) passes, the pump starts every
+//! job that is at the head of all its members' queues, and `PrefillDone`
+//! completes it — recording the *actual* TTFT next to Conductor's
+//! estimate (both come from [`crate::costmodel`], so they agree;
+//! `cost_model_agreement.rs` asserts it).  The layer-wise KVCache stream
+//! to the decode node is scheduled on the primary's NIC-tx (and the
+//! decode node's NIC-rx) when the job actually starts (§5.2).
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
@@ -21,12 +23,12 @@ use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
 use crate::kvcache::{PrefixIndex, TierCounters};
-use crate::messenger::Messenger;
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
 use crate::prefill::{JobId, PrefillPool};
-use crate::trace::{TraceRecord, BLOCK_TOKENS};
+use crate::resource::{ResourceStats, Resources};
+use crate::trace::TraceRecord;
 use crate::util::rng::Rng;
 use crate::{RequestId, TimeMs};
 
@@ -59,10 +61,10 @@ enum EventKind {
     PrefillStart { jid: JobId },
     /// A running prefill job completed.
     PrefillDone { jid: JobId },
-    /// An SSD→DRAM staging read finished on `node` (armed when a job
-    /// with SSD-resident prefix starts, or when a remote fetch forces
-    /// the *source* to stage transferred blocks): tier traffic as
-    /// observable simulator state.
+    /// An SSD→DRAM staging read finished on `node` — armed at admission
+    /// for the completion time the NVMe queue reservation reported
+    /// (local prefix staging, or a remote fetch's source-side staging):
+    /// tier traffic as observable simulator state.
     SsdLoad { node: usize, bytes: u64 },
     KvArrive { rid: RequestId, decode: usize, ctx: u64, out: u64 },
     DecodeStep { decode: usize, seq: u64, dur: f64 },
@@ -114,10 +116,13 @@ pub struct SimResult {
     pub conductor: ConductorStats,
     pub load_samples: Vec<LoadSample>,
     pub wall_ms: TimeMs,
-    /// Total bytes moved by the Messenger.
+    /// Total bytes moved over the NIC banks.
     pub transfer_bytes: u64,
     pub rejected_at_arrival: u64,
     pub rejected_at_decode: u64,
+    /// Per-resource queued-ms / busy-ms / byte counters (NIC tx, NIC rx,
+    /// NVMe) over the run.
+    pub resources: ResourceStats,
     /// Aggregated tier counters over every prefill instance's pool.
     pub tier: TierCounters,
     /// SSD staging reads observed via `SsdLoad` events, total and
@@ -137,6 +142,7 @@ impl SimResult {
     pub fn report(&self, cfg: &SimConfig) -> metrics::RunReport {
         metrics::RunReport {
             tiers: self.tier,
+            resources: self.resources,
             ..metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
         }
     }
@@ -160,7 +166,9 @@ pub struct Sim<'a> {
     perf: PerfModel,
     prefill: PrefillPool,
     decodes: Vec<DecodeInstance>,
-    messenger: Messenger,
+    /// The per-node resource banks: NIC tx/rx (via the Messenger
+    /// wrapper) and the shared NVMe queue.
+    resources: Resources,
     rng: Rng,
     admission: Admission,
     events: BinaryHeap<Event>,
@@ -173,8 +181,8 @@ pub struct Sim<'a> {
     sample_interval: f64,
     ssd_load_events: u64,
     ssd_loaded_bytes_by_node: Vec<u64>,
-    /// The Conductor's global prefix index (§5) — `None` when disabled
-    /// or when the cluster exceeds one shard's node capacity.
+    /// The Conductor's global prefix index (§5) — `None` only when
+    /// explicitly disabled (`use_prefix_index: false`).
     index: Option<PrefixIndex>,
     n_events: u64,
     /// Outstanding non-bookkeeping events.  `Sample` and `DemoteSweep`
@@ -194,16 +202,12 @@ impl<'a> Sim<'a> {
         let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
             .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
             .collect();
-        let messenger = Messenger::new(
-            cfg.n_prefill + cfg.n_decode,
-            perf.hw.rdma_bw,
-            perf.hw.transfer_latency_ms,
-        );
+        let resources = Resources::new(cfg, &perf);
         Sim {
             cfg,
             prefill: PrefillPool::new(cfg),
             decodes,
-            messenger,
+            resources,
             rng: Rng::new(cfg.seed),
             admission: Admission::new(cfg.rejection, cfg.overload_threshold),
             events: BinaryHeap::new(),
@@ -216,8 +220,10 @@ impl<'a> Sim<'a> {
             sample_interval: 10_000.0,
             ssd_load_events: 0,
             ssd_loaded_bytes_by_node: vec![0; cfg.n_prefill],
-            index: (cfg.use_prefix_index && PrefixIndex::supports(cfg.n_prefill))
-                .then(|| PrefixIndex::new(cfg.n_prefill)),
+            // The widened [u64; W] bitsets cover every realistic cluster,
+            // so there is no automatic scan fallback anymore — only the
+            // explicit `use_prefix_index: false` knob restores the scan.
+            index: cfg.use_prefix_index.then(|| PrefixIndex::new(cfg.n_prefill)),
             n_events: 0,
             real_events: 0,
             demote_after: cfg.demote_after_ms.filter(|&x| x > 0.0 && x.is_finite()),
@@ -277,7 +283,10 @@ impl<'a> Sim<'a> {
     }
 
     /// Start every startable prefill job: occupy its group, schedule the
-    /// layer-wise KV stream on the primary's NIC, and arm `PrefillDone`.
+    /// layer-wise KV stream on the primary's NIC-tx + the decode node's
+    /// NIC-rx, and arm `PrefillDone`.  (SSD staging already happened —
+    /// it was reserved on the NVMe queue at admission and gated the
+    /// start.)
     fn pump_prefill(&mut self, now: TimeMs) {
         loop {
             let ready = self.prefill.startable(now);
@@ -285,23 +294,12 @@ impl<'a> Sim<'a> {
                 return;
             }
             for jid in ready {
-                let ssd_tokens = self.prefill.job(jid).ssd_prefix_tokens;
                 let (primary, exec_ms, rid) = self.prefill.start(jid, now);
-                // SSD→DRAM staging of the reused prefix (the load half of
-                // the load-vs-recompute decision): completes after the
-                // staging latency the cost model charged.
-                if ssd_tokens > 0 {
-                    self.push(
-                        now + costmodel::ssd_stage_ms(&self.perf, ssd_tokens),
-                        EventKind::SsdLoad {
-                            node: primary,
-                            bytes: ssd_tokens * self.perf.model.kv_bytes_per_token(),
-                        },
-                    );
-                }
-                let input = self.pending.get(&rid).map(|p| p.input).unwrap_or(0);
-                let stream = self.messenger.schedule(
+                let (input, decode) =
+                    self.pending.get(&rid).map(|p| (p.input, p.decode)).unwrap_or((0, 0));
+                let stream = self.resources.nic.schedule(
                     primary,
+                    self.cfg.n_prefill + decode,
                     now,
                     costmodel::kv_stream_bytes(&self.perf, input),
                 );
@@ -342,7 +340,7 @@ impl<'a> Sim<'a> {
             perf: &self.perf,
             prefill: &mut self.prefill,
             decodes: &self.decodes,
-            messenger: &mut self.messenger,
+            res: &mut self.resources,
             rng: &mut self.rng,
             now,
             index: self.index.as_mut(),
@@ -354,17 +352,30 @@ impl<'a> Sim<'a> {
                 ));
             }
             Ok(p) => {
-                // The remote fetch's source-side SSD staging (§6.2 +
-                // tiering) is observable tier traffic: the NVMe read on
-                // the source lands just before its NIC starts.
-                if p.fetch_ssd_stage_blocks > 0 {
+                // SSD staging reads are observable tier traffic.  Both
+                // kinds were reserved on the NVMe queues inside
+                // `conductor::schedule` — the events land exactly when
+                // the queue said the reads finish: the fetch's
+                // source-side staging (§6.2 + tiering) just before the
+                // source NIC starts, the local staging when the job's
+                // gate passes.
+                if let Some(t) = p.fetch_stage_done {
                     let (src, _) = p.fetch.expect("staging implies a fetch");
-                    let tokens = p.fetch_ssd_stage_blocks as u64 * BLOCK_TOKENS;
+                    let tokens = p.fetch_ssd_stage_blocks as u64 * crate::trace::BLOCK_TOKENS;
                     self.push(
-                        now + costmodel::ssd_stage_ms(&self.perf, tokens),
+                        t,
                         EventKind::SsdLoad {
                             node: src,
-                            bytes: tokens * self.perf.model.kv_bytes_per_token(),
+                            bytes: costmodel::stage_bytes(&self.perf, tokens),
+                        },
+                    );
+                }
+                if let Some(t) = p.ssd_stage_done {
+                    self.push(
+                        t,
+                        EventKind::SsdLoad {
+                            node: p.prefill_group[0],
+                            bytes: costmodel::stage_bytes(&self.perf, p.ssd_stage_tokens),
                         },
                     );
                 }
@@ -509,6 +520,14 @@ impl<'a> Sim<'a> {
                         if let Some(idx) = self.index.as_mut() {
                             idx.apply(node, &delta);
                         }
+                        // The sweep's demotion writes occupy the node's
+                        // NVMe device alongside staging reads.
+                        let _ = self.resources.schedule_demote_writes(
+                            &self.perf,
+                            node,
+                            now,
+                            delta.demoted_to_ssd(),
+                        );
                     }
                     // Low priority: keep sweeping only while real work
                     // remains.
@@ -538,9 +557,10 @@ impl<'a> Sim<'a> {
             conductor: self.stats,
             load_samples: self.samples,
             wall_ms: now,
-            transfer_bytes: self.messenger.total_bytes,
+            transfer_bytes: self.resources.nic.total_bytes(),
             rejected_at_arrival: self.admission.rejected_at_arrival,
             rejected_at_decode: self.admission.rejected_at_decode,
+            resources: self.resources.stats(),
             tier,
             ssd_load_events: self.ssd_load_events,
             ssd_loaded_bytes: self.ssd_loaded_bytes_by_node.iter().sum(),

@@ -123,26 +123,30 @@ fn estimates_match_on_cold_start_after_idle_gap() {
 fn remote_fetch_estimate_charges_source_ssd_staging() {
     // ROADMAP follow-up (PR 2): a §6.2 remote prefix fetch whose source
     // holds the prefix on its SSD tier must charge the *source's* NVMe
-    // staging before the wire — estimate and execution alike.  Wire-only
+    // queue before the wire — estimate and execution alike.  Wire-only
     // pricing would put the planned start seconds early (NVMe is ~30×
     // slower than RDMA here), exactly the estimate/actual drift the
     // unified cost model exists to prevent.
     use mooncake::conductor::{self, ConductorStats, SchedRequest};
     use mooncake::costmodel;
-    use mooncake::decode::DecodeInstance;
-    use mooncake::messenger::Messenger;
     use mooncake::model::PerfModel;
     use mooncake::prefill::PrefillPool;
+    use mooncake::resource::Resources;
     use mooncake::trace::BLOCK_TOKENS;
     use mooncake::util::rng::Rng;
 
     let cfg = SimConfig { kvcache_balancing_threshold: 1.5, ..Default::default() };
     let perf = PerfModel::paper();
     let mut prefill = PrefillPool::new(&cfg);
-    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
-        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+    let decodes: Vec<mooncake::decode::DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| {
+            mooncake::decode::DecodeInstance::new(
+                perf.vram_kv_capacity_tokens(),
+                cfg.max_decode_batch,
+            )
+        })
         .collect();
-    let mut msgr = Messenger::new(cfg.n_prefill + cfg.n_decode, perf.hw.rdma_bw, 1.0);
+    let mut res = Resources::new(&cfg, &perf);
     let mut rng = Rng::new(7);
     let mut stats = ConductorStats::default();
     let blocks = 64u64;
@@ -159,7 +163,7 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
             perf: &perf,
             prefill: &mut prefill,
             decodes: &decodes,
-            messenger: &mut msgr,
+            res: &mut res,
             rng: &mut rng,
             now: 0.0,
             index: None,
@@ -184,7 +188,7 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
         perf: &perf,
         prefill: &mut prefill,
         decodes: &decodes,
-        messenger: &mut msgr,
+        res: &mut res,
         rng: &mut rng,
         now,
         index: None,
@@ -196,10 +200,14 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
     assert_eq!(stats.fetch_stagings, 1);
     assert_eq!(stats.fetch_staged_blocks, blocks);
 
-    // Estimate == execution, to the millisecond term: with the source
-    // NIC and the target queue idle, the planned start is exactly
-    // source staging + wire serialization.
-    let stage = costmodel::ssd_stage_ms(&perf, blocks * BLOCK_TOKENS);
+    // Estimate == execution, to the millisecond term: with the source's
+    // NVMe queue, its NIC, and the target queue idle, the planned start
+    // is exactly source staging + wire serialization.  (The probe runs
+    // against a fresh bank — `res`'s queues already hold the committed
+    // reservation.)
+    let fresh = Resources::new(&cfg, &perf);
+    let stage =
+        costmodel::estimate_stage_done(&perf, &fresh.nvme, holder, 0.0, blocks * BLOCK_TOKENS);
     let bytes = costmodel::fetch_bytes(&perf, blocks as usize);
     let wire = 1.0 + bytes as f64 / (perf.hw.rdma_bw / 1e3);
     assert!(stage > 1_000.0, "NVMe staging must be material: {stage}");
@@ -208,6 +216,107 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
         "planned start {} != now + stage {stage} + wire {wire}",
         p.prefill_start
     );
+    assert_eq!(p.fetch_stage_done, Some(now + stage));
+}
+
+#[test]
+fn estimates_match_under_concurrent_nvme_staging() {
+    // The tentpole's NVMe-queue scenario: two deep prefixes demoted to
+    // one node's SSD tier re-arrive ~1 s apart, so the second staging
+    // read queues behind the first on the shared NVMe device — and the
+    // TTFT estimate must price that queueing exactly, because estimator
+    // and executor read the same `BwQueue`.  (The chains are deep enough
+    // that staging beats recompute even with the queueing priced in —
+    // shallower chains would make Algorithm 1 flip to recompute, which
+    // is the decision-side face of the same contention signal.)
+    use mooncake::trace::BLOCK_TOKENS;
+    let blocks = 256u64;
+    let rec = |t: u64, base: u64| TraceRecord {
+        timestamp: t,
+        input_length: blocks * BLOCK_TOKENS,
+        output_length: 8,
+        hash_ids: (base..base + blocks).collect(),
+    };
+    let trace = vec![
+        rec(0, 1_000),       // A cold — fills the DRAM tier exactly
+        rec(60_000, 2_000),  // B cold — evicts A wholesale to SSD
+        rec(300_000, 1_000), // A returns: a ~14 s staging read
+        rec(301_000, 2_000), // B returns while A's read is in flight
+    ];
+    let cfg = SimConfig {
+        n_prefill: 1,
+        n_decode: 1,
+        scheduling: mooncake::config::SchedulingPolicy::CacheAware,
+        cache_capacity_blocks: Some(blocks as usize),
+        ssd_capacity_blocks: Some(100_000),
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let res = assert_agreement(&cfg, &trace, 1.0, 4);
+    // The scenario really contended: both returns staged from SSD, on
+    // the same device, back to back.
+    assert_eq!(res.conductor.ssd_loads, 2, "both re-arrivals must stage, not recompute");
+    assert_eq!(res.resources.nvme.n_ops, 2);
+    assert!(
+        res.resources.nvme.queued_ms > 5_000.0,
+        "the second staging must queue behind the first: {} ms",
+        res.resources.nvme.queued_ms
+    );
+    assert_eq!(res.tier.ssd_hits, 2 * blocks);
+}
+
+#[test]
+fn estimates_match_under_incast_onto_one_prefill_node() {
+    // The tentpole's NIC-rx scenario: three busy holders each forward
+    // their hot prefix to the single idle node, so three fetches
+    // converge on that node's rx queue.  With rx bandwidth far below tx
+    // bandwidth the fan-in serializes on the *destination* — the
+    // congestion the old source-NIC-only model could not express — and
+    // the estimates must still match execution exactly.
+    use mooncake::trace::BLOCK_TOKENS;
+    let rec = |t: u64, base: u64, blocks: u64| TraceRecord {
+        timestamp: t,
+        input_length: blocks * BLOCK_TOKENS,
+        output_length: 8,
+        hash_ids: (base..base + blocks).collect(),
+    };
+    let trace = vec![
+        // Warm three distinct chains onto nodes 0, 1, 2 (staggered so
+        // queue depth spreads them).
+        rec(0, 1_000, 64),
+        rec(1, 2_000, 64),
+        rec(2, 3_000, 64),
+        // Occupy nodes 0, 1, 2 with ~30 s cold prefills.
+        rec(60_000, 4_000, 256),
+        rec(60_001, 5_000, 256),
+        rec(60_002, 6_000, 256),
+        // The warm chains return while their holders are busy: the
+        // balancing branch forwards all three to the idle node 3.
+        rec(60_100, 1_000, 64),
+        rec(60_200, 2_000, 64),
+        rec(60_300, 3_000, 64),
+    ];
+    let cfg = SimConfig {
+        n_prefill: 4,
+        n_decode: 2,
+        cpp_group_max: 1, // keep the busy-filler jobs single-node
+        nic_rx_bw: Some(2e9),
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let res = assert_agreement(&cfg, &trace, 1.0, 9);
+    assert!(
+        res.conductor.remote_fetches >= 3,
+        "the returns must forward-fetch: {}",
+        res.conductor.remote_fetches
+    );
+    assert!(
+        res.resources.nic_rx.queued_ms > 5_000.0,
+        "incast must serialize on the destination rx queue: {} ms",
+        res.resources.nic_rx.queued_ms
+    );
+    // Pure-NIC scenario: nothing ever touched an SSD.
+    assert_eq!(res.resources.nvme.n_ops, 0);
 }
 
 #[test]

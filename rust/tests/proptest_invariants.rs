@@ -115,6 +115,59 @@ fn prop_determinism() {
     }
 }
 
+/// Property (tentpole): for every resource-queue op, the read-only
+/// `estimate_done`/`estimate_done_dur` probe returns **bit-for-bit** the
+/// completion time the mutating `schedule`/`schedule_dur` then produces,
+/// under arbitrary interleavings of op kinds, nodes, sizes, setup
+/// latencies, and (non-decreasing) clock jumps — the contract that lets
+/// Conductor's TTFT estimates and the simulator's execution share one
+/// `BwQueue` without drifting.  A mirror of `busy_until` checks FIFO
+/// semantics and `backlog_ms` along the way.
+#[test]
+fn prop_bwqueue_estimate_exactly_predicts_schedule() {
+    use mooncake::resource::BwQueue;
+    let mut rng = Rng::new(0xB10C5);
+    for round in 0..20 {
+        let n = 1 + rng.below(6) as usize;
+        let bw = match rng.below(3) {
+            0 => f64::INFINITY,
+            1 => 3e9,
+            _ => 1e8 + rng.f64() * 1e11,
+        };
+        let latency = if rng.below(2) == 0 { 0.0 } else { rng.f64() * 5.0 };
+        let mut q = BwQueue::new(n, bw, latency);
+        let mut free_at = vec![0.0f64; n];
+        let mut now = 0.0f64;
+        for step in 0..400 {
+            if rng.below(3) == 0 {
+                now += rng.f64() * 200.0;
+            }
+            let node = rng.below(n as u64) as usize;
+            let bytes = rng.below(1 << 32);
+            let (est, op) = if rng.below(4) == 0 {
+                // A caller-computed-duration op (e.g. an NVMe write).
+                let dur = rng.f64() * 100.0;
+                (q.estimate_done_dur(node, now, dur), q.schedule_dur(node, now, dur, bytes))
+            } else {
+                let setup = if rng.below(2) == 0 { 0.0 } else { rng.f64() * 2.0 };
+                (q.estimate_done(node, now, bytes, setup), q.schedule(node, now, bytes, setup))
+            };
+            assert_eq!(
+                est.to_bits(),
+                op.end.to_bits(),
+                "round {round} step {step}: estimate must equal schedule"
+            );
+            // FIFO: the op starts exactly when the device frees (or now).
+            assert_eq!(op.start.to_bits(), free_at[node].max(now).to_bits());
+            assert!(op.end >= op.start);
+            free_at[node] = op.end;
+            let want_backlog = (free_at[node] - now).max(0.0);
+            assert_eq!(q.backlog_ms(node, now).to_bits(), want_backlog.to_bits());
+            assert_eq!(q.free_at(node).to_bits(), free_at[node].to_bits());
+        }
+    }
+}
+
 /// Property: eviction policies never exceed capacity and never lose a
 /// block that wasn't evicted or removed.
 #[test]
