@@ -1,13 +1,14 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets): Algorithm 1
-//! scheduling latency, prefix matching, eviction ops, and end-to-end
-//! simulator event throughput.  The paper notes TTFT estimation "is
-//! computed in parallel, rendering the processing time negligible
-//! compared to the inference time" — Conductor must stay out of the way.
+//! scheduling latency, prefix matching, block interning, eviction ops,
+//! and end-to-end simulator event throughput.  The paper notes TTFT
+//! estimation "is computed in parallel, rendering the processing time
+//! negligible compared to the inference time" — Conductor must stay out
+//! of the way.
 
 use mooncake::bench_util::{banner, bench};
 use mooncake::conductor;
 use mooncake::config::SimConfig;
-use mooncake::kvcache::{CachePool, PolicyKind};
+use mooncake::kvcache::{BlockInterner, CachePool, DenseBlockId, PolicyKind};
 use mooncake::prefill::PrefillPool;
 use mooncake::sim;
 use mooncake::trace::gen::{generate, TraceGenConfig};
@@ -15,13 +16,25 @@ use mooncake::trace::gen::{generate, TraceGenConfig};
 fn main() {
     banner("hot-path micro-benchmarks");
 
+    // Interning: the once-per-admission hash→dense mapping (warm path —
+    // every chain block already has its id).
+    let mut interner = BlockInterner::new();
+    let hashes: Vec<u64> = (0..30u64).map(|i| i.wrapping_mul(0x9e3779b97f4a7c15)).collect();
+    let mut dense = Vec::new();
+    interner.intern_chain_into(&hashes, &mut dense);
+    bench("intern warm 30-block chain", 100, 10_000, || {
+        interner.intern_chain_into(&hashes, &mut dense);
+        std::hint::black_box(dense.len());
+    })
+    .print();
+
     // Prefix matching over a warm pool.
     let mut pool = CachePool::new(PolicyKind::Lru, Some(100_000), Some(0));
-    for chain in 0..2_000u64 {
-        let blocks: Vec<u64> = (chain * 40..chain * 40 + 30).collect();
+    for chain in 0..2_000u32 {
+        let blocks: Vec<DenseBlockId> = (chain * 40..chain * 40 + 30).collect();
         pool.admit_chain(&blocks, chain as f64);
     }
-    let probe: Vec<u64> = (40_000..40_030).collect();
+    let probe: Vec<DenseBlockId> = (40_000..40_030).collect();
     bench("prefix_match_blocks (30-block chain)", 100, 10_000, || {
         std::hint::black_box(pool.prefix_match_blocks(&probe));
     })
@@ -29,9 +42,9 @@ fn main() {
 
     // Eviction-policy churn, DRAM-only (evictions drop).
     let mut lru = CachePool::new(PolicyKind::Lru, Some(10_000), Some(0));
-    let mut i = 0u64;
+    let mut i = 0u32;
     bench("cache admit_chain under eviction (15 blocks)", 100, 10_000, || {
-        let blocks: Vec<u64> = (i * 15..i * 15 + 15).collect();
+        let blocks: Vec<DenseBlockId> = (i * 15..i * 15 + 15).collect();
         lru.admit_chain(&blocks, i as f64);
         i += 1;
     })
@@ -40,9 +53,9 @@ fn main() {
     // Tier churn: same workload but DRAM evictions demote to SSD and the
     // SSD tier itself overflows — the worst-case two-map path.
     let mut tiered = CachePool::new(PolicyKind::Lru, Some(10_000), Some(20_000));
-    let mut j = 0u64;
+    let mut j = 0u32;
     bench("tiered admit_chain under demotion (15 blocks)", 100, 10_000, || {
-        let blocks: Vec<u64> = (j * 15..j * 15 + 15).collect();
+        let blocks: Vec<DenseBlockId> = (j * 15..j * 15 + 15).collect();
         tiered.admit_chain(&blocks, j as f64);
         j += 1;
     })
@@ -59,7 +72,7 @@ fn main() {
         ..Default::default()
     };
     let mut pfpool = PrefillPool::new(&cfg16);
-    let probe512: Vec<u64> = (0..512).collect();
+    let probe512: Vec<DenseBlockId> = (0..512).collect();
     for inst in pfpool.instances.iter_mut() {
         inst.pool.admit_chain(&probe512, 0.0);
     }

@@ -8,54 +8,60 @@
 //!
 //! Holder sets come from the Conductor's global
 //! [`PrefixIndex`] — one probe per block for the whole
-//! cluster — instead of a `contains` scan of every pool, and congestion
-//! is read off the NIC-tx resource queues.
+//! cluster — instead of a `contains` scan of every pool; congestion is
+//! read off the NIC-tx resource queues, and (PR 4 follow-up) the
+//! *destination* side consults `Messenger::rx_backlog_ms`: pushing a
+//! replica at a node already drowning in ingress traffic makes the §6.1
+//! incast worse, so backpressured destinations are skipped when
+//! `SimConfig::replication_rx_backlog_cap_ms` is set.
 
-use crate::kvcache::PrefixIndex;
+use crate::config::SimConfig;
+use crate::kvcache::{DenseBlockId, PrefixIndex};
 use crate::prefill::PrefillPool;
 use crate::resource::Resources;
-use crate::{BlockId, TimeMs};
+use crate::util::fasthash::FastMap;
+use crate::TimeMs;
 
-use std::collections::HashMap;
-
-/// Exponentially-decayed access counter per block.
+/// Exponentially-decayed access counter per block (interned ids — heat
+/// is conductor-side state, inside the interning boundary).
 #[derive(Debug, Default)]
 pub struct HeatTracker {
-    heat: HashMap<BlockId, (f64, TimeMs)>,
+    heat: FastMap<DenseBlockId, (f64, TimeMs)>,
     /// Decay half-life (ms).
     pub half_life_ms: f64,
 }
 
 impl HeatTracker {
     pub fn new(half_life_ms: f64) -> Self {
-        HeatTracker { heat: HashMap::new(), half_life_ms }
+        HeatTracker { heat: FastMap::default(), half_life_ms }
     }
 
-    fn decayed(&self, b: BlockId, now: TimeMs) -> f64 {
+    fn decayed(&self, b: DenseBlockId, now: TimeMs) -> f64 {
         match self.heat.get(&b) {
             None => 0.0,
             Some(&(h, t)) => h * 0.5f64.powf((now - t).max(0.0) / self.half_life_ms),
         }
     }
 
-    pub fn touch(&mut self, b: BlockId, now: TimeMs) {
+    pub fn touch(&mut self, b: DenseBlockId, now: TimeMs) {
         let h = self.decayed(b, now) + 1.0;
         self.heat.insert(b, (h, now));
     }
 
-    pub fn heat_of(&self, b: BlockId, now: TimeMs) -> f64 {
+    pub fn heat_of(&self, b: DenseBlockId, now: TimeMs) -> f64 {
         self.decayed(b, now)
     }
 
-    /// Blocks hotter than `threshold`, hottest first.
-    pub fn hot_blocks(&self, now: TimeMs, threshold: f64) -> Vec<(BlockId, f64)> {
-        let mut v: Vec<(BlockId, f64)> = self
+    /// Blocks hotter than `threshold`, hottest first (ties by id, so the
+    /// ordering is fully deterministic).
+    pub fn hot_blocks(&self, now: TimeMs, threshold: f64) -> Vec<(DenseBlockId, f64)> {
+        let mut v: Vec<(DenseBlockId, f64)> = self
             .heat
             .keys()
             .map(|&b| (b, self.decayed(b, now)))
             .filter(|(_, h)| *h >= threshold)
             .collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         v
     }
 }
@@ -63,19 +69,25 @@ impl HeatTracker {
 /// Decide proactive replications: a hot block held by a congested node
 /// (deep NIC-tx backlog) is copied to the least-loaded non-holder.
 /// Holder sets come from the global `index`; destination load from the
-/// prefill queues.  Returns (block, from, to) triples; the caller
-/// performs the transfers.
+/// prefill queues.  `cfg.replication_rx_backlog_cap_ms` (`None` = the
+/// default = yesterday's behavior) disqualifies destinations whose
+/// NIC-rx backlog exceeds the cap — a replica pushed into an incast hot
+/// spot would queue behind the very congestion it is meant to relieve.
+/// Returns (block, from, to) triples; the caller performs the
+/// transfers.
 #[allow(clippy::too_many_arguments)]
 pub fn plan_replications(
     tracker: &HeatTracker,
     pool: &PrefillPool,
     index: &PrefixIndex,
     res: &Resources,
+    cfg: &SimConfig,
     now: TimeMs,
     heat_threshold: f64,
     backlog_threshold_ms: f64,
     max_plans: usize,
-) -> Vec<(BlockId, usize, usize)> {
+) -> Vec<(DenseBlockId, usize, usize)> {
+    let rx_backlog_cap_ms = cfg.replication_rx_backlog_cap_ms;
     let mut plans = Vec::new();
     for (block, _) in tracker.hot_blocks(now, heat_threshold) {
         if plans.len() >= max_plans {
@@ -104,6 +116,10 @@ pub fn plan_replications(
             .unwrap();
         let dst = (0..pool.len())
             .filter(|i| !holders.contains(i))
+            .filter(|&i| match rx_backlog_cap_ms {
+                Some(cap) => res.nic.rx_backlog_ms(i, now) <= cap,
+                None => true,
+            })
             .min_by(|&a, &b| {
                 pool.instances[a]
                     .queue_ms(now)
@@ -147,6 +163,12 @@ mod tests {
         let hot = t.hot_blocks(0.0, 1.5);
         assert_eq!(hot.len(), 2);
         assert_eq!(hot[0].0, 1);
+        // Equal heat breaks ties by id — deterministic planning order.
+        let mut u = HeatTracker::new(1e9);
+        u.touch(9, 0.0);
+        u.touch(4, 0.0);
+        let tied = u.hot_blocks(0.0, 0.5);
+        assert_eq!(tied.iter().map(|&(b, _)| b).collect::<Vec<_>>(), vec![4, 9]);
     }
 
     #[test]
@@ -167,7 +189,7 @@ mod tests {
         }
         res.nic.schedule(0, 1, 0.0, 500_000_000_000); // 5000 ms backlog
 
-        let plans = plan_replications(&tracker, &pool, &idx, &res, 0.0, 10.0, 100.0, 4);
+        let plans = plan_replications(&tracker, &pool, &idx, &res, &cfg, 0.0, 10.0, 100.0, 4);
         assert_eq!(plans.len(), 1);
         let (b, src, dst) = plans[0];
         assert_eq!((b, src), (7, 0));
@@ -175,7 +197,56 @@ mod tests {
 
         // Without congestion: no replication.
         let quiet = Resources::new(&cfg, &perf);
-        let plans = plan_replications(&tracker, &pool, &idx, &quiet, 0.0, 10.0, 100.0, 4);
+        let plans = plan_replications(&tracker, &pool, &idx, &quiet, &cfg, 0.0, 10.0, 100.0, 4);
         assert!(plans.is_empty());
+    }
+
+    #[test]
+    fn backpressured_destinations_are_skipped_when_capped() {
+        // ROADMAP PR 4 follow-up: with `replication_rx_backlog_cap_ms`
+        // set, a destination whose NIC-rx backlog exceeds the cap is
+        // disqualified; with the knob off (None — the default), the
+        // decision is exactly yesterday's.
+        let cfg = SimConfig {
+            n_prefill: 3,
+            nic_rx_bw: Some(10e9), // finite ingress so rx backlogs exist
+            ..Default::default()
+        };
+        assert!(cfg.replication_rx_backlog_cap_ms.is_none(), "knob defaults off");
+        let perf = PerfModel::paper();
+        let mut pool = PrefillPool::new(&cfg);
+        let mut res = Resources::new(&cfg, &perf);
+        let mut tracker = HeatTracker::new(1e9);
+
+        pool.instances[0].pool.insert_replica(&[7], 0.0);
+        let idx = pool.build_prefix_index();
+        for _ in 0..100 {
+            tracker.touch(7, 0.0);
+        }
+        // Holder 0: deep tx backlog (sent towards a decode node so no
+        // prefill destination picks up stray rx traffic from it).
+        res.nic.schedule(0, 5, 0.0, 500_000_000_000);
+        // Node 1 (the queue-idle favourite) is drowning in ingress.
+        res.nic.schedule(2, 1, 0.0, 100_000_000_000); // ~10 s of rx backlog on 1
+        pool.instances[2].block_until(50.0); // node 2 slightly busy
+
+        // Off (the default None): destination choice ignores rx — node 1
+        // wins on queue time despite its rx backlog (yesterday's
+        // behavior).
+        let off = plan_replications(&tracker, &pool, &idx, &res, &cfg, 0.0, 10.0, 100.0, 4);
+        assert_eq!(off, vec![(7, 0, 1)]);
+
+        // On with a cap below node 1's backlog: the plan flips to the
+        // only non-backpressured non-holder, node 2.
+        let capped = SimConfig { replication_rx_backlog_cap_ms: Some(1_000.0), ..cfg.clone() };
+        let on = plan_replications(&tracker, &pool, &idx, &res, &capped, 0.0, 10.0, 100.0, 4);
+        assert_eq!(on, vec![(7, 0, 2)]);
+
+        // Cap so tight every destination is backpressured (node 2 also
+        // receives now): no plan at all rather than a harmful one.
+        res.nic.schedule(0, 2, 0.0, 100_000_000_000);
+        let zero = SimConfig { replication_rx_backlog_cap_ms: Some(0.0), ..cfg.clone() };
+        let none = plan_replications(&tracker, &pool, &idx, &res, &zero, 0.0, 10.0, 100.0, 4);
+        assert!(none.is_empty(), "fully backpressured cluster must not replicate");
     }
 }

@@ -7,6 +7,15 @@
 //! cache-load-balancing extension adds remote prefix fetches and
 //! heuristic hot-spot replication.
 //!
+//! The scheduler is itself a throughput-critical component (the cluster
+//! is overloaded *by design*), so the decision loop is engineered to be
+//! **allocation-free at steady state**: requests arrive with interned
+//! [`DenseBlockId`] chains (see `kvcache::intern`), every lookup runs
+//! against dense or fast-hashed structures, and all per-decision buffers
+//! live in a caller-owned [`SchedScratch`] threaded through [`Ctx`].  A
+//! rejected decision (the overloaded steady state) touches no heap at
+//! all once the scratch has warmed.
+//!
 //! All timing comes from [`crate::costmodel`] — the same API the
 //! simulator's `PrefillStart`/`PrefillDone` events execute against — so
 //! the TTFT a placement predicts is the TTFT the cluster delivers
@@ -20,21 +29,23 @@ pub mod migration;
 use crate::config::{SchedulingPolicy, SimConfig};
 use crate::costmodel::{self, FetchPlan, PrefillEstimate};
 use crate::decode::DecodeInstance;
-use crate::kvcache::{PrefixIndex, Tier, TierMatch};
+use crate::kvcache::{DenseBlockId, PrefixIndex, SsdPositions, TierDelta, TierMatch};
 use crate::model::PerfModel;
 use crate::prefill::{JobId, PrefillPool};
 use crate::resource::Resources;
 use crate::trace::BLOCK_TOKENS;
 use crate::util::rng::Rng;
-use crate::{BlockId, TimeMs};
+use crate::TimeMs;
 
-/// A request as the scheduler sees it.
+/// A request as the scheduler sees it.  `hash_ids` carries *interned*
+/// dense block ids — the trace-level hashes were mapped at admission
+/// (`sim::Sim::handle_arrival`), which is the one interning boundary.
 #[derive(Debug, Clone)]
 pub struct SchedRequest {
     pub rid: u64,
     pub input_tokens: u64,
     pub output_tokens: u64,
-    pub hash_ids: Vec<BlockId>,
+    pub hash_ids: Vec<DenseBlockId>,
 }
 
 impl SchedRequest {
@@ -99,6 +110,32 @@ pub struct Placement {
     pub est_tbt: f64,
 }
 
+/// Reusable per-conductor scratch: every buffer a scheduling decision
+/// needs, owned by the caller (the `Sim`, a bench, a test) and threaded
+/// through [`Ctx`].  After the first few decisions nothing here
+/// reallocates, which is what makes the steady-state (SLO-rejecting)
+/// decision loop allocation-free — `sched_throughput` measures exactly
+/// that loop.
+#[derive(Debug, Default)]
+pub struct SchedScratch {
+    /// Per-node tier matches from the one prefix walk.
+    matches: Vec<TierMatch>,
+    /// Per-node SSD positions within each matched head (same walk) —
+    /// what the §6.2 wire-refresh pricing consumes instead of re-probing
+    /// tiers per head block.
+    ssd_pos: SsdPositions,
+    /// Suffix counts of the best holder's SSD copies (balancing branch).
+    src_ssd_suffix: Vec<u32>,
+    /// CPP group buffer for per-candidate estimates.
+    group: Vec<usize>,
+    /// The chosen placement's CPP group (accept path).
+    best_group: Vec<usize>,
+    /// Residency-delta buffer for pool mutations on the accept path.
+    delta: TierDelta,
+    /// Replica block list for the §6.2 forwarding path.
+    replica_blocks: Vec<DenseBlockId>,
+}
+
 /// Scratch the scheduler needs each call (everything lives in the Sim).
 pub struct Ctx<'a> {
     pub cfg: &'a SimConfig,
@@ -116,6 +153,8 @@ pub struct Ctx<'a> {
     /// it.  `None` falls back to the per-node scan — results are
     /// bit-for-bit identical either way (a debug assert checks it).
     pub index: Option<&'a mut PrefixIndex>,
+    /// Reused decision buffers (see [`SchedScratch`]).
+    pub scratch: &'a mut SchedScratch,
 }
 
 /// Counters for Fig 8-style scheduling studies.
@@ -144,9 +183,10 @@ pub struct ConductorStats {
 
 /// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks
 /// of which `ssd_blocks` must be staged up from the SSD tier, and an
-/// optional remote fetch first.
+/// optional remote fetch first.  Allocation-free: the CPP group forms in
+/// the scratch buffer and the returned estimate is plain `Copy` data.
 fn estimate_for(
-    ctx: &Ctx,
+    ctx: &mut Ctx,
     req: &SchedRequest,
     i: usize,
     prefix_blocks: usize,
@@ -155,12 +195,13 @@ fn estimate_for(
 ) -> PrefillEstimate {
     let (prefix_tokens, n_new) = req.split(prefix_blocks);
     let ssd_tokens = (ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
+    ctx.prefill.cpp_group_into(ctx.cfg, i, n_new, ctx.now, &mut ctx.scratch.group);
     costmodel::estimate_prefill(
         ctx.perf,
         ctx.cfg,
         &*ctx.prefill,
         &*ctx.res,
-        i,
+        &ctx.scratch.group,
         n_new,
         prefix_tokens,
         ssd_tokens,
@@ -196,7 +237,7 @@ struct PrefillChoice {
 /// pure-DRAM prefix and recompute the rest.  This is the
 /// load-vs-recompute half of the three-way prefix decision — the third
 /// option (recompute everything) is what a zero match degenerates to.
-fn local_choice(ctx: &Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> PrefillChoice {
+fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> PrefillChoice {
     let full = estimate_for(ctx, req, i, m.blocks, m.ssd_blocks, None);
     let mut choice = PrefillChoice {
         inst: i,
@@ -219,42 +260,83 @@ fn local_choice(ctx: &Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> Prefil
     choice
 }
 
-/// `FindBestPrefixMatch` over every instance, tier-aware: one O(chain)
-/// walk of the global [`PrefixIndex`] when available, the per-pool scan
-/// otherwise.  The two are interchangeable bit-for-bit — the index is a
-/// pure optimization, and a debug build cross-checks every call.
-pub fn find_prefix_matches(
+/// Per-pool scan form of `FindBestPrefixMatch` (the explicit
+/// `use_prefix_index: false` path): same outputs as the index walk —
+/// matches, SSD-run summaries, and per-node SSD positions.
+fn scan_into(
     prefill: &PrefillPool,
-    index: Option<&PrefixIndex>,
-    hash_ids: &[BlockId],
-) -> Vec<TierMatch> {
-    let scan = || -> Vec<TierMatch> {
-        prefill.instances.iter().map(|p| p.pool.prefix_match(hash_ids)).collect()
-    };
-    match index {
-        Some(idx) => {
-            let m = idx.best_prefix(hash_ids);
-            debug_assert_eq!(m, scan(), "prefix index diverged from the per-pool scan");
-            m
-        }
-        None => scan(),
+    hash_ids: &[DenseBlockId],
+    out: &mut Vec<TierMatch>,
+    ssd_pos: &mut SsdPositions,
+) {
+    out.clear();
+    ssd_pos.reset(prefill.len());
+    for (n, inst) in prefill.instances.iter().enumerate() {
+        out.push(inst.pool.prefix_match_with(hash_ids, ssd_pos.list_mut(n)));
     }
 }
 
-/// Residency of one chain block on one node, through the index when
-/// present (one probe for all nodes) or the node's pool otherwise.
-fn tier_on(ctx: &Ctx, node: usize, b: BlockId) -> Option<Tier> {
-    match ctx.index.as_deref() {
-        Some(idx) => idx.tier_on(node, b),
-        None => ctx.prefill.instances[node].pool.tier_of(b),
+/// `FindBestPrefixMatch` over every instance, tier-aware: one O(chain)
+/// walk of the global [`PrefixIndex`] when available, the per-pool scan
+/// otherwise.  The two are interchangeable bit-for-bit — the index is a
+/// pure optimization, and a debug build cross-checks every call
+/// (matches *and* the carried SSD positions).  `out`/`ssd_pos` are
+/// caller-owned scratch, cleared here.
+pub fn find_prefix_matches_into(
+    prefill: &PrefillPool,
+    index: Option<&PrefixIndex>,
+    hash_ids: &[DenseBlockId],
+    out: &mut Vec<TierMatch>,
+    ssd_pos: &mut SsdPositions,
+) {
+    match index {
+        Some(idx) => {
+            idx.best_prefix_into(hash_ids, out, ssd_pos);
+            #[cfg(debug_assertions)]
+            {
+                let mut want = Vec::new();
+                let mut want_pos = SsdPositions::default();
+                scan_into(prefill, hash_ids, &mut want, &mut want_pos);
+                debug_assert_eq!(*out, want, "prefix index diverged from the per-pool scan");
+                debug_assert!(
+                    ssd_pos.same_nodes(&want_pos, prefill.len()),
+                    "prefix index SSD positions diverged from the per-pool scan"
+                );
+            }
+        }
+        None => scan_into(prefill, hash_ids, out, ssd_pos),
     }
+}
+
+/// Allocating convenience wrapper around [`find_prefix_matches_into`].
+pub fn find_prefix_matches(
+    prefill: &PrefillPool,
+    index: Option<&PrefixIndex>,
+    hash_ids: &[DenseBlockId],
+) -> Vec<TierMatch> {
+    let mut out = Vec::new();
+    let mut ssd_pos = SsdPositions::default();
+    find_prefix_matches_into(prefill, index, hash_ids, &mut out, &mut ssd_pos);
+    out
 }
 
 /// Algorithm 1 (lines 1–23): choose the prefill instance, including the
 /// tier-aware reuse-from-DRAM / load-from-SSD / recompute decision.
 fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     let n = ctx.prefill.len();
-    let matches = find_prefix_matches(ctx.prefill, ctx.index.as_deref(), &req.hash_ids);
+    // The walk's outputs move out of the scratch for the decision (the
+    // nested estimate calls below need `ctx` mutably) and return at the
+    // end — a reborrow dance, not an allocation.
+    let mut matches = std::mem::take(&mut ctx.scratch.matches);
+    let mut ssd_pos = std::mem::take(&mut ctx.scratch.ssd_pos);
+    let mut suf = std::mem::take(&mut ctx.scratch.src_ssd_suffix);
+    find_prefix_matches_into(
+        &*ctx.prefill,
+        ctx.index.as_deref(),
+        &req.hash_ids,
+        &mut matches,
+        &mut ssd_pos,
+    );
     let (best_inst, best_blocks) = matches
         .iter()
         .enumerate()
@@ -262,7 +344,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
         .map(|(i, m)| (i, m.blocks))
         .unwrap_or((0, 0));
 
-    match ctx.cfg.scheduling {
+    let choice = match ctx.cfg.scheduling {
         SchedulingPolicy::Random => {
             let i = ctx.rng.below(n as u64) as usize;
             local_choice(ctx, req, i, matches[i])
@@ -282,22 +364,29 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
             let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
             // §6.2 fetches serialize on the *source*: when the holder's
             // copy is partly SSD-resident, the transfer also pays the
-            // source's NVMe staging.  One suffix-count pass lets every
-            // candidate price its own fetch range in O(1).
-            let src_ssd_suffix: Option<Vec<usize>> =
-                (balancing && best_blocks > 0 && matches[best_inst].ssd_blocks > 0).then(|| {
-                    let mut suf = vec![0usize; best_blocks + 1];
-                    for j in (0..best_blocks).rev() {
-                        let on_ssd = tier_on(ctx, best_inst, req.hash_ids[j]) == Some(Tier::Ssd);
-                        suf[j] = suf[j + 1] + usize::from(on_ssd);
-                    }
-                    suf
-                });
+            // source's NVMe staging.  The holder's SSD *positions* came
+            // out of the one prefix walk above; one suffix-count pass
+            // over them lets every candidate price its own fetch range
+            // in O(1) — no per-block tier probes anywhere below.
+            let have_src_ssd = balancing && best_blocks > 0 && matches[best_inst].ssd_blocks > 0;
+            if have_src_ssd {
+                suf.clear();
+                suf.resize(best_blocks + 1, 0);
+                for &p in ssd_pos.node(best_inst) {
+                    suf[p as usize] = 1;
+                }
+                let mut c = 0u32;
+                for s in suf[..best_blocks].iter_mut().rev() {
+                    c += *s;
+                    *s = c;
+                }
+            }
             let src_ssd_from =
-                |k: usize| src_ssd_suffix.as_ref().map_or(0, |s| s[k.min(best_blocks)]);
+                |k: usize| if have_src_ssd { suf[k.min(best_blocks)] as usize } else { 0 };
             let mut best: Option<PrefillChoice> = None;
             for i in 0..n {
-                let local = matches[i].blocks;
+                let m = matches[i];
+                let local = m.blocks;
                 // Line 8: prefer local compute unless the best remote
                 // match dwarfs the local one.
                 let ratio = if local == 0 {
@@ -312,7 +401,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                 {
                     // Cache-aware branch (lines 9–13), with the
                     // load-vs-recompute split priced per instance.
-                    local_choice(ctx, req, i, matches[i])
+                    local_choice(ctx, req, i, m)
                 } else {
                     // Cache-aware and -balancing branch (lines 15–21):
                     // fetch the missing blocks from the best holder; the
@@ -328,45 +417,38 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                         blocks: best_blocks - local,
                         src_ssd_blocks: src_ssd_from(local),
                     };
-                    let stage = estimate_for(
-                        ctx,
-                        req,
-                        i,
-                        best_blocks,
-                        matches[i].ssd_blocks,
-                        Some(stage_fetch),
-                    );
+                    let stage =
+                        estimate_for(ctx, req, i, best_blocks, m.ssd_blocks, Some(stage_fetch));
                     // The wire plan only differs when local SSD copies
                     // exist — don't pay a second probe otherwise.
-                    let wire_plan = if matches[i].ssd_blocks > 0 {
+                    let wire_plan = if m.ssd_blocks > 0 {
                         // Exact source-SSD accounting: the wire plan also
                         // re-fetches the candidate's own SSD copies inside
                         // its matched head, and the *source* may hold some
                         // of those on its SSD too — each one is a staging
                         // read the source pays before its NIC can start.
-                        // (They were formerly assumed DRAM-resident on the
-                        // source, underpricing the wire plan exactly when
-                        // both ends had demoted the same blocks.)  The
-                        // source side reuses the suffix array (SSD at j ⟺
-                        // suf[j] > suf[j+1]), so only the candidate's own
-                        // tier is probed — and only when the source holds
-                        // any SSD copy inside this head at all.
-                        let head_overlap = match &src_ssd_suffix {
-                            Some(suf) if suf[0] > suf[local.min(best_blocks)] => {
-                                req.hash_ids[..local]
-                                    .iter()
-                                    .enumerate()
-                                    .filter(|&(j, &b)| {
-                                        suf[j] > suf[j + 1]
-                                            && tier_on(ctx, i, b) == Some(Tier::Ssd)
-                                    })
-                                    .count()
-                            }
-                            _ => 0,
+                        // The candidate's SSD positions came out of the
+                        // prefix walk; its `TierMatch` SSD-run summary
+                        // (`[dram_prefix, ssd_last]`) rejects
+                        // non-overlapping spans in O(1), and otherwise
+                        // each of its SSD positions tests the source via
+                        // the suffix array (`suf[p] > suf[p+1]` ⟺ the
+                        // source holds position p on SSD) — O(1) per
+                        // position, zero tier probes.
+                        let head_overlap = if have_src_ssd
+                            && suf[m.dram_prefix] > suf[m.ssd_last as usize + 1]
+                        {
+                            ssd_pos
+                                .node(i)
+                                .iter()
+                                .filter(|&&p| suf[p as usize] > suf[p as usize + 1])
+                                .count()
+                        } else {
+                            0
                         };
                         let wire_fetch = FetchPlan {
                             src: best_inst,
-                            blocks: best_blocks - matches[i].dram_blocks,
+                            blocks: best_blocks - m.dram_blocks,
                             src_ssd_blocks: src_ssd_from(local) + head_overlap,
                         };
                         let wire = estimate_for(ctx, req, i, best_blocks, 0, Some(wire_fetch));
@@ -389,7 +471,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                             inst: i,
                             local_blocks: local,
                             eff_blocks: best_blocks,
-                            ssd_blocks: matches[i].ssd_blocks,
+                            ssd_blocks: m.ssd_blocks,
                             recomputed_ssd_blocks: 0,
                             fetch: Some(stage_fetch),
                             est: stage,
@@ -406,7 +488,11 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
             }
             best.expect("at least one prefill instance")
         }
-    }
+    };
+    ctx.scratch.matches = matches;
+    ctx.scratch.ssd_pos = ssd_pos;
+    ctx.scratch.src_ssd_suffix = suf;
+    choice
 }
 
 /// Algorithm 1 line 24: pick the decode instance with the smallest
@@ -485,6 +571,12 @@ pub fn schedule(
     let (prefix_tokens, n_new) = req.split(choice.eff_blocks);
     let ssd_tokens = (choice.ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
 
+    // The chosen placement's CPP group, recomputed into the scratch from
+    // the same pool state the estimate priced (nothing has touched the
+    // queues since) — the accept path's only remaining allocations are
+    // the Placement itself and the admitted job.
+    ctx.prefill.cpp_group_into(ctx.cfg, p, n_new, ctx.now, &mut ctx.scratch.best_group);
+
     // Local SSD→DRAM staging (the load half of the three-way decision):
     // reserve the read on the primary's NVMe queue — the same probe the
     // estimate priced, reserved first so admission-driven demotion
@@ -537,24 +629,39 @@ pub fn schedule(
             // so they must not be replica-promoted here.  Everything
             // else (missing blocks, and any stray SSD copies beyond the
             // match gap, which the wire transfer covered) lands as a
-            // DRAM replica; the wire plan refreshed all SSD copies.
-            let blocks_list: Vec<BlockId> = req.hash_ids[..choice.eff_blocks]
-                .iter()
-                .enumerate()
-                .filter(|&(idx, &b)| {
-                    choice.ssd_blocks == 0
-                        || idx >= choice.local_blocks
-                        || tier_on(ctx, p, b) != Some(Tier::Ssd)
-                })
-                .map(|(_, &b)| b)
-                .collect();
-            let delta = ctx.prefill.instances[p].pool.insert_replica(&blocks_list, ctx.now);
+            // DRAM replica; the wire plan refreshed all SSD copies.  The
+            // skip set is exactly p's SSD positions from the prefix walk
+            // — an ascending merge, no tier probes.
+            let replica = &mut ctx.scratch.replica_blocks;
+            replica.clear();
+            let skip: &[u32] =
+                if choice.ssd_blocks > 0 { ctx.scratch.ssd_pos.node(p) } else { &[] };
+            let mut cur = 0usize;
+            for (idx, &b) in req.hash_ids[..choice.eff_blocks].iter().enumerate() {
+                while cur < skip.len() && (skip[cur] as usize) < idx {
+                    cur += 1;
+                }
+                let on_ssd_head = cur < skip.len() && skip[cur] as usize == idx;
+                if !on_ssd_head {
+                    replica.push(b);
+                }
+            }
+            ctx.prefill.instances[p].pool.insert_replica_into(
+                &ctx.scratch.replica_blocks,
+                ctx.now,
+                &mut ctx.scratch.delta,
+            );
             if let Some(idx) = ctx.index.as_deref_mut() {
-                idx.apply(p, &delta);
+                idx.apply(p, &ctx.scratch.delta);
             }
             // Replica insertion under capacity pressure demotes victims:
             // those writes share the destination's NVMe device.
-            let _ = ctx.res.schedule_demote_writes(ctx.perf, p, ctx.now, delta.demoted_to_ssd());
+            let _ = ctx.res.schedule_demote_writes(
+                ctx.perf,
+                p,
+                ctx.now,
+                ctx.scratch.delta.demoted_to_ssd(),
+            );
             stats.migrations += 1;
         }
     }
@@ -568,7 +675,7 @@ pub fn schedule(
         ctx.perf,
         ctx.cfg,
         req.rid,
-        &choice.est.group,
+        &ctx.scratch.best_group,
         n_new,
         prefix_tokens,
         job_gate,
@@ -590,14 +697,23 @@ pub fn schedule(
     let needed = req.needed_blocks();
     let planned_reuse = choice.eff_blocks.min(needed);
     let hits_before = ctx.prefill.instances[p].pool.stats.hits();
-    let delta =
-        ctx.prefill.instances[p].pool.admit_chain_reusing(&req.hash_ids, planned_reuse, ctx.now);
+    ctx.prefill.instances[p].pool.admit_chain_reusing_into(
+        &req.hash_ids,
+        planned_reuse,
+        ctx.now,
+        &mut ctx.scratch.delta,
+    );
     if let Some(idx) = ctx.index.as_deref_mut() {
-        idx.apply(p, &delta);
+        idx.apply(p, &ctx.scratch.delta);
     }
     // Eviction pressure from this admission demoted blocks: the NVMe
     // writes queue behind the staging reads reserved above.
-    let _ = ctx.res.schedule_demote_writes(ctx.perf, p, ctx.now, delta.demoted_to_ssd());
+    let _ = ctx.res.schedule_demote_writes(
+        ctx.perf,
+        p,
+        ctx.now,
+        ctx.scratch.delta.demoted_to_ssd(),
+    );
     let reused = (ctx.prefill.instances[p].pool.stats.hits() - hits_before) as usize;
 
     // Layer-wise KV stream to the decode node (§5.2): transfer overlaps
@@ -629,7 +745,7 @@ pub fn schedule(
     }
 
     Ok(Placement {
-        prefill_group: choice.est.group,
+        prefill_group: ctx.scratch.best_group.clone(),
         job,
         decode: d,
         local_prefix_blocks: choice.local_blocks,
@@ -653,7 +769,7 @@ mod tests {
 
     fn setup(
         policy: SchedulingPolicy,
-    ) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Resources, Rng) {
+    ) -> (SimConfig, PerfModel, PrefillPool, Vec<DecodeInstance>, Resources, Rng, SchedScratch) {
         let cfg = SimConfig { scheduling: policy, ..Default::default() };
         let perf = PerfModel::paper();
         let prefill = PrefillPool::new(&cfg);
@@ -661,20 +777,22 @@ mod tests {
             .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
             .collect();
         let res = Resources::new(&cfg, &perf);
-        (cfg, perf, prefill, decodes, res, Rng::new(7))
+        (cfg, perf, prefill, decodes, res, Rng::new(7), SchedScratch::default())
     }
 
-    fn req(rid: u64, blocks: u64) -> SchedRequest {
+    fn req(rid: u64, blocks: u32) -> SchedRequest {
+        let base = rid as u32 * 1000;
         SchedRequest {
             rid,
-            input_tokens: blocks * BLOCK_TOKENS,
+            input_tokens: blocks as u64 * BLOCK_TOKENS,
             output_tokens: 100,
-            hash_ids: (rid * 1000..rid * 1000 + blocks).collect(),
+            hash_ids: (base..base + blocks).collect(),
         }
     }
 
     macro_rules! ctx {
-        ($cfg:expr, $perf:expr, $prefill:expr, $decodes:expr, $res:expr, $rng:expr, $now:expr) => {
+        ($cfg:expr, $perf:expr, $prefill:expr, $decodes:expr, $res:expr, $rng:expr,
+         $scratch:expr, $now:expr) => {
             Ctx {
                 cfg: &$cfg,
                 perf: &$perf,
@@ -684,24 +802,25 @@ mod tests {
                 rng: &mut $rng,
                 now: $now,
                 index: None,
+                scratch: &mut $scratch,
             }
         };
     }
 
     #[test]
     fn schedules_and_reuses_prefix() {
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         let mut stats = ConductorStats::default();
         let r1 = req(1, 16);
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
         let p1 = schedule(&mut ctx, &r1, &mut stats).unwrap();
         assert!(p1.prefill_end > p1.prefill_start);
         assert!(p1.kv_arrive >= p1.prefill_end);
 
         // Same chain again much later (queue drained): the primary holding
         // the cache must win, and most blocks must be reused.
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e7);
         let p2 = schedule(&mut ctx, &r1, &mut stats).unwrap();
         assert_eq!(p2.prefill_group[0], p1.prefill_group[0]);
         assert!(p2.prefill_end - p2.prefill_start < (p1.prefill_end - p1.prefill_start) * 0.3);
@@ -712,13 +831,13 @@ mod tests {
     fn cache_aware_beats_random_on_warm_chain() {
         // Warm one instance, then compare policies' TTFT estimates.
         for policy in [SchedulingPolicy::CacheAware, SchedulingPolicy::KvCacheCentric] {
-            let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) = setup(policy);
+            let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) = setup(policy);
             let mut stats = ConductorStats::default();
             let r = req(3, 32);
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             let first = schedule(&mut ctx, &r, &mut stats).unwrap();
             let cold = first.prefill_end - first.prefill_start;
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e7);
             let warm_p = schedule(&mut ctx, &r, &mut stats).unwrap();
             let warm = warm_p.prefill_end - warm_p.prefill_start;
             assert!(warm < cold * 0.2, "{policy:?}: warm={warm} cold={cold}");
@@ -727,11 +846,11 @@ mod tests {
 
     #[test]
     fn rejects_when_ttft_unattainable() {
-        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         cfg.slo.ttft_ms = 1.0; // impossible
         let mut stats = ConductorStats::default();
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
         let e = schedule(&mut ctx, &req(9, 64), &mut stats).unwrap_err();
         assert_eq!(e, RejectReason::TtftSlo);
         assert_eq!(stats.rejected_ttft, 1);
@@ -739,7 +858,7 @@ mod tests {
 
     #[test]
     fn balancing_branch_fetches_remote_prefix() {
-        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         cfg.kvcache_balancing_threshold = 1.5;
         let mut stats = ConductorStats::default();
@@ -747,7 +866,7 @@ mod tests {
         // Warm instance 0 with the chain, then make the holder very busy
         // so the scheduler prefers another node + fetch.
         {
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         let holder = prefill
@@ -756,7 +875,7 @@ mod tests {
             .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 64)
             .unwrap();
         prefill.instances[holder].block_until(1e9); // swamped
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e6);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_ne!(p.prefill_group[0], holder);
         assert!(p.fetch.is_some(), "expected remote fetch");
@@ -773,13 +892,13 @@ mod tests {
         // Regression: the estimate used to charge the fetch to the
         // *destination* NIC while execution ran it on the *source* NIC —
         // a congested holder made the estimate wildly optimistic.
-        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         cfg.kvcache_balancing_threshold = 1.5;
         let mut stats = ConductorStats::default();
         let r = req(7, 64);
         {
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         let holder = prefill
@@ -793,18 +912,18 @@ mod tests {
         // estimate must see it and reject (the old destination-NIC
         // estimate accepted, then the fetch landed ~2000 s late).
         msgr.nic.schedule(holder, holder + 1, 1e6, 200_000_000_000_000); // ~2e6 ms of backlog
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e6);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e6);
         let e = schedule(&mut ctx, &r, &mut stats).unwrap_err();
         assert_eq!(e, RejectReason::TtftSlo);
 
         // Moderate congestion (under the SLO): accepted, but the planned
         // start must wait for the source's backlog to drain.
-        let (mut cfg2, perf2, mut prefill2, decodes2, mut msgr2, mut rng2) =
+        let (mut cfg2, perf2, mut prefill2, decodes2, mut msgr2, mut rng2, mut sc2) =
             setup(SchedulingPolicy::KvCacheCentric);
         cfg2.kvcache_balancing_threshold = 1.5;
         let mut stats2 = ConductorStats::default();
         {
-            let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, 0.0);
+            let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, sc2, 0.0);
             schedule(&mut ctx, &r, &mut stats2).unwrap();
         }
         let holder2 = prefill2
@@ -814,7 +933,7 @@ mod tests {
             .unwrap();
         prefill2.instances[holder2].block_until(1e9);
         msgr2.nic.schedule(holder2, holder2 + 1, 1e6, 1_000_000_000_000); // ~10 s backlog
-        let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, 1e6);
+        let mut ctx = ctx!(cfg2, perf2, prefill2, decodes2, msgr2, rng2, sc2, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats2).unwrap();
         assert!(p.fetch.is_some());
         assert!(
@@ -833,12 +952,12 @@ mod tests {
         // and CacheAware disables the remote-fetch branch — RDMA is an
         // order of magnitude faster than NVMe, so under KvCacheCentric a
         // remote DRAM fetch would rightly shadow the local SSD load.)
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::CacheAware);
         let mut stats = ConductorStats::default();
         let r = req(1, 63);
         {
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         assert_eq!(stats.ssd_loads, 0, "cold pass has nothing to stage");
@@ -853,7 +972,7 @@ mod tests {
         }
         assert_eq!(prefill.instances[holder].pool.ssd_len(), 63);
 
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e7);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_eq!(p.prefill_group[0], holder, "SSD holder must win the placement");
         assert_eq!(p.ssd_load_blocks, 63, "the whole prefix loads from SSD");
@@ -873,12 +992,12 @@ mod tests {
         // A 2-block (1k-token) chain on SSD: at near-zero context the
         // recompute is cheaper than the NVMe read, so the decision must
         // recompute — exercising the "compute, don't load" branch.
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::CacheAware);
         let mut stats = ConductorStats::default();
         let r = req(2, 2);
         {
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         let holder = prefill
@@ -890,7 +1009,7 @@ mod tests {
             assert!(prefill.instances[holder].pool.demote_block(b, 1.0).is_some());
         }
 
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e7);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_eq!(p.ssd_load_blocks, 0, "slow SSD load must lose to recompute");
         assert_eq!(stats.ssd_loads, 0);
@@ -910,18 +1029,18 @@ mod tests {
         // request stream against two identical clusters — one scheduling
         // through the index, one through the per-pool scan — must
         // produce identical placements, stats, and pool states.
-        let (cfg_a, perf_a, mut pf_a, dec_a, mut ms_a, mut rng_a) =
+        let (cfg_a, perf_a, mut pf_a, dec_a, mut ms_a, mut rng_a, mut sc_a) =
             setup(SchedulingPolicy::KvCacheCentric);
-        let (cfg_b, perf_b, mut pf_b, dec_b, mut ms_b, mut rng_b) =
+        let (cfg_b, perf_b, mut pf_b, dec_b, mut ms_b, mut rng_b, mut sc_b) =
             setup(SchedulingPolicy::KvCacheCentric);
         let mut idx = pf_b.build_prefix_index();
         let mut sa = ConductorStats::default();
         let mut sb = ConductorStats::default();
         for k in 0..24u64 {
-            let r = req(k % 5, 8 + (k % 3) * 17); // overlapping chains
+            let r = req(k % 5, 8 + (k % 3) as u32 * 17); // overlapping chains
             let now = k as f64 * 2_000.0;
             let pa = {
-                let mut ctx = ctx!(cfg_a, perf_a, pf_a, dec_a, ms_a, rng_a, now);
+                let mut ctx = ctx!(cfg_a, perf_a, pf_a, dec_a, ms_a, rng_a, sc_a, now);
                 schedule(&mut ctx, &r, &mut sa)
             };
             let pb = {
@@ -934,6 +1053,7 @@ mod tests {
                     rng: &mut rng_b,
                     now,
                     index: Some(&mut idx),
+                    scratch: &mut sc_b,
                 };
                 schedule(&mut ctx, &r, &mut sb)
             };
@@ -956,6 +1076,48 @@ mod tests {
     }
 
     #[test]
+    fn walk_carries_ssd_summary_and_positions_for_both_paths() {
+        // The tentpole's O(1) wire-refresh contract: the prefix walk (and
+        // its scan twin) deliver each candidate's SSD-run summary
+        // (`TierMatch::{dram_prefix, ssd_last}`) plus the exact SSD
+        // positions — the balancing branch prices `head_overlap` off
+        // these alone, never probing a tier per head block.
+        let (cfg, _perf, mut prefill, _decodes, _res, _rng, _sc) =
+            setup(SchedulingPolicy::KvCacheCentric);
+        let chain: Vec<DenseBlockId> = (500..516).collect();
+        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        for b in [502, 503, 509] {
+            assert!(prefill.instances[0].pool.demote_block(b, 1.0).is_some());
+        }
+        prefill.instances[1].pool.admit_chain(&chain[..6], 0.0);
+        assert!(prefill.instances[1].pool.demote_block(504, 1.0).is_some());
+        let idx = prefill.build_prefix_index();
+
+        let mut via_idx = (Vec::new(), SsdPositions::default());
+        let mut via_scan = (Vec::new(), SsdPositions::default());
+        find_prefix_matches_into(&prefill, Some(&idx), &chain, &mut via_idx.0, &mut via_idx.1);
+        find_prefix_matches_into(&prefill, None, &chain, &mut via_scan.0, &mut via_scan.1);
+        assert_eq!(via_idx.0, via_scan.0);
+        assert!(via_idx.1.same_nodes(&via_scan.1, cfg.n_prefill));
+
+        let m0 = via_idx.0[0];
+        assert_eq!((m0.blocks, m0.dram_prefix, m0.ssd_blocks), (16, 2, 3));
+        assert_eq!(m0.ssd_last, 9);
+        assert_eq!(via_idx.1.node(0), &[2, 3, 9]);
+        let m1 = via_idx.0[1];
+        assert_eq!((m1.blocks, m1.dram_prefix, m1.ssd_blocks), (6, 4, 1));
+        assert_eq!(m1.ssd_last, 4);
+        assert_eq!(via_idx.1.node(1), &[4]);
+        // Positions always sit inside the summary's span.
+        for n in 0..cfg.n_prefill {
+            let m = via_idx.0[n];
+            for &p in via_idx.1.node(n) {
+                assert!((p as usize) >= m.dram_prefix && p <= m.ssd_last);
+            }
+        }
+    }
+
+    #[test]
     fn wire_refresh_prices_source_ssd_copies_in_matched_head() {
         // ROADMAP PR 3 follow-up: the balancing branch's *wire plan*
         // re-fetches the candidate's own SSD copies inside its matched
@@ -963,7 +1125,9 @@ mod tests {
         // each one is a staging read the source pays before its NIC can
         // start.  They used to be assumed DRAM-resident on the source,
         // underpricing the wire plan exactly when both ends had demoted
-        // the same blocks.
+        // the same blocks.  (Since the O(1) refactor the overlap count
+        // comes from the walk's SSD positions + the source suffix array
+        // — same numbers, no per-block tier probes.)
         let mk = || {
             let cfg = SimConfig {
                 scheduling: SchedulingPolicy::KvCacheCentric,
@@ -978,9 +1142,9 @@ mod tests {
                 .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
                 .collect();
             let res = Resources::new(&cfg, &perf);
-            (cfg, perf, prefill, decodes, res, Rng::new(7))
+            (cfg, perf, prefill, decodes, res, Rng::new(7), SchedScratch::default())
         };
-        let chain: Vec<BlockId> = (100..108).collect();
+        let chain: Vec<DenseBlockId> = (100..108).collect();
         let r = SchedRequest {
             rid: 1,
             input_tokens: 8 * BLOCK_TOKENS,
@@ -993,7 +1157,7 @@ mod tests {
         // the source three NVMe stagings serialized before the wire —
         // slower than staging locally (which overlaps the fetch), so the
         // exact accounting must flip the decision to the stage plan.
-        let (cfg, perf, mut prefill, decodes, mut res, mut rng) = mk();
+        let (cfg, perf, mut prefill, decodes, mut res, mut rng, mut sc) = mk();
         prefill.instances[0].pool.admit_chain(&chain, 0.0);
         for b in [chain[2], chain[3], chain[6]] {
             assert!(prefill.instances[0].pool.demote_block(b, 1.0).is_some());
@@ -1004,7 +1168,7 @@ mod tests {
         }
         prefill.instances[0].block_until(1e9); // swamp the holder
         let mut stats = ConductorStats::default();
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, 1e6);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, sc, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_eq!(p.prefill_group[0], 1, "swamped holder must lose the placement");
         assert_eq!(
@@ -1016,7 +1180,7 @@ mod tests {
         // Case B: the source holds the candidate's SSD head blocks in
         // DRAM (only a gap block on SSD) — the wire refresh stays cheap
         // and must win, with exactly the gap block staged at the source.
-        let (cfg, perf, mut prefill, decodes, mut res, mut rng) = mk();
+        let (cfg, perf, mut prefill, decodes, mut res, mut rng, mut sc) = mk();
         prefill.instances[0].pool.admit_chain(&chain, 0.0);
         assert!(prefill.instances[0].pool.demote_block(chain[6], 1.0).is_some());
         prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
@@ -1025,7 +1189,7 @@ mod tests {
         }
         prefill.instances[0].block_until(1e9);
         let mut stats = ConductorStats::default();
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, 1e6);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, sc, 1e6);
         let p = schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_eq!(p.prefill_group[0], 1);
         assert_eq!(
@@ -1040,7 +1204,7 @@ mod tests {
         // Regression: prefix_tokens was clamped to the input but the
         // reused/recomputed counters were not, so a chain overhanging a
         // non-block-aligned input broke conservation.
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng) =
+        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         let mut stats = ConductorStats::default();
         // 4-block chain over a 1300-token input (needs only 3 blocks).
@@ -1052,12 +1216,12 @@ mod tests {
         };
         let needed = 3u64; // ceil(1300 / 512)
         {
-            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 0.0);
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 0.0);
             schedule(&mut ctx, &r, &mut stats).unwrap();
         }
         assert_eq!(stats.reused_blocks + stats.recomputed_blocks, needed);
         // Warm pass: the whole chain matches (4 blocks) but only 3 count.
-        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, 1e7);
+        let mut ctx = ctx!(cfg, perf, prefill, decodes, msgr, rng, sc, 1e7);
         schedule(&mut ctx, &r, &mut stats).unwrap();
         assert_eq!(stats.reused_blocks + stats.recomputed_blocks, 2 * needed);
         assert!(stats.reused_blocks >= needed, "warm pass must reuse the needed blocks");

@@ -92,6 +92,16 @@ pub struct SimConfig {
     /// of waiting for eviction pressure.  `None` = off (the default —
     /// demotion stays eviction-driven).
     pub demote_after_ms: Option<f64>,
+    /// Backpressure-aware replication (§6.2 + incast): the *standalone*
+    /// proactive planner (`conductor::migration::plan_replications` —
+    /// drivable by external schedulers and pinned by decision-level
+    /// tests; the event-loop replication path is forwarding-based and
+    /// does not consult it yet, see ROADMAP) skips destination nodes
+    /// whose NIC-rx backlog exceeds this cap (ms) — a replica pushed
+    /// into an incast hot spot queues behind the very congestion it
+    /// should relieve.  `None` = off (the default — destination choice
+    /// ignores rx backlogs, yesterday's behavior).
+    pub replication_rx_backlog_cap_ms: Option<f64>,
     pub seed: u64,
 }
 
@@ -116,6 +126,7 @@ impl Default for SimConfig {
             nic_rx_bw: None,
             ssd_write_bw: None,
             demote_after_ms: None,
+            replication_rx_backlog_cap_ms: None,
             seed: 42,
         }
     }

@@ -131,11 +131,12 @@ pub fn kv_stream_bytes(perf: &PerfModel, input_tokens: u64) -> u64 {
     input_tokens * perf.model.kv_bytes_per_token()
 }
 
-/// A placement's predicted timing, in absolute simulator time.
-#[derive(Debug, Clone)]
+/// A placement's predicted timing, in absolute simulator time.  Plain
+/// `Copy` data — the CPP group is the *caller's* (reused) buffer, so the
+/// scheduler's candidate loop prices dozens of estimates per decision
+/// without a heap allocation per probe.
+#[derive(Debug, Clone, Copy)]
 pub struct PrefillEstimate {
-    /// CPP group the job would run on (primary first).
-    pub group: Vec<usize>,
     /// Planned start: the job runs when its whole group has drained AND
     /// any remote prefix fetch has landed AND any local SSD staging has
     /// landed (the three overlap — they are `max`ed, not summed).
@@ -162,20 +163,21 @@ impl PrefillEstimate {
     }
 }
 
-/// Estimate a prefill on `primary` with `n_new` uncached tokens and
-/// `prefix_tokens` reused ones, of which `ssd_prefix_tokens` must first
-/// be staged up through the node's NVMe queue; `fetch` adds a remote
-/// prefix fetch that must land first — charged to the source's NVMe
-/// queue (staging), its tx queue, and the destination's rx queue.
-/// Read-only: probes the prefill queues and every resource bank without
-/// mutating any of them.
+/// Estimate a prefill on the CPP `group` (primary first — the caller
+/// forms it with [`PrefillPool::cpp_group_into`] over the same state)
+/// with `n_new` uncached tokens and `prefix_tokens` reused ones, of
+/// which `ssd_prefix_tokens` must first be staged up through the node's
+/// NVMe queue; `fetch` adds a remote prefix fetch that must land first —
+/// charged to the source's NVMe queue (staging), its tx queue, and the
+/// destination's rx queue.  Read-only and allocation-free: probes the
+/// prefill queues and every resource bank without mutating any of them.
 #[allow(clippy::too_many_arguments)]
 pub fn estimate_prefill(
     perf: &PerfModel,
     cfg: &SimConfig,
     pool: &PrefillPool,
     res: &Resources,
-    primary: usize,
+    group: &[usize],
     n_new: u64,
     prefix_tokens: u64,
     ssd_prefix_tokens: u64,
@@ -183,9 +185,10 @@ pub fn estimate_prefill(
     now: TimeMs,
 ) -> PrefillEstimate {
     debug_assert!(ssd_prefix_tokens <= prefix_tokens);
-    let group = pool.cpp_group(cfg, primary, n_new, now);
+    debug_assert!(!group.is_empty());
+    let primary = group[0];
     let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
-    let queue_free = pool.group_free_at(&group).max(now);
+    let queue_free = pool.group_free_at(group).max(now);
     let stage_done = estimate_stage_done(perf, &res.nvme, primary, now, ssd_prefix_tokens);
     let fetch_done = match fetch {
         Some(f) if f.blocks > 0 => {
@@ -202,7 +205,6 @@ pub fn estimate_prefill(
     };
     let start = queue_free.max(stage_done).max(fetch_done);
     PrefillEstimate {
-        group,
         start,
         end: start + exec_ms,
         queue_wait_ms: queue_free - now,
@@ -243,6 +245,36 @@ mod tests {
         (cfg, perf, pool, res)
     }
 
+    /// Old-signature shim: form the CPP group the way the scheduler does,
+    /// then estimate on it.
+    #[allow(clippy::too_many_arguments)]
+    fn est(
+        perf: &PerfModel,
+        cfg: &SimConfig,
+        pool: &PrefillPool,
+        res: &Resources,
+        primary: usize,
+        n_new: u64,
+        prefix_tokens: u64,
+        ssd_prefix_tokens: u64,
+        fetch: Option<FetchPlan>,
+        now: TimeMs,
+    ) -> PrefillEstimate {
+        let group = pool.cpp_group(cfg, primary, n_new, now);
+        estimate_prefill(
+            perf,
+            cfg,
+            pool,
+            res,
+            &group,
+            n_new,
+            prefix_tokens,
+            ssd_prefix_tokens,
+            fetch,
+            now,
+        )
+    }
+
     #[test]
     fn exec_includes_visible_prefix_load() {
         let (cfg, perf, _, _) = env();
@@ -259,8 +291,8 @@ mod tests {
         let (cfg, perf, pool, res) = env();
         // An SSD-resident prefix delays the planned start by exactly the
         // NVMe queue probe (idle queue here), on top of the DRAM head.
-        let dram_warm = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 0, None, 0.0);
-        let ssd_warm = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        let dram_warm = est(&perf, &cfg, &pool, &res, 0, 0, 8_000, 0, None, 0.0);
+        let ssd_warm = est(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
         let stage = estimate_stage_done(&perf, &res.nvme, 0, 0.0, 8_000);
         assert!(stage > 10.0 * dram_warm.end, "{stage} vs {}", dram_warm.end);
         assert!((ssd_warm.stage_wait_ms - stage).abs() < 1e-9);
@@ -288,7 +320,7 @@ mod tests {
         // in the FIFO — start = max(queue, stage), not their sum.
         let (cfg, perf, mut pool, res) = env();
         pool.instances[0].block_until(100_000.0);
-        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        let est = est(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
         assert!(est.queue_wait_ms >= 100_000.0);
         assert!(est.stage_wait_ms > 100.0 && est.stage_wait_ms < 100_000.0);
         assert!((est.start - 100_000.0).abs() < 1e-6, "start={}", est.start);
@@ -300,8 +332,8 @@ mod tests {
         // Reserve one staging on node 0's NVMe; a second estimate on the
         // same node queues behind it, a different node does not.
         let first = schedule_stage(&perf, &mut res.nvme, 0, 0.0, 8_000);
-        let queued = estimate_prefill(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
-        let fresh = estimate_prefill(&perf, &cfg, &pool, &res, 1, 0, 8_000, 8_000, None, 0.0);
+        let queued = est(&perf, &cfg, &pool, &res, 0, 0, 8_000, 8_000, None, 0.0);
+        let fresh = est(&perf, &cfg, &pool, &res, 1, 0, 8_000, 8_000, None, 0.0);
         assert!(
             (queued.stage_wait_ms - fresh.stage_wait_ms - (first.end - first.start)).abs() < 1e-6,
             "second staging must wait out the first: {} vs {}",
@@ -318,9 +350,9 @@ mod tests {
         res.nic.schedule(2, 0, 0.0, 2_000_000_000_000); // ~20 s backlog
         let dram_fetch = |src| Some(FetchPlan { src, blocks: 4, src_ssd_blocks: 0 });
         let idle =
-            estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(5), 0.0);
+            est(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(5), 0.0);
         let congested =
-            estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(2), 0.0);
+            est(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, dram_fetch(2), 0.0);
         assert!(
             congested.fetch_wait_ms > idle.fetch_wait_ms + 10_000.0,
             "source congestion must surface: {} vs {}",
@@ -342,8 +374,8 @@ mod tests {
         // Node 5 is already pushing 10 GB into node 0 (~1 s of rx).
         res.nic.schedule(5, 0, 0.0, 10_000_000_000);
         let fetch = Some(FetchPlan { src: 3, blocks: 4, src_ssd_blocks: 0 });
-        let onto_hot = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
-        let onto_cold = estimate_prefill(&perf, &cfg, &pool, &res, 1, 4_096, 2_048, 0, fetch, 0.0);
+        let onto_hot = est(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
+        let onto_cold = est(&perf, &cfg, &pool, &res, 1, 4_096, 2_048, 0, fetch, 0.0);
         assert!(
             onto_hot.fetch_wait_ms > onto_cold.fetch_wait_ms + 500.0,
             "incast onto the hot node must surface: {} vs {}",
@@ -358,7 +390,7 @@ mod tests {
         pool.instances[0].block_until(5_000.0);
         res.nic.schedule(3, 1, 0.0, 300_000_000_000); // ~3 s source backlog
         let fetch = Some(FetchPlan { src: 3, blocks: 4, src_ssd_blocks: 0 });
-        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
+        let est = est(&perf, &cfg, &pool, &res, 0, 4_096, 2_048, 0, fetch, 0.0);
         // start = max(queue, fetch), not their sum.
         assert!(est.queue_wait_ms >= 5_000.0);
         assert!(est.fetch_wait_ms > 2_000.0 && est.fetch_wait_ms < 5_000.0);
@@ -374,8 +406,8 @@ mod tests {
         let blocks = 64usize;
         let dram = FetchPlan { src: 3, blocks, src_ssd_blocks: 0 };
         let ssd = FetchPlan { src: 3, blocks, src_ssd_blocks: blocks };
-        let a = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(dram), 0.0);
-        let b = estimate_prefill(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(ssd), 0.0);
+        let a = est(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(dram), 0.0);
+        let b = est(&perf, &cfg, &pool, &res, 0, 4_096, 0, 0, Some(ssd), 0.0);
         let stage = estimate_stage_done(&perf, &res.nvme, 3, 0.0, blocks as u64 * BLOCK_TOKENS);
         assert!(stage > 1_000.0);
         assert!(
@@ -396,10 +428,11 @@ mod tests {
         for i in 2..pool.len() {
             pool.instances[i].block_until(10.0);
         }
-        let est = estimate_prefill(&perf, &cfg, &pool, &res, 0, 100_000, 0, 0, None, 0.0);
-        assert_eq!(est.group, vec![0, 1]);
-        assert!((est.start - 0.5).abs() < 1e-9, "group max drives start: {}", est.start);
-        assert!((est.queue_wait_ms - 0.5).abs() < 1e-9);
+        let group = pool.cpp_group(&cfg, 0, 100_000, 0.0);
+        assert_eq!(group, vec![0, 1]);
+        let e = estimate_prefill(&perf, &cfg, &pool, &res, &group, 100_000, 0, 0, None, 0.0);
+        assert!((e.start - 0.5).abs() < 1e-9, "group max drives start: {}", e.start);
+        assert!((e.queue_wait_ms - 0.5).abs() < 1e-9);
     }
 
     #[test]

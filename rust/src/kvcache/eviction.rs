@@ -2,13 +2,17 @@
 //! LengthAwareCache ("similar to LFU but prioritizing eviction of cache
 //! blocks occurring later in requests").
 //!
-//! All three share one implementation: a `HashMap` of block metadata plus
-//! a `BTreeSet` ordered by a policy-specific composite key, giving
-//! O(log n) insert/touch/evict.
+//! All three share one implementation: a fast-hashed map of block
+//! metadata plus a `BTreeSet` ordered by a policy-specific composite
+//! key, giving O(log n) insert/touch/evict.  Keys are interned
+//! [`DenseBlockId`]s — membership probes are the innermost loop of every
+//! prefix match, so they use the Fx hasher over 4-byte ids rather than
+//! SipHash over trace hashes.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::BTreeSet;
 
-use crate::BlockId;
+use crate::kvcache::intern::DenseBlockId;
+use crate::util::fasthash::FastMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -42,13 +46,13 @@ struct Meta {
 
 /// Composite eviction key; the BTreeSet's *first* element is the next
 /// eviction victim.
-type Key = (u64, u64, u64, BlockId);
+type Key = (u64, u64, u64, DenseBlockId);
 
 #[derive(Debug)]
 pub struct EvictionPolicy {
     kind: PolicyKind,
     capacity: Option<usize>,
-    entries: HashMap<BlockId, Meta>,
+    entries: FastMap<DenseBlockId, Meta>,
     order: BTreeSet<Key>,
     tick: u64,
     pub evictions: u64,
@@ -59,14 +63,14 @@ impl EvictionPolicy {
         EvictionPolicy {
             kind,
             capacity,
-            entries: HashMap::new(),
+            entries: FastMap::default(),
             order: BTreeSet::new(),
             tick: 0,
             evictions: 0,
         }
     }
 
-    fn key(&self, b: BlockId, m: &Meta) -> Key {
+    fn key(&self, b: DenseBlockId, m: &Meta) -> Key {
         match self.kind {
             // Oldest stamp first.
             PolicyKind::Lru => (m.stamp, 0, 0, b),
@@ -96,21 +100,21 @@ impl EvictionPolicy {
         matches!(self.capacity, Some(cap) if self.entries.len() >= cap)
     }
 
-    pub fn contains(&self, b: BlockId) -> bool {
+    pub fn contains(&self, b: DenseBlockId) -> bool {
         self.entries.contains_key(&b)
     }
 
     /// Last recorded request position of a resident block (LengthAware's
     /// eviction key) — lets a tiered caller demote with metadata intact.
-    pub fn pos_of(&self, b: BlockId) -> Option<usize> {
+    pub fn pos_of(&self, b: DenseBlockId) -> Option<usize> {
         self.entries.get(&b).map(|m| m.pos)
     }
 
     /// Blocks whose last touch/insert is at least `idle_ms` before `now`
     /// — the candidate set for proactive background demotion.  Sorted by
     /// id so sweeps are deterministic despite HashMap iteration order.
-    pub fn idle_blocks(&self, now_ms: f64, idle_ms: f64) -> Vec<BlockId> {
-        let mut v: Vec<BlockId> = self
+    pub fn idle_blocks(&self, now_ms: f64, idle_ms: f64) -> Vec<DenseBlockId> {
+        let mut v: Vec<DenseBlockId> = self
             .entries
             .iter()
             .filter(|(_, m)| now_ms - m.last_used_ms >= idle_ms)
@@ -121,7 +125,7 @@ impl EvictionPolicy {
     }
 
     /// Record a hit: bump recency/frequency/position metadata.
-    pub fn touch(&mut self, b: BlockId, now_ms: f64, pos: usize) {
+    pub fn touch(&mut self, b: DenseBlockId, now_ms: f64, pos: usize) {
         self.tick += 1;
         if let Some(m) = self.entries.get(&b).copied() {
             self.order.remove(&self.key(b, &m));
@@ -135,7 +139,7 @@ impl EvictionPolicy {
     /// evicted block, if any.  The victim is chosen among *existing*
     /// entries before insertion, so a fresh block never evicts itself
     /// (the standard guard against LFU's new-entry starvation).
-    pub fn insert(&mut self, b: BlockId, now_ms: f64, pos: usize) -> Option<BlockId> {
+    pub fn insert(&mut self, b: DenseBlockId, now_ms: f64, pos: usize) -> Option<DenseBlockId> {
         if self.contains(b) {
             self.touch(b, now_ms, pos);
             return None;
@@ -154,14 +158,14 @@ impl EvictionPolicy {
     }
 
     /// Evict the policy's victim.
-    pub fn evict(&mut self) -> Option<BlockId> {
+    pub fn evict(&mut self) -> Option<DenseBlockId> {
         self.evict_entry().map(|(b, _)| b)
     }
 
     /// Evict the policy's victim, returning `(block, last request
     /// position)` so a tiered caller can demote it with its position
     /// metadata intact (LengthAwareCache keys on position).
-    pub fn evict_entry(&mut self) -> Option<(BlockId, usize)> {
+    pub fn evict_entry(&mut self) -> Option<(DenseBlockId, usize)> {
         let victim = self.order.iter().next().copied()?;
         self.order.remove(&victim);
         let b = victim.3;
@@ -171,7 +175,7 @@ impl EvictionPolicy {
     }
 
     /// Remove a specific block (e.g. swapped out by Conductor).
-    pub fn remove(&mut self, b: BlockId) -> bool {
+    pub fn remove(&mut self, b: DenseBlockId) -> bool {
         if let Some(m) = self.entries.remove(&b) {
             self.order.remove(&self.key(b, &m));
             true
@@ -180,7 +184,7 @@ impl EvictionPolicy {
         }
     }
 
-    pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+    pub fn iter_blocks(&self) -> impl Iterator<Item = DenseBlockId> + '_ {
         self.entries.keys().copied()
     }
 }

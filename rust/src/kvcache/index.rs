@@ -1,15 +1,25 @@
-//! The Conductor's **global prefix index** (§5, §6): one map from
-//! `BlockId` to a per-node, tier-aware residency bitset, replacing the
-//! per-request scan of every prefill instance's pool.
+//! The Conductor's **global prefix index** (§5, §6): per-block, per-node,
+//! tier-aware residency bitsets, replacing the per-request scan of every
+//! prefill instance's pool.
 //!
 //! `FindBestPrefixMatch` used to cost O(nodes × chain) HashMap probes
 //! per scheduling decision — worst in exactly the long-context regime
 //! the paper targets (128K ctx ≈ thousands of blocks).  With the index,
-//! [`PrefixIndex::best_prefix`] touches each chain block **once** and
-//! advances every candidate node's match simultaneously with bitmask
-//! arithmetic: per block, one probe plus O(words) mask ops plus work
-//! proportional only to the nodes whose state *changes* at that block
-//! (death, DRAM-run end, SSD copy).
+//! [`PrefixIndex::best_prefix_into`] touches each chain block **once**
+//! and advances every candidate node's match simultaneously with bitmask
+//! arithmetic: per block, one direct array load plus O(words) mask ops
+//! plus work proportional only to the nodes whose state *changes* at
+//! that block (death, DRAM-run end, SSD copy).
+//!
+//! Storage is **dense and width-adaptive**: blocks are interned
+//! [`DenseBlockId`]s (see `kvcache::intern`), so residency lives in one
+//! flat `Vec<u64>` indexed by `block × stride` — no hashing at all on
+//! the lookup path — and the stride is sized to the cluster at
+//! construction: `n_words = n_nodes.div_ceil(64)` words per tier, so an
+//! 8-node cluster pays 2 words (16 B) per block slot where the old fixed
+//! `[u64; 4]`-per-tier representation paid 8 (64 B).  One index covers
+//! up to [`PrefixIndex::MAX_NODES`] prefill nodes; only the explicit
+//! `use_prefix_index: false` knob restores the per-pool scan.
 //!
 //! Consistency protocol: the index is owned next to the scheduler (the
 //! `Sim`), not by the pools — pools stay self-contained LRU structures
@@ -20,73 +30,66 @@
 //! debug-mode invariant ([`PrefixIndex::equals_rebuild_of`]) checks the
 //! incremental index against a brute-force rebuild.
 //!
-//! The bitset is `[u64; WORDS]` per tier per block, so one index shard
-//! covers up to [`PrefixIndex::MAX_NODES`] prefill nodes — wide enough
-//! that the old ≤64-node automatic scan fallback is gone; only the
-//! explicit `use_prefix_index: false` knob restores the per-pool scan.
-//! Word loops run over `n_nodes.div_ceil(64)` words, so small clusters
-//! pay for one.
+//! The walk also carries each node's SSD *positions* out into an
+//! [`SsdPositions`] scratch — the §6.2 wire-refresh pricing consumes
+//! them so it never re-probes a tier per head block (see
+//! `conductor::select_prefill`).
 
-use std::collections::HashMap;
+use super::intern::DenseBlockId;
+use super::pool::{CachePool, SsdPositions, Tier, TierDelta, TierMatch};
 
-use super::pool::{CachePool, Tier, TierDelta, TierMatch};
-use crate::BlockId;
-
-/// Bitset words per tier per block.
-const WORDS: usize = 4;
-
-/// Which nodes hold a block, split by tier.  A node's bit is set in at
-/// most one of the two masks (a block lives in exactly one tier per
-/// pool).
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
-struct Residency {
-    dram: [u64; WORDS],
-    ssd: [u64; WORDS],
-}
-
-impl Residency {
-    fn is_empty(&self) -> bool {
-        self.dram.iter().all(|&w| w == 0) && self.ssd.iter().all(|&w| w == 0)
-    }
-}
+/// Hard width cap: enough words for [`PrefixIndex::MAX_NODES`] nodes.
+/// The per-walk cursor masks live on the stack at this width; the per-
+/// block storage only ever pays the *configured* width.
+const MAX_WORDS: usize = 4;
 
 #[derive(Debug)]
 pub struct PrefixIndex {
     n_nodes: usize,
-    /// Words actually carrying bits: `n_nodes.div_ceil(64)`.
+    /// Words actually carrying bits: `n_nodes.div_ceil(64)` (≥ 1).
     n_words: usize,
-    map: HashMap<BlockId, Residency>,
+    /// `2 * n_words` — words per block slot (DRAM words, then SSD words).
+    stride: usize,
+    /// Flat residency table indexed by `block as usize * stride`; grows
+    /// (zero-filled) as new dense ids appear.  A dropped block's slot
+    /// zeroes out but is kept — dense ids are never recycled.
+    words: Vec<u64>,
+    /// Blocks with at least one holder (the old map's `len`).
+    resident: usize,
 }
 
 impl PrefixIndex {
-    /// `WORDS` bitset words per tier per block.
-    pub const MAX_NODES: usize = 64 * WORDS;
+    /// `MAX_WORDS` bitset words per tier per block at most.
+    pub const MAX_NODES: usize = 64 * MAX_WORDS;
 
-    /// Whether a single index shard can cover `n_nodes` prefill nodes.
+    /// Whether a single index can cover `n_nodes` prefill nodes.
     pub fn supports(n_nodes: usize) -> bool {
         n_nodes <= Self::MAX_NODES
     }
 
     pub fn new(n_nodes: usize) -> Self {
-        assert!(
-            Self::supports(n_nodes),
-            "PrefixIndex shard covers at most {} nodes",
-            Self::MAX_NODES
-        );
-        PrefixIndex { n_nodes, n_words: n_nodes.div_ceil(64).max(1), map: HashMap::new() }
+        assert!(Self::supports(n_nodes), "PrefixIndex covers at most {} nodes", Self::MAX_NODES);
+        let n_words = n_nodes.div_ceil(64).max(1);
+        PrefixIndex { n_nodes, n_words, stride: 2 * n_words, words: Vec::new(), resident: 0 }
     }
 
     pub fn n_nodes(&self) -> usize {
         self.n_nodes
     }
 
+    /// Residency words per tier (`div_ceil(n_nodes, 64)`) — the width-
+    /// adaptation the footprint depends on.
+    pub fn n_words(&self) -> usize {
+        self.n_words
+    }
+
     /// Distinct blocks resident anywhere in the cluster.
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.resident
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.resident == 0
     }
 
     #[inline]
@@ -96,21 +99,31 @@ impl PrefixIndex {
 
     /// Record `node`'s residency for one block (`None` = not resident).
     /// Setting one tier clears the other — a block lives in exactly one
-    /// tier per pool — and entries with no holders are removed so the
-    /// index stays equal to a fresh rebuild.
-    pub fn set(&mut self, node: usize, b: BlockId, loc: Option<Tier>) {
+    /// tier per pool.
+    pub fn set(&mut self, node: usize, b: DenseBlockId, loc: Option<Tier>) {
         debug_assert!(node < self.n_nodes);
+        let off = b as usize * self.stride;
+        if off + self.stride > self.words.len() {
+            if loc.is_none() {
+                return; // clearing a block never seen: nothing to do
+            }
+            self.words.resize(off + self.stride, 0);
+        }
+        let e = &mut self.words[off..off + self.stride];
+        let was_empty = e.iter().all(|&w| w == 0);
         let (w, bit) = Self::word_bit(node);
-        let r = self.map.entry(b).or_default();
-        r.dram[w] &= !bit;
-        r.ssd[w] &= !bit;
+        e[w] &= !bit;
+        e[self.n_words + w] &= !bit;
         match loc {
-            Some(Tier::Dram) => r.dram[w] |= bit,
-            Some(Tier::Ssd) => r.ssd[w] |= bit,
+            Some(Tier::Dram) => e[w] |= bit,
+            Some(Tier::Ssd) => e[self.n_words + w] |= bit,
             None => {}
         }
-        if r.is_empty() {
-            self.map.remove(&b);
+        let now_empty = e.iter().all(|&w| w == 0);
+        match (was_empty, now_empty) {
+            (true, false) => self.resident += 1,
+            (false, true) => self.resident -= 1,
+            _ => {}
         }
     }
 
@@ -121,14 +134,20 @@ impl PrefixIndex {
         }
     }
 
+    #[inline]
+    fn entry(&self, b: DenseBlockId) -> Option<&[u64]> {
+        let off = b as usize * self.stride;
+        self.words.get(off..off + self.stride)
+    }
+
     /// `node`'s residency for one block, as the pool would report it.
-    pub fn tier_on(&self, node: usize, b: BlockId) -> Option<Tier> {
+    pub fn tier_on(&self, node: usize, b: DenseBlockId) -> Option<Tier> {
         debug_assert!(node < self.n_nodes);
-        let r = self.map.get(&b)?;
+        let e = self.entry(b)?;
         let (w, bit) = Self::word_bit(node);
-        if r.dram[w] & bit != 0 {
+        if e[w] & bit != 0 {
             Some(Tier::Dram)
-        } else if r.ssd[w] & bit != 0 {
+        } else if e[self.n_words + w] & bit != 0 {
             Some(Tier::Ssd)
         } else {
             None
@@ -138,11 +157,11 @@ impl PrefixIndex {
     /// Every node holding `b` (either tier), ascending — one probe for
     /// the whole cluster, replacing per-pool `contains` scans
     /// (`conductor::migration` reads holder sets through this).
-    pub fn holders(&self, b: BlockId) -> Vec<usize> {
+    pub fn holders(&self, b: DenseBlockId) -> Vec<usize> {
         let mut out = Vec::new();
-        if let Some(r) = self.map.get(&b) {
+        if let Some(e) = self.entry(b) {
             for w in 0..self.n_words {
-                let mut bits = r.dram[w] | r.ssd[w];
+                let mut bits = e[w] | e[self.n_words + w];
                 while bits != 0 {
                     out.push(w * 64 + bits.trailing_zeros() as usize);
                     bits &= bits - 1;
@@ -163,19 +182,28 @@ impl PrefixIndex {
     }
 
     /// `FindBestPrefixMatch` for **all** nodes in one chain walk:
-    /// `out[n]` equals `pools[n].prefix_match(hash_ids)` exactly, but the
-    /// whole cluster costs one HashMap probe per chain block instead of
-    /// one per (node, block) pair.
-    pub fn best_prefix_into(&self, hash_ids: &[BlockId], out: &mut Vec<TierMatch>) {
+    /// `out[n]` equals `pools[n].prefix_match_with(hash_ids, …)` exactly
+    /// — match, SSD-run summary, and per-node SSD positions — but the
+    /// whole cluster costs one array load per chain block instead of one
+    /// hash probe per (node, block) pair.  `out` and `ssd_pos` are
+    /// caller-owned scratch (cleared here), so steady-state decisions
+    /// allocate nothing.
+    pub fn best_prefix_into(
+        &self,
+        hash_ids: &[DenseBlockId],
+        out: &mut Vec<TierMatch>,
+        ssd_pos: &mut SsdPositions,
+    ) {
         out.clear();
         out.resize(self.n_nodes, TierMatch::default());
+        ssd_pos.reset(self.n_nodes);
         if self.n_nodes == 0 {
             return;
         }
         // Nodes whose match still extends / whose match is still a pure
         // DRAM run.  A cleared bit means that node's `blocks` (resp.
         // `dram_prefix`) has been finalized in `out`.
-        let mut alive = [0u64; WORDS];
+        let mut alive = [0u64; MAX_WORDS];
         for w in 0..self.n_words {
             let bits = self.n_nodes - w * 64;
             alive[w] = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
@@ -185,13 +213,17 @@ impl PrefixIndex {
             if alive[..self.n_words].iter().all(|&w| w == 0) {
                 break;
             }
-            let r = self.map.get(&b).copied().unwrap_or_default();
+            let entry = self.entry(b);
             for w in 0..self.n_words {
                 if alive[w] == 0 {
                     continue;
                 }
+                let (dram_w, ssd_w) = match entry {
+                    Some(e) => (e[w], e[self.n_words + w]),
+                    None => (0, 0),
+                };
                 let base = w * 64;
-                let resident = (r.dram[w] | r.ssd[w]) & alive[w];
+                let resident = (dram_w | ssd_w) & alive[w];
                 // Nodes missing this block: their match ends at i blocks.
                 let mut died = alive[w] & !resident;
                 while died != 0 {
@@ -208,18 +240,20 @@ impl PrefixIndex {
                 // Nodes whose block is SSD-resident: their pure-DRAM
                 // leading run ends here (and the block counts as an SSD
                 // copy).
-                let mut run_end = dram_run[w] & !r.dram[w];
+                let mut run_end = dram_run[w] & !dram_w;
                 while run_end != 0 {
                     let n = base + run_end.trailing_zeros() as usize;
                     run_end &= run_end - 1;
                     out[n].dram_prefix = i;
                 }
-                dram_run[w] &= r.dram[w];
-                let mut on_ssd = alive[w] & r.ssd[w];
+                dram_run[w] &= dram_w;
+                let mut on_ssd = alive[w] & ssd_w;
                 while on_ssd != 0 {
                     let n = base + on_ssd.trailing_zeros() as usize;
                     on_ssd &= on_ssd - 1;
                     out[n].ssd_blocks += 1;
+                    out[n].ssd_last = i as u32;
+                    ssd_pos.push(n, i as u32);
                 }
             }
         }
@@ -244,14 +278,17 @@ impl PrefixIndex {
     }
 
     /// Allocating convenience wrapper around [`Self::best_prefix_into`].
-    pub fn best_prefix(&self, hash_ids: &[BlockId]) -> Vec<TierMatch> {
+    pub fn best_prefix(&self, hash_ids: &[DenseBlockId]) -> Vec<TierMatch> {
         let mut out = Vec::new();
-        self.best_prefix_into(hash_ids, &mut out);
+        let mut ssd_pos = SsdPositions::default();
+        self.best_prefix_into(hash_ids, &mut out, &mut ssd_pos);
         out
     }
 
     /// Debug invariant: the incrementally maintained index equals a
-    /// brute-force rebuild from the pools (in node order).
+    /// brute-force rebuild from the pools (in node order).  The fresh
+    /// table may be shorter (it only grows to the highest *resident*
+    /// dense id); any overhang must be all-zero.
     pub fn equals_rebuild_of<'a>(&self, pools: impl Iterator<Item = &'a CachePool>) -> bool {
         let mut fresh = PrefixIndex::new(self.n_nodes);
         let mut count = 0usize;
@@ -259,7 +296,14 @@ impl PrefixIndex {
             fresh.insert_pool(n, pool);
             count = n + 1;
         }
-        count == self.n_nodes && fresh.map == self.map
+        if count != self.n_nodes || fresh.resident != self.resident {
+            return false;
+        }
+        let (a, b) = (&self.words, &fresh.words);
+        let common = a.len().min(b.len());
+        a[..common] == b[..common]
+            && a[common..].iter().all(|&w| w == 0)
+            && b[common..].iter().all(|&w| w == 0)
     }
 }
 
@@ -272,15 +316,33 @@ mod tests {
         (0..n).map(|_| CachePool::new(PolicyKind::Lru, Some(64), Some(64))).collect()
     }
 
-    fn scan(pools: &[CachePool], chain: &[BlockId]) -> Vec<TierMatch> {
+    fn scan(pools: &[CachePool], chain: &[DenseBlockId]) -> Vec<TierMatch> {
         pools.iter().map(|p| p.prefix_match(chain)).collect()
+    }
+
+    #[test]
+    fn width_adapts_to_the_cluster() {
+        assert_eq!(PrefixIndex::new(1).n_words(), 1);
+        assert_eq!(PrefixIndex::new(8).n_words(), 1);
+        assert_eq!(PrefixIndex::new(64).n_words(), 1);
+        assert_eq!(PrefixIndex::new(65).n_words(), 2);
+        assert_eq!(PrefixIndex::new(128).n_words(), 2);
+        assert_eq!(PrefixIndex::new(129).n_words(), 3);
+        assert_eq!(PrefixIndex::new(256).n_words(), 4);
+        // Small clusters are back to one word per tier: 16 B per block
+        // slot instead of the old fixed 64.
+        let mut idx = PrefixIndex::new(8);
+        idx.set(3, 0, Some(Tier::Dram));
+        idx.set(3, 1, Some(Tier::Ssd));
+        assert_eq!(idx.words.len(), 2 * idx.stride);
+        assert_eq!(idx.stride, 2);
     }
 
     #[test]
     fn best_prefix_matches_per_pool_scan() {
         let mut ps = pools(3);
         let mut idx = PrefixIndex::new(3);
-        let chain: Vec<BlockId> = (10..20).collect();
+        let chain: Vec<DenseBlockId> = (10..20).collect();
         // Node 0: full chain in DRAM; node 1: first half, with one block
         // demoted to SSD; node 2: nothing.
         idx.apply(0, &ps[0].admit_chain(&chain, 0.0));
@@ -290,13 +352,40 @@ mod tests {
         let want = scan(&ps, &chain);
         assert_eq!(got, want);
         assert_eq!(got[0].blocks, 10);
-        assert_eq!(got[1], TierMatch { blocks: 5, dram_prefix: 2, dram_blocks: 4, ssd_blocks: 1 });
+        assert_eq!(
+            got[1],
+            TierMatch { blocks: 5, dram_prefix: 2, dram_blocks: 4, ssd_blocks: 1, ssd_last: 2 }
+        );
         assert_eq!(got[2], TierMatch::default());
         assert!(idx.equals_rebuild_of(ps.iter()));
         // Holder probes agree with the pools.
         assert_eq!(idx.holders(12), vec![0, 1]);
         assert_eq!(idx.holders(17), vec![0]);
         assert_eq!(idx.holders(999), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn walk_positions_match_scan_positions() {
+        let mut ps = pools(2);
+        let mut idx = PrefixIndex::new(2);
+        let chain: Vec<DenseBlockId> = (100..108).collect();
+        idx.apply(0, &ps[0].admit_chain(&chain, 0.0));
+        for b in [101, 103, 104] {
+            idx.apply(0, &ps[0].demote_block(b, 1.0).unwrap());
+        }
+        idx.apply(1, &ps[1].admit_chain(&chain[..3], 0.0));
+        let mut out = Vec::new();
+        let mut walk_pos = SsdPositions::default();
+        idx.best_prefix_into(&chain, &mut out, &mut walk_pos);
+        let mut scan_list = Vec::new();
+        for (n, p) in ps.iter().enumerate() {
+            let m = p.prefix_match_with(&chain, &mut scan_list);
+            assert_eq!(out[n], m, "node {n}");
+            assert_eq!(walk_pos.node(n), &scan_list[..], "node {n} positions");
+        }
+        assert_eq!(walk_pos.node(0), &[1, 3, 4]);
+        assert_eq!(out[0].ssd_last, 4);
+        assert!(walk_pos.node(1).is_empty());
     }
 
     #[test]
@@ -310,11 +399,14 @@ mod tests {
         assert_eq!(idx.tier_on(1, 2), Some(Tier::Dram));
         idx.apply(0, &ps[0].demote_block(1, 1.0).unwrap());
         assert_eq!(idx.tier_on(0, 1), Some(Tier::Ssd));
-        // A drop removes the node's bit; the last holder's drop removes
-        // the entry entirely.
+        // A drop removes the node's bit; the last holder's drop zeroes
+        // the slot and the block stops counting as resident.
         idx.set(0, 1, None);
         assert_eq!(idx.tier_on(0, 1), None);
         assert_eq!(idx.len(), 1); // only block 2 remains
+        // Clearing a block the index never saw is a no-op.
+        idx.set(0, 10_000, None);
+        assert_eq!(idx.len(), 1);
     }
 
     #[test]
@@ -324,8 +416,8 @@ mod tests {
         // rebuild at every step, and best_prefix equal to the scan.
         let mut ps = vec![CachePool::new(PolicyKind::Lru, Some(4), Some(6))];
         let mut idx = PrefixIndex::new(1);
-        for round in 0..8u64 {
-            let chain: Vec<BlockId> = (round * 3..round * 3 + 4).collect();
+        for round in 0..8u32 {
+            let chain: Vec<DenseBlockId> = (round * 3..round * 3 + 4).collect();
             let delta = ps[0].admit_chain(&chain, round as f64);
             idx.apply(0, &delta);
             assert!(idx.equals_rebuild_of(ps.iter()), "round {round}");
@@ -335,15 +427,16 @@ mod tests {
 
     #[test]
     fn wide_clusters_cross_word_boundaries() {
-        // ROADMAP PR 3 follow-up: the residency bitset is [u64; W], so a
-        // shard covers well past 64 prefill nodes with no fallback.
+        // The residency bitset is width-adaptive, so one index covers
+        // well past 64 prefill nodes with no fallback.
         assert!(PrefixIndex::supports(65));
         assert!(PrefixIndex::supports(PrefixIndex::MAX_NODES));
         assert!(!PrefixIndex::supports(PrefixIndex::MAX_NODES + 1));
         let n = 130; // three words, last one partial
         let mut ps = pools(n);
         let mut idx = PrefixIndex::new(n);
-        let chain: Vec<BlockId> = (1_000..1_016).collect();
+        assert_eq!(idx.n_words(), 3);
+        let chain: Vec<DenseBlockId> = (1_000..1_016).collect();
         // Holders straddling every word: 0, 63, 64, 77, 127, 128, 129.
         for &node in &[0usize, 63, 64, 77, 127, 128, 129] {
             let len = 4 + node % 12;
@@ -370,8 +463,20 @@ mod tests {
         idx.set(63, 7, Some(Tier::Dram));
         assert_eq!(idx.tier_on(last, 7), Some(Tier::Ssd));
         let m = idx.best_prefix(&[7]);
-        assert_eq!(m[last], TierMatch { blocks: 1, dram_prefix: 0, dram_blocks: 0, ssd_blocks: 1 });
-        assert_eq!(m[63], TierMatch { blocks: 1, dram_prefix: 1, dram_blocks: 1, ssd_blocks: 0 });
+        assert_eq!(
+            m[last],
+            TierMatch { blocks: 1, dram_prefix: 0, dram_blocks: 0, ssd_blocks: 1, ssd_last: 0 }
+        );
+        assert_eq!(
+            m[63],
+            TierMatch {
+                blocks: 1,
+                dram_prefix: 1,
+                dram_blocks: 1,
+                ssd_blocks: 0,
+                ssd_last: TierMatch::NO_SSD
+            }
+        );
         assert_eq!(m[0], TierMatch::default());
     }
 

@@ -1,0 +1,112 @@
+//! Block interning — the boundary where trace-level block *hashes*
+//! become scheduler-internal dense ids.
+//!
+//! The published trace (and `chain_hashes` on the live path) identifies a
+//! KVCache block by a 64-bit prefix-chain hash.  Those hashes are the
+//! *public* surface (JSONL schema, Fig 6 analyzers) — but nothing inside
+//! the scheduler needs them: Conductor, the pools, and the prefix index
+//! only ever compare ids for equality.  [`BlockInterner`] maps each hash
+//! to a dense `u32` at request admission (`sim::Sim::handle_arrival`),
+//! and everything downstream — [`super::CachePool`],
+//! [`super::PrefixIndex`], [`super::TierDelta`], migration heat — carries
+//! [`DenseBlockId`]:
+//!
+//! * hot maps key on 4-byte ids instead of 8-byte hashes;
+//! * the prefix index stops hashing entirely — dense ids index a flat
+//!   residency table directly (see `kvcache::index`);
+//! * ids are assigned in first-appearance order, so every run of the
+//!   same trace produces the same ids (determinism is preserved).
+//!
+//! Interning is injective by construction: a new hash gets the next
+//! unused dense id, a seen hash gets its existing id, and nothing is
+//! ever un-interned (dropped blocks may re-enter the cluster later and
+//! must keep their identity).
+
+use crate::util::fasthash::FastMap;
+use crate::BlockId;
+
+/// Dense scheduler-internal block id (see module docs).  `u32` bounds
+/// the cluster at ~4.3 B distinct cache blocks — at 512 tokens/block
+/// that is two *trillion* tokens of distinct prefix, far past any trace.
+pub type DenseBlockId = u32;
+
+/// Hash → dense-id map (one per simulated cluster, owned by the `Sim`
+/// next to the interner's consumers).
+#[derive(Debug, Default)]
+pub struct BlockInterner {
+    map: FastMap<BlockId, DenseBlockId>,
+}
+
+impl BlockInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Dense id for `hash`, assigning the next free id on first sight.
+    #[inline]
+    pub fn intern(&mut self, hash: BlockId) -> DenseBlockId {
+        let next = self.map.len();
+        match self.map.entry(hash) {
+            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let id = DenseBlockId::try_from(next).expect("interner exhausted u32 id space");
+                *e.insert(id)
+            }
+        }
+    }
+
+    /// Intern a whole hash chain into a reused buffer (the per-arrival
+    /// path — `out` is cleared first, so the caller's scratch never
+    /// reallocates past the longest chain seen).
+    pub fn intern_chain_into(&mut self, chain: &[BlockId], out: &mut Vec<DenseBlockId>) {
+        out.clear();
+        out.reserve(chain.len());
+        for &h in chain {
+            let id = self.intern(h);
+            out.push(id);
+        }
+    }
+
+    /// Dense id of an already-interned hash (read-only probe).
+    pub fn lookup(&self, hash: BlockId) -> Option<DenseBlockId> {
+        self.map.get(&hash).copied()
+    }
+
+    /// Distinct hashes interned so far (== the dense id space in use).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_appearance_order_and_stability() {
+        let mut it = BlockInterner::new();
+        assert_eq!(it.intern(0xdead_beef), 0);
+        assert_eq!(it.intern(42), 1);
+        assert_eq!(it.intern(0xdead_beef), 0, "re-interning must be stable");
+        assert_eq!(it.intern(u64::MAX), 2);
+        assert_eq!(it.len(), 3);
+        assert_eq!(it.lookup(42), Some(1));
+        assert_eq!(it.lookup(7), None);
+    }
+
+    #[test]
+    fn chain_interning_reuses_the_buffer() {
+        let mut it = BlockInterner::new();
+        let mut buf = Vec::new();
+        it.intern_chain_into(&[10, 20, 10, 30], &mut buf);
+        assert_eq!(buf, vec![0, 1, 0, 2]);
+        let cap = buf.capacity();
+        it.intern_chain_into(&[20, 30], &mut buf);
+        assert_eq!(buf, vec![1, 2]);
+        assert_eq!(buf.capacity(), cap, "shorter chains must not shrink the scratch");
+    }
+}

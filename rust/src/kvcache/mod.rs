@@ -5,14 +5,21 @@
 //! [`PrefixIndex`] that answers `FindBestPrefixMatch` for every node in
 //! one O(chain) walk, kept consistent by the [`TierDelta`]s every pool
 //! mutation returns.
+//!
+//! Identity boundary: trace-level 64-bit block *hashes*
+//! ([`crate::BlockId`]) are interned to dense [`DenseBlockId`]s at
+//! request admission ([`BlockInterner`]); everything in this module —
+//! pools, deltas, matches, the index — speaks dense ids only.
 
 pub mod eviction;
 pub mod index;
+pub mod intern;
 pub mod pool;
 
 pub use eviction::{EvictionPolicy, PolicyKind};
 pub use index::PrefixIndex;
-pub use pool::{CachePool, Tier, TierCounters, TierDelta, TierMatch};
+pub use intern::{BlockInterner, DenseBlockId};
+pub use pool::{CachePool, SsdPositions, Tier, TierCounters, TierDelta, TierMatch};
 
 use crate::BlockId;
 

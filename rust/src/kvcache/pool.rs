@@ -7,9 +7,15 @@
 //! scheduling reads the per-tier split through [`CachePool::prefix_match`]
 //! to price the three-way reuse-from-DRAM / load-from-SSD / recompute
 //! decision.
+//!
+//! Pools speak interned [`DenseBlockId`]s (see `kvcache::intern`), and
+//! the hot mutators have `_into` variants that fill a caller-owned
+//! [`TierDelta`] so the scheduler's steady-state path reuses one scratch
+//! delta instead of allocating per mutation.
 
 use super::eviction::{EvictionPolicy, PolicyKind};
-use crate::{BlockId, TimeMs};
+use super::intern::DenseBlockId;
+use crate::TimeMs;
 
 /// Which tier a resident block currently lives in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,7 +79,7 @@ impl TierCounters {
 /// means the block left the pool entirely (dropped).
 #[derive(Debug, Default, Clone)]
 pub struct TierDelta {
-    pub changes: Vec<(BlockId, Option<Tier>)>,
+    pub changes: Vec<(DenseBlockId, Option<Tier>)>,
 }
 
 impl TierDelta {
@@ -81,9 +87,15 @@ impl TierDelta {
         self.changes.is_empty()
     }
 
+    /// Reset for reuse (the `_into` mutators call this; capacity is
+    /// kept, so a reused scratch delta stops allocating at steady state).
+    pub fn clear(&mut self) {
+        self.changes.clear();
+    }
+
     /// Blocks destroyed outright, in drop order (the pre-delta return
     /// value of the `admit_*` family, kept for accounting tests).
-    pub fn dropped(&self) -> Vec<BlockId> {
+    pub fn dropped(&self) -> Vec<DenseBlockId> {
         self.changes.iter().filter(|(_, t)| t.is_none()).map(|(b, _)| *b).collect()
     }
 
@@ -95,14 +107,20 @@ impl TierDelta {
         self.changes.iter().filter(|&&(_, t)| t == Some(Tier::Ssd)).count()
     }
 
-    fn push(&mut self, b: BlockId, t: Option<Tier>) {
+    fn push(&mut self, b: DenseBlockId, t: Option<Tier>) {
         self.changes.push((b, t));
     }
 }
 
 /// The longest usable prefix of a request's hash chain in this pool,
-/// split by tier (Algorithm 1's `prefix_len`, tier-aware).
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+/// split by tier (Algorithm 1's `prefix_len`, tier-aware), plus the
+/// matched head's SSD-run summary: the leading pure-DRAM run ends at
+/// `dram_prefix` (which is also the *first* SSD position whenever
+/// `ssd_blocks > 0`), and `ssd_last` is the last SSD position — so the
+/// candidate's SSD copies all lie in `[dram_prefix, ssd_last]`.  The
+/// §6.2 wire-refresh pricing rejects non-overlapping source/candidate
+/// SSD spans in O(1) off this summary alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TierMatch {
     /// Leading run of chain blocks resident in *either* tier.
     pub blocks: usize,
@@ -113,6 +131,69 @@ pub struct TierMatch {
     pub dram_blocks: usize,
     /// Of `blocks`, how many would have to be staged up from SSD.
     pub ssd_blocks: usize,
+    /// Chain position of the last SSD-resident block in the match
+    /// ([`TierMatch::NO_SSD`] when `ssd_blocks == 0`).
+    pub ssd_last: u32,
+}
+
+impl TierMatch {
+    /// Sentinel for `ssd_last` when the match has no SSD blocks.
+    pub const NO_SSD: u32 = u32::MAX;
+}
+
+impl Default for TierMatch {
+    fn default() -> Self {
+        TierMatch {
+            blocks: 0,
+            dram_prefix: 0,
+            dram_blocks: 0,
+            ssd_blocks: 0,
+            ssd_last: Self::NO_SSD,
+        }
+    }
+}
+
+/// Per-node SSD *positions* within each node's matched head, carried out
+/// of the one prefix walk (`PrefixIndex::best_prefix_into` or the
+/// per-pool scan) so the §6.2 balancing branch prices wire-refreshing a
+/// candidate's SSD copies without re-probing any tier per head block.
+/// Reused scratch: `reset` clears lists in place, so the steady-state
+/// decision loop stops allocating once warmed.
+#[derive(Debug, Default)]
+pub struct SsdPositions {
+    lists: Vec<Vec<u32>>,
+}
+
+impl SsdPositions {
+    /// Clear (and, first time, grow) the per-node lists.
+    pub fn reset(&mut self, n_nodes: usize) {
+        if self.lists.len() < n_nodes {
+            self.lists.resize_with(n_nodes, Vec::new);
+        }
+        for l in &mut self.lists[..n_nodes] {
+            l.clear();
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, node: usize, pos: u32) {
+        self.lists[node].push(pos);
+    }
+
+    /// Ascending SSD positions within `node`'s matched head.
+    pub fn node(&self, node: usize) -> &[u32] {
+        &self.lists[node]
+    }
+
+    pub fn list_mut(&mut self, node: usize) -> &mut Vec<u32> {
+        &mut self.lists[node]
+    }
+
+    /// Equality over the first `n` nodes (scratch may keep longer spare
+    /// capacity from earlier, wider uses).
+    pub fn same_nodes(&self, other: &Self, n: usize) -> bool {
+        (0..n).all(|k| self.node(k) == other.node(k))
+    }
 }
 
 /// One node's tiered KVCache pool: DRAM + SSD [`EvictionPolicy`] maps
@@ -159,11 +240,11 @@ impl CachePool {
         self.dram.is_empty() && self.ssd.is_empty()
     }
 
-    pub fn contains(&self, b: BlockId) -> bool {
+    pub fn contains(&self, b: DenseBlockId) -> bool {
         self.dram.contains(b) || self.ssd.contains(b)
     }
 
-    pub fn tier_of(&self, b: BlockId) -> Option<Tier> {
+    pub fn tier_of(&self, b: DenseBlockId) -> Option<Tier> {
         if self.dram.contains(b) {
             Some(Tier::Dram)
         } else if self.ssd.contains(b) {
@@ -177,12 +258,13 @@ impl CachePool {
         self.ssd.capacity() != Some(0)
     }
 
-    /// Tier-aware prefix match: the leading run of the chain resident in
-    /// either tier, with its DRAM/SSD composition.
-    pub fn prefix_match(&self, hash_ids: &[BlockId]) -> TierMatch {
+    fn match_inner(&self, hash_ids: &[DenseBlockId], mut pos: Option<&mut Vec<u32>>) -> TierMatch {
+        if let Some(v) = pos.as_deref_mut() {
+            v.clear();
+        }
         let mut m = TierMatch::default();
         let mut dram_run = true;
-        for &b in hash_ids {
+        for (i, &b) in hash_ids.iter().enumerate() {
             if self.dram.contains(b) {
                 m.blocks += 1;
                 m.dram_blocks += 1;
@@ -192,6 +274,10 @@ impl CachePool {
             } else if self.ssd.contains(b) {
                 m.blocks += 1;
                 m.ssd_blocks += 1;
+                m.ssd_last = i as u32;
+                if let Some(v) = pos.as_deref_mut() {
+                    v.push(i as u32);
+                }
                 dram_run = false;
             } else {
                 break;
@@ -200,16 +286,33 @@ impl CachePool {
         m
     }
 
+    /// Tier-aware prefix match: the leading run of the chain resident in
+    /// either tier, with its DRAM/SSD composition.
+    pub fn prefix_match(&self, hash_ids: &[DenseBlockId]) -> TierMatch {
+        self.match_inner(hash_ids, None)
+    }
+
+    /// [`Self::prefix_match`] that also collects the match's SSD
+    /// positions into `ssd_pos` (cleared first) — the scan-side twin of
+    /// `PrefixIndex::best_prefix_into`'s position capture.
+    pub fn prefix_match_with(
+        &self,
+        hash_ids: &[DenseBlockId],
+        ssd_pos: &mut Vec<u32>,
+    ) -> TierMatch {
+        self.match_inner(hash_ids, Some(ssd_pos))
+    }
+
     /// Algorithm 1's `prefix_len` (in blocks), tier-blind.  Read-only
     /// (hit accounting happens on admission, not on probing).
-    pub fn prefix_match_blocks(&self, hash_ids: &[BlockId]) -> usize {
+    pub fn prefix_match_blocks(&self, hash_ids: &[DenseBlockId]) -> usize {
         self.prefix_match(hash_ids).blocks
     }
 
     /// Insert into DRAM, demoting (or, with SSD disabled, dropping) LRU
     /// victims first so the insert itself never evicts.  Every residency
     /// change (demotion, drop, the insert itself) is recorded in `delta`.
-    fn insert_dram(&mut self, b: BlockId, now: TimeMs, pos: usize, delta: &mut TierDelta) {
+    fn insert_dram(&mut self, b: DenseBlockId, now: TimeMs, pos: usize, delta: &mut TierDelta) {
         if self.dram.capacity() == Some(0) {
             // Degenerate no-DRAM config: fresh KV spills straight down to
             // the SSD tier (or is dropped), keeping the capacity bound
@@ -256,7 +359,14 @@ impl CachePool {
     /// whose KV gets (re)materialized in DRAM — recomputed blocks shadow
     /// any stale SSD copy, which is removed so a block never lives in two
     /// tiers.
-    fn place(&mut self, b: BlockId, pos: usize, now: TimeMs, reused: bool, delta: &mut TierDelta) {
+    fn place(
+        &mut self,
+        b: DenseBlockId,
+        pos: usize,
+        now: TimeMs,
+        reused: bool,
+        delta: &mut TierDelta,
+    ) {
         if self.dram.contains(b) {
             if reused {
                 self.stats.dram_hits += 1;
@@ -279,27 +389,39 @@ impl CachePool {
         }
     }
 
-    /// Admit a request's block chain with the scheduler's reuse decision:
+    /// Admit a request's block chain with the scheduler's reuse decision,
+    /// recording residency changes into a caller-owned (reused) delta:
     /// the leading `reused_blocks` count as hits (DRAM touch or SSD
     /// promotion), the rest as misses inserted into DRAM (their KV was
-    /// just computed).  Returns the residency changes (drops, demotions,
-    /// promotions, inserts) for the caller's index maintenance.
+    /// just computed).
+    pub fn admit_chain_reusing_into(
+        &mut self,
+        hash_ids: &[DenseBlockId],
+        reused_blocks: usize,
+        now: TimeMs,
+        delta: &mut TierDelta,
+    ) {
+        delta.clear();
+        for (i, &b) in hash_ids.iter().enumerate() {
+            self.place(b, i, now, i < reused_blocks, delta);
+        }
+    }
+
+    /// Allocating convenience form of [`Self::admit_chain_reusing_into`].
     pub fn admit_chain_reusing(
         &mut self,
-        hash_ids: &[BlockId],
+        hash_ids: &[DenseBlockId],
         reused_blocks: usize,
         now: TimeMs,
     ) -> TierDelta {
         let mut delta = TierDelta::default();
-        for (i, &b) in hash_ids.iter().enumerate() {
-            self.place(b, i, now, i < reused_blocks, &mut delta);
-        }
+        self.admit_chain_reusing_into(hash_ids, reused_blocks, now, &mut delta);
         delta
     }
 
     /// Admit a chain reusing everything the pool can prefix-match — the
     /// pre-tiering API, kept for callers without a scheduling decision.
-    pub fn admit_chain(&mut self, hash_ids: &[BlockId], now: TimeMs) -> TierDelta {
+    pub fn admit_chain(&mut self, hash_ids: &[DenseBlockId], now: TimeMs) -> TierDelta {
         let matched = self.prefix_match_blocks(hash_ids);
         self.admit_chain_reusing(hash_ids, matched, now)
     }
@@ -308,7 +430,7 @@ impl CachePool {
     /// Table 1 global-pool replays.  A block resident in either tier is a
     /// hit (promoting from SSD); a miss inserts into DRAM.  Returns
     /// whether it hit plus the residency changes.
-    pub fn admit_block(&mut self, b: BlockId, pos: usize, now: TimeMs) -> (bool, TierDelta) {
+    pub fn admit_block(&mut self, b: DenseBlockId, pos: usize, now: TimeMs) -> (bool, TierDelta) {
         let hit = self.contains(b);
         let mut delta = TierDelta::default();
         self.place(b, pos, now, hit, &mut delta);
@@ -316,10 +438,16 @@ impl CachePool {
     }
 
     /// Insert replicated blocks (hot-spot migration §6.2) without hit
-    /// accounting.  Replicas land in DRAM (they arrive hot off the wire);
-    /// a stale SSD copy is superseded.  Returns the residency changes.
-    pub fn insert_replica(&mut self, blocks: &[BlockId], now: TimeMs) -> TierDelta {
-        let mut delta = TierDelta::default();
+    /// accounting, recording residency changes into a caller-owned
+    /// delta.  Replicas land in DRAM (they arrive hot off the wire); a
+    /// stale SSD copy is superseded.
+    pub fn insert_replica_into(
+        &mut self,
+        blocks: &[DenseBlockId],
+        now: TimeMs,
+        delta: &mut TierDelta,
+    ) {
+        delta.clear();
         for (i, &b) in blocks.iter().enumerate() {
             if self.dram.contains(b) {
                 continue;
@@ -328,15 +456,21 @@ impl CachePool {
                 self.ssd.remove(b);
                 self.stats.promotions += 1;
             }
-            self.insert_dram(b, now, i, &mut delta);
+            self.insert_dram(b, now, i, delta);
         }
+    }
+
+    /// Allocating convenience form of [`Self::insert_replica_into`].
+    pub fn insert_replica(&mut self, blocks: &[DenseBlockId], now: TimeMs) -> TierDelta {
+        let mut delta = TierDelta::default();
+        self.insert_replica_into(blocks, now, &mut delta);
         delta
     }
 
     /// Move a DRAM-resident block down to the SSD tier (idle-demotion /
     /// test hook).  Returns `None` if the block is not in DRAM or the SSD
     /// tier is disabled, the residency changes otherwise.
-    pub fn demote_block(&mut self, b: BlockId, now: TimeMs) -> Option<TierDelta> {
+    pub fn demote_block(&mut self, b: DenseBlockId, now: TimeMs) -> Option<TierDelta> {
         if !self.dram.contains(b) || !self.ssd_enabled() {
             return None;
         }
@@ -387,15 +521,15 @@ impl CachePool {
         self.stats.dropped
     }
 
-    pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+    pub fn iter_blocks(&self) -> impl Iterator<Item = DenseBlockId> + '_ {
         self.dram.iter_blocks().chain(self.ssd.iter_blocks())
     }
 
-    pub fn iter_dram_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+    pub fn iter_dram_blocks(&self) -> impl Iterator<Item = DenseBlockId> + '_ {
         self.dram.iter_blocks()
     }
 
-    pub fn iter_ssd_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+    pub fn iter_ssd_blocks(&self) -> impl Iterator<Item = DenseBlockId> + '_ {
         self.ssd.iter_blocks()
     }
 }
@@ -475,6 +609,7 @@ mod tests {
         assert_eq!(p.tier_of(1), Some(Tier::Ssd));
         let m = p.prefix_match(&[1, 2, 3, 4]);
         assert_eq!((m.blocks, m.dram_prefix, m.ssd_blocks, m.dram_blocks), (4, 0, 2, 2));
+        assert_eq!(m.ssd_last, 1, "SSD copies at positions 0 and 1");
         p.admit_chain_reusing(&[1, 2], 2, 2.0);
         assert_eq!(p.tier_of(1), Some(Tier::Dram));
         assert_eq!(p.tier_of(2), Some(Tier::Dram));
@@ -496,8 +631,8 @@ mod tests {
         assert_eq!(p.stats.ssd_hits, 0);
         assert_eq!(p.stats.promotions, 0);
         assert_eq!(p.tier_of(1), Some(Tier::Dram));
-        let dram: Vec<BlockId> = p.iter_dram_blocks().collect();
-        let ssd: Vec<BlockId> = p.iter_ssd_blocks().collect();
+        let dram: Vec<DenseBlockId> = p.iter_dram_blocks().collect();
+        let ssd: Vec<DenseBlockId> = p.iter_ssd_blocks().collect();
         assert!(!ssd.contains(&1) && !ssd.contains(&2), "stale SSD copies must go");
         assert_eq!(dram.len() + ssd.len(), p.len());
     }
@@ -516,6 +651,27 @@ mod tests {
         p.admit_chain(&[1, 2], 0.0);
         p.insert_replica(&[1, 2, 3], 1.0);
         assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn into_mutators_reuse_the_scratch_delta() {
+        // The allocation-free contract: `_into` clears and refills one
+        // caller-owned delta, and reports exactly what the allocating
+        // form would.
+        let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
+        let mut q = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
+        let mut delta = TierDelta::default();
+        p.admit_chain_reusing_into(&[1, 2], 0, 0.0, &mut delta);
+        assert_eq!(delta.changes, q.admit_chain_reusing(&[1, 2], 0, 0.0).changes);
+        p.admit_chain_reusing_into(&[3, 4], 0, 1.0, &mut delta);
+        assert_eq!(delta.changes, q.admit_chain_reusing(&[3, 4], 0, 1.0).changes);
+        assert!(delta.demoted_to_ssd() > 0, "pressure must demote");
+        let cap = delta.changes.capacity();
+        p.insert_replica_into(&[9], 2.0, &mut delta);
+        q.insert_replica(&[9], 2.0);
+        assert_eq!(delta.changes.len(), p.len() - 3, "replica delta replaces prior content");
+        assert!(delta.changes.capacity() >= 1 && cap >= delta.changes.len());
+        assert_eq!(p.stats, q.stats);
     }
 
     #[test]
@@ -579,5 +735,31 @@ mod tests {
         assert_eq!(m.dram_prefix, 1); // 1 is DRAM, 2 is SSD
         assert_eq!(m.dram_blocks, 3);
         assert_eq!(m.ssd_blocks, 1);
+        assert_eq!(m.ssd_last, 1, "the one SSD copy sits at position 1");
+    }
+
+    #[test]
+    fn ssd_summary_and_positions_agree() {
+        // The SSD-run summary the §6.2 wire-refresh pricing consumes:
+        // first SSD position == dram_prefix, last == ssd_last, and the
+        // collected positions are exactly the SSD-resident offsets.
+        let mut p = CachePool::new(PolicyKind::Lru, Some(16), Some(16));
+        let chain: Vec<DenseBlockId> = (10..18).collect();
+        p.admit_chain(&chain, 0.0);
+        for b in [12, 13, 16] {
+            assert!(p.demote_block(b, 1.0).is_some());
+        }
+        let mut pos = vec![99]; // stale scratch must be cleared
+        let m = p.prefix_match_with(&chain, &mut pos);
+        assert_eq!(m.blocks, 8);
+        assert_eq!(m.dram_prefix, 2);
+        assert_eq!(m.ssd_blocks, 3);
+        assert_eq!(m.ssd_last, 6);
+        assert_eq!(pos, vec![2, 3, 6]);
+        assert_eq!(pos[0] as usize, m.dram_prefix, "first SSD position == dram_prefix");
+        // No SSD blocks -> sentinel + empty positions.
+        let m2 = p.prefix_match_with(&chain[..2], &mut pos);
+        assert_eq!(m2.ssd_last, TierMatch::NO_SSD);
+        assert!(pos.is_empty());
     }
 }

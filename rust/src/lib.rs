@@ -12,8 +12,10 @@
 //!   truth consumed by both Conductor's TTFT estimates and the
 //!   simulator's event-driven prefill executor.
 //! * [`kvcache`] — the disaggregated, paged, prefix-hashed KVCache pool
-//!   with pluggable eviction (LRU / LFU / LengthAware) and a global
-//!   block-location registry (§3, §4.2).
+//!   with pluggable eviction (LRU / LFU / LengthAware), a global
+//!   block-location registry (§3, §4.2), and the interning boundary
+//!   that maps trace-level block hashes to the dense scheduler-internal
+//!   ids every hot structure keys on.
 //! * [`resource`] — the per-node contended-bandwidth queues (generic
 //!   [`resource::BwQueue`]) instantiated as three banks per node: NIC-tx,
 //!   NIC-rx (incast), and NVMe (staging reads + demotion writes share

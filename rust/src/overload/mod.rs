@@ -16,12 +16,11 @@
 //!   *predicted for the moment this request would finish prefill*, using
 //!   the system-level uniform-`t_d` model.
 
-use std::collections::HashMap;
-
 use crate::config::{RejectionPolicy, SimConfig};
 use crate::decode::DecodeInstance;
 use crate::model::PerfModel;
 use crate::prefill::PrefillPool;
+use crate::util::fasthash::FastMap;
 use crate::TimeMs;
 
 /// An in-flight prefill whose KVCache will land on a decode instance.
@@ -105,7 +104,7 @@ impl Admission {
     pub fn decode_load_predicted(
         &self,
         decodes: &[DecodeInstance],
-        in_flight: &HashMap<u64, InFlight>,
+        in_flight: &FastMap<u64, InFlight>,
         perf: &PerfModel,
         t_future: TimeMs,
         tbt_slo: f64,
@@ -151,7 +150,7 @@ impl Admission {
         perf: &PerfModel,
         pool: &PrefillPool,
         decodes: &[DecodeInstance],
-        in_flight: &HashMap<u64, InFlight>,
+        in_flight: &FastMap<u64, InFlight>,
         input_tokens: u64,
         now: TimeMs,
     ) -> bool {
@@ -229,7 +228,8 @@ mod tests {
     fn none_policy_admits_everything() {
         let (cfg, perf, pool, decodes) = env();
         let mut adm = Admission::new(RejectionPolicy::None, 1.0);
-        assert!(adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 1_000_000, 0.0));
+        let none = FastMap::default();
+        assert!(adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &none, 1_000_000, 0.0));
     }
 
     #[test]
@@ -244,8 +244,9 @@ mod tests {
         }
         let mut base = Admission::new(RejectionPolicy::Baseline, 1.0);
         let mut early = Admission::new(RejectionPolicy::Early, 1.0);
-        assert!(base.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0));
-        assert!(!early.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0));
+        let none = FastMap::default();
+        assert!(base.admit_at_arrival(&cfg, &perf, &pool, &decodes, &none, 8_000, 0.0));
+        assert!(!early.admit_at_arrival(&cfg, &perf, &pool, &decodes, &none, 8_000, 0.0));
         assert_eq!(early.rejected_at_arrival, 1);
         // The baseline pays at the decode double-check instead.
         assert!(!base.admit_at_decode(&cfg, &perf, &decodes[0], 0.0));
@@ -258,7 +259,7 @@ mod tests {
         let mut adm = Admission::new(RejectionPolicy::Predictive, 1.0);
         adm.t_d_ms = 1e9; // nothing finishes
         // Idle decode pool but a wall of in-flight prefills about to land.
-        let in_flight: HashMap<u64, InFlight> = (0..2_000u64)
+        let in_flight: FastMap<u64, InFlight> = (0..2_000u64)
             .map(|i| {
                 (i, InFlight {
                     kv_arrive: 10.0,
@@ -276,6 +277,7 @@ mod tests {
     #[test]
     fn prefill_saturation_rejects_all_policies() {
         let (cfg, perf, mut pool, decodes) = env();
+        let none = FastMap::default();
         for i in &mut pool.instances {
             i.block_until(1e9);
         }
@@ -284,7 +286,7 @@ mod tests {
         {
             let mut adm = Admission::new(policy, 1.0);
             assert!(
-                !adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &HashMap::new(), 8_000, 0.0),
+                !adm.admit_at_arrival(&cfg, &perf, &pool, &decodes, &none, 8_000, 0.0),
                 "{policy:?}"
             );
         }

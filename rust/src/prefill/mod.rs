@@ -22,12 +22,13 @@
 
 pub mod layerwise;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::kvcache::{CachePool, PolicyKind, PrefixIndex};
 use crate::model::PerfModel;
+use crate::util::fasthash::FastMap;
 use crate::{RequestId, TimeMs};
 
 /// Monotonically increasing prefill job id (admission order).
@@ -131,7 +132,7 @@ impl PrefillInstance {
 #[derive(Debug)]
 pub struct PrefillPool {
     pub instances: Vec<PrefillInstance>,
-    jobs: HashMap<JobId, PrefillJob>,
+    jobs: FastMap<JobId, PrefillJob>,
     next_job: JobId,
 }
 
@@ -147,7 +148,7 @@ impl PrefillPool {
                     )
                 })
                 .collect(),
-            jobs: HashMap::new(),
+            jobs: FastMap::default(),
             next_job: 0,
         }
     }
@@ -189,9 +190,50 @@ impl PrefillPool {
         self.jobs.get(&id).expect("unknown prefill job")
     }
 
-    /// Decide the CPP group size for an input of `n_new` uncached tokens
-    /// (§5.1): long contexts recruit idle peers, short ones stay local.
-    /// Returns the member ids — the primary is always first.
+    /// Decide the CPP group for an input of `n_new` uncached tokens
+    /// (§5.1), writing the member ids into a caller-owned (reused)
+    /// buffer — the primary is always first.  Long contexts recruit idle
+    /// peers, short ones stay local.  Allocation-free: the scheduler's
+    /// decision loop calls this per candidate estimate.
+    pub fn cpp_group_into(
+        &self,
+        cfg: &SimConfig,
+        primary: usize,
+        n_new: u64,
+        now: TimeMs,
+        group: &mut Vec<usize>,
+    ) {
+        group.clear();
+        group.push(primary);
+        if n_new < cfg.cpp_threshold_tokens || cfg.cpp_group_max <= 1 {
+            return;
+        }
+        // Recruit the idlest peers; only nearly-idle nodes join a pipeline
+        // group (recruiting a busy node would delay its own queue).
+        // Repeated min-extraction with a strict `<` keeps ties in index
+        // order — the same members the old sort-based selection picked —
+        // without a candidate list allocation.
+        for _ in 0..cfg.cpp_group_max as usize - 1 {
+            let mut best_i = usize::MAX;
+            let mut best_q = f64::INFINITY;
+            for (i, inst) in self.instances.iter().enumerate() {
+                if i == primary || group.contains(&i) {
+                    continue;
+                }
+                let q = inst.queue_ms(now);
+                if q < 1.0 && q < best_q {
+                    best_q = q;
+                    best_i = i;
+                }
+            }
+            if best_i == usize::MAX {
+                break;
+            }
+            group.push(best_i);
+        }
+    }
+
+    /// Allocating convenience form of [`Self::cpp_group_into`].
     pub fn cpp_group(
         &self,
         cfg: &SimConfig,
@@ -199,24 +241,8 @@ impl PrefillPool {
         n_new: u64,
         now: TimeMs,
     ) -> Vec<usize> {
-        let mut group = vec![primary];
-        if n_new < cfg.cpp_threshold_tokens || cfg.cpp_group_max <= 1 {
-            return group;
-        }
-        // Recruit the idlest peers; only nearly-idle nodes join a pipeline
-        // group (recruiting a busy node would delay its own queue).
-        let mut candidates: Vec<(usize, f64)> = self
-            .instances
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != primary)
-            .map(|(i, inst)| (i, inst.queue_ms(now)))
-            .filter(|(_, q)| *q < 1.0)
-            .collect();
-        candidates.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        for (i, _) in candidates.into_iter().take(cfg.cpp_group_max as usize - 1) {
-            group.push(i);
-        }
+        let mut group = Vec::new();
+        self.cpp_group_into(cfg, primary, n_new, now, &mut group);
         group
     }
 

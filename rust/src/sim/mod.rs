@@ -16,19 +16,20 @@
 //! decode node's NIC-rx) when the job actually starts (§5.2).
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
-use crate::conductor::{self, ConductorStats, SchedRequest};
+use crate::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
-use crate::kvcache::{PrefixIndex, TierCounters};
+use crate::kvcache::{BlockInterner, DenseBlockId, PrefixIndex, TierCounters};
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
 use crate::prefill::{JobId, PrefillPool};
 use crate::resource::{ResourceStats, Resources};
 use crate::trace::TraceRecord;
+use crate::util::fasthash::FastMap;
 use crate::util::rng::Rng;
 use crate::{RequestId, TimeMs};
 
@@ -174,8 +175,8 @@ pub struct Sim<'a> {
     events: BinaryHeap<Event>,
     order: u64,
     stats: ConductorStats,
-    pending: HashMap<RequestId, Pending>,
-    in_flight: HashMap<RequestId, InFlight>,
+    pending: FastMap<RequestId, Pending>,
+    in_flight: FastMap<RequestId, InFlight>,
     metrics: Vec<RequestMetrics>,
     samples: Vec<LoadSample>,
     sample_interval: f64,
@@ -184,6 +185,14 @@ pub struct Sim<'a> {
     /// The Conductor's global prefix index (§5) — `None` only when
     /// explicitly disabled (`use_prefix_index: false`).
     index: Option<PrefixIndex>,
+    /// The interning boundary: trace-level block hashes become dense
+    /// scheduler ids here, at request admission, and nothing downstream
+    /// ever sees a hash again.
+    interner: BlockInterner,
+    /// Reused interned-chain buffer (swapped into each `SchedRequest`).
+    chain_buf: Vec<DenseBlockId>,
+    /// The Conductor's reusable decision buffers.
+    scratch: SchedScratch,
     n_events: u64,
     /// Outstanding non-bookkeeping events.  `Sample` and `DemoteSweep`
     /// re-arm themselves only while real work remains — gating on this
@@ -213,17 +222,20 @@ impl<'a> Sim<'a> {
             events: BinaryHeap::new(),
             order: 0,
             stats: ConductorStats::default(),
-            pending: HashMap::new(),
-            in_flight: HashMap::new(),
+            pending: FastMap::default(),
+            in_flight: FastMap::default(),
             metrics: Vec::new(),
             samples: Vec::new(),
             sample_interval: 10_000.0,
             ssd_load_events: 0,
             ssd_loaded_bytes_by_node: vec![0; cfg.n_prefill],
-            // The widened [u64; W] bitsets cover every realistic cluster,
-            // so there is no automatic scan fallback anymore — only the
+            // The width-adaptive residency bitsets cover every realistic
+            // cluster, so there is no automatic scan fallback — only the
             // explicit `use_prefix_index: false` knob restores the scan.
             index: cfg.use_prefix_index.then(|| PrefixIndex::new(cfg.n_prefill)),
+            interner: BlockInterner::new(),
+            chain_buf: Vec::new(),
+            scratch: SchedScratch::default(),
             n_events: 0,
             real_events: 0,
             demote_after: cfg.demote_after_ms.filter(|&x| x > 0.0 && x.is_finite()),
@@ -328,12 +340,17 @@ impl<'a> Sim<'a> {
             ));
             return;
         }
-        // Algorithm 1.
+        // Algorithm 1, on *interned* ids: this is the one boundary where
+        // trace-level block hashes become dense scheduler ids.  The
+        // chain buffer is reused across arrivals (swapped in and out of
+        // the SchedRequest), so admission allocates nothing for it.
+        let mut hash_ids = std::mem::take(&mut self.chain_buf);
+        self.interner.intern_chain_into(&req.hash_ids, &mut hash_ids);
         let sched = SchedRequest {
             rid: req.rid,
             input_tokens: req.input,
             output_tokens: req.output,
-            hash_ids: req.hash_ids.clone(),
+            hash_ids,
         };
         let mut ctx = conductor::Ctx {
             cfg: self.cfg,
@@ -344,8 +361,11 @@ impl<'a> Sim<'a> {
             rng: &mut self.rng,
             now,
             index: self.index.as_mut(),
+            scratch: &mut self.scratch,
         };
-        match conductor::schedule(&mut ctx, &sched, &mut self.stats) {
+        let outcome = conductor::schedule(&mut ctx, &sched, &mut self.stats);
+        self.chain_buf = sched.hash_ids;
+        match outcome {
             Err(_) => {
                 self.metrics.push(RequestMetrics::rejected(
                     req.rid, now, req.input, req.output, false,

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 
 use super::TraceRecord;
 use crate::kvcache::eviction::{EvictionPolicy, PolicyKind};
-use crate::kvcache::{CachePool, TierCounters};
+use crate::kvcache::{BlockInterner, CachePool, TierCounters};
 use crate::util::stats::Histogram;
 use crate::BlockId;
 
@@ -86,11 +86,16 @@ pub fn cache_hit_rate(
     policy: PolicyKind,
     capacity_blocks: Option<usize>,
 ) -> f64 {
+    // The pool speaks interned dense ids (like the scheduler); the
+    // replay interns each trace hash at its own admission boundary.
+    // Interning is a bijection, so hit sequences are unchanged.
+    let mut interner = BlockInterner::new();
     let mut policy = EvictionPolicy::new(policy, capacity_blocks);
     let mut hits = 0u64;
     let mut total = 0u64;
     for r in trace {
-        for (idx, &b) in r.hash_ids.iter().enumerate() {
+        for (idx, &h) in r.hash_ids.iter().enumerate() {
+            let b = interner.intern(h);
             total += 1;
             if policy.contains(b) {
                 hits += 1;
@@ -119,9 +124,11 @@ pub fn tiered_cache_hit_rate(
     dram_capacity_blocks: Option<usize>,
     ssd_capacity_blocks: Option<usize>,
 ) -> (f64, TierCounters) {
+    let mut interner = BlockInterner::new();
     let mut pool = CachePool::new(policy, dram_capacity_blocks, ssd_capacity_blocks);
     for r in trace {
-        for (idx, &b) in r.hash_ids.iter().enumerate() {
+        for (idx, &h) in r.hash_ids.iter().enumerate() {
+            let b = interner.intern(h);
             pool.admit_block(b, idx, r.timestamp as f64);
         }
     }

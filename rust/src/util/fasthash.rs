@@ -1,0 +1,153 @@
+//! Vendored FxHash-style hasher (no external deps offline — see
+//! DESIGN.md) for the scheduler's hot-path maps.
+//!
+//! `std::collections::HashMap`'s default SipHash buys DoS resistance the
+//! simulator does not need and pays for it on every probe — and the hot
+//! structures (eviction-policy membership, prefill job table, the sim's
+//! pending/in-flight tables) are probed per chain block per scheduling
+//! decision.  [`FastHasher`] is the rustc-style Fx construction: fold
+//! each word in with a rotate + xor + odd-constant multiply.  Quality is
+//! plenty for dense ids and monotone counters; speed is one multiply per
+//! word.
+//!
+//! A pleasant side effect: `FastMap` iteration order is a pure function
+//! of the insertion history (no per-process `RandomState` seed), so any
+//! accidental order dependence is at least deterministic and
+//! reproducible instead of flaking across runs.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Knuth's 64-bit multiplicative-hash constant (2^64 / φ, forced odd).
+const SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+const ROTATE: u32 = 5;
+
+/// One-word-at-a-time multiplicative hasher (FxHash construction).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FastHasher {
+    hash: u64,
+}
+
+impl FastHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(ROTATE) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            // Mix the length in so "ab" + "\0" and "ab\0" differ.
+            self.add(u64::from_le_bytes(tail) ^ ((rest.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.add(n as u64);
+        self.add((n >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FastBuild = BuildHasherDefault<FastHasher>;
+
+/// `HashMap` with the Fx hasher — drop-in for the hot-path tables.
+pub type FastMap<K, V> = HashMap<K, V, FastBuild>;
+
+/// `HashSet` with the Fx hasher.
+pub type FastSet<K> = HashSet<K, FastBuild>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        FastBuild::default().hash_one(v)
+    }
+
+    #[test]
+    fn deterministic_across_builders() {
+        for v in [0u64, 1, 42, u64::MAX, 0xdead_beef] {
+            assert_eq!(hash_of(&v), hash_of(&v));
+        }
+        assert_eq!(hash_of(&"mooncake"), hash_of(&"mooncake"));
+    }
+
+    #[test]
+    fn distinguishes_nearby_keys() {
+        // Not a collision-resistance claim — just that the mixer actually
+        // mixes (sequential ids must not collapse onto few buckets).
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            seen.insert(hash_of(&i));
+        }
+        assert_eq!(seen.len(), 10_000, "sequential u64 keys must hash distinctly");
+        let mut low_bits = std::collections::HashSet::new();
+        for i in 0..1_024u64 {
+            low_bits.insert(hash_of(&i) & 1023);
+        }
+        assert!(low_bits.len() > 512, "low bits must spread: {}", low_bits.len());
+    }
+
+    #[test]
+    fn byte_stream_tail_is_length_sensitive() {
+        // Partial trailing chunks must not alias zero-padded longer input.
+        assert_ne!(hash_of(&[1u8, 2][..]), hash_of(&[1u8, 2, 0][..]));
+        assert_ne!(hash_of(&b"ab"[..]), hash_of(&b"ab\0"[..]));
+    }
+
+    #[test]
+    fn fastmap_behaves_like_hashmap() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for i in 0..1_000u64 {
+            m.insert(i, (i * 3) as u32);
+        }
+        assert_eq!(m.len(), 1_000);
+        for i in 0..1_000u64 {
+            assert_eq!(m.get(&i), Some(&((i * 3) as u32)));
+        }
+        let mut s: FastSet<u32> = FastSet::default();
+        s.insert(7);
+        assert!(s.contains(&7) && !s.contains(&8));
+    }
+}

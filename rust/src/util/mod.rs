@@ -1,7 +1,9 @@
 //! In-crate infrastructure: JSON, RNG + distributions, statistics, CLI
-//! argument parsing.  (No serde/clap/rand offline — see DESIGN.md.)
+//! argument parsing, and the vendored fast hasher.  (No
+//! serde/clap/rand/fxhash offline — see DESIGN.md.)
 
 pub mod args;
+pub mod fasthash;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -127,7 +127,7 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
     // pricing would put the planned start seconds early (NVMe is ~30×
     // slower than RDMA here), exactly the estimate/actual drift the
     // unified cost model exists to prevent.
-    use mooncake::conductor::{self, ConductorStats, SchedRequest};
+    use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
     use mooncake::costmodel;
     use mooncake::model::PerfModel;
     use mooncake::prefill::PrefillPool;
@@ -148,13 +148,14 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
         .collect();
     let mut res = Resources::new(&cfg, &perf);
     let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
     let mut stats = ConductorStats::default();
     let blocks = 64u64;
     let r = SchedRequest {
         rid: 5,
         input_tokens: blocks * BLOCK_TOKENS,
         output_tokens: 100,
-        hash_ids: (5_000..5_000 + blocks).collect(),
+        hash_ids: (5_000u32..5_000 + blocks as u32).collect(),
     };
     // Warm one holder with the chain.
     {
@@ -167,6 +168,7 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
             rng: &mut rng,
             now: 0.0,
             index: None,
+            scratch: &mut scratch,
         };
         conductor::schedule(&mut ctx, &r, &mut stats).unwrap();
     }
@@ -192,6 +194,7 @@ fn remote_fetch_estimate_charges_source_ssd_staging() {
         rng: &mut rng,
         now,
         index: None,
+        scratch: &mut scratch,
     };
     let p = conductor::schedule(&mut ctx, &r, &mut stats).unwrap();
     assert_ne!(p.prefill_group[0], holder, "swamped holder must lose the placement");

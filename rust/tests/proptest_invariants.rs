@@ -4,7 +4,9 @@
 //! simulator determinism, across randomized configurations and traces.
 
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig};
-use mooncake::kvcache::{chain_hashes, CachePool, EvictionPolicy, PolicyKind};
+use mooncake::kvcache::{
+    chain_hashes, BlockInterner, CachePool, DenseBlockId, EvictionPolicy, PolicyKind, PrefixIndex,
+};
 use mooncake::metrics::Outcome;
 use mooncake::sim;
 use mooncake::trace::gen::{self, TraceGenConfig};
@@ -180,7 +182,7 @@ fn prop_eviction_capacity_and_accounting() {
             let mut inserted = std::collections::HashSet::new();
             let mut evicted = std::collections::HashSet::new();
             for step in 0..3_000u64 {
-                let b = rng.below(500);
+                let b = rng.below(500) as DenseBlockId;
                 match rng.below(10) {
                     0 => {
                         if p.remove(b) {
@@ -225,21 +227,21 @@ fn prop_tiered_pool_conservation() {
             let now = step as f64;
             match rng.below(8) {
                 0 => {
-                    let b = rng.below(300);
+                    let b = rng.below(300) as DenseBlockId;
                     pool.admit_block(b, rng.below(40) as usize, now);
                 }
                 1 => {
-                    let chain: Vec<u64> =
-                        (0..1 + rng.below(10)).map(|_| rng.below(300)).collect();
+                    let chain: Vec<DenseBlockId> =
+                        (0..1 + rng.below(10)).map(|_| rng.below(300) as DenseBlockId).collect();
                     pool.insert_replica(&chain, now);
                 }
                 2 => {
-                    let _ = pool.demote_block(rng.below(300), now);
+                    let _ = pool.demote_block(rng.below(300) as DenseBlockId, now);
                 }
                 _ => {
-                    let len = 1 + rng.below(24) as usize;
-                    let start = rng.below(280);
-                    let chain: Vec<u64> = (start..start + len as u64).collect();
+                    let len = 1 + rng.below(24) as u32;
+                    let start = rng.below(280) as u32;
+                    let chain: Vec<DenseBlockId> = (start..start + len).collect();
                     let reused = rng.below(len as u64 + 1) as usize;
                     pool.admit_chain_reusing(&chain, reused, now);
                 }
@@ -248,8 +250,8 @@ fn prop_tiered_pool_conservation() {
             assert!(pool.dram_len() <= dram_cap, "round {round}: DRAM over capacity");
             assert!(pool.ssd_len() <= ssd_cap, "round {round}: SSD over capacity");
             // Conservation: tiers are disjoint and partition the pool.
-            let dram: std::collections::HashSet<u64> = pool.iter_dram_blocks().collect();
-            let ssd: std::collections::HashSet<u64> = pool.iter_ssd_blocks().collect();
+            let dram: std::collections::HashSet<DenseBlockId> = pool.iter_dram_blocks().collect();
+            let ssd: std::collections::HashSet<DenseBlockId> = pool.iter_ssd_blocks().collect();
             assert!(dram.is_disjoint(&ssd), "round {round}: block in both tiers");
             assert_eq!(dram.len() + ssd.len(), pool.len());
             assert_eq!(pool.dram_len() + pool.ssd_len(), pool.len());
@@ -279,7 +281,7 @@ fn prop_demote_promote_round_trip_preserves_chain() {
         // with slack so nothing is dropped.
         let dram_cap = 1 + rng.below(len as u64 - 1) as usize;
         let mut pool = CachePool::new(PolicyKind::Lru, Some(dram_cap), Some(2 * len));
-        let chain: Vec<u64> = (0..len as u64).map(|i| 1_000 + i * 7).collect();
+        let chain: Vec<DenseBlockId> = (0..len as u32).map(|i| 1_000 + i * 7).collect();
         pool.admit_chain_reusing(&chain, 0, 0.0);
         // The tail fits in DRAM, the head demoted to SSD — but the whole
         // chain must still be resident and prefix-matchable.
@@ -308,7 +310,6 @@ fn prop_demote_promote_round_trip_preserves_chain() {
 /// / idle-sweep operations across every eviction policy.
 #[test]
 fn prop_prefix_index_agrees_with_per_node_scan() {
-    use mooncake::kvcache::PrefixIndex;
     let mut rng = Rng::new(0x1DE7);
     for round in 0..9 {
         let n_nodes = 1 + rng.below(6) as usize;
@@ -323,18 +324,24 @@ fn prop_prefix_index_agrees_with_per_node_scan() {
             let now = step as f64;
             let node = rng.below(n_nodes as u64) as usize;
             let delta = match rng.below(8) {
-                0 => pools[node].admit_block(rng.below(200), rng.below(30) as usize, now).1,
+                0 => {
+                    let b = rng.below(200) as DenseBlockId;
+                    pools[node].admit_block(b, rng.below(30) as usize, now).1
+                }
                 1 => {
-                    let chain: Vec<u64> =
-                        (0..1 + rng.below(8)).map(|_| rng.below(200)).collect();
+                    let chain: Vec<DenseBlockId> =
+                        (0..1 + rng.below(8)).map(|_| rng.below(200) as DenseBlockId).collect();
                     pools[node].insert_replica(&chain, now)
                 }
-                2 => pools[node].demote_block(rng.below(200), now).unwrap_or_default(),
+                2 => {
+                    let b = rng.below(200) as DenseBlockId;
+                    pools[node].demote_block(b, now).unwrap_or_default()
+                }
                 3 => pools[node].demote_idle(now, 1.0 + rng.f64() * 50.0),
                 _ => {
-                    let len = 1 + rng.below(16) as usize;
-                    let start = rng.below(180);
-                    let chain: Vec<u64> = (start..start + len as u64).collect();
+                    let len = 1 + rng.below(16) as u32;
+                    let start = rng.below(180) as u32;
+                    let chain: Vec<DenseBlockId> = (start..start + len).collect();
                     let reused = rng.below(len as u64 + 1) as usize;
                     pools[node].admit_chain_reusing(&chain, reused, now)
                 }
@@ -347,8 +354,8 @@ fn prop_prefix_index_agrees_with_per_node_scan() {
                 );
             }
             // The one-walk match equals every node's own scan.
-            let start = rng.below(180);
-            let probe: Vec<u64> = (start..start + 1 + rng.below(20)).collect();
+            let start = rng.below(180) as u32;
+            let probe: Vec<DenseBlockId> = (start..start + 1 + rng.below(20) as u32).collect();
             let got = idx.best_prefix(&probe);
             for (n, pool) in pools.iter().enumerate() {
                 assert_eq!(
@@ -369,7 +376,8 @@ fn prop_prefix_match_monotone() {
     let mut rng = Rng::new(0xABCD);
     for _ in 0..20 {
         let mut pool = CachePool::new(PolicyKind::Lru, Some(1_000), Some(2_000));
-        let chain: Vec<u64> = (0..rng.range(1, 40)).map(|_| rng.below(10_000)).collect();
+        let chain: Vec<DenseBlockId> =
+            (0..rng.range(1, 40)).map(|_| rng.below(10_000) as DenseBlockId).collect();
         pool.admit_chain(&chain, 0.0);
         let m1 = pool.prefix_match_blocks(&chain);
         assert!(m1 <= chain.len());
@@ -448,5 +456,104 @@ fn prop_json_roundtrip_fuzz() {
         let s = json::to_string(&v);
         let back = json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
         assert_eq!(v, back, "roundtrip failed for {s}");
+    }
+}
+
+/// Property (tentpole): interning is a stable bijection onto a dense
+/// prefix of u32 — over arbitrary hash streams (duplicates, re-arrivals,
+/// adversarial values), every hash keeps one id forever, distinct hashes
+/// never share an id, and ids are exactly `0..n` in first-appearance
+/// order.
+#[test]
+fn prop_interner_round_trips_arbitrary_hash_streams() {
+    let mut rng = Rng::new(0x1472);
+    for round in 0..10 {
+        let mut interner = BlockInterner::new();
+        let mut seen: std::collections::HashMap<u64, DenseBlockId> =
+            std::collections::HashMap::new();
+        for step in 0..5_000u64 {
+            // Mix of clustered ids (heavy re-interning) and raw 64-bit
+            // hashes (the trace-realistic case).
+            let h = match rng.below(3) {
+                0 => rng.below(200),
+                1 => 0xdead_beef_0000_0000 | rng.below(500),
+                _ => rng.next_u64(),
+            };
+            let id = interner.intern(h);
+            match seen.get(&h) {
+                Some(&prev) => assert_eq!(id, prev, "round {round} step {step}: id moved"),
+                None => {
+                    // A fresh hash gets the next dense id.
+                    assert_eq!(id as usize, seen.len(), "round {round} step {step}");
+                    seen.insert(h, id);
+                }
+            }
+            assert_eq!(interner.lookup(h), Some(id));
+            assert_eq!(interner.len(), seen.len());
+        }
+        // Injective by construction: as many distinct ids as hashes.
+        let ids: std::collections::HashSet<DenseBlockId> = seen.values().copied().collect();
+        assert_eq!(ids.len(), seen.len(), "round {round}: id collision");
+    }
+}
+
+/// Property (tentpole): the width-adaptive residency representation is
+/// invisible — a width-1 (≤64 nodes), width-2, and width-4 `PrefixIndex`
+/// all agree with `equals_rebuild_of` and with every node's own
+/// `prefix_match_with` (match, SSD-run summary, *and* SSD positions)
+/// under arbitrary op interleavings.
+#[test]
+fn prop_prefix_index_widths_agree_with_scan() {
+    use mooncake::kvcache::SsdPositions;
+    let mut rng = Rng::new(0x51D7);
+    for &n_nodes in &[3usize, 70, 200] {
+        let width = n_nodes.div_ceil(64);
+        let mut pools: Vec<CachePool> =
+            (0..n_nodes).map(|_| CachePool::new(PolicyKind::Lru, Some(24), Some(40))).collect();
+        let mut idx = PrefixIndex::new(n_nodes);
+        assert_eq!(idx.n_words(), width);
+        let mut out = Vec::new();
+        let mut pos = SsdPositions::default();
+        let mut scan_pos = Vec::new();
+        for step in 0..400u64 {
+            let now = step as f64;
+            let node = rng.below(n_nodes as u64) as usize;
+            let delta = match rng.below(6) {
+                0 => {
+                    let chain: Vec<DenseBlockId> =
+                        (0..1 + rng.below(8)).map(|_| rng.below(150) as DenseBlockId).collect();
+                    pools[node].insert_replica(&chain, now)
+                }
+                1 => {
+                    let b = rng.below(150) as DenseBlockId;
+                    pools[node].demote_block(b, now).unwrap_or_default()
+                }
+                2 => pools[node].demote_idle(now, 1.0 + rng.f64() * 40.0),
+                _ => {
+                    let len = 1 + rng.below(12) as u32;
+                    let start = rng.below(130) as u32;
+                    let chain: Vec<DenseBlockId> = (start..start + len).collect();
+                    let reused = rng.below(len as u64 + 1) as usize;
+                    pools[node].admit_chain_reusing(&chain, reused, now)
+                }
+            };
+            idx.apply(node, &delta);
+            let start = rng.below(130) as u32;
+            let probe: Vec<DenseBlockId> = (start..start + 1 + rng.below(16) as u32).collect();
+            idx.best_prefix_into(&probe, &mut out, &mut pos);
+            for (n, pool) in pools.iter().enumerate() {
+                let want = pool.prefix_match_with(&probe, &mut scan_pos);
+                assert_eq!(out[n], want, "width {width} step {step} node {n}");
+                assert_eq!(
+                    pos.node(n),
+                    &scan_pos[..],
+                    "width {width} step {step} node {n}: SSD positions"
+                );
+            }
+            if step % 100 == 0 {
+                assert!(idx.equals_rebuild_of(pools.iter()), "width {width} step {step}");
+            }
+        }
+        assert!(idx.equals_rebuild_of(pools.iter()), "width {width}: final state");
     }
 }
