@@ -32,7 +32,7 @@ fn main() {
     let mut pool = CachePool::new(PolicyKind::Lru, Some(100_000), Some(0));
     for chain in 0..2_000u32 {
         let blocks: Vec<DenseBlockId> = (chain * 40..chain * 40 + 30).collect();
-        pool.admit_chain(&blocks, chain as f64);
+        let _ = pool.admit_chain(&blocks, chain as f64);
     }
     let probe: Vec<DenseBlockId> = (40_000..40_030).collect();
     bench("prefix_match_blocks (30-block chain)", 100, 10_000, || {
@@ -45,7 +45,7 @@ fn main() {
     let mut i = 0u32;
     bench("cache admit_chain under eviction (15 blocks)", 100, 10_000, || {
         let blocks: Vec<DenseBlockId> = (i * 15..i * 15 + 15).collect();
-        lru.admit_chain(&blocks, i as f64);
+        let _ = lru.admit_chain(&blocks, i as f64);
         i += 1;
     })
     .print();
@@ -56,7 +56,7 @@ fn main() {
     let mut j = 0u32;
     bench("tiered admit_chain under demotion (15 blocks)", 100, 10_000, || {
         let blocks: Vec<DenseBlockId> = (j * 15..j * 15 + 15).collect();
-        tiered.admit_chain(&blocks, j as f64);
+        let _ = tiered.admit_chain(&blocks, j as f64);
         j += 1;
     })
     .print();
@@ -74,7 +74,7 @@ fn main() {
     let mut pfpool = PrefillPool::new(&cfg16);
     let probe512: Vec<DenseBlockId> = (0..512).collect();
     for inst in pfpool.instances.iter_mut() {
-        inst.pool.admit_chain(&probe512, 0.0);
+        let _ = inst.pool.admit_chain(&probe512, 0.0);
     }
     let idx = pfpool.build_prefix_index();
     bench("find_prefix_matches scan (16n x 512blk)", 100, 2_000, || {

@@ -94,11 +94,11 @@ fn warm_env(cfg: &SimConfig, chain: usize) -> (PrefillPool, Vec<DenseBlockId>) {
     let mut pool = PrefillPool::new(cfg);
     let probe: Vec<DenseBlockId> = (0..chain as u32).collect();
     for (node, inst) in pool.instances.iter_mut().enumerate() {
-        inst.pool.admit_chain(&probe, 0.0);
+        let _ = inst.pool.admit_chain(&probe, 0.0);
         for f in 0..2u32 {
             let base = 1_000_000 + (node as u32 * 2 + f) * chain as u32;
             let filler: Vec<DenseBlockId> = (base..base + chain as u32).collect();
-            inst.pool.admit_chain(&filler, 0.0);
+            let _ = inst.pool.admit_chain(&filler, 0.0);
         }
     }
     (pool, probe)
@@ -152,6 +152,66 @@ fn bench_decisions(cfg: &SimConfig, chain: usize, iters: usize, use_index: bool)
     iters as f64 / t.elapsed().as_secs_f64()
 }
 
+/// `allocs_per_decision` (the alloc-audit column): with the
+/// `alloc-audit` feature on, the counting global allocator measures
+/// heap allocations across a warmed steady-state rejecting loop — the
+/// runtime proof of the "allocation-free decision" claim, expected to
+/// report exactly 0.  Index-backed pricing, 8 nodes × 256 blocks (the
+/// figure is allocation *count*, so cell size is irrelevant).
+#[cfg(feature = "alloc-audit")]
+fn measure_allocs_per_decision() -> Value {
+    let mut cfg = cfg_for(8);
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    let chain = 256usize;
+    let perf = PerfModel::paper();
+    let (mut pool, probe) = warm_env(&cfg, chain);
+    let mut index = Some(pool.build_prefix_index());
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+            scratch: &mut scratch,
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..64 {
+        run_one(w as f64);
+    }
+    let guard = mooncake::util::alloc_audit::AllocGuard::new();
+    let iters = 1_000usize;
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    json::num(guard.count() as f64 / iters as f64)
+}
+
+/// Without the feature the column is `null` — schema-stable, and no
+/// allocator interposition distorts the throughput numbers.
+#[cfg(not(feature = "alloc-audit"))]
+fn measure_allocs_per_decision() -> Value {
+    Value::Null
+}
+
 /// Synthetic chain-sharing trace: `n` requests cycling over 8 base
 /// chains of `chain` blocks each, spread over 300 s.  The input length
 /// is capped below decode VRAM capacity so every request can finish —
@@ -194,7 +254,7 @@ fn bench_congested_decisions(nodes: usize, chain: usize, iters: usize, use_index
     let perf = PerfModel::paper();
     let mut pool = PrefillPool::new(&cfg);
     let probe: Vec<DenseBlockId> = (0..chain as u32).collect();
-    pool.instances[0].pool.admit_chain(&probe, 0.0);
+    let _ = pool.instances[0].pool.admit_chain(&probe, 0.0);
     for (k, &b) in probe.iter().enumerate() {
         if k % 2 == 1 {
             let _ = pool.instances[0].pool.demote_block(b, 1.0);
@@ -204,7 +264,7 @@ fn bench_congested_decisions(nodes: usize, chain: usize, iters: usize, use_index
         for f in 0..2u32 {
             let base = 1_000_000 + (node as u32 * 2 + f) * chain as u32;
             let filler: Vec<DenseBlockId> = (base..base + chain as u32).collect();
-            inst.pool.admit_chain(&filler, 0.0);
+            let _ = inst.pool.admit_chain(&filler, 0.0);
         }
     }
     let mut index = use_index.then(|| pool.build_prefix_index());
@@ -420,6 +480,12 @@ fn main() {
 
     let sweep = congestion_sweep(smoke);
 
+    let allocs_per_decision = measure_allocs_per_decision();
+    println!("allocs_per_decision: {}", json::to_string(&allocs_per_decision));
+    if let Some(a) = allocs_per_decision.as_f64() {
+        assert_eq!(a, 0.0, "steady-state decision loop allocated ({a} allocs/decision)");
+    }
+
     let target = cells.iter().find(|c| c.nodes == TARGET_NODES && c.chain == TARGET_CHAIN);
     let mut obj = vec![
         ("bench", Value::Str("sched_throughput".into())),
@@ -462,6 +528,8 @@ fn main() {
         ]),
     ));
     obj.push(("congestion_sweep", sweep));
+    // The runtime no-alloc audit (null unless built with `alloc-audit`).
+    obj.push(("allocs_per_decision", allocs_per_decision));
     if let Some(c) = target {
         obj.push((
             "target",

@@ -1,0 +1,857 @@
+//! `pallas_lint` — repo-specific static analysis for the deterministic
+//! simulation core, dependency-free (its own token-level lexer, no
+//! `syn`, runs fully offline).  Walks `rust/src/**` and enforces the
+//! invariants DESIGN.md's "Static analysis & invariant enforcement"
+//! section documents:
+//!
+//! - **no-std-hash** (R1): `std::collections::HashMap`/`HashSet` are
+//!   banned outside `util::fasthash` and a short allowlist of cold
+//!   modules — SipHash's per-process random seed would make iteration
+//!   order (and anything derived from it) nondeterministic, and the
+//!   hot path pays its hashing cost.
+//! - **no-wallclock** (R2): `Instant`/`SystemTime` are banned in the
+//!   simulation-side modules (`sim`, `conductor`, `costmodel`,
+//!   `kvcache`, `resource`) — simulated time is the only clock there.
+//! - **hot-no-alloc** (R3): a function annotated `lint: hot` (as a
+//!   `//`-comment directive on the line(s) above its `fn`, attributes
+//!   may intervene) must not contain allocating constructs:
+//!   `Vec::new`, `vec![`, `.clone()`, `.collect()`, `.to_vec()`,
+//!   `format!`, `Box::new`, `String::from`.  `.resize()` is
+//!   deliberately *not* banned — growing a warmed scratch buffer in
+//!   place is the idiom these functions use instead of allocating.
+//! - **unordered-iter** (R4): iterating a `FastMap`/`FastSet` (via
+//!   `.keys()`, `.values()`, `.iter()`, …) in `sim`, `conductor`, or
+//!   `metrics` requires an explicit allow — map order is
+//!   deterministic per build but arbitrary, so it must never reach an
+//!   observable result without a re-sort.  Detection is a documented
+//!   heuristic: bindings declared `name: FastMap<…>`/`FastSet<…>` are
+//!   tracked by name and their order-exposing method calls flagged
+//!   (direct `for x in &map` loops are not caught — keep those out of
+//!   scoped modules or name the binding).
+//! - **must-apply-delta** (R5): every `fn` whose return type mentions
+//!   `TierDelta` must carry `#[must_use]` (the pool mutators feed the
+//!   global prefix index; a dropped delta silently diverges it), and
+//!   `sim`/`conductor` code must not discard a mutator's delta with
+//!   `let _ =`.  The call-site half is a same-line heuristic — the
+//!   compiler's `#[must_use]` is the exhaustive complement.
+//!
+//! Escape hatch: `lint: allow(rule) — reason` as a `//`-comment on the
+//! violating line or the line directly above it.  The reason is
+//! mandatory; an allow without one is itself a violation.  String
+//! literals, comments, and `#[cfg(test)] mod` bodies are exempt from
+//! all rules.
+//!
+//! Output: a human-readable line per violation, a machine-readable
+//! `LINT_report.json` at the repo root, exit 1 on any violation (or
+//! reason-less allow), exit 2 on I/O errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process;
+
+use mooncake::util::json::{self, Value};
+
+const RULES: [&str; 5] =
+    ["no-std-hash", "no-wallclock", "hot-no-alloc", "unordered-iter", "must-apply-delta"];
+
+/// R1 — files allowed to use std hash containers: offline analysis and
+/// plumbing that never feeds the deterministic decision path, plus the
+/// one module that wraps the containers behind a fixed hasher.
+const R1_ALLOWLIST: [&str; 5] =
+    ["util/fasthash.rs", "trace/stats.rs", "trace/gen.rs", "engine/mod.rs", "baseline/mod.rs"];
+
+/// R2 — modules where simulated time is the only legal clock.
+const R2_SCOPE: [&str; 5] = ["sim/", "conductor/", "costmodel/", "kvcache/", "resource/"];
+
+/// R3 — allocating constructs banned inside `lint: hot` functions.
+const FORBIDDEN_IN_HOT: [&str; 8] = [
+    "Vec::new",
+    "vec![",
+    ".clone()",
+    ".collect()",
+    ".to_vec()",
+    "format!",
+    "Box::new",
+    "String::from",
+];
+
+/// R4 — modules where map iteration order must not leak, and the
+/// order-exposing methods that flag an iteration.
+const R4_SCOPE: [&str; 3] = ["sim/", "conductor/", "metrics/"];
+const R4_ITER_METHODS: [&str; 7] =
+    ["keys", "values", "iter", "iter_mut", "values_mut", "drain", "retain"];
+
+/// R5 — TierDelta-returning pool mutators whose result must reach the
+/// prefix index (or at least not be pattern-discarded).
+const R5_SCOPE: [&str; 2] = ["sim/", "conductor/"];
+const R5_MUTATORS: [&str; 5] =
+    ["admit_chain", "admit_block", "insert_replica", "demote_block", "demote_idle"];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+#[derive(Debug)]
+struct AllowRec {
+    line: usize,
+    rule: String,
+    reason: String,
+}
+
+#[derive(Debug, Default)]
+struct FileResult {
+    violations: Vec<(usize, &'static str, String)>,
+    allows: Vec<AllowRec>,
+    hot_fns: usize,
+}
+
+fn main() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    let mut files = Vec::new();
+    if let Err(e) = walk(root, &mut files) {
+        eprintln!("pallas_lint: cannot walk {}: {e}", root.display());
+        process::exit(2);
+    }
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut allow_entries: Vec<Value> = Vec::new();
+    let mut hot_fns = 0usize;
+    for path in &files {
+        let rel = path.strip_prefix(root).unwrap().to_string_lossy().replace('\\', "/");
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("pallas_lint: cannot read {}: {e}", path.display());
+                process::exit(2);
+            }
+        };
+        let res = analyze(&rel, &src);
+        hot_fns += res.hot_fns;
+        for (line, rule, msg) in res.violations {
+            violations.push(Violation { file: rel.clone(), line, rule, msg });
+        }
+        for a in res.allows {
+            allow_entries.push(json::obj(vec![
+                ("file", Value::Str(rel.clone())),
+                ("line", json::num(a.line as f64)),
+                ("rule", Value::Str(a.rule)),
+                ("reason", Value::Str(a.reason)),
+            ]));
+        }
+    }
+
+    let ok = violations.is_empty();
+    let report = json::obj(vec![
+        ("files_scanned", json::num(files.len() as f64)),
+        ("hot_fns", json::num(hot_fns as f64)),
+        ("rules", Value::Arr(RULES.iter().map(|r| Value::Str(r.to_string())).collect())),
+        ("allows", Value::Arr(allow_entries.clone())),
+        (
+            "violations",
+            Value::Arr(
+                violations
+                    .iter()
+                    .map(|v| {
+                        json::obj(vec![
+                            ("file", Value::Str(v.file.clone())),
+                            ("line", json::num(v.line as f64)),
+                            ("rule", Value::Str(v.rule.to_string())),
+                            ("msg", Value::Str(v.msg.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ok", Value::Bool(ok)),
+    ]);
+    let report_path = concat!(env!("CARGO_MANIFEST_DIR"), "/LINT_report.json");
+    if let Err(e) = fs::write(report_path, json::to_string(&report) + "\n") {
+        eprintln!("pallas_lint: cannot write {report_path}: {e}");
+        process::exit(2);
+    }
+
+    for v in &violations {
+        eprintln!("rust/src/{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    if !ok {
+        eprintln!("pallas_lint: {} violation(s) across {} files", violations.len(), files.len());
+        process::exit(1);
+    }
+    println!(
+        "pallas_lint: {} files, {} hot fns, {} allows, 0 violations",
+        files.len(),
+        hot_fns,
+        allow_entries.len()
+    );
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Source with comments, string/char literals masked out (replaced by
+/// spaces, line structure preserved), plus the `//`-comment texts by
+/// 1-based line for directive parsing.
+struct Lexed {
+    code: String,
+    comments: Vec<(usize, String)>,
+}
+
+fn strip(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut code = String::with_capacity(src.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < cs.len() {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        match c {
+            '\n' => {
+                code.push('\n');
+                line += 1;
+                i += 1;
+            }
+            '/' if next == Some('/') => {
+                let start = i + 2;
+                let mut j = start;
+                while j < cs.len() && cs[j] != '\n' {
+                    j += 1;
+                }
+                comments.push((line, cs[start..j].iter().collect()));
+                for _ in i..j {
+                    code.push(' ');
+                }
+                i = j;
+            }
+            '/' if next == Some('*') => {
+                let mut depth = 1u32;
+                code.push(' ');
+                code.push(' ');
+                let mut j = i + 2;
+                while j < cs.len() && depth > 0 {
+                    if cs[j] == '*' && cs.get(j + 1).copied() == Some('/') {
+                        depth -= 1;
+                        code.push(' ');
+                        code.push(' ');
+                        j += 2;
+                    } else if cs[j] == '/' && cs.get(j + 1).copied() == Some('*') {
+                        depth += 1;
+                        code.push(' ');
+                        code.push(' ');
+                        j += 2;
+                    } else {
+                        if cs[j] == '\n' {
+                            code.push('\n');
+                            line += 1;
+                        } else {
+                            code.push(' ');
+                        }
+                        j += 1;
+                    }
+                }
+                i = j;
+            }
+            '"' => {
+                code.push(' ');
+                let mut j = i + 1;
+                while j < cs.len() {
+                    match cs[j] {
+                        '\\' => {
+                            code.push(' ');
+                            j += 1;
+                            if j < cs.len() {
+                                if cs[j] == '\n' {
+                                    code.push('\n');
+                                    line += 1;
+                                } else {
+                                    code.push(' ');
+                                }
+                                j += 1;
+                            }
+                        }
+                        '"' => {
+                            code.push(' ');
+                            j += 1;
+                            break;
+                        }
+                        '\n' => {
+                            code.push('\n');
+                            line += 1;
+                            j += 1;
+                        }
+                        _ => {
+                            code.push(' ');
+                            j += 1;
+                        }
+                    }
+                }
+                i = j;
+            }
+            'r' if (next == Some('"') || next == Some('#'))
+                && !code.ends_with(|p: char| p.is_alphanumeric() || p == '_') =>
+            {
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while cs.get(j).copied() == Some('#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if cs.get(j).copied() == Some('"') {
+                    for _ in 0..hashes + 2 {
+                        code.push(' ');
+                    }
+                    j += 1;
+                    while j < cs.len() {
+                        if cs[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && cs.get(j + 1 + k).copied() == Some('#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                for _ in 0..hashes + 1 {
+                                    code.push(' ');
+                                }
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        if cs[j] == '\n' {
+                            code.push('\n');
+                            line += 1;
+                        } else {
+                            code.push(' ');
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                } else {
+                    // raw identifier (r#type) — plain code
+                    code.push('r');
+                    i += 1;
+                }
+            }
+            '\'' => {
+                let n1 = cs.get(i + 1).copied();
+                let n2 = cs.get(i + 2).copied();
+                if n1 == Some('\\') {
+                    // escaped char literal — scan to the closing quote
+                    code.push(' ');
+                    let mut j = i + 1;
+                    while j < cs.len() && cs[j] != '\'' {
+                        code.push(' ');
+                        if cs[j] == '\\' && j + 1 < cs.len() {
+                            code.push(' ');
+                            j += 2;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    if j < cs.len() {
+                        code.push(' ');
+                        j += 1;
+                    }
+                    i = j;
+                } else if n2 == Some('\'') && n1 != Some('\'') {
+                    // 'x' char literal (three chars)
+                    code.push(' ');
+                    code.push(' ');
+                    code.push(' ');
+                    i += 3;
+                } else {
+                    // lifetime or loop label
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    Lexed { code, comments }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All occurrences of `pat` in `code`, word-bounded on whichever ends of
+/// the pattern are identifier characters.
+fn find_word(code: &str, pat: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let pb = pat.as_bytes();
+    let first_ident = is_ident(pb[0]);
+    let last_ident = is_ident(*pb.last().unwrap());
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(pat) {
+        let at = from + p;
+        let end = at + pat.len();
+        let before_ok = !first_ident || at == 0 || !is_ident(b[at - 1]);
+        let after_ok = !last_ident || end >= b.len() || !is_ident(b[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+/// 1-based line of a byte offset, given the line-start offsets.
+fn line_of(line_starts: &[usize], off: usize) -> usize {
+    match line_starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+fn match_brace(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+fn match_paren(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'(' {
+            depth += 1;
+        } else if c == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+fn analyze(rel: &str, src: &str) -> FileResult {
+    let mut res = FileResult::default();
+    let lexed = strip(src);
+    let code = lexed.code.as_str();
+    let b = code.as_bytes();
+    let mut line_starts = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            line_starts.push(i + 1);
+        }
+    }
+    let lines: Vec<&str> = code.lines().collect();
+
+    // Directives.
+    let mut hots: Vec<usize> = Vec::new();
+    let mut allows: Vec<AllowRec> = Vec::new();
+    for (cline, text) in &lexed.comments {
+        let t = text.trim();
+        let Some(rest) = t.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot" {
+            hots.push(*cline);
+            continue;
+        }
+        if let Some(inner) = rest.strip_prefix("allow(") {
+            let Some(close) = inner.find(')') else {
+                res.violations.push((
+                    *cline,
+                    "lint-directive",
+                    "malformed lint allow — expected allow(rule)".to_string(),
+                ));
+                continue;
+            };
+            let rule = inner[..close].trim().to_string();
+            if !RULES.contains(&rule.as_str()) {
+                res.violations.push((
+                    *cline,
+                    "lint-directive",
+                    format!("unknown rule '{rule}' in lint allow"),
+                ));
+                continue;
+            }
+            let reason = inner[close + 1..]
+                .trim_start_matches(|c: char| {
+                    c.is_whitespace() || c == '—' || c == '–' || c == '-' || c == ':'
+                })
+                .trim()
+                .to_string();
+            if reason.is_empty() {
+                res.violations.push((
+                    *cline,
+                    "lint-directive",
+                    format!("allow({rule}) without a reason — every escape hatch must say why"),
+                ));
+                continue;
+            }
+            allows.push(AllowRec { line: *cline, rule, reason });
+            continue;
+        }
+        res.violations.push((
+            *cline,
+            "lint-directive",
+            format!("unknown lint directive '{rest}'"),
+        ));
+    }
+
+    // `#[cfg(test)] mod …` bodies are exempt from every rule.
+    let mut test_regions: Vec<(usize, usize)> = Vec::new();
+    for at in find_word(code, "#[cfg(test)]") {
+        let Some(m) = find_word(&code[at..], "mod").first().map(|p| at + p) else { continue };
+        let Some(open) = code[m..].find('{').map(|p| m + p) else { continue };
+        let Some(close) = match_brace(b, open) else { continue };
+        test_regions.push((line_of(&line_starts, at), line_of(&line_starts, close)));
+    }
+    let in_test =
+        |line: usize| test_regions.iter().any(|&(lo, hi)| line >= lo && line <= hi);
+    let allowed = |allows: &[AllowRec], rule: &str, line: usize| {
+        allows.iter().any(|a| a.rule == rule && (a.line == line || a.line + 1 == line))
+    };
+
+    // R1 — no-std-hash.
+    if !R1_ALLOWLIST.contains(&rel) {
+        for pat in ["HashMap", "HashSet"] {
+            for at in find_word(code, pat) {
+                let line = line_of(&line_starts, at);
+                if !in_test(line) && !allowed(&allows, "no-std-hash", line) {
+                    res.violations.push((
+                        line,
+                        "no-std-hash",
+                        format!(
+                            "std {pat} is banned on the deterministic side — use \
+                             util::fasthash::Fast* (or BTreeMap for cold ordered data)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // R2 — no-wallclock.
+    if R2_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        for pat in ["Instant", "SystemTime"] {
+            for at in find_word(code, pat) {
+                let line = line_of(&line_starts, at);
+                if !in_test(line) && !allowed(&allows, "no-wallclock", line) {
+                    res.violations.push((
+                        line,
+                        "no-wallclock",
+                        format!("{pat} in a simulation module — simulated time is the only clock"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // R3 — hot-no-alloc over each `lint: hot` function body.
+    let fn_tokens = find_word(code, "fn");
+    for &hline in &hots {
+        let from = line_starts.get(hline).copied().unwrap_or(code.len());
+        let Some(&fnat) = fn_tokens.iter().find(|&&p| p >= from) else {
+            res.violations.push((
+                hline,
+                "hot-no-alloc",
+                "lint hot directive with no following fn".to_string(),
+            ));
+            continue;
+        };
+        let Some(open) = code[fnat..].find('{').map(|p| fnat + p) else {
+            res.violations.push((
+                hline,
+                "hot-no-alloc",
+                "lint hot directive on a bodyless fn".to_string(),
+            ));
+            continue;
+        };
+        let Some(close) = match_brace(b, open) else {
+            res.violations.push((hline, "hot-no-alloc", "unbalanced braces".to_string()));
+            continue;
+        };
+        res.hot_fns += 1;
+        for pat in FORBIDDEN_IN_HOT {
+            for p in find_word(code, pat) {
+                if p > open && p < close {
+                    let line = line_of(&line_starts, p);
+                    if !allowed(&allows, "hot-no-alloc", line) {
+                        res.violations.push((
+                            line,
+                            "hot-no-alloc",
+                            format!("`{pat}` inside a hot function — reuse a warmed scratch"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // R4 — unordered-iter: Fast* bindings whose order-exposing methods
+    // are called.
+    if R4_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        let mut names: Vec<String> = Vec::new();
+        for pat in ["FastMap", "FastSet"] {
+            for at in find_word(code, pat) {
+                let mut i = at;
+                while i > 0 && b[i - 1].is_ascii_whitespace() {
+                    i -= 1;
+                }
+                if i == 0 || b[i - 1] != b':' {
+                    continue;
+                }
+                i -= 1;
+                if i > 0 && b[i - 1] == b':' {
+                    continue; // a `::` path, not a binding
+                }
+                while i > 0 && b[i - 1].is_ascii_whitespace() {
+                    i -= 1;
+                }
+                let end = i;
+                while i > 0 && is_ident(b[i - 1]) {
+                    i -= 1;
+                }
+                if i < end {
+                    let name = code[i..end].to_string();
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+        for name in &names {
+            for at in find_word(code, name) {
+                let mut i = at + name.len();
+                while i < b.len() && b[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                if i >= b.len() || b[i] != b'.' {
+                    continue;
+                }
+                i += 1;
+                while i < b.len() && b[i].is_ascii_whitespace() {
+                    i += 1;
+                }
+                let mstart = i;
+                while i < b.len() && is_ident(b[i]) {
+                    i += 1;
+                }
+                let method = &code[mstart..i];
+                if i < b.len() && b[i] == b'(' && R4_ITER_METHODS.contains(&method) {
+                    let line = line_of(&line_starts, mstart);
+                    if !in_test(line) && !allowed(&allows, "unordered-iter", line) {
+                        res.violations.push((
+                            line,
+                            "unordered-iter",
+                            format!(
+                                "{name}.{method}() iterates a Fast* container — map order \
+                                 must not reach an observable result without a re-sort"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // R5a — every TierDelta-returning fn carries #[must_use].
+    for &fnat in &fn_tokens {
+        let line = line_of(&line_starts, fnat);
+        if in_test(line) {
+            continue;
+        }
+        let Some(open) = code[fnat..].find('(').map(|p| fnat + p) else { continue };
+        let Some(close) = match_paren(b, open) else { continue };
+        let mut j = close + 1;
+        while j < b.len() && b[j] != b'{' && b[j] != b';' {
+            j += 1;
+        }
+        if !code[close + 1..j].contains("TierDelta") {
+            continue;
+        }
+        if allowed(&allows, "must-apply-delta", line) {
+            continue;
+        }
+        let li = line - 1;
+        let mut ok = code[line_starts[li]..fnat].contains("#[must_use");
+        let mut k = li;
+        while !ok && k > 0 {
+            k -= 1;
+            let t = lines[k].trim();
+            if t.contains("#[must_use") {
+                ok = true;
+            } else if !(t.is_empty() || t.starts_with("#[")) {
+                break;
+            }
+        }
+        if !ok {
+            res.violations.push((
+                line,
+                "must-apply-delta",
+                "fn returns a TierDelta without #[must_use] — a dropped delta silently \
+                 diverges the prefix index"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // R5b — no pattern-discarded deltas where a live index may exist.
+    if R5_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        for (i, lt) in lines.iter().enumerate() {
+            let line = i + 1;
+            if in_test(line) || allowed(&allows, "must-apply-delta", line) {
+                continue;
+            }
+            if lt.contains("let _ =") && R5_MUTATORS.iter().any(|m| lt.contains(m)) {
+                res.violations.push((
+                    line,
+                    "must-apply-delta",
+                    "mutator delta discarded with `let _ =` — apply it to the prefix index"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    res.allows = allows;
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_masks_strings_comments_and_chars() {
+        let src = "let a = \"Vec::new\"; // Vec::new\nlet b = 'x'; /* vec![ */ let c = 1;\n";
+        let l = strip(src);
+        assert!(!l.code.contains("Vec::new"));
+        assert!(!l.code.contains("vec!["));
+        assert!(l.code.contains("let a ="));
+        assert!(l.code.contains("let c = 1;"));
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].0, 1);
+        // Line structure is preserved through the masking.
+        assert_eq!(l.code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn strip_keeps_lifetimes_and_masks_raw_strings() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet r = r#\"HashMap\"#;\n";
+        let l = strip(src);
+        assert!(l.code.contains("<'a>"));
+        assert!(!l.code.contains("HashMap"));
+    }
+
+    #[test]
+    fn hot_fn_alloc_is_flagged_and_allow_excuses_it() {
+        let bad = "// lint: hot\nfn f() {\n    let v = Vec::new();\n    drop(v);\n}\n";
+        let r = analyze("sim/x.rs", bad);
+        assert_eq!(r.hot_fns, 1);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].1, "hot-no-alloc");
+        assert_eq!(r.violations[0].0, 3);
+
+        let ok = "// lint: hot\nfn f() {\n    // lint: allow(hot-no-alloc) — test fixture\n    \
+                  let v = Vec::new();\n    drop(v);\n}\n";
+        let r = analyze("sim/x.rs", ok);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.allows.len(), 1);
+    }
+
+    #[test]
+    fn reasonless_allow_is_a_violation() {
+        let src = "// lint: allow(hot-no-alloc)\nfn f() {}\n";
+        let r = analyze("sim/x.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        assert!(r.violations[0].2.contains("without a reason"));
+    }
+
+    #[test]
+    fn std_hash_and_wallclock_scopes() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        let r = analyze("kvcache/x.rs", src);
+        let rules: Vec<&str> = r.violations.iter().map(|v| v.1).collect();
+        assert!(rules.contains(&"no-std-hash"));
+        assert!(rules.contains(&"no-wallclock"));
+        // Outside both scopes (and on the R1 allowlist) the same source
+        // is clean.
+        let r = analyze("engine/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn g() { \
+                   let _ = HashMap::<u32, u32>::new(); }\n}\n";
+        let r = analyze("sim/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn unordered_iter_follows_chains_across_lines() {
+        let src = "struct S { heat: FastMap<u32, f64> }\nimpl S {\n    fn f(&self) -> usize {\n  \
+                   self.heat\n            .keys()\n            .count()\n    }\n}\n";
+        let r = analyze("conductor/x.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].1, "unordered-iter");
+        // Order-safe probes on the same binding are not flagged.
+        let src = "struct S { heat: FastMap<u32, f64> }\nimpl S {\n    fn f(&self) -> bool { \
+                   self.heat.contains_key(&1) }\n}\n";
+        let r = analyze("conductor/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn tierdelta_fns_require_must_use() {
+        let bad = "impl P {\n    pub fn admit(&mut self) -> TierDelta {\n        \
+                   TierDelta::default()\n    }\n}\n";
+        let r = analyze("kvcache/x.rs", bad);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].1, "must-apply-delta");
+
+        let good = "impl P {\n    #[must_use = \"apply it\"]\n    pub fn admit(&mut self) -> \
+                    TierDelta {\n        TierDelta::default()\n    }\n}\n";
+        let r = analyze("kvcache/x.rs", good);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn discarded_delta_in_scope_is_flagged() {
+        let src = "fn f(p: &mut CachePool) {\n    let _ = p.admit_chain(&[1], 0.0);\n}\n";
+        let r = analyze("sim/x.rs", src);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].1, "must-apply-delta");
+        // Out of scope (kvcache implements the mutators; only the
+        // index-holding layers are checked) the same line is fine.
+        let r = analyze("kvcache/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        let src = "// lint: hot\nfn f() { let v = SmallVec::newish(); drop(v); }\n";
+        let r = analyze("sim/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+}

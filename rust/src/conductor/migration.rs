@@ -57,6 +57,7 @@ impl HeatTracker {
     pub fn hot_blocks(&self, now: TimeMs, threshold: f64) -> Vec<(DenseBlockId, f64)> {
         let mut v: Vec<(DenseBlockId, f64)> = self
             .heat
+            // lint: allow(unordered-iter) — candidates are fully re-sorted by (heat, id) below, so map order never escapes
             .keys()
             .map(|&b| (b, self.decayed(b, now)))
             .filter(|(_, h)| *h >= threshold)
@@ -181,7 +182,7 @@ mod tests {
 
         // Block 7 lives only on instance 0, which is congested.  The
         // planner reads holders off the index, not the pools.
-        pool.instances[0].pool.insert_replica(&[7], 0.0);
+        let _ = pool.instances[0].pool.insert_replica(&[7], 0.0);
         let idx = pool.build_prefix_index();
         assert_eq!(idx.holders(7), vec![0]);
         for _ in 0..100 {
@@ -218,7 +219,7 @@ mod tests {
         let mut res = Resources::new(&cfg, &perf);
         let mut tracker = HeatTracker::new(1e9);
 
-        pool.instances[0].pool.insert_replica(&[7], 0.0);
+        let _ = pool.instances[0].pool.insert_replica(&[7], 0.0);
         let idx = pool.build_prefix_index();
         for _ in 0..100 {
             tracker.touch(7, 0.0);

@@ -185,6 +185,7 @@ pub struct ConductorStats {
 /// of which `ssd_blocks` must be staged up from the SSD tier, and an
 /// optional remote fetch first.  Allocation-free: the CPP group forms in
 /// the scratch buffer and the returned estimate is plain `Copy` data.
+// lint: hot
 fn estimate_for(
     ctx: &mut Ctx,
     req: &SchedRequest,
@@ -237,6 +238,7 @@ struct PrefillChoice {
 /// pure-DRAM prefix and recompute the rest.  This is the
 /// load-vs-recompute half of the three-way prefix decision — the third
 /// option (recompute everything) is what a zero match degenerates to.
+// lint: hot
 fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> PrefillChoice {
     let full = estimate_for(ctx, req, i, m.blocks, m.ssd_blocks, None);
     let mut choice = PrefillChoice {
@@ -263,6 +265,7 @@ fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> Pr
 /// Per-pool scan form of `FindBestPrefixMatch` (the explicit
 /// `use_prefix_index: false` path): same outputs as the index walk —
 /// matches, SSD-run summaries, and per-node SSD positions.
+// lint: hot
 fn scan_into(
     prefill: &PrefillPool,
     hash_ids: &[DenseBlockId],
@@ -271,9 +274,18 @@ fn scan_into(
 ) {
     out.clear();
     ssd_pos.reset(prefill.len());
+    // Each pool probe collects its SSD positions into the scratch the
+    // `SsdPositions` loans out, then stages them under the node — the
+    // flat buffer has no per-node tails to hand out as `&mut Vec`s.
+    let mut probe = ssd_pos.take_scratch();
     for (n, inst) in prefill.instances.iter().enumerate() {
-        out.push(inst.pool.prefix_match_with(hash_ids, ssd_pos.list_mut(n)));
+        out.push(inst.pool.prefix_match_with(hash_ids, &mut probe));
+        for &p in &probe {
+            ssd_pos.push(n, p);
+        }
     }
+    ssd_pos.put_scratch(probe);
+    ssd_pos.seal();
 }
 
 /// `FindBestPrefixMatch` over every instance, tier-aware: one O(chain)
@@ -282,6 +294,7 @@ fn scan_into(
 /// pure optimization, and a debug build cross-checks every call
 /// (matches *and* the carried SSD positions).  `out`/`ssd_pos` are
 /// caller-owned scratch, cleared here.
+// lint: hot
 pub fn find_prefix_matches_into(
     prefill: &PrefillPool,
     index: Option<&PrefixIndex>,
@@ -294,6 +307,7 @@ pub fn find_prefix_matches_into(
             idx.best_prefix_into(hash_ids, out, ssd_pos);
             #[cfg(debug_assertions)]
             {
+                // lint: allow(hot-no-alloc) — debug-only walk-vs-scan cross-check, compiled out of release
                 let mut want = Vec::new();
                 let mut want_pos = SsdPositions::default();
                 scan_into(prefill, hash_ids, &mut want, &mut want_pos);
@@ -322,6 +336,7 @@ pub fn find_prefix_matches(
 
 /// Algorithm 1 (lines 1–23): choose the prefill instance, including the
 /// tier-aware reuse-from-DRAM / load-from-SSD / recompute decision.
+// lint: hot
 fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     let n = ctx.prefill.len();
     // The walk's outputs move out of the scratch for the decision (the
@@ -529,6 +544,7 @@ pub fn select_decode(
 /// stats.  The *decode* side is only probed here; the Sim owns
 /// decode state transitions, and the Sim's `PrefillStart`/`PrefillDone`
 /// events execute the admitted job.
+// lint: hot
 pub fn schedule(
     ctx: &mut Ctx,
     req: &SchedRequest,
@@ -745,6 +761,7 @@ pub fn schedule(
     }
 
     Ok(Placement {
+        // lint: allow(hot-no-alloc) — accept path materializes one Placement per admitted request; the steady-state reject loop returns above
         prefill_group: ctx.scratch.best_group.clone(),
         job,
         decode: d,
@@ -1085,11 +1102,11 @@ mod tests {
         let (cfg, _perf, mut prefill, _decodes, _res, _rng, _sc) =
             setup(SchedulingPolicy::KvCacheCentric);
         let chain: Vec<DenseBlockId> = (500..516).collect();
-        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        let _ = prefill.instances[0].pool.admit_chain(&chain, 0.0);
         for b in [502, 503, 509] {
             assert!(prefill.instances[0].pool.demote_block(b, 1.0).is_some());
         }
-        prefill.instances[1].pool.admit_chain(&chain[..6], 0.0);
+        let _ = prefill.instances[1].pool.admit_chain(&chain[..6], 0.0);
         assert!(prefill.instances[1].pool.demote_block(504, 1.0).is_some());
         let idx = prefill.build_prefix_index();
 
@@ -1158,11 +1175,11 @@ mod tests {
         // slower than staging locally (which overlaps the fetch), so the
         // exact accounting must flip the decision to the stage plan.
         let (cfg, perf, mut prefill, decodes, mut res, mut rng, mut sc) = mk();
-        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        let _ = prefill.instances[0].pool.admit_chain(&chain, 0.0);
         for b in [chain[2], chain[3], chain[6]] {
             assert!(prefill.instances[0].pool.demote_block(b, 1.0).is_some());
         }
-        prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
+        let _ = prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
         for b in [chain[1], chain[2], chain[3]] {
             assert!(prefill.instances[1].pool.demote_block(b, 1.0).is_some());
         }
@@ -1181,9 +1198,9 @@ mod tests {
         // DRAM (only a gap block on SSD) — the wire refresh stays cheap
         // and must win, with exactly the gap block staged at the source.
         let (cfg, perf, mut prefill, decodes, mut res, mut rng, mut sc) = mk();
-        prefill.instances[0].pool.admit_chain(&chain, 0.0);
+        let _ = prefill.instances[0].pool.admit_chain(&chain, 0.0);
         assert!(prefill.instances[0].pool.demote_block(chain[6], 1.0).is_some());
-        prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
+        let _ = prefill.instances[1].pool.admit_chain(&chain[..4], 0.0);
         for b in [chain[1], chain[2], chain[3]] {
             assert!(prefill.instances[1].pool.demote_block(b, 1.0).is_some());
         }

@@ -2,6 +2,7 @@
 //! engine.  Every §8 experiment is a point in this config space.
 
 use crate::kvcache::PolicyKind;
+use crate::verify::Paranoia;
 
 /// Latency SLOs (§2): absolute limits derived per-experiment from the
 /// unloaded baseline (×10 for TTFT, ×5 for TBT in §8.1; fixed 30 s / 0.1 s
@@ -102,6 +103,12 @@ pub struct SimConfig {
     /// should relieve.  `None` = off (the default — destination choice
     /// ignores rx backlogs, yesterday's behavior).
     pub replication_rx_backlog_cap_ms: Option<f64>,
+    /// Runtime self-verification level (see [`crate::verify::Paranoia`]):
+    /// gates the periodic index-vs-rebuild and end-of-run consistency
+    /// checks.  `Debug` (the default) preserves the historical
+    /// `debug_assert!` behavior; `Full` turns them on in release builds
+    /// too (long replays can afford one rebuild per 1024 events).
+    pub paranoia: Paranoia,
     pub seed: u64,
 }
 
@@ -127,6 +134,7 @@ impl Default for SimConfig {
             ssd_write_bw: None,
             demote_after_ms: None,
             replication_rx_backlog_cap_ms: None,
+            paranoia: Paranoia::default(),
             seed: 42,
         }
     }

@@ -172,6 +172,8 @@ impl PrefillEstimate {
 /// destination's rx queue.  Read-only and allocation-free: probes the
 /// prefill queues and every resource bank without mutating any of them.
 #[allow(clippy::too_many_arguments)]
+#[must_use = "a discarded estimate means the probe's cost never reached the decision"]
+// lint: hot
 pub fn estimate_prefill(
     perf: &PerfModel,
     cfg: &SimConfig,

@@ -188,6 +188,7 @@ impl PrefixIndex {
     /// hash probe per (node, block) pair.  `out` and `ssd_pos` are
     /// caller-owned scratch (cleared here), so steady-state decisions
     /// allocate nothing.
+    // lint: hot
     pub fn best_prefix_into(
         &self,
         hash_ids: &[DenseBlockId],
@@ -275,6 +276,7 @@ impl PrefixIndex {
         for m in out.iter_mut() {
             m.dram_blocks = m.blocks - m.ssd_blocks;
         }
+        ssd_pos.seal();
     }
 
     /// Allocating convenience wrapper around [`Self::best_prefix_into`].

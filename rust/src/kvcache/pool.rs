@@ -157,36 +157,83 @@ impl Default for TierMatch {
 /// of the one prefix walk (`PrefixIndex::best_prefix_into` or the
 /// per-pool scan) so the §6.2 balancing branch prices wire-refreshing a
 /// candidate's SSD copies without re-probing any tier per head block.
-/// Reused scratch: `reset` clears lists in place, so the steady-state
-/// decision loop stops allocating once warmed.
+///
+/// Flat layout: producers `push(node, pos)` in any node order into one
+/// staging vector, then `seal()` groups the pairs into a single flat
+/// buffer with per-node offset bounds — a stable counting sort, so
+/// within a node positions keep push order (both fill paths push them
+/// ascending).  One buffer plus one bounds vector replace up to
+/// `PrefixIndex::MAX_NODES` tiny per-node Vecs, and everything clears in
+/// place, so the steady-state decision loop stops allocating once
+/// warmed.
 #[derive(Debug, Default)]
 pub struct SsdPositions {
-    lists: Vec<Vec<u32>>,
+    /// Staged `(node, position)` pairs in push order.
+    pairs: Vec<(u32, u32)>,
+    /// During staging, `bounds[n + 1]` counts node `n`'s pushes; after
+    /// `seal`, `bounds[n]..bounds[n + 1]` spans node `n` in `buf`.
+    bounds: Vec<u32>,
+    /// Sealed positions, grouped by node.
+    buf: Vec<u32>,
+    /// Counting-sort write cursors (seal-time scratch).
+    cursors: Vec<u32>,
+    /// Reusable per-probe scratch loaned to scan-side callers (see
+    /// [`Self::take_scratch`]), kept here so they need no extra state.
+    scratch: Vec<u32>,
 }
 
 impl SsdPositions {
-    /// Clear (and, first time, grow) the per-node lists.
+    /// Clear (and, first time, grow) to an empty — and trivially
+    /// *sealed* — state for `n_nodes` nodes.
+    // lint: hot
     pub fn reset(&mut self, n_nodes: usize) {
-        if self.lists.len() < n_nodes {
-            self.lists.resize_with(n_nodes, Vec::new);
-        }
-        for l in &mut self.lists[..n_nodes] {
-            l.clear();
-        }
+        self.pairs.clear();
+        self.buf.clear();
+        self.bounds.clear();
+        self.bounds.resize(n_nodes + 1, 0);
     }
 
+    /// Stage one SSD position for `node`.  Positions become readable
+    /// only after [`Self::seal`].
+    // lint: hot
     #[inline]
     pub fn push(&mut self, node: usize, pos: u32) {
-        self.lists[node].push(pos);
+        self.bounds[node + 1] += 1;
+        self.pairs.push((node as u32, pos));
+    }
+
+    /// Group the staged pairs by node.  Call once after the last `push`
+    /// and before any [`Self::node`] read.
+    // lint: hot
+    pub fn seal(&mut self) {
+        let n_nodes = self.bounds.len().saturating_sub(1);
+        for n in 1..=n_nodes {
+            self.bounds[n] += self.bounds[n - 1];
+        }
+        self.buf.resize(self.pairs.len(), 0);
+        self.cursors.clear();
+        self.cursors.extend_from_slice(&self.bounds[..n_nodes]);
+        for &(node, pos) in &self.pairs {
+            let c = &mut self.cursors[node as usize];
+            self.buf[*c as usize] = pos;
+            *c += 1;
+        }
     }
 
     /// Ascending SSD positions within `node`'s matched head.
     pub fn node(&self, node: usize) -> &[u32] {
-        &self.lists[node]
+        debug_assert_eq!(self.buf.len(), self.pairs.len(), "SsdPositions read before seal");
+        &self.buf[self.bounds[node] as usize..self.bounds[node + 1] as usize]
     }
 
-    pub fn list_mut(&mut self, node: usize) -> &mut Vec<u32> {
-        &mut self.lists[node]
+    /// Borrow the reusable probe scratch (empty Vec swapped out; return
+    /// it with [`Self::put_scratch`] so its capacity survives).
+    pub fn take_scratch(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.scratch)
+    }
+
+    pub fn put_scratch(&mut self, v: Vec<u32>) {
+        self.scratch = v;
     }
 
     /// Equality over the first `n` nodes (scratch may keep longer spare
@@ -258,6 +305,7 @@ impl CachePool {
         self.ssd.capacity() != Some(0)
     }
 
+    // lint: hot
     fn match_inner(&self, hash_ids: &[DenseBlockId], mut pos: Option<&mut Vec<u32>>) -> TierMatch {
         if let Some(v) = pos.as_deref_mut() {
             v.clear();
@@ -295,6 +343,7 @@ impl CachePool {
     /// [`Self::prefix_match`] that also collects the match's SSD
     /// positions into `ssd_pos` (cleared first) — the scan-side twin of
     /// `PrefixIndex::best_prefix_into`'s position capture.
+    // lint: hot
     pub fn prefix_match_with(
         &self,
         hash_ids: &[DenseBlockId],
@@ -394,6 +443,7 @@ impl CachePool {
     /// the leading `reused_blocks` count as hits (DRAM touch or SSD
     /// promotion), the rest as misses inserted into DRAM (their KV was
     /// just computed).
+    // lint: hot
     pub fn admit_chain_reusing_into(
         &mut self,
         hash_ids: &[DenseBlockId],
@@ -408,6 +458,7 @@ impl CachePool {
     }
 
     /// Allocating convenience form of [`Self::admit_chain_reusing_into`].
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn admit_chain_reusing(
         &mut self,
         hash_ids: &[DenseBlockId],
@@ -421,6 +472,7 @@ impl CachePool {
 
     /// Admit a chain reusing everything the pool can prefix-match — the
     /// pre-tiering API, kept for callers without a scheduling decision.
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn admit_chain(&mut self, hash_ids: &[DenseBlockId], now: TimeMs) -> TierDelta {
         let matched = self.prefix_match_blocks(hash_ids);
         self.admit_chain_reusing(hash_ids, matched, now)
@@ -430,6 +482,7 @@ impl CachePool {
     /// Table 1 global-pool replays.  A block resident in either tier is a
     /// hit (promoting from SSD); a miss inserts into DRAM.  Returns
     /// whether it hit plus the residency changes.
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn admit_block(&mut self, b: DenseBlockId, pos: usize, now: TimeMs) -> (bool, TierDelta) {
         let hit = self.contains(b);
         let mut delta = TierDelta::default();
@@ -441,6 +494,7 @@ impl CachePool {
     /// accounting, recording residency changes into a caller-owned
     /// delta.  Replicas land in DRAM (they arrive hot off the wire); a
     /// stale SSD copy is superseded.
+    // lint: hot
     pub fn insert_replica_into(
         &mut self,
         blocks: &[DenseBlockId],
@@ -461,6 +515,7 @@ impl CachePool {
     }
 
     /// Allocating convenience form of [`Self::insert_replica_into`].
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn insert_replica(&mut self, blocks: &[DenseBlockId], now: TimeMs) -> TierDelta {
         let mut delta = TierDelta::default();
         self.insert_replica_into(blocks, now, &mut delta);
@@ -470,6 +525,7 @@ impl CachePool {
     /// Move a DRAM-resident block down to the SSD tier (idle-demotion /
     /// test hook).  Returns `None` if the block is not in DRAM or the SSD
     /// tier is disabled, the residency changes otherwise.
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn demote_block(&mut self, b: DenseBlockId, now: TimeMs) -> Option<TierDelta> {
         if !self.dram.contains(b) || !self.ssd_enabled() {
             return None;
@@ -491,6 +547,7 @@ impl CachePool {
     /// `SimConfig::demote_after_ms`): move every DRAM block idle for at
     /// least `idle_ms` down to the SSD tier without waiting for capacity
     /// pressure.  Deterministic (idle candidates are sorted by id).
+    #[must_use = "apply the TierDelta to the PrefixIndex or residency accounting diverges"]
     pub fn demote_idle(&mut self, now: TimeMs, idle_ms: f64) -> TierDelta {
         let mut delta = TierDelta::default();
         if !self.ssd_enabled() {
@@ -541,7 +598,7 @@ mod tests {
     #[test]
     fn prefix_match_stops_at_gap() {
         let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
-        p.admit_chain(&[1, 2, 3], 0.0);
+        let _ = p.admit_chain(&[1, 2, 3], 0.0);
         assert_eq!(p.prefix_match_blocks(&[1, 2, 9, 3]), 2);
         assert_eq!(p.prefix_match_blocks(&[9, 1, 2]), 0);
         assert_eq!(p.prefix_match_blocks(&[1, 2, 3, 4]), 3);
@@ -550,9 +607,9 @@ mod tests {
     #[test]
     fn admit_counts_hits_and_misses() {
         let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
-        p.admit_chain(&[1, 2], 0.0);
+        let _ = p.admit_chain(&[1, 2], 0.0);
         assert_eq!((p.hits(), p.misses()), (0, 2));
-        p.admit_chain(&[1, 2, 3], 1.0);
+        let _ = p.admit_chain(&[1, 2, 3], 1.0);
         assert_eq!((p.hits(), p.misses()), (2, 3));
         assert!((p.hit_rate() - 0.4).abs() < 1e-9);
     }
@@ -560,7 +617,7 @@ mod tests {
     #[test]
     fn eviction_without_ssd_drops_blocks() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(0));
-        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        let _ = p.admit_chain(&[1, 2, 3, 4], 0.0);
         let dropped = p.admit_chain(&[5, 6], 1.0).dropped();
         assert_eq!(dropped, vec![1, 2]); // LRU order
         assert_eq!(p.len(), 4);
@@ -571,7 +628,7 @@ mod tests {
     #[test]
     fn eviction_with_ssd_demotes_instead_of_dropping() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(8));
-        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        let _ = p.admit_chain(&[1, 2, 3, 4], 0.0);
         let delta = p.admit_chain(&[5, 6], 1.0);
         assert!(delta.dropped().is_empty(), "demotion must not destroy blocks");
         // The delta reports the demotions and inserts it caused.
@@ -592,8 +649,8 @@ mod tests {
     #[test]
     fn ssd_overflow_finally_drops() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(2));
-        p.admit_chain(&[1, 2], 0.0); // DRAM [1,2]
-        p.admit_chain(&[3, 4], 1.0); // DRAM [3,4], SSD [1,2]
+        let _ = p.admit_chain(&[1, 2], 0.0); // DRAM [1,2]
+        let _ = p.admit_chain(&[3, 4], 1.0); // DRAM [3,4], SSD [1,2]
         let dropped = p.admit_chain(&[5, 6], 2.0).dropped(); // 3,4 demote; 1,2 fall off SSD
         assert_eq!(dropped, vec![1, 2]);
         assert_eq!(p.len(), 4);
@@ -604,13 +661,13 @@ mod tests {
     #[test]
     fn reuse_promotes_ssd_blocks_back_to_dram() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
-        p.admit_chain(&[1, 2], 0.0);
-        p.admit_chain(&[3, 4], 1.0); // 1,2 now on SSD
+        let _ = p.admit_chain(&[1, 2], 0.0);
+        let _ = p.admit_chain(&[3, 4], 1.0); // 1,2 now on SSD
         assert_eq!(p.tier_of(1), Some(Tier::Ssd));
         let m = p.prefix_match(&[1, 2, 3, 4]);
         assert_eq!((m.blocks, m.dram_prefix, m.ssd_blocks, m.dram_blocks), (4, 0, 2, 2));
         assert_eq!(m.ssd_last, 1, "SSD copies at positions 0 and 1");
-        p.admit_chain_reusing(&[1, 2], 2, 2.0);
+        let _ = p.admit_chain_reusing(&[1, 2], 2, 2.0);
         assert_eq!(p.tier_of(1), Some(Tier::Dram));
         assert_eq!(p.tier_of(2), Some(Tier::Dram));
         assert_eq!(p.stats.ssd_hits, 2);
@@ -623,11 +680,11 @@ mod tests {
     #[test]
     fn recompute_supersedes_stale_ssd_copy() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(2), Some(4));
-        p.admit_chain(&[1, 2], 0.0);
-        p.admit_chain(&[3, 4], 1.0); // 1,2 on SSD
+        let _ = p.admit_chain(&[1, 2], 0.0);
+        let _ = p.admit_chain(&[3, 4], 1.0); // 1,2 on SSD
         // Scheduler chose to recompute 1,2 rather than load them: misses,
         // no ssd hits, block moves to DRAM exactly once.
-        p.admit_chain_reusing(&[1, 2], 0, 2.0);
+        let _ = p.admit_chain_reusing(&[1, 2], 0, 2.0);
         assert_eq!(p.stats.ssd_hits, 0);
         assert_eq!(p.stats.promotions, 0);
         assert_eq!(p.tier_of(1), Some(Tier::Dram));
@@ -640,7 +697,7 @@ mod tests {
     #[test]
     fn replica_insert_no_hit_accounting() {
         let mut p = CachePool::new(PolicyKind::Lru, None, Some(0));
-        p.insert_replica(&[7, 8], 0.0);
+        let _ = p.insert_replica(&[7, 8], 0.0);
         assert_eq!((p.hits(), p.misses()), (0, 0));
         assert_eq!(p.prefix_match_blocks(&[7, 8]), 2);
     }
@@ -648,8 +705,8 @@ mod tests {
     #[test]
     fn replica_does_not_duplicate() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(3), Some(0));
-        p.admit_chain(&[1, 2], 0.0);
-        p.insert_replica(&[1, 2, 3], 1.0);
+        let _ = p.admit_chain(&[1, 2], 0.0);
+        let _ = p.insert_replica(&[1, 2, 3], 1.0);
         assert_eq!(p.len(), 3);
     }
 
@@ -668,7 +725,7 @@ mod tests {
         assert!(delta.demoted_to_ssd() > 0, "pressure must demote");
         let cap = delta.changes.capacity();
         p.insert_replica_into(&[9], 2.0, &mut delta);
-        q.insert_replica(&[9], 2.0);
+        let _ = q.insert_replica(&[9], 2.0);
         assert_eq!(delta.changes.len(), p.len() - 3, "replica delta replaces prior content");
         assert!(delta.changes.capacity() >= 1 && cap >= delta.changes.len());
         assert_eq!(p.stats, q.stats);
@@ -677,7 +734,7 @@ mod tests {
     #[test]
     fn demote_block_moves_tier() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
-        p.admit_chain(&[1, 2], 0.0);
+        let _ = p.admit_chain(&[1, 2], 0.0);
         let d = p.demote_block(1, 1.0).expect("DRAM block must demote");
         assert_eq!(d.changes, vec![(1, Some(Tier::Ssd))]);
         assert!(p.demote_block(1, 1.0).is_none()); // already on SSD
@@ -686,7 +743,7 @@ mod tests {
         assert_eq!(p.len(), 2);
         // Disabled SSD refuses demotion.
         let mut q = CachePool::new(PolicyKind::Lru, Some(8), Some(0));
-        q.admit_chain(&[5], 0.0);
+        let _ = q.admit_chain(&[5], 0.0);
         assert!(q.demote_block(5, 1.0).is_none());
         assert_eq!(q.tier_of(5), Some(Tier::Dram));
     }
@@ -694,8 +751,8 @@ mod tests {
     #[test]
     fn demote_idle_sweeps_only_stale_dram() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
-        p.admit_chain(&[1, 2, 3], 0.0);
-        p.admit_chain(&[3], 900.0); // refresh 3
+        let _ = p.admit_chain(&[1, 2, 3], 0.0);
+        let _ = p.admit_chain(&[3], 900.0); // refresh 3
         let delta = p.demote_idle(1_000.0, 500.0);
         assert_eq!(delta.changes, vec![(1, Some(Tier::Ssd)), (2, Some(Tier::Ssd))]);
         assert_eq!(p.tier_of(1), Some(Tier::Ssd));
@@ -706,7 +763,7 @@ mod tests {
         assert!(p.demote_idle(1_000.0, 500.0).is_empty());
         // Disabled SSD tier: the sweep is a no-op.
         let mut q = CachePool::new(PolicyKind::Lru, Some(8), Some(0));
-        q.admit_chain(&[7], 0.0);
+        let _ = q.admit_chain(&[7], 0.0);
         assert!(q.demote_idle(1e9, 1.0).is_empty());
         assert_eq!(q.tier_of(7), Some(Tier::Dram));
     }
@@ -714,13 +771,13 @@ mod tests {
     #[test]
     fn zero_dram_capacity_spills_straight_to_ssd() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(0), Some(4));
-        p.admit_chain(&[1, 2], 0.0);
+        let _ = p.admit_chain(&[1, 2], 0.0);
         assert_eq!(p.dram_len(), 0, "cap-0 DRAM must hold nothing");
         assert_eq!(p.ssd_len(), 2);
         assert_eq!(p.prefix_match_blocks(&[1, 2]), 2);
         // And with both tiers disabled, nothing is ever resident.
         let mut q = CachePool::new(PolicyKind::Lru, Some(0), Some(0));
-        q.admit_chain(&[1, 2], 0.0);
+        let _ = q.admit_chain(&[1, 2], 0.0);
         assert_eq!(q.len(), 0);
         assert_eq!(q.stats.dropped, 2);
     }
@@ -728,7 +785,7 @@ mod tests {
     #[test]
     fn dram_prefix_stops_at_first_ssd_block() {
         let mut p = CachePool::new(PolicyKind::Lru, Some(8), Some(8));
-        p.admit_chain(&[1, 2, 3, 4], 0.0);
+        let _ = p.admit_chain(&[1, 2, 3, 4], 0.0);
         let _ = p.demote_block(2, 1.0);
         let m = p.prefix_match(&[1, 2, 3, 4]);
         assert_eq!(m.blocks, 4);
@@ -745,7 +802,7 @@ mod tests {
         // collected positions are exactly the SSD-resident offsets.
         let mut p = CachePool::new(PolicyKind::Lru, Some(16), Some(16));
         let chain: Vec<DenseBlockId> = (10..18).collect();
-        p.admit_chain(&chain, 0.0);
+        let _ = p.admit_chain(&chain, 0.0);
         for b in [12, 13, 16] {
             assert!(p.demote_block(b, 1.0).is_some());
         }

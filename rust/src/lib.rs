@@ -63,6 +63,7 @@ pub mod runtime;
 pub mod sim;
 pub mod trace;
 pub mod util;
+pub mod verify;
 
 /// Milliseconds since trace start — the simulator's clock unit.
 pub type TimeMs = f64;

@@ -87,6 +87,8 @@ impl BwQueue {
     /// Absolute completion time if an op of `bytes` were scheduled on
     /// `node` now — **bit-for-bit** what [`Self::schedule`] would
     /// return.  Read-only.
+    // lint: hot
+    #[must_use = "a discarded estimate means the probe's cost never reached the decision"]
     pub fn estimate_done(&self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> TimeMs {
         self.estimate_done_dur(node, now, self.serialize_ms(bytes, setup_ms))
     }
@@ -99,6 +101,7 @@ impl BwQueue {
     /// Read-only probe for an op whose duration the caller computed (an
     /// op at a non-default rate, e.g. an NVMe *write* on the read-bw
     /// bank).
+    #[must_use = "a discarded estimate means the probe's cost never reached the decision"]
     pub fn estimate_done_dur(&self, node: usize, now: TimeMs, dur_ms: f64) -> TimeMs {
         self.busy_until[node].max(now) + dur_ms
     }

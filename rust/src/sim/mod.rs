@@ -282,12 +282,17 @@ impl<'a> Sim<'a> {
         self.push(now + dur, EventKind::DecodeStep { decode: d, seq, dur });
     }
 
-    /// Debug invariant of the tentpole: the incrementally maintained
-    /// prefix index must equal a brute-force rebuild of the pools.
-    /// Compiles to a no-op in release builds.
+    /// Paranoia invariant: the incrementally maintained prefix index
+    /// must equal a brute-force rebuild of the pools.  Gated on
+    /// `SimConfig::paranoia` — a hard assert when active, a no-op
+    /// otherwise (the default level reproduces the old `debug_assert!`
+    /// behavior; `Full` checks in release builds too).
     fn validate_index(&self) {
+        if !self.cfg.paranoia.active() {
+            return;
+        }
         if let Some(idx) = &self.index {
-            debug_assert!(
+            assert!(
                 idx.equals_rebuild_of(self.prefill.instances.iter().map(|i| &i.pool)),
                 "global prefix index diverged from the pools"
             );

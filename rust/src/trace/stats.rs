@@ -129,7 +129,7 @@ pub fn tiered_cache_hit_rate(
     for r in trace {
         for (idx, &h) in r.hash_ids.iter().enumerate() {
             let b = interner.intern(h);
-            pool.admit_block(b, idx, r.timestamp as f64);
+            let _ = pool.admit_block(b, idx, r.timestamp as f64);
         }
     }
     (pool.hit_rate(), pool.stats)

@@ -1,0 +1,106 @@
+//! Counting `#[global_allocator]` — the *runtime* twin of
+//! `pallas_lint`'s static `hot-no-alloc` rule (rule R3).
+//!
+//! Compiled only under the `alloc-audit` feature: the crate then
+//! registers [`CountingAlloc`] (a thin wrapper over
+//! [`std::alloc::System`] with an atomic allocation counter) as the
+//! global allocator, and a scoped [`AllocGuard`] reads the counter
+//! delta across a region.  `rust/tests/alloc_audit.rs` uses it to pin
+//! the scheduler's steady-state decision loop at **zero** heap
+//! allocations, and `benches/sched_throughput.rs` reports the same
+//! measurement as the `allocs_per_decision` column of
+//! `BENCH_sched.json`.
+//!
+//! Only allocation *counts* are tracked (not bytes, not frees): the
+//! claim under test is "no allocation happens at all", so a counter is
+//! enough and keeps the allocator overhead to one relaxed atomic add.
+
+#![cfg(feature = "alloc-audit")]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// [`System`], with every `alloc`/`realloc`/`alloc_zeroed` counted.
+/// Frees are not counted — R3 is about allocation pressure, and a
+/// hot-path free implies a hot-path allocation elsewhere anyway.
+pub struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counter has no effect on the returned
+// memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// The one registration point: every binary built with `alloc-audit`
+/// (tests, benches, the CLI) counts through this allocator.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Total heap allocations since process start.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Scoped allocation counter: construct before the region under audit,
+/// read [`AllocGuard::count`] after.  Single-threaded regions see an
+/// exact count; concurrent allocations elsewhere in the process would
+/// inflate it (the tier-1 audit runs single-threaded).
+#[derive(Debug)]
+pub struct AllocGuard {
+    start: u64,
+}
+
+impl AllocGuard {
+    pub fn new() -> Self {
+        AllocGuard { start: alloc_count() }
+    }
+
+    /// Allocations since this guard was created.
+    pub fn count(&self) -> u64 {
+        alloc_count() - self.start
+    }
+}
+
+impl Default for AllocGuard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_counts_allocations() {
+        // Lib unit tests share the process (and therefore the global
+        // counter) across threads, so only monotone assertions are
+        // reliable here; the exact-zero steady-state claim lives in the
+        // single-test `rust/tests/alloc_audit.rs` binary.
+        let g = AllocGuard::new();
+        let v: Vec<u64> = (0..64).collect();
+        assert!(g.count() >= 1, "an allocation must be counted");
+        drop(v);
+        assert!(alloc_count() >= g.count(), "the global counter is monotone");
+    }
+}

@@ -2,6 +2,7 @@
 //! argument parsing, and the vendored fast hasher.  (No
 //! serde/clap/rand/fxhash offline — see DESIGN.md.)
 
+pub mod alloc_audit;
 pub mod args;
 pub mod fasthash;
 pub mod json;

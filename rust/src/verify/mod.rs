@@ -1,0 +1,57 @@
+//! Runtime invariant enforcement levels.
+//!
+//! The repo's expensive self-checks — the incremental global prefix
+//! index against a brute-force rebuild every 1024 events, plus
+//! the end-of-run rebuild — used to be bare `debug_assert!`s: always on
+//! in debug builds, never available in release.  [`Paranoia`] makes the
+//! level a [`crate::config::SimConfig`] knob instead, so a release
+//! binary replaying a 10M-request trace can opt *in* to full checking
+//! (`Full`) and a debug experiment hunting an unrelated bug can opt
+//! *out* (`Off`).  The default (`Debug`) is bit-for-bit the old
+//! behavior.
+//!
+//! The conductor's walk-vs-scan parity cross-check stays a
+//! `#[cfg(debug_assertions)]` block inside `find_prefix_matches_into`
+//! (threading a level through that pub signature would churn every
+//! caller, including benches); see DESIGN.md's static-analysis section.
+
+/// How much runtime self-verification a `Sim` performs.  Checks gated on
+/// [`Paranoia::active`] are *hard* `assert!`s when enabled — a paranoia
+/// failure is corruption, not a soft warning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Paranoia {
+    /// Never check (release semantics even in a debug build).
+    Off,
+    /// Check in debug builds only — the historical `debug_assert!`
+    /// behavior, and the default.
+    #[default]
+    Debug,
+    /// Always check, including in release builds (slow: the index
+    /// rebuild is O(resident blocks) per check).
+    Full,
+}
+
+impl Paranoia {
+    /// Whether gated checks run in this build.
+    #[inline]
+    pub fn active(self) -> bool {
+        match self {
+            Paranoia::Off => false,
+            Paranoia::Debug => cfg!(debug_assertions),
+            Paranoia::Full => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_resolve_against_the_build_profile() {
+        assert!(!Paranoia::Off.active());
+        assert!(Paranoia::Full.active());
+        assert_eq!(Paranoia::Debug.active(), cfg!(debug_assertions));
+        assert_eq!(Paranoia::default(), Paranoia::Debug);
+    }
+}

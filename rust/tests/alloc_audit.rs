@@ -1,0 +1,119 @@
+//! Runtime no-alloc audit (tier-1, `--features alloc-audit`): the
+//! counting global allocator in `util::alloc_audit` pins the
+//! scheduler's warmed steady-state decision loop at **zero** heap
+//! allocations — the runtime twin of `pallas_lint`'s static
+//! `hot-no-alloc` rule, catching what token scanning cannot (an
+//! allocation hidden behind a helper call, an amortized `Vec` that was
+//! never pre-sized).
+//!
+//! One `#[test]` only: the allocation counter is process-global, so a
+//! second concurrent test in this binary would pollute the audited
+//! regions.  Both phases (scan pricing and index-backed pricing) run
+//! sequentially inside it.
+
+use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
+use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
+use mooncake::decode::DecodeInstance;
+use mooncake::kvcache::DenseBlockId;
+use mooncake::model::PerfModel;
+use mooncake::prefill::PrefillPool;
+use mooncake::resource::Resources;
+use mooncake::trace::BLOCK_TOKENS;
+use mooncake::util::alloc_audit::AllocGuard;
+use mooncake::util::rng::Rng;
+
+/// Allocations across `iters` warmed steady-state `schedule` calls
+/// (SLO-rejecting, so every iteration prices identical cluster state
+/// and nothing mutates).  Mirrors `benches/sched_throughput.rs`'s
+/// `measure_allocs_per_decision`, as a pass/fail gate instead of a
+/// reported column.
+fn audit_decisions(use_index: bool, iters: usize) -> u64 {
+    let mut cfg = SimConfig {
+        n_prefill: 8,
+        n_decode: 4,
+        scheduling: SchedulingPolicy::KvCacheCentric,
+        rejection: RejectionPolicy::None,
+        cache_capacity_blocks: None,
+        ssd_capacity_blocks: None,
+        ..Default::default()
+    };
+    // ttft_ms = 0 makes the SLO gate reject after the *full* pricing
+    // pass (prefill + decode selection), before any mutation.
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    let chain = 256usize;
+    let perf = PerfModel::paper();
+
+    // Warm every node with the probe chain plus two filler chains, so
+    // pricing pays its worst case against realistically loaded maps.
+    let mut pool = PrefillPool::new(&cfg);
+    let probe: Vec<DenseBlockId> = (0..chain as u32).collect();
+    for (node, inst) in pool.instances.iter_mut().enumerate() {
+        let _ = inst.pool.admit_chain(&probe, 0.0);
+        for f in 0..2u32 {
+            let base = 1_000_000 + (node as u32 * 2 + f) * chain as u32;
+            let filler: Vec<DenseBlockId> = (base..base + chain as u32).collect();
+            let _ = inst.pool.admit_chain(&filler, 0.0);
+        }
+    }
+    let mut index = use_index.then(|| pool.build_prefix_index());
+
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+            scratch: &mut scratch,
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..64 {
+        run_one(w as f64);
+    }
+    let guard = AllocGuard::new();
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    guard.count()
+}
+
+#[test]
+fn steady_state_decisions_do_not_allocate() {
+    let iters = 1_000usize;
+
+    // Scan pricing (no global index): allocation-free in every build
+    // profile once the scratch buffers are warm.
+    let scan = audit_decisions(false, iters);
+    assert_eq!(scan, 0, "scan-path decision loop allocated ({scan} allocs / {iters} decisions)");
+
+    // Index-backed pricing: the release hot path is allocation-free.
+    // Debug builds run the scan-vs-index parity self-check inside
+    // `find_prefix_matches_into`, which allocates by design — so this
+    // phase only gates optimized builds (CI runs it via
+    // `cargo test --release --features alloc-audit`).
+    if !cfg!(debug_assertions) {
+        let indexed = audit_decisions(true, iters);
+        assert_eq!(
+            indexed, 0,
+            "index-path decision loop allocated ({indexed} allocs / {iters} decisions)"
+        );
+    }
+}

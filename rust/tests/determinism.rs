@@ -1,0 +1,106 @@
+//! Determinism regression: the simulator is a pure function of
+//! (config, trace) — two runs in the same process must agree
+//! bit-for-bit, and the default generator stream is pinned by a golden
+//! hash.  This is the runtime twin of `pallas_lint`'s static rules
+//! (no std hashers, no wall clocks, no unordered iteration on the
+//! deterministic side): the lint bans the mechanisms, this test pins
+//! the outcome.
+
+use mooncake::config::SimConfig;
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+use mooncake::trace::TraceRecord;
+use mooncake::verify::Paranoia;
+
+fn default_trace() -> Vec<TraceRecord> {
+    gen::generate(&TraceGenConfig { n_requests: 1_000, ..Default::default() })
+}
+
+/// FNV-1a over every trace field — the same pin as the golden-stream
+/// integration test, asserted here on the exact trace the sim runs on.
+fn trace_hash(trace: &[TraceRecord]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for r in trace {
+        mix(r.timestamp);
+        mix(r.input_length);
+        mix(r.output_length);
+        mix(r.hash_ids.len() as u64);
+        for &b in &r.hash_ids {
+            mix(b);
+        }
+    }
+    h
+}
+
+/// Bit-for-bit equality of two runs (floats compared via `to_bits` — an
+/// "equal within epsilon" drift is exactly the bug this test exists to
+/// catch).
+fn assert_runs_identical(a: &sim::SimResult, b: &sim::SimResult) {
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.outcome, y.outcome, "request {}", x.id);
+        assert_eq!(x.ttft_ms.to_bits(), y.ttft_ms.to_bits(), "request {}", x.id);
+        assert_eq!(x.est_ttft_ms.to_bits(), y.est_ttft_ms.to_bits());
+        assert_eq!(x.max_tbt_ms.to_bits(), y.max_tbt_ms.to_bits());
+        assert_eq!(x.mean_tbt_ms.to_bits(), y.mean_tbt_ms.to_bits());
+        assert_eq!(x.generated, y.generated);
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+    }
+    assert_eq!(a.conductor, b.conductor);
+    assert_eq!(a.tier, b.tier);
+    assert_eq!(a.wall_ms.to_bits(), b.wall_ms.to_bits());
+    assert_eq!(a.transfer_bytes, b.transfer_bytes);
+    assert_eq!(a.rejected_at_arrival, b.rejected_at_arrival);
+    assert_eq!(a.rejected_at_decode, b.rejected_at_decode);
+    assert_eq!(a.ssd_load_events, b.ssd_load_events);
+    assert_eq!(a.ssd_loaded_bytes_by_node, b.ssd_loaded_bytes_by_node);
+    assert_eq!(a.decode_tokens_out, b.decode_tokens_out);
+    assert_eq!(a.n_events, b.n_events);
+    assert_eq!(a.resources, b.resources);
+    assert_eq!(a.load_samples.len(), b.load_samples.len());
+    for (x, y) in a.load_samples.iter().zip(&b.load_samples) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+        assert_eq!(x.prefill_load.to_bits(), y.prefill_load.to_bits());
+        assert_eq!(x.decode_load.to_bits(), y.decode_load.to_bits());
+    }
+}
+
+#[test]
+fn same_process_reruns_are_bit_identical() {
+    // Two independent generations must agree with each other *and* with
+    // the golden stream pin — any ambient-state leak (a randomized
+    // hasher, a wall-clock read, address-dependent iteration) breaks
+    // one of the two.
+    let t1 = default_trace();
+    let t2 = default_trace();
+    assert_eq!(trace_hash(&t1), 0x7aa958e3910f7633, "default trace stream drifted");
+    assert_eq!(trace_hash(&t2), trace_hash(&t1), "trace generation is not a pure function");
+
+    let cfg = SimConfig::default();
+    let a = sim::run(&cfg, &t1, 1.0);
+    let b = sim::run(&cfg, &t2, 1.0);
+    assert!(a.n_events > 0);
+    assert_runs_identical(&a, &b);
+}
+
+#[test]
+fn paranoia_level_does_not_perturb_results() {
+    // The `verify::Paranoia` knob turns self-checks on and off; the
+    // checks are read-only, so every level must produce the same run
+    // bit-for-bit (`Full` additionally proves the index invariant holds
+    // in release builds, where `Debug` compiles the check out).
+    let t = default_trace();
+    let base = sim::run(&SimConfig::default(), &t, 1.0);
+    for level in [Paranoia::Off, Paranoia::Full] {
+        let cfg = SimConfig { paranoia: level, ..Default::default() };
+        let r = sim::run(&cfg, &t, 1.0);
+        assert_runs_identical(&base, &r);
+    }
+}

@@ -228,12 +228,12 @@ fn prop_tiered_pool_conservation() {
             match rng.below(8) {
                 0 => {
                     let b = rng.below(300) as DenseBlockId;
-                    pool.admit_block(b, rng.below(40) as usize, now);
+                    let _ = pool.admit_block(b, rng.below(40) as usize, now);
                 }
                 1 => {
                     let chain: Vec<DenseBlockId> =
                         (0..1 + rng.below(10)).map(|_| rng.below(300) as DenseBlockId).collect();
-                    pool.insert_replica(&chain, now);
+                    let _ = pool.insert_replica(&chain, now);
                 }
                 2 => {
                     let _ = pool.demote_block(rng.below(300) as DenseBlockId, now);
@@ -243,7 +243,7 @@ fn prop_tiered_pool_conservation() {
                     let start = rng.below(280) as u32;
                     let chain: Vec<DenseBlockId> = (start..start + len).collect();
                     let reused = rng.below(len as u64 + 1) as usize;
-                    pool.admit_chain_reusing(&chain, reused, now);
+                    let _ = pool.admit_chain_reusing(&chain, reused, now);
                 }
             }
             // Capacity bounds per tier.
@@ -282,7 +282,7 @@ fn prop_demote_promote_round_trip_preserves_chain() {
         let dram_cap = 1 + rng.below(len as u64 - 1) as usize;
         let mut pool = CachePool::new(PolicyKind::Lru, Some(dram_cap), Some(2 * len));
         let chain: Vec<DenseBlockId> = (0..len as u32).map(|i| 1_000 + i * 7).collect();
-        pool.admit_chain_reusing(&chain, 0, 0.0);
+        let _ = pool.admit_chain_reusing(&chain, 0, 0.0);
         // The tail fits in DRAM, the head demoted to SSD — but the whole
         // chain must still be resident and prefix-matchable.
         assert_eq!(pool.dram_len(), dram_cap);
@@ -293,7 +293,7 @@ fn prop_demote_promote_round_trip_preserves_chain() {
         // Re-admit with full reuse: every SSD block promotes (an SSD hit),
         // every DRAM block touches, and the chain stays whole.
         let before = pool.stats;
-        pool.admit_chain_reusing(&chain, len, 1.0);
+        let _ = pool.admit_chain_reusing(&chain, len, 1.0);
         let s = pool.stats;
         assert_eq!(s.dram_hits + s.ssd_hits - (before.dram_hits + before.ssd_hits), len as u64);
         assert!(s.ssd_hits - before.ssd_hits >= (len - dram_cap) as u64);
@@ -378,7 +378,7 @@ fn prop_prefix_match_monotone() {
         let mut pool = CachePool::new(PolicyKind::Lru, Some(1_000), Some(2_000));
         let chain: Vec<DenseBlockId> =
             (0..rng.range(1, 40)).map(|_| rng.below(10_000) as DenseBlockId).collect();
-        pool.admit_chain(&chain, 0.0);
+        let _ = pool.admit_chain(&chain, 0.0);
         let m1 = pool.prefix_match_blocks(&chain);
         assert!(m1 <= chain.len());
         let mut longer = chain.clone();
