@@ -26,6 +26,12 @@
 //! balancing threshold over an end-to-end tier-pressure replay — the
 //! §6.2 ablation on the PR 4 knobs.
 //!
+//! A **sustained-replay cell** (ISSUE 7) rides along: a long synthetic
+//! replay generated on the fly and fed straight through
+//! `sim::run_streaming` — requests/sec end to end plus the live-request
+//! high-water mark, with `max_live_requests` bounding admission and
+//! epoch id recycling keeping the interner flat underneath.
+//!
 //! Emits `BENCH_sched.json` — the one trajectory artifact CI uploads;
 //! every row carries a `variant` column (`"interned"` since ISSUE 5) so
 //! the same file accumulates seed-vs-interned cells instead of growing
@@ -404,6 +410,63 @@ fn congestion_sweep(smoke: bool) -> Value {
     Value::Arr(rows)
 }
 
+/// Sustained-replay cell: a generated arrival stream driven straight
+/// through `sim::run_streaming` — no materialized request vector — so
+/// the figure prices the whole streaming path: bounded admission
+/// (`max_live_requests`), per-arrival scheduling, and epoch id
+/// recycling under an unbounded distinct-block stream.  Every request
+/// carries one shared and one never-seen-again block, the worst case
+/// for interner growth.
+fn sustained_replay(smoke: bool) -> Value {
+    let n: u64 = if smoke { 20_000 } else { 500_000 };
+    let live_cap = 64usize;
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        cache_capacity_blocks: Some(512),
+        ssd_capacity_blocks: Some(512),
+        max_live_requests: Some(live_cap),
+        interner_epoch_blocks: Some(4_096),
+        retain_metrics: false,
+        slo: SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let stream = (0..n).map(|i| sim::Request {
+        rid: i,
+        arrival: i as f64 * 0.05,
+        input: 1_024,
+        output: 1,
+        hash_ids: vec![1, 1_000 + i],
+    });
+    let t = Instant::now();
+    let res = sim::run_streaming(&cfg, stream);
+    let secs = t.elapsed().as_secs_f64();
+    assert_eq!(res.n_completed + res.n_rejected, n, "streamed requests went missing");
+    assert!(res.live_peak <= live_cap, "live cap breached: {}", res.live_peak);
+    banner("sustained streaming replay");
+    let header = ["requests", "req/s", "ev/s", "live peak", "epochs", "id space"];
+    row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    row(&[
+        n.to_string(),
+        format!("{:.0}", n as f64 / secs),
+        format!("{:.0}", res.n_events as f64 / secs),
+        res.live_peak.to_string(),
+        res.interner_epochs.to_string(),
+        res.interner_id_space.to_string(),
+    ]);
+    json::obj(vec![
+        ("variant", Value::Str(VARIANT.into())),
+        ("requests", json::num(n as f64)),
+        ("live_cap", json::num(live_cap as f64)),
+        ("requests_per_sec", json::num(n as f64 / secs)),
+        ("sim_events_per_sec", json::num(res.n_events as f64 / secs)),
+        ("live_peak", json::num(res.live_peak as f64)),
+        ("completed", json::num(res.n_completed as f64)),
+        ("interner_epochs", json::num(res.interner_epochs as f64)),
+        ("interner_id_space", json::num(res.interner_id_space as f64)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     banner(if smoke {
@@ -479,6 +542,7 @@ fn main() {
     println!("(* = congestion cell: hot source with NVMe/tx backlogs, finite rx)");
 
     let sweep = congestion_sweep(smoke);
+    let replay = sustained_replay(smoke);
 
     let allocs_per_decision = measure_allocs_per_decision();
     println!("allocs_per_decision: {}", json::to_string(&allocs_per_decision));
@@ -528,6 +592,7 @@ fn main() {
         ]),
     ));
     obj.push(("congestion_sweep", sweep));
+    obj.push(("sustained_replay", replay));
     // The runtime no-alloc audit (null unless built with `alloc-audit`).
     obj.push(("allocs_per_decision", allocs_per_decision));
     if let Some(c) = target {

@@ -65,6 +65,19 @@ impl HeatTracker {
         v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         v
     }
+
+    /// Drop heat entries whose dense id is not set in `live` — the same
+    /// residency bitmap handed to `BlockInterner::recycle_epoch`.  Called
+    /// by external planner drivers after a recycle epoch so a *reused* id
+    /// does not inherit a dead block's heat.  Ids beyond the bitmap are
+    /// dead by definition.
+    pub fn retain_live(&mut self, live: &[u64]) {
+        let alive = |b: DenseBlockId| {
+            (live.get(b as usize / 64).copied().unwrap_or(0) >> (b as usize % 64)) & 1 != 0
+        };
+        // lint: allow(unordered-iter) — pure filter; which entries survive does not depend on visit order
+        self.heat.retain(|&b, _| alive(b));
+    }
 }
 
 /// Decide proactive replications: a hot block held by a congested node
@@ -170,6 +183,26 @@ mod tests {
         u.touch(4, 0.0);
         let tied = u.hot_blocks(0.0, 0.5);
         assert_eq!(tied.iter().map(|&(b, _)| b).collect::<Vec<_>>(), vec![4, 9]);
+    }
+
+    #[test]
+    fn retain_live_purges_recycled_ids() {
+        let mut t = HeatTracker::new(1e9);
+        t.touch(3, 0.0);
+        t.touch(64, 0.0);
+        t.touch(70, 0.0);
+        // Bitmap keeps 3 and 70 only.
+        let mut live = vec![0u64; 2];
+        live[0] |= 1 << 3;
+        live[1] |= 1 << (70 - 64);
+        t.retain_live(&live);
+        assert!(t.heat_of(3, 0.0) > 0.0);
+        assert!(t.heat_of(70, 0.0) > 0.0);
+        assert_eq!(t.heat_of(64, 0.0), 0.0);
+        // Ids beyond the bitmap are dead by definition.
+        t.touch(1_000, 0.0);
+        t.retain_live(&live);
+        assert_eq!(t.heat_of(1_000, 0.0), 0.0);
     }
 
     #[test]

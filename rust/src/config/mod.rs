@@ -109,6 +109,29 @@ pub struct SimConfig {
     /// `debug_assert!` behavior; `Full` turns them on in release builds
     /// too (long replays can afford one rebuild per 1024 events).
     pub paranoia: Paranoia,
+    /// Streaming replay backpressure: cap on simultaneously *live*
+    /// requests (admitted but not yet finished/rejected).  When the cap
+    /// is reached the event loop defers further arrivals — they are
+    /// admitted, in trace order, as soon as live state drains below the
+    /// cap — bounding per-request memory at the cap instead of the trace
+    /// length.  `None` = unbounded (the default; with arrivals taken at
+    /// their trace times this is bit-for-bit the materialized path).
+    pub max_live_requests: Option<usize>,
+    /// Epoch-based interner recycling for unbounded-distinct-block
+    /// replays: when live interned blocks exceed this count, the `Sim`
+    /// marks every id resident in any pool tier and recycles the rest
+    /// (see `BlockInterner::recycle_epoch`), keeping the dense-id space
+    /// — and the prefix index's flat table — bounded.  `None` = never
+    /// recycle (the default, the historical append-only behavior).
+    /// Recycled ids change LRU tie-break order for *re-entering* blocks,
+    /// so this knob is not bit-for-bit neutral; it is off by default.
+    pub interner_epoch_blocks: Option<usize>,
+    /// Keep per-request [`crate::metrics::RequestMetrics`] rows in the
+    /// result (the default).  `false` drops them as requests retire —
+    /// aggregate counters (`n_completed`, rejections, tier/resource
+    /// stats) still accumulate — so a 10M-request replay's memory stays
+    /// flat instead of growing one row per request.
+    pub retain_metrics: bool,
     pub seed: u64,
 }
 
@@ -135,6 +158,9 @@ impl Default for SimConfig {
             demote_after_ms: None,
             replication_rx_backlog_cap_ms: None,
             paranoia: Paranoia::default(),
+            max_live_requests: None,
+            interner_epoch_blocks: None,
+            retain_metrics: true,
             seed: 42,
         }
     }

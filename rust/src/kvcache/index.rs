@@ -52,7 +52,11 @@ pub struct PrefixIndex {
     stride: usize,
     /// Flat residency table indexed by `block as usize * stride`; grows
     /// (zero-filled) as new dense ids appear.  A dropped block's slot
-    /// zeroes out but is kept — dense ids are never recycled.
+    /// zeroes out but is kept.  With `interner_epoch_blocks` set, the
+    /// `Sim` recycles ids that are resident in no pool tier
+    /// (`BlockInterner::recycle_epoch`) — such ids have all-zero slots
+    /// here by construction, so a reused id re-enters an empty slot and
+    /// the table stays consistent without any index-side bookkeeping.
     words: Vec<u64>,
     /// Blocks with at least one holder (the old map's `len`).
     resident: usize,

@@ -18,9 +18,20 @@
 //!   same trace produces the same ids (determinism is preserved).
 //!
 //! Interning is injective by construction: a new hash gets the next
-//! unused dense id, a seen hash gets its existing id, and nothing is
-//! ever un-interned (dropped blocks may re-enter the cluster later and
-//! must keep their identity).
+//! unused dense id and a seen hash gets its existing id.  By default
+//! nothing is ever un-interned, but a sustained multi-hour replay streams
+//! an unbounded set of *distinct* blocks through a bounded cache — an
+//! append-only id space would grow forever (and the index's flat
+//! residency table with it).  [`BlockInterner::recycle_epoch`] therefore
+//! supports **epoch-based id recycling**: the owner (the `Sim`, between
+//! arrivals) passes a liveness bitset of ids still resident in any pool
+//! tier; every dead id's hash mapping is dropped and the id goes onto a
+//! free list for reuse by future hashes.  Within an epoch ids stay
+//! stable, so determinism holds per (trace, recycle schedule) — and the
+//! default schedule is "never", which is bit-for-bit the append-only
+//! behavior.  A dropped block that re-enters the cluster later is simply
+//! re-interned (possibly to a different id — its *identity* is the hash,
+//! which the trace keeps).
 
 use crate::util::fasthash::FastMap;
 use crate::BlockId;
@@ -35,6 +46,17 @@ pub type DenseBlockId = u32;
 #[derive(Debug, Default)]
 pub struct BlockInterner {
     map: FastMap<BlockId, DenseBlockId>,
+    /// Reverse map: id → the hash it was last assigned to.  An id is
+    /// *allocated* iff `map[rev[id]] == id`; free-list entries keep a
+    /// stale hash here until reassignment.
+    rev: Vec<BlockId>,
+    /// Recycled ids available for reuse, kept sorted **descending** so
+    /// `pop()` hands them out lowest-first (deterministic and dense).
+    free: Vec<DenseBlockId>,
+    /// Completed recycle epochs.
+    epochs: u64,
+    /// Total ids ever freed across all epochs.
+    freed: u64,
 }
 
 impl BlockInterner {
@@ -42,17 +64,28 @@ impl BlockInterner {
         Self::default()
     }
 
-    /// Dense id for `hash`, assigning the next free id on first sight.
+    /// Dense id for `hash`, assigning the lowest free id on first sight
+    /// (the next never-used id when the free list is empty — with
+    /// recycling off this is exactly the historical append-only order).
     #[inline]
     pub fn intern(&mut self, hash: BlockId) -> DenseBlockId {
-        let next = self.map.len();
-        match self.map.entry(hash) {
-            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
-            std::collections::hash_map::Entry::Vacant(e) => {
-                let id = DenseBlockId::try_from(next).expect("interner exhausted u32 id space");
-                *e.insert(id)
-            }
+        if let Some(&id) = self.map.get(&hash) {
+            return id;
         }
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.rev[id as usize] = hash;
+                id
+            }
+            None => {
+                let id = DenseBlockId::try_from(self.rev.len())
+                    .expect("interner exhausted u32 id space");
+                self.rev.push(hash);
+                id
+            }
+        };
+        self.map.insert(hash, id);
+        id
     }
 
     /// Intern a whole hash chain into a reused buffer (the per-arrival
@@ -72,13 +105,71 @@ impl BlockInterner {
         self.map.get(&hash).copied()
     }
 
-    /// Distinct hashes interned so far (== the dense id space in use).
+    /// Distinct hashes currently interned (== allocated dense ids).
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+
+    /// Size of the dense id space ever allocated (`0..id_space()` covers
+    /// every id that may appear downstream — the liveness bitset for
+    /// [`Self::recycle_epoch`] must span this range).
+    pub fn id_space(&self) -> usize {
+        self.rev.len()
+    }
+
+    /// Ids currently on the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Completed recycle epochs.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Total ids freed across all epochs.
+    pub fn freed_total(&self) -> u64 {
+        self.freed
+    }
+
+    /// Whether `id` is currently allocated (maps back to a live hash).
+    pub fn is_allocated(&self, id: DenseBlockId) -> bool {
+        self.rev.get(id as usize).is_some_and(|h| self.map.get(h) == Some(&id))
+    }
+
+    /// End an epoch: free every allocated id whose bit in `live` is
+    /// clear.  `live` is a bitset over `0..id_space()` (word `i/64`, bit
+    /// `i%64`; missing words read as all-dead).  The caller owns the
+    /// liveness definition — for the `Sim` an id is live iff it is
+    /// resident in some pool tier, which covers the `PrefixIndex` too
+    /// (the index holds exactly the pool-resident ids).  Returns the
+    /// number of ids freed this epoch.
+    pub fn recycle_epoch(&mut self, live: &[u64]) -> usize {
+        let before = self.free.len();
+        for id in 0..self.rev.len() {
+            let alive = (live.get(id / 64).copied().unwrap_or(0) >> (id % 64)) & 1 != 0;
+            if alive {
+                continue;
+            }
+            // Skip ids already on the free list (their rev entry is a
+            // stale hash that no longer maps back to them).
+            let hash = self.rev[id];
+            if self.map.get(&hash) != Some(&(id as DenseBlockId)) {
+                continue;
+            }
+            self.map.remove(&hash);
+            self.free.push(id as DenseBlockId);
+        }
+        let freed = self.free.len() - before;
+        // Keep the free list descending so pop() reuses lowest-first.
+        self.free.sort_unstable_by(|a, b| b.cmp(a));
+        self.epochs += 1;
+        self.freed += freed as u64;
+        freed
     }
 }
 
@@ -108,5 +199,80 @@ mod tests {
         it.intern_chain_into(&[20, 30], &mut buf);
         assert_eq!(buf, vec![1, 2]);
         assert_eq!(buf.capacity(), cap, "shorter chains must not shrink the scratch");
+    }
+
+    #[test]
+    fn recycle_frees_dead_ids_and_reuses_lowest_first() {
+        let mut it = BlockInterner::new();
+        for h in 100..108u64 {
+            it.intern(h);
+        }
+        assert_eq!(it.id_space(), 8);
+        // Only ids 2 and 5 (hashes 102/105) survive.
+        let live = [(1u64 << 2) | (1 << 5)];
+        let freed = it.recycle_epoch(&live);
+        assert_eq!(freed, 6);
+        assert_eq!(it.len(), 2);
+        assert_eq!(it.free_len(), 6);
+        assert_eq!(it.epochs(), 1);
+        assert_eq!(it.freed_total(), 6);
+        assert_eq!(it.lookup(102), Some(2));
+        assert_eq!(it.lookup(105), Some(5));
+        assert_eq!(it.lookup(100), None, "dead hash must be un-interned");
+        // New hashes reuse freed ids ascending; the id space stays flat.
+        assert_eq!(it.intern(200), 0);
+        assert_eq!(it.intern(201), 1);
+        assert_eq!(it.intern(202), 3);
+        assert_eq!(it.intern(203), 4);
+        assert_eq!(it.id_space(), 8, "recycling must not grow the id space");
+        // Live ids were untouched and stay stable.
+        assert_eq!(it.intern(102), 2);
+        assert_eq!(it.intern(105), 5);
+    }
+
+    #[test]
+    fn recycle_skips_free_list_entries_with_stale_hashes() {
+        let mut it = BlockInterner::new();
+        it.intern(1); // id 0
+        it.intern(2); // id 1
+        it.intern(3); // id 2
+        // Free ids 0 and 1; then hash 1 re-enters and takes id 0 back.
+        assert_eq!(it.recycle_epoch(&[1 << 2]), 2);
+        assert_eq!(it.intern(1), 0);
+        // Id 1 is still free: its rev entry (hash 2) is stale.  A second
+        // epoch with everything dead must not double-free it.
+        assert_eq!(it.recycle_epoch(&[0]), 2, "ids 0 and 2 freed, id 1 skipped");
+        assert_eq!(it.free_len(), 3);
+        assert!(it.is_empty());
+        // And all three come back ascending.
+        assert_eq!(it.intern(10), 0);
+        assert_eq!(it.intern(11), 1);
+        assert_eq!(it.intern(12), 2);
+        assert_eq!(it.id_space(), 3);
+    }
+
+    #[test]
+    fn allocation_probe_tracks_liveness() {
+        let mut it = BlockInterner::new();
+        it.intern(7); // id 0
+        assert!(it.is_allocated(0));
+        assert!(!it.is_allocated(1), "never-assigned id is not allocated");
+        it.recycle_epoch(&[0]);
+        assert!(!it.is_allocated(0), "freed id is not allocated");
+        it.intern(9);
+        assert!(it.is_allocated(0), "reused id is allocated again");
+    }
+
+    #[test]
+    fn empty_epoch_is_a_noop_on_mappings() {
+        let mut it = BlockInterner::new();
+        it.intern(5);
+        it.intern(6);
+        let freed = it.recycle_epoch(&[0b11]);
+        assert_eq!(freed, 0);
+        assert_eq!(it.len(), 2);
+        assert_eq!(it.epochs(), 1);
+        assert_eq!(it.lookup(5), Some(0));
+        assert_eq!(it.lookup(6), Some(1));
     }
 }

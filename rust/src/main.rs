@@ -4,6 +4,8 @@
 //!   gen-trace   — write a calibrated synthetic trace (published schema)
 //!   analyze     — trace statistics (Fig 5/6, Table 1 style)
 //!   simulate    — replay a trace through the Mooncake cluster simulator
+//!   replay      — stream trace file(s) through the simulator without
+//!                 materializing them (bounded memory, multi-tenant mixing)
 //!   baseline    — replay through the vLLM-like coupled baseline
 //!   serve       — live path: load AOT artifacts, serve prompts via PJRT
 
@@ -15,7 +17,7 @@ use mooncake::engine::{Engine, EngineConfig, GenRequest};
 use mooncake::kvcache::PolicyKind;
 use mooncake::runtime::Runtime;
 use mooncake::sim;
-use mooncake::trace::{gen, jsonl, stats};
+use mooncake::trace::{gen, jsonl, replay as trace_replay, stats};
 use mooncake::util::args::Args;
 use mooncake::util::rng::Rng;
 
@@ -25,11 +27,12 @@ fn main() -> Result<()> {
         Some("gen-trace") => gen_trace(&args),
         Some("analyze") => analyze(&args),
         Some("simulate") => simulate(&args),
+        Some("replay") => replay(&args),
         Some("baseline") => run_baseline(&args),
         Some("serve") => serve(&args),
         _ => {
             eprintln!(
-                "usage: mooncake <gen-trace|analyze|simulate|baseline|serve> [--options]\n\
+                "usage: mooncake <gen-trace|analyze|simulate|replay|baseline|serve> [--options]\n\
                  \n\
                  gen-trace --out trace.jsonl [--requests 23608] [--seed 42]\n\
                  analyze   --trace trace.jsonl\n\
@@ -38,6 +41,9 @@ fn main() -> Result<()> {
                  \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
                  \t[--rx-bw BYTES_PER_SEC] [--ssd-write-bw BYTES_PER_SEC]\n\
                  \t[--no-prefix-index]\n\
+                 replay    --traces a.jsonl[,b.jsonl,...] [--rates 1[,2,...]]\n\
+                 \t[--prefill 8] [--decode 8] [--policy ...] [--reject ...]\n\
+                 \t[--max-live N] [--epoch-blocks N] [--no-metrics]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -211,6 +217,94 @@ fn simulate(args: &Args) -> Result<()> {
             bank.queued_ms,
             bank.utilization(res.wall_ms, devices) * 100.0
         );
+    }
+    Ok(())
+}
+
+/// Streaming replay: admit requests straight from the trace file(s)
+/// without materializing them — the 10M-request path.  A single trace
+/// streams with its hashes untouched (same results as `simulate` on the
+/// same file at the same rate); several traces merge as tenants with
+/// per-tenant arrival-rate scales and FNV hash namespacing.
+fn replay(args: &Args) -> Result<()> {
+    let traces: Vec<String> =
+        args.get_or("traces", "trace.jsonl").split(',').map(str::to_string).collect();
+    let rates: Vec<f64> = match args.get("rates") {
+        None => vec![1.0; traces.len()],
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.parse::<f64>().map_err(|e| anyhow::anyhow!("bad --rates entry {x:?}: {e}"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    if rates.len() != traces.len() {
+        bail!("--rates has {} entries for {} traces", rates.len(), traces.len());
+    }
+    // Loud parsing for the bounded-memory knobs, same contract as the
+    // simulate knobs: a bad value must not silently run unbounded.
+    let parse_count = |key: &str| -> Result<Option<usize>> {
+        match args.get(key) {
+            None if args.has_flag(key) => bail!("--{key} requires a value (a positive count)"),
+            None => Ok(None),
+            Some(s) => match s.parse::<usize>() {
+                Ok(v) if v > 0 => Ok(Some(v)),
+                _ => bail!("invalid --{key} {s} (expected a positive count)"),
+            },
+        }
+    };
+    let cfg = SimConfig {
+        n_prefill: args.get_usize("prefill", 8),
+        n_decode: args.get_usize("decode", 8),
+        scheduling: parse_policy(&args.get_or("policy", "centric"))?,
+        rejection: parse_reject(&args.get_or("reject", "none"))?,
+        seed: args.get_u64("seed", 42),
+        max_live_requests: parse_count("max-live")?,
+        interner_epoch_blocks: parse_count("epoch-blocks")?,
+        retain_metrics: !args.has_flag("no-metrics"),
+        ..Default::default()
+    };
+    // A loader error (bad line, timestamp regression) aborts the replay
+    // with the reader's `file:line` diagnostic.
+    let die = |e: anyhow::Error| -> sim::Request {
+        eprintln!("{e}");
+        std::process::exit(2);
+    };
+    let t0 = std::time::Instant::now();
+    let res = if traces.len() == 1 {
+        let stream = trace_replay::ReplayStream::open(&traces[0], rates[0])?;
+        sim::run_streaming(&cfg, stream.map(|r| r.unwrap_or_else(die)))
+    } else {
+        let mix = trace_replay::ReplayMix::open(&traces, &rates)?;
+        sim::run_streaming(&cfg, mix.map(|r| r.unwrap_or_else(die)))
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let total = res.n_completed + res.n_rejected;
+    println!(
+        "replayed {total} requests ({} completed, {} rejected) in {wall:.2} s — {:.0} req/s",
+        res.n_completed,
+        res.n_rejected,
+        total as f64 / wall.max(1e-9)
+    );
+    println!(
+        "live peak:  {} requests{}",
+        res.live_peak,
+        cfg.max_live_requests.map(|c| format!(" (cap {c})")).unwrap_or_default()
+    );
+    println!(
+        "interner:   id space {} ({} recycle epochs freed {} ids)",
+        res.interner_id_space, res.interner_epochs, res.interner_freed
+    );
+    println!(
+        "simulated:  {:.0} s of cluster time, {} events, {} tokens decoded",
+        res.wall_ms / 1e3,
+        res.n_events,
+        res.decode_tokens_out
+    );
+    if cfg.retain_metrics {
+        let rep = res.report(&cfg);
+        println!("TTFT:       mean {:.0} ms, P90 {:.0} ms", rep.ttft_mean, rep.ttft_p90);
+        println!("SLO attainment: {:.1}%", rep.slo_attainment * 100.0);
     }
     Ok(())
 }

@@ -4,6 +4,17 @@
 //! as the testbed substitute.  Every §8 experiment is a [`Sim::run`] over
 //! some (config, trace) point.
 //!
+//! The event loop **streams**: [`Sim::run_stream`] admits requests from
+//! an iterator (arrivals never enter the event heap) and retires
+//! per-request state as requests finish, so a 10M-request replay holds
+//! only the live window in memory — `max_live_requests` bounds it
+//! explicitly (arrivals defer under backpressure), `retain_metrics:
+//! false` drops per-request result rows, and `interner_epoch_blocks`
+//! keeps the dense block-id space flat via epoch recycling (see
+//! `kvcache::intern`).  [`Sim::run`] materializes the trace and
+//! delegates; with the knobs at their defaults the two paths are
+//! bit-for-bit identical (pinned in `integration.rs`).
+//!
 //! Prefill execution is **event-driven**: Conductor admits a job onto
 //! the group's FIFO queues, a `PrefillStart` event fires when its gate
 //! (remote prefix fetch and/or local SSD staging, both reserved on the
@@ -57,7 +68,6 @@ impl Request {
 
 #[derive(Debug, Clone)]
 enum EventKind {
-    Arrival(usize),
     /// A job's gate passed (fetch landed): try to start queued work.
     PrefillStart { jid: JobId },
     /// A running prefill job completed.
@@ -137,6 +147,24 @@ pub struct SimResult {
     /// Discrete events processed over the run (the `sched_throughput`
     /// bench's events/sec denominator).
     pub n_events: u64,
+    /// Requests completed (accumulated even when `retain_metrics:
+    /// false` drops the per-request rows).
+    pub n_completed: u64,
+    /// Requests rejected at any point — arrival admission, infeasible
+    /// scheduling, or the decode-side double-check (also accumulated
+    /// independently of `retain_metrics`).
+    pub n_rejected: u64,
+    /// High-water mark of simultaneously live (admitted, unfinished)
+    /// requests — the streaming loop's flat-memory proxy, bounded by
+    /// `max_live_requests`.
+    pub live_peak: usize,
+    /// Interner recycle epochs completed (`interner_epoch_blocks`).
+    pub interner_epochs: u64,
+    /// Dense block ids freed across all recycle epochs.
+    pub interner_freed: u64,
+    /// Dense-id space high-water mark (`BlockInterner::id_space`) — with
+    /// recycling on this stays bounded under unbounded distinct blocks.
+    pub interner_id_space: usize,
 }
 
 impl SimResult {
@@ -203,6 +231,16 @@ pub struct Sim<'a> {
     /// positive finite time or the re-armed event would never advance
     /// the clock (infinite loop at zero, time travel when negative).
     demote_after: Option<f64>,
+    n_completed: u64,
+    n_rejected: u64,
+    live_peak: usize,
+    /// Reused liveness bitset for interner recycling (one bit per dense
+    /// id, marked from the pools).
+    mark_buf: Vec<u64>,
+    /// Live-block count at which the next recycle scan runs (hysteresis
+    /// above `interner_epoch_blocks` so a mostly-live epoch does not
+    /// re-scan on every arrival).
+    epoch_trigger: usize,
 }
 
 impl<'a> Sim<'a> {
@@ -239,6 +277,11 @@ impl<'a> Sim<'a> {
             n_events: 0,
             real_events: 0,
             demote_after: cfg.demote_after_ms.filter(|&x| x > 0.0 && x.is_finite()),
+            n_completed: 0,
+            n_rejected: 0,
+            live_peak: 0,
+            mark_buf: Vec::new(),
+            epoch_trigger: 0,
             perf,
         }
     }
@@ -328,8 +371,9 @@ impl<'a> Sim<'a> {
         }
     }
 
-    fn handle_arrival(&mut self, req: &Request) {
-        let now = req.arrival;
+    /// Admit one request at time `now` (its arrival time, except when a
+    /// `max_live_requests` cap deferred it past that).
+    fn handle_arrival(&mut self, req: &Request, now: TimeMs) {
         // §7 admission control.
         if !self.admission.admit_at_arrival(
             self.cfg,
@@ -340,9 +384,12 @@ impl<'a> Sim<'a> {
             req.input,
             now,
         ) {
-            self.metrics.push(RequestMetrics::rejected(
-                req.rid, now, req.input, req.output, false,
-            ));
+            self.n_rejected += 1;
+            if self.cfg.retain_metrics {
+                self.metrics.push(RequestMetrics::rejected(
+                    req.rid, now, req.input, req.output, false,
+                ));
+            }
             return;
         }
         // Algorithm 1, on *interned* ids: this is the one boundary where
@@ -372,9 +419,12 @@ impl<'a> Sim<'a> {
         self.chain_buf = sched.hash_ids;
         match outcome {
             Err(_) => {
-                self.metrics.push(RequestMetrics::rejected(
-                    req.rid, now, req.input, req.output, false,
-                ));
+                self.n_rejected += 1;
+                if self.cfg.retain_metrics {
+                    self.metrics.push(RequestMetrics::rejected(
+                        req.rid, now, req.input, req.output, false,
+                    ));
+                }
             }
             Ok(p) => {
                 // SSD staging reads are observable tier traffic.  Both
@@ -416,6 +466,7 @@ impl<'a> Sim<'a> {
                         stream_end: f64::NAN,
                     },
                 );
+                self.live_peak = self.live_peak.max(self.pending.len());
                 self.in_flight.insert(
                     req.rid,
                     InFlight { kv_arrive: p.kv_arrive, decode: p.decode, ctx_tokens: req.input },
@@ -453,7 +504,12 @@ impl<'a> Sim<'a> {
         let ok = self.admission.admit_at_decode(self.cfg, &self.perf, &self.decodes[d], now);
         if !ok {
             let p = self.pending.remove(&rid).unwrap();
-            self.metrics.push(RequestMetrics::rejected(rid, p.arrival, p.input, p.output, true));
+            self.n_rejected += 1;
+            if self.cfg.retain_metrics {
+                self.metrics.push(RequestMetrics::rejected(
+                    rid, p.arrival, p.input, p.output, true,
+                ));
+            }
             return;
         }
         self.decodes[d].enqueue(rid, ctx, out, now);
@@ -470,27 +526,79 @@ impl<'a> Sim<'a> {
         for f in done {
             let p = self.pending.remove(&f.rid).expect("finish for unknown request");
             self.admission.observe_decode_duration(now - (p.arrival + p.ttft));
-            self.metrics.push(RequestMetrics {
-                id: f.rid,
-                arrival: p.arrival,
-                input_tokens: p.input,
-                output_tokens: p.output,
-                outcome: Outcome::Completed,
-                ttft_ms: p.ttft,
-                est_ttft_ms: p.est_ttft,
-                max_tbt_ms: f.max_gap,
-                mean_tbt_ms: f.mean_gap,
-                generated: f.generated,
-                finish: now,
-            });
+            self.n_completed += 1;
+            if self.cfg.retain_metrics {
+                self.metrics.push(RequestMetrics {
+                    id: f.rid,
+                    arrival: p.arrival,
+                    input_tokens: p.input,
+                    output_tokens: p.output,
+                    outcome: Outcome::Completed,
+                    ttft_ms: p.ttft,
+                    est_ttft_ms: p.est_ttft,
+                    max_tbt_ms: f.max_gap,
+                    mean_tbt_ms: f.mean_gap,
+                    generated: f.generated,
+                    finish: now,
+                });
+            }
         }
         self.start_decode_step(d, now);
     }
 
+    /// Epoch-based interner recycling (`interner_epoch_blocks`): once
+    /// live interned blocks exceed the knob, mark every dense id still
+    /// resident in some pool tier and recycle the rest (see
+    /// [`BlockInterner::recycle_epoch`]), keeping the dense-id space —
+    /// and the prefix index's flat residency table — bounded under
+    /// unbounded distinct trace blocks.  Runs at the arrival boundary,
+    /// *before* the new request's chain is interned: between events
+    /// nothing outside the pools (and the index, which mirrors them)
+    /// retains dense ids, so pool residency *is* liveness.
+    fn maybe_recycle(&mut self) {
+        let Some(cap) = self.cfg.interner_epoch_blocks else {
+            return;
+        };
+        let cap = cap.max(1);
+        if self.interner.len() < self.epoch_trigger.max(cap) {
+            return;
+        }
+        self.mark_buf.clear();
+        self.mark_buf.resize(self.interner.id_space().div_ceil(64), 0);
+        for inst in &self.prefill.instances {
+            for b in inst.pool.iter_blocks() {
+                self.mark_buf[b as usize / 64] |= 1u64 << (b as usize % 64);
+            }
+        }
+        // Paranoia: a recycled (unmarked, allocated) id must have no
+        // holders left in the prefix index either.
+        if self.cfg.paranoia.active() {
+            if let Some(idx) = &self.index {
+                for id in 0..self.interner.id_space() as DenseBlockId {
+                    let marked = (self.mark_buf[id as usize / 64] >> (id as usize % 64)) & 1 != 0;
+                    if !marked && self.interner.is_allocated(id) {
+                        assert!(
+                            idx.holders(id).is_empty(),
+                            "recycling dense id {id} still held in the prefix index"
+                        );
+                    }
+                }
+            }
+        }
+        self.interner.recycle_epoch(&self.mark_buf);
+        // Hysteresis: wait for a quarter-cap of fresh blocks before
+        // scanning again (a mostly-live epoch frees little — re-running
+        // on every arrival would be quadratic).
+        self.epoch_trigger = self.interner.len() + (cap / 4).max(1);
+    }
+
     /// Replay `trace` to completion; `speedup` rescales arrival times
-    /// (2.0 = the paper's 2× overload replay).
-    pub fn run(mut self, trace: &[TraceRecord], speedup: f64) -> SimResult {
-        let requests: Vec<Request> = trace
+    /// (2.0 = the paper's 2× overload replay).  Materializes the trace
+    /// as a time-sorted request list and delegates to the streaming
+    /// loop — the two paths are bit-for-bit identical (pinned in
+    /// `integration.rs`).
+    pub fn run(self, trace: &[TraceRecord], speedup: f64) -> SimResult {
+        let mut requests: Vec<Request> = trace
             .iter()
             .enumerate()
             .map(|(i, r)| {
@@ -499,16 +607,67 @@ impl<'a> Sim<'a> {
                 req
             })
             .collect();
-        for (i, r) in requests.iter().enumerate() {
-            self.push(r.arrival, EventKind::Arrival(i));
-        }
+        // The streaming loop takes arrivals in time order; the stable
+        // sort keeps trace order among ties — exactly the old arrival
+        // heap's tie-break (push order == trace index).
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        self.run_stream(requests)
+    }
+
+    /// Replay a streaming arrival source to completion.  Requests must
+    /// come in non-decreasing `arrival` order (`trace::replay` readers
+    /// enforce monotone timestamps at parse time); arrivals never enter
+    /// the event heap, so only the live window plus in-flight state is
+    /// ever held and memory stays flat over arbitrarily long traces.
+    pub fn run_stream<I>(mut self, arrivals: I) -> SimResult
+    where
+        I: IntoIterator<Item = Request>,
+    {
+        let mut arrivals = arrivals.into_iter();
+        let mut next_arr = arrivals.next();
         self.push(0.0, EventKind::Sample);
         if let Some(idle) = self.demote_after {
             self.push(idle, EventKind::DemoteSweep);
         }
-
+        let cap = self.cfg.max_live_requests.unwrap_or(usize::MAX).max(1);
+        let mut last_arrival = f64::NEG_INFINITY;
         let mut now = 0.0f64;
-        while let Some(ev) = self.events.pop() {
+        loop {
+            // Take the next arrival when it is due no later than the
+            // earliest queued event — ties go to the arrival, matching
+            // the materialized path where arrival events carried the
+            // lowest orders — unless live state is at the cap
+            // (backpressure defers admission until something retires;
+            // every live request keeps an event chain in flight, so the
+            // heap cannot drain while the cap is binding).
+            let take_arrival = match (&next_arr, self.events.peek()) {
+                (Some(_), _) if self.pending.len() >= cap => false,
+                (Some(r), Some(ev)) => r.arrival <= ev.t,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if take_arrival {
+                let req = next_arr.take().expect("checked by take_arrival");
+                next_arr = arrivals.next();
+                assert!(
+                    req.arrival >= last_arrival,
+                    "streaming arrivals must be time-ordered: {} after {last_arrival}",
+                    req.arrival
+                );
+                last_arrival = req.arrival;
+                // A deferred (cap-blocked) arrival is admitted late: the
+                // clock never runs backwards.
+                now = now.max(req.arrival);
+                self.n_events += 1;
+                if self.n_events % 1024 == 0 {
+                    self.validate_index();
+                }
+                self.maybe_recycle();
+                self.handle_arrival(&req, now);
+                continue;
+            }
+            let Some(ev) = self.events.pop() else { break };
+            let arrivals_left = next_arr.is_some();
             now = ev.t;
             self.n_events += 1;
             if !matches!(ev.kind, EventKind::Sample | EventKind::DemoteSweep) {
@@ -518,10 +677,6 @@ impl<'a> Sim<'a> {
                 self.validate_index();
             }
             match ev.kind {
-                EventKind::Arrival(i) => {
-                    let req = requests[i].clone();
-                    self.handle_arrival(&req);
-                }
                 EventKind::PrefillStart { jid: _ } => {
                     self.pump_prefill(now);
                 }
@@ -555,20 +710,22 @@ impl<'a> Sim<'a> {
                         );
                     }
                     // Low priority: keep sweeping only while real work
-                    // remains.
-                    if self.real_events > 0 {
+                    // (or an undrained arrival stream) remains.
+                    if self.real_events > 0 || arrivals_left {
                         self.push(now + idle, EventKind::DemoteSweep);
                     }
                 }
                 EventKind::Sample => {
                     self.sample_loads(now);
-                    // Keep sampling while real work remains.
-                    if self.real_events > 0 {
+                    // Keep sampling while real work (or an undrained
+                    // arrival stream) remains.
+                    if self.real_events > 0 || arrivals_left {
                         self.push(now + self.sample_interval, EventKind::Sample);
                     }
                 }
             }
         }
+        assert!(next_arr.is_none(), "arrival stream not drained");
         assert!(self.pending.is_empty(), "requests stuck in flight");
         assert_eq!(self.prefill.outstanding(), 0, "prefill jobs stuck in queue");
         self.validate_index();
@@ -592,6 +749,12 @@ impl<'a> Sim<'a> {
             ssd_loaded_bytes_by_node: self.ssd_loaded_bytes_by_node,
             decode_tokens_out: self.decodes.iter().map(|d| d.tokens_out).sum(),
             n_events: self.n_events,
+            n_completed: self.n_completed,
+            n_rejected: self.n_rejected,
+            live_peak: self.live_peak,
+            interner_epochs: self.interner.epochs(),
+            interner_freed: self.interner.freed_total(),
+            interner_id_space: self.interner.id_space(),
         }
     }
 }
@@ -599,6 +762,12 @@ impl<'a> Sim<'a> {
 /// Convenience: run a config over a trace.
 pub fn run(cfg: &SimConfig, trace: &[TraceRecord], speedup: f64) -> SimResult {
     Sim::new(cfg).run(trace, speedup)
+}
+
+/// Convenience: run a config over a streaming arrival source (requests
+/// in non-decreasing `arrival` order, e.g. from `trace::replay`).
+pub fn run_streaming(cfg: &SimConfig, arrivals: impl IntoIterator<Item = Request>) -> SimResult {
+    Sim::new(cfg).run_stream(arrivals)
 }
 
 #[cfg(test)]
@@ -737,5 +906,79 @@ mod tests {
         for (x, y) in ta.iter().zip(&tb) {
             assert!((x.is_nan() && y.is_nan()) || x == y);
         }
+    }
+
+    #[test]
+    fn live_cap_bounds_in_flight_state() {
+        // A compressed replay on a tiny cluster piles up live requests;
+        // `max_live_requests` must hold the high-water mark at the cap
+        // by deferring arrivals, without losing any request.
+        let trace = small_trace(300);
+        let base = SimConfig { n_prefill: 2, n_decode: 2, ..Default::default() };
+        let uncapped = run(&base, &trace, 20.0);
+        assert!(uncapped.live_peak > 8, "test premise: uncapped peak {} > 8", uncapped.live_peak);
+        let capped_cfg = SimConfig { max_live_requests: Some(8), ..base };
+        let capped = run(&capped_cfg, &trace, 20.0);
+        assert!(capped.live_peak <= 8, "cap violated: {}", capped.live_peak);
+        assert_eq!(capped.metrics.len(), 300, "every request must still be accounted for");
+        assert_eq!(capped.n_completed + capped.n_rejected, 300);
+        // The totals agree with the per-request rows.
+        let done = capped.metrics.iter().filter(|m| m.outcome == Outcome::Completed).count();
+        assert_eq!(done as u64, capped.n_completed);
+    }
+
+    #[test]
+    fn retain_metrics_off_keeps_aggregates() {
+        let trace = small_trace(200);
+        let with = SimConfig::default();
+        let without = SimConfig { retain_metrics: false, ..Default::default() };
+        let a = run(&with, &trace, 1.0);
+        let b = run(&without, &trace, 1.0);
+        assert!(b.metrics.is_empty(), "retain_metrics: false must drop per-request rows");
+        assert_eq!(a.metrics.len(), 200);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(a.n_rejected, b.n_rejected);
+        assert_eq!(a.n_events, b.n_events);
+        assert_eq!(a.decode_tokens_out, b.decode_tokens_out);
+        assert_eq!(a.tier, b.tier);
+        assert_eq!(a.wall_ms.to_bits(), b.wall_ms.to_bits());
+    }
+
+    #[test]
+    fn epoch_recycling_bounds_the_dense_id_space() {
+        // Every request brings fresh distinct blocks (the sustained-
+        // replay regime): append-only interning would grow the id space
+        // to ~1600; epoch recycling must keep it near pool capacity.
+        let trace: Vec<TraceRecord> = (0..400u64)
+            .map(|i| TraceRecord {
+                timestamp: i * 500,
+                input_length: 4 * crate::trace::BLOCK_TOKENS,
+                output_length: 4,
+                hash_ids: (0..4).map(|b| 1_000_000 + i * 4 + b).collect(),
+            })
+            .collect();
+        let cfg = SimConfig {
+            n_prefill: 2,
+            n_decode: 2,
+            cache_capacity_blocks: Some(16),
+            ssd_capacity_blocks: Some(16),
+            interner_epoch_blocks: Some(64),
+            ..Default::default()
+        };
+        let res = run(&cfg, &trace, 1.0);
+        assert_eq!(res.n_completed, 400);
+        assert!(res.interner_epochs > 0, "recycling never triggered");
+        assert!(res.interner_freed > 1_000, "freed only {} ids", res.interner_freed);
+        assert!(
+            res.interner_id_space < 256,
+            "id space {} not bounded (1600 distinct blocks streamed)",
+            res.interner_id_space
+        );
+        // Off by default: the append-only path interns every block.
+        let plain = SimConfig { interner_epoch_blocks: None, ..cfg };
+        let base = run(&plain, &trace, 1.0);
+        assert_eq!(base.interner_id_space, 1600);
+        assert_eq!(base.interner_epochs, 0);
+        assert_eq!(base.n_completed, res.n_completed, "recycling must not change outcomes");
     }
 }

@@ -4,6 +4,7 @@
 
 pub mod gen;
 pub mod jsonl;
+pub mod replay;
 pub mod stats;
 
 use crate::BlockId;

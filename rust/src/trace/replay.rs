@@ -1,0 +1,391 @@
+//! Streaming replay of the published `mooncake_trace.jsonl` schema.
+//!
+//! [`super::jsonl::load`] materializes a whole trace — fine for the §8
+//! experiment slices, impossible for the 10M-request production replay
+//! the paper's headline numbers come from.  This module reads records
+//! **incrementally** so `sim::Sim::run_stream` can admit requests from
+//! the iterator and hold only the live window in memory:
+//!
+//! * [`ReplayReader`] — line-at-a-time parser with `file:line`
+//!   diagnostics and a monotone-timestamp check (the streaming loop
+//!   cannot sort, so out-of-order input is a hard error here rather
+//!   than a silent reorder);
+//! * [`ReplayStream`] — one tenant, arrival-rate scaling only: block
+//!   hashes pass through untouched, so a single-trace streaming run is
+//!   bit-for-bit the batch `sim::run` on the same file;
+//! * [`ReplayMix`] — k-way merge of several traces ("multi-tenant"
+//!   mixing): each tenant gets its own rate scale and its block hashes
+//!   are FNV-folded with the tenant index so tenants never share
+//!   prefixes by accidental hash collision (trace hash ids are
+//!   file-local, not global).
+//!
+//! Rate semantics match `sim::run`'s `speedup`: `rate = 2.0` compresses
+//! arrivals 2× (the paper's 2× overload replay).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{jsonl, TraceRecord};
+use crate::sim::Request;
+use crate::{RequestId, TimeMs};
+
+/// Incremental `mooncake_trace.jsonl` reader.  Yields records in file
+/// order; blank lines are skipped; malformed lines and timestamp
+/// regressions yield an `Err` tagged `path:line: …`.
+pub struct ReplayReader {
+    path: String,
+    lines: Lines<BufReader<File>>,
+    /// Physical lines consumed so far (1-based in diagnostics).
+    line_no: u64,
+    last_ts: Option<u64>,
+}
+
+impl ReplayReader {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let f = File::open(path).map_err(|e| anyhow!("open trace {path:?}: {e}"))?;
+        Ok(ReplayReader {
+            path: path.display().to_string(),
+            lines: BufReader::new(f).lines(),
+            line_no: 0,
+            last_ts: None,
+        })
+    }
+
+    /// The path `file:line` diagnostics refer to.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+impl Iterator for ReplayReader {
+    type Item = Result<TraceRecord>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            let line = match self.lines.next()? {
+                Ok(l) => l,
+                Err(e) => return Some(Err(anyhow!("{}:{}: {e}", self.path, self.line_no + 1))),
+            };
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = match jsonl::parse_record(&line) {
+                Ok(r) => r,
+                Err(e) => return Some(Err(anyhow!("{}:{}: {e}", self.path, self.line_no))),
+            };
+            if let Some(last) = self.last_ts {
+                if rec.timestamp < last {
+                    return Some(Err(anyhow!(
+                        "{}:{}: non-monotone timestamp {} after {}",
+                        self.path,
+                        self.line_no,
+                        rec.timestamp,
+                        last
+                    )));
+                }
+            }
+            self.last_ts = Some(rec.timestamp);
+            return Some(Ok(rec));
+        }
+    }
+}
+
+/// `rate` must be a positive finite arrival-rate multiplier.
+fn check_rate(rate: f64) -> Result<f64> {
+    if rate > 0.0 && rate.is_finite() {
+        Ok(rate)
+    } else {
+        bail!("arrival-rate scale must be positive and finite, got {rate}");
+    }
+}
+
+fn scaled_arrival(timestamp: u64, rate: f64) -> TimeMs {
+    timestamp as TimeMs / rate
+}
+
+/// Fold a tenant index into a block hash (FNV-1a over both, the same
+/// construction as `kvcache::chain_hashes`) so distinct tenants occupy
+/// disjoint hash namespaces in a [`ReplayMix`].
+fn namespace_hash(tenant: u32, hash: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tenant.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for b in hash.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Single-tenant streaming request source: rate scaling only, hashes
+/// untouched, sequential rids in arrival order.  Fuses after the first
+/// error.
+pub struct ReplayStream {
+    reader: ReplayReader,
+    rate: f64,
+    next_rid: RequestId,
+    done: bool,
+}
+
+impl ReplayStream {
+    pub fn new(reader: ReplayReader, rate: f64) -> Result<Self> {
+        Ok(ReplayStream { reader, rate: check_rate(rate)?, next_rid: 0, done: false })
+    }
+
+    pub fn open<P: AsRef<Path>>(path: P, rate: f64) -> Result<Self> {
+        Self::new(ReplayReader::open(path)?, rate)
+    }
+}
+
+impl Iterator for ReplayStream {
+    type Item = Result<Request>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        match self.reader.next()? {
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+            Ok(rec) => {
+                let rid = self.next_rid;
+                self.next_rid += 1;
+                Some(Ok(Request {
+                    rid,
+                    arrival: scaled_arrival(rec.timestamp, self.rate),
+                    input: rec.input_length,
+                    output: rec.output_length.max(1),
+                    hash_ids: rec.hash_ids,
+                }))
+            }
+        }
+    }
+}
+
+struct TenantStream {
+    reader: ReplayReader,
+    rate: f64,
+    tenant: u32,
+    head: Option<TraceRecord>,
+    exhausted: bool,
+}
+
+/// K-way merge of per-tenant trace streams into one time-ordered
+/// request source.  Each tenant's timestamps are scaled by its own
+/// rate; the merge picks the earliest scaled arrival (ties go to the
+/// lowest tenant index), assigns sequential rids, and FNV-namespaces
+/// every block hash with the tenant index.  Fuses after the first
+/// error from any tenant.
+pub struct ReplayMix {
+    streams: Vec<TenantStream>,
+    next_rid: RequestId,
+    done: bool,
+}
+
+impl ReplayMix {
+    /// `sources` pairs each tenant's reader with its arrival-rate scale;
+    /// tenant indices follow the vector order.
+    pub fn new(sources: Vec<(ReplayReader, f64)>) -> Result<Self> {
+        let mut streams = Vec::with_capacity(sources.len());
+        for (tenant, (reader, rate)) in sources.into_iter().enumerate() {
+            streams.push(TenantStream {
+                reader,
+                rate: check_rate(rate)?,
+                tenant: u32::try_from(tenant).expect("tenant index fits u32"),
+                head: None,
+                exhausted: false,
+            });
+        }
+        Ok(ReplayMix { streams, next_rid: 0, done: false })
+    }
+
+    /// Open every path with its rate (convenience for the CLI).
+    pub fn open<P: AsRef<Path>>(paths: &[P], rates: &[f64]) -> Result<Self> {
+        if paths.is_empty() {
+            bail!("replay mix needs at least one trace");
+        }
+        if paths.len() != rates.len() {
+            bail!("{} traces but {} rates", paths.len(), rates.len());
+        }
+        let mut sources = Vec::with_capacity(paths.len());
+        for (p, &r) in paths.iter().zip(rates) {
+            sources.push((ReplayReader::open(p)?, r));
+        }
+        Self::new(sources)
+    }
+}
+
+impl Iterator for ReplayMix {
+    type Item = Result<Request>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        // Refill every empty head so the minimum is over all tenants.
+        for s in &mut self.streams {
+            if s.head.is_none() && !s.exhausted {
+                match s.reader.next() {
+                    None => s.exhausted = true,
+                    Some(Err(e)) => {
+                        self.done = true;
+                        return Some(Err(e));
+                    }
+                    Some(Ok(rec)) => s.head = Some(rec),
+                }
+            }
+        }
+        // Earliest scaled arrival wins; ties go to the lowest tenant.
+        let mut best: Option<(usize, TimeMs)> = None;
+        for (i, s) in self.streams.iter().enumerate() {
+            if let Some(rec) = &s.head {
+                let arr = scaled_arrival(rec.timestamp, s.rate);
+                if best.is_none_or(|(_, t)| arr < t) {
+                    best = Some((i, arr));
+                }
+            }
+        }
+        let (i, arrival) = best?;
+        let rec = self.streams[i].head.take().expect("picked a live head");
+        let tenant = self.streams[i].tenant;
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        Some(Ok(Request {
+            rid,
+            arrival,
+            input: rec.input_length,
+            output: rec.output_length.max(1),
+            hash_ids: rec.hash_ids.iter().map(|&h| namespace_hash(tenant, h)).collect(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_trace(name: &str, body: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn reader_streams_records_in_order() {
+        let path = write_trace(
+            "replay_reader_ok.jsonl",
+            concat!(
+                r#"{"timestamp": 0, "input_length": 600, "output_length": 2, "hash_ids": [1, 2]}"#,
+                "\n\n",
+                r#"{"timestamp": 50, "input_length": 512, "output_length": 1, "hash_ids": [1]}"#,
+                "\n",
+            ),
+        );
+        let recs: Vec<TraceRecord> =
+            ReplayReader::open(&path).unwrap().collect::<Result<_>>().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].hash_ids, vec![1, 2]);
+        assert_eq!(recs[1].timestamp, 50);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn non_monotone_timestamp_is_tagged_with_file_and_line() {
+        let path = write_trace(
+            "replay_reader_mono.jsonl",
+            concat!(
+                r#"{"timestamp": 100, "input_length": 10, "output_length": 1, "hash_ids": []}"#,
+                "\n",
+                r#"{"timestamp": 99, "input_length": 10, "output_length": 1, "hash_ids": []}"#,
+                "\n",
+            ),
+        );
+        let mut r = ReplayReader::open(&path).unwrap();
+        assert!(r.next().unwrap().is_ok());
+        let err = r.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains(":2:"), "line number missing: {err}");
+        assert!(err.contains("non-monotone"), "wrong diagnostic: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stream_scales_arrivals_and_keeps_hashes() {
+        let path = write_trace(
+            "replay_stream_rate.jsonl",
+            concat!(
+                r#"{"timestamp": 1000, "input_length": 600, "output_length": 2, "hash_ids": [7]}"#,
+                "\n",
+            ),
+        );
+        let reqs: Vec<Request> =
+            ReplayStream::open(&path, 4.0).unwrap().collect::<Result<_>>().unwrap();
+        assert_eq!(reqs[0].arrival, 250.0);
+        assert_eq!(reqs[0].hash_ids, vec![7], "single-tenant hashes must pass through");
+        assert!(ReplayStream::open(&path, 0.0).is_err());
+        assert!(ReplayStream::open(&path, f64::NAN).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mix_merges_time_ordered_and_namespaces_tenants() {
+        let a = write_trace(
+            "replay_mix_a.jsonl",
+            concat!(
+                r#"{"timestamp": 0, "input_length": 600, "output_length": 1, "hash_ids": [9]}"#,
+                "\n",
+                r#"{"timestamp": 200, "input_length": 600, "output_length": 1, "hash_ids": [9]}"#,
+                "\n",
+            ),
+        );
+        let b = write_trace(
+            "replay_mix_b.jsonl",
+            concat!(
+                r#"{"timestamp": 0, "input_length": 600, "output_length": 1, "hash_ids": [9]}"#,
+                "\n",
+                r#"{"timestamp": 300, "input_length": 600, "output_length": 1, "hash_ids": [9]}"#,
+                "\n",
+            ),
+        );
+        // Tenant 1 runs at 2× rate: its t=300 lands at 150, between
+        // tenant 0's 0 and 200; the t=0 tie goes to tenant 0.
+        let mix = ReplayMix::open(&[&a, &b], &[1.0, 2.0]).unwrap();
+        let reqs: Vec<Request> = mix.collect::<Result<_>>().unwrap();
+        let arrivals: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+        assert_eq!(arrivals, vec![0.0, 0.0, 150.0, 200.0]);
+        assert_eq!(reqs.iter().map(|r| r.rid).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // Same file-local hash id, different tenants ⇒ different blocks.
+        assert_eq!(reqs[0].hash_ids[0], namespace_hash(0, 9));
+        assert_eq!(reqs[1].hash_ids[0], namespace_hash(1, 9));
+        assert_ne!(reqs[0].hash_ids[0], reqs[1].hash_ids[0]);
+        // And tenant 0's two requests share their block (prefix reuse
+        // survives namespacing within a tenant).
+        assert_eq!(reqs[0].hash_ids[0], reqs[3].hash_ids[0]);
+        std::fs::remove_file(a).ok();
+        std::fs::remove_file(b).ok();
+    }
+
+    #[test]
+    fn mix_rejects_mismatched_rates() {
+        let a = write_trace(
+            "replay_mix_len.jsonl",
+            concat!(
+                r#"{"timestamp": 0, "input_length": 1, "output_length": 1, "hash_ids": []}"#,
+                "\n",
+            ),
+        );
+        assert!(ReplayMix::open(&[&a], &[1.0, 2.0]).is_err());
+        assert!(ReplayMix::open::<&std::path::PathBuf>(&[], &[]).is_err());
+        std::fs::remove_file(a).ok();
+    }
+}

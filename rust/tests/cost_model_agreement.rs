@@ -25,6 +25,14 @@ fn assert_agreement(
     min_completed: usize,
 ) -> sim::SimResult {
     let res = sim::run(cfg, trace, speedup);
+    check_agreement(&res, cfg, min_completed);
+    res
+}
+
+/// The per-request tolerance check on an already-produced result, so
+/// streaming-replay scenarios (which drive `sim::run_streaming`
+/// themselves) share the exact same bound.
+fn check_agreement(res: &sim::SimResult, cfg: &SimConfig, min_completed: usize) {
     let mut checked = 0;
     for m in res.metrics.iter().filter(|m| m.outcome == Outcome::Completed) {
         assert!(m.est_ttft_ms.is_finite(), "request {} lost its estimate", m.id);
@@ -49,7 +57,6 @@ fn assert_agreement(
         "mean abs estimate drift {} ms exceeds 1 ms",
         rep.ttft_est_mae
     );
-    res
 }
 
 #[test]
@@ -83,6 +90,47 @@ fn estimates_match_under_admission_control() {
         ..Default::default()
     };
     assert_agreement(&cfg, &trace(300), 4.0, 50);
+}
+
+#[test]
+fn estimates_hold_on_sustained_streaming_replay_with_early_rejection() {
+    // Sustained overloaded replay through the bounded-memory streaming
+    // loop with §7.2 early rejection live at the arrival boundary.
+    // Decode slots are scarce (2 instances × batch 8) against a ~4×
+    // oversubscribed arrival rate, so the decode backlog term drives
+    // admission back and forth across the 0.9 load threshold: a steady
+    // interleaving of admitted and rejected arrivals for minutes of
+    // simulated time — and every admitted request's TTFT estimate must
+    // still land within 1 ms + 1%, with the interner recycling ids
+    // underneath the whole run.
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        rejection: RejectionPolicy::Early,
+        max_decode_batch: 8,
+        overload_threshold: 0.9,
+        cache_capacity_blocks: Some(2_000),
+        ssd_capacity_blocks: Some(4_000),
+        max_live_requests: Some(48),
+        interner_epoch_blocks: Some(1_024),
+        ..Default::default()
+    };
+    let mut reqs: Vec<sim::Request> = trace(2_000)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut req = sim::Request::from_trace(i as u64, r);
+            req.arrival /= 4.0;
+            req
+        })
+        .collect();
+    reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let res = sim::run_streaming(&cfg, reqs.into_iter());
+    check_agreement(&res, &cfg, 200);
+    assert!(res.rejected_at_arrival > 0, "early rejection never engaged");
+    assert_eq!(res.n_completed + res.n_rejected, 2_000, "requests went missing");
+    assert!(res.live_peak <= 48, "live cap breached: {}", res.live_peak);
+    assert!(res.interner_epochs > 0, "sustained replay must trigger id recycling");
 }
 
 #[test]

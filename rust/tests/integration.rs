@@ -10,6 +10,7 @@ use mooncake::model::PerfModel;
 use mooncake::sim;
 use mooncake::trace::gen::{self, TraceGenConfig};
 use mooncake::trace::{jsonl, stats};
+use mooncake::verify::Paranoia;
 
 fn trace(n: usize) -> Vec<mooncake::trace::TraceRecord> {
     gen::generate(&TraceGenConfig { n_requests: n, duration_ms: 1_200_000, ..Default::default() })
@@ -185,6 +186,12 @@ fn assert_runs_identical(a: &sim::SimResult, b: &sim::SimResult) {
     assert_eq!(a.ssd_loaded_bytes_by_node, b.ssd_loaded_bytes_by_node);
     assert_eq!(a.decode_tokens_out, b.decode_tokens_out);
     assert_eq!(a.n_events, b.n_events);
+    assert_eq!(a.n_completed, b.n_completed);
+    assert_eq!(a.n_rejected, b.n_rejected);
+    assert_eq!(a.live_peak, b.live_peak);
+    assert_eq!(a.interner_epochs, b.interner_epochs);
+    assert_eq!(a.interner_freed, b.interner_freed);
+    assert_eq!(a.interner_id_space, b.interner_id_space);
     assert_eq!(a.resources, b.resources);
     assert_eq!(a.load_samples.len(), b.load_samples.len());
     for (x, y) in a.load_samples.iter().zip(&b.load_samples) {
@@ -261,6 +268,90 @@ fn prefix_index_is_a_pure_optimization_bit_for_bit() {
     let b = sim::run(&mk(false), &t, 2.0);
     assert!(a.tier.demotions > 0, "pressure scenario must exercise demotion");
     assert_runs_identical(&a, &b);
+}
+
+#[test]
+fn streaming_replay_is_bit_for_bit_the_materialized_run() {
+    // The streaming tentpole's equivalence pin: feeding the default
+    // generated trace through `run_stream` as an iterator (no knobs set)
+    // must produce a bit-for-bit identical SimResult to the
+    // materialize-everything path, on the default config and under tier
+    // pressure with the proactive sweep armed.
+    let t = trace(500);
+    let mk_stream = |speedup: f64| {
+        let mut reqs: Vec<sim::Request> = t
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut req = sim::Request::from_trace(i as u64, r);
+                req.arrival /= speedup;
+                req
+            })
+            .collect();
+        reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        reqs
+    };
+
+    let cfg = SimConfig::default();
+    assert!(cfg.max_live_requests.is_none() && cfg.interner_epoch_blocks.is_none());
+    let batch = sim::run(&cfg, &t, 1.0);
+    let streamed = sim::run_streaming(&cfg, mk_stream(1.0));
+    assert_runs_identical(&batch, &streamed);
+
+    let pressured = SimConfig {
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(50_000),
+        demote_after_ms: Some(120_000.0),
+        n_prefill: 4,
+        n_decode: 4,
+        ..Default::default()
+    };
+    let batch = sim::run(&pressured, &t, 2.0);
+    assert!(batch.tier.demotions > 0, "pressure scenario must exercise demotion");
+    assert_runs_identical(&batch, &sim::run_streaming(&pressured, mk_stream(2.0)));
+}
+
+#[test]
+fn million_request_streaming_replay_holds_flat_state() {
+    // The tentpole's acceptance test: a 1M-request replay from a
+    // generator (never materialized) completes with the live-request
+    // high-water mark bounded by `max_live_requests`, per-request rows
+    // dropped, and the dense-id space held down by epoch recycling even
+    // though >1M distinct blocks flow through.
+    const N: u64 = 1_000_000;
+    const CAP: usize = 64;
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        cache_capacity_blocks: Some(512),
+        ssd_capacity_blocks: Some(512),
+        max_live_requests: Some(CAP),
+        interner_epoch_blocks: Some(4_096),
+        retain_metrics: false,
+        paranoia: Paranoia::Off,
+        ..Default::default()
+    };
+    // One shared leading block (a stable hot prefix) plus one block
+    // unique to each request (unbounded distinct-block churn).
+    let arrivals = (0..N).map(|i| sim::Request {
+        rid: i,
+        arrival: i as f64 * 0.05,
+        input: 1024,
+        output: 1,
+        hash_ids: vec![1, 1_000 + i],
+    });
+    let res = sim::run_streaming(&cfg, arrivals);
+    assert_eq!(res.n_completed + res.n_rejected, N, "every request must retire");
+    assert!(res.n_completed > N / 2, "cap backpressure should let most requests finish");
+    assert!(res.live_peak <= CAP, "live HWM {} exceeds the cap {CAP}", res.live_peak);
+    assert!(res.metrics.is_empty(), "retain_metrics: false must not accumulate rows");
+    assert!(res.interner_epochs > 0, "recycling must have run");
+    assert!(res.interner_freed > 900_000, "only {} ids freed", res.interner_freed);
+    assert!(
+        res.interner_id_space < 100_000,
+        "dense-id space {} not bounded by recycling",
+        res.interner_id_space
+    );
 }
 
 #[test]

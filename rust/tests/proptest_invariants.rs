@@ -497,6 +497,114 @@ fn prop_interner_round_trips_arbitrary_hash_streams() {
     }
 }
 
+/// One recycle epoch against the `Sim`'s liveness rule (pool-tier
+/// residency), with every invariant the epoch must preserve asserted:
+/// live bindings stable, freed ids nowhere resident, injectivity, and a
+/// shadow hash→id map that matches the interner exactly afterwards.
+fn recycle_and_check(
+    interner: &mut BlockInterner,
+    pools: &[CachePool],
+    idx: &PrefixIndex,
+    binding: &mut std::collections::HashMap<u64, DenseBlockId>,
+    tag: &str,
+) {
+    let mut live = vec![0u64; interner.id_space().div_ceil(64)];
+    for pool in pools {
+        for b in pool.iter_blocks() {
+            live[b as usize / 64] |= 1 << (b as usize % 64);
+        }
+    }
+    let live_bit = |id: DenseBlockId| (live[id as usize / 64] >> (id as usize % 64)) & 1 != 0;
+    let live_pairs: Vec<(u64, DenseBlockId)> =
+        binding.iter().map(|(&h, &id)| (h, id)).filter(|&(_, id)| live_bit(id)).collect();
+    let allocated_before: Vec<DenseBlockId> = (0..interner.id_space() as DenseBlockId)
+        .filter(|&id| interner.is_allocated(id))
+        .collect();
+    let space_before = interner.id_space();
+    let freed = interner.recycle_epoch(&live);
+
+    // Live blocks keep their exact hash -> id binding across the epoch.
+    for &(h, id) in &live_pairs {
+        assert_eq!(interner.lookup(h), Some(id), "{tag}: live binding moved");
+        assert!(interner.is_allocated(id), "{tag}: live id {id} deallocated");
+    }
+    // Every freed id was resident in no pool tier and held in no
+    // PrefixIndex slot at recycle time.
+    let mut n_freed = 0usize;
+    for &id in &allocated_before {
+        if interner.is_allocated(id) {
+            continue;
+        }
+        n_freed += 1;
+        assert!(!live_bit(id), "{tag}: freed live id {id}");
+        assert!(idx.holders(id).is_empty(), "{tag}: freed id {id} still indexed");
+        for (n, pool) in pools.iter().enumerate() {
+            assert!(!pool.contains(id), "{tag}: freed id {id} resident in pool {n}");
+        }
+    }
+    assert_eq!(n_freed, freed, "{tag}: freed-count drift");
+    assert_eq!(interner.id_space(), space_before, "{tag}: recycling must not grow the space");
+    // Injectivity survives: exactly one allocated id per interned hash.
+    let allocated_after = (0..interner.id_space() as DenseBlockId)
+        .filter(|&id| interner.is_allocated(id))
+        .count();
+    assert_eq!(allocated_after, interner.len(), "{tag}: allocation probe drift");
+    // Dead hashes really are un-interned: the shadow map, pruned to
+    // still-valid bindings, is the interner's map exactly.
+    binding.retain(|&h, &mut id| interner.lookup(h) == Some(id));
+    assert_eq!(binding.len(), interner.len(), "{tag}: shadow map drift");
+}
+
+/// Property (tentpole): epoch recycling preserves the dense bijection
+/// for live (pool-resident) blocks and only frees ids that no pool tier
+/// and no `PrefixIndex` slot still holds; freed ids are reused without
+/// growing the id space.  Extends
+/// `prop_interner_round_trips_arbitrary_hash_streams` across epochs.
+#[test]
+fn prop_epoch_recycling_keeps_live_bijection_and_frees_only_dead_ids() {
+    let mut rng = Rng::new(0xEC1C7E);
+    for round in 0..6 {
+        let n_nodes = 1 + rng.below(4) as usize;
+        let mut interner = BlockInterner::new();
+        let mut pools: Vec<CachePool> =
+            (0..n_nodes).map(|_| CachePool::new(PolicyKind::Lru, Some(24), Some(32))).collect();
+        let mut idx = PrefixIndex::new(n_nodes);
+        // Shadow of the latest hash -> id assignment per hash.
+        let mut binding: std::collections::HashMap<u64, DenseBlockId> =
+            std::collections::HashMap::new();
+        let mut next_hash: u64 = 1;
+        for step in 0..1_500u64 {
+            let now = step as f64;
+            let node = rng.below(n_nodes as u64) as usize;
+            let n_blocks = 1 + rng.below(6);
+            let chain: Vec<DenseBlockId> = (0..n_blocks)
+                .map(|_| {
+                    // Mostly fresh hashes (churn), some re-arrivals.
+                    let h = if rng.below(4) == 0 && next_hash > 1 {
+                        1 + rng.below(next_hash - 1)
+                    } else {
+                        next_hash += 1;
+                        next_hash - 1
+                    };
+                    let id = interner.intern(h);
+                    binding.insert(h, id);
+                    id
+                })
+                .collect();
+            idx.apply(node, &pools[node].admit_chain_reusing(&chain, 0, now));
+            if rng.below(4) == 0 {
+                idx.apply(node, &pools[node].demote_idle(now, 1.0 + rng.f64() * 30.0));
+            }
+            if step % 250 == 249 {
+                let tag = format!("round {round} step {step}");
+                recycle_and_check(&mut interner, &pools, &idx, &mut binding, &tag);
+            }
+        }
+        assert!(interner.epochs() >= 6, "round {round}: epochs must have run");
+        assert!(interner.freed_total() > 0, "round {round}: churn must free ids");
+    }
+}
+
 /// Property (tentpole): the width-adaptive residency representation is
 /// invisible — a width-1 (≤64 nodes), width-2, and width-4 `PrefixIndex`
 /// all agree with `equals_rebuild_of` and with every node's own

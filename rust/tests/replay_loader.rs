@@ -1,0 +1,161 @@
+//! Golden-fixture and error-path tests for the streaming trace loader
+//! (`trace::replay`).  `rust/tests/data/mooncake_trace.jsonl` pins the
+//! published schema: an FNV-1a content hash over every parsed field
+//! catches silent parser drift, and each malformed-input case asserts
+//! its `file:line`-tagged diagnostic.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::PathBuf;
+
+use mooncake::config::SimConfig;
+use mooncake::sim;
+use mooncake::trace::replay::{ReplayReader, ReplayStream};
+use mooncake::trace::{jsonl, TraceRecord};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/mooncake_trace.jsonl");
+
+/// FNV-1a fold over every field of every record (the same construction
+/// as `kvcache::chain_hashes`): the pin breaks iff parsed content
+/// drifts, not merely the byte count.
+fn fnv_records(recs: &[TraceRecord]) -> u64 {
+    fn fold(mut h: u64, x: u64) -> u64 {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for r in recs {
+        h = fold(h, r.timestamp);
+        h = fold(h, r.input_length);
+        h = fold(h, r.output_length);
+        h = fold(h, r.hash_ids.len() as u64);
+        for &id in &r.hash_ids {
+            h = fold(h, id);
+        }
+    }
+    h
+}
+
+fn write_trace(name: &str, body: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(name);
+    let mut f = File::create(&path).unwrap();
+    f.write_all(body.as_bytes()).unwrap();
+    path
+}
+
+#[test]
+fn golden_fixture_parse_is_fnv_pinned() {
+    let recs: Vec<TraceRecord> =
+        ReplayReader::open(FIXTURE).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    assert_eq!(recs.len(), 8);
+    assert_eq!(
+        fnv_records(&recs),
+        0xac17_4157_1860_3447,
+        "fixture parse drifted — recompute the pin only for a deliberate schema change"
+    );
+    // Streaming parse equals the batch loader on the same (already
+    // time-ordered) file, record for record.
+    assert_eq!(recs, jsonl::load(FIXTURE).unwrap());
+}
+
+#[test]
+fn fixture_streams_time_ordered_requests_with_rate_scaling() {
+    let reqs: Vec<sim::Request> =
+        ReplayStream::open(FIXTURE, 2.0).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    assert_eq!(reqs.len(), 8);
+    for (i, r) in reqs.iter().enumerate() {
+        assert_eq!(r.rid as usize, i, "rids are sequential in arrival order");
+    }
+    let arrivals: Vec<f64> = reqs.iter().map(|r| r.arrival).collect();
+    assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "stream must be time-ordered");
+    assert_eq!(arrivals[0], 0.0);
+    // rate = 2.0 compresses the fixture's final t=3000 to 1500.
+    assert_eq!(*arrivals.last().unwrap(), 1500.0);
+}
+
+#[test]
+fn fixture_replay_matches_batch_simulation() {
+    let cfg = SimConfig { n_prefill: 2, n_decode: 2, ..Default::default() };
+    let batch = sim::run(&cfg, &jsonl::load(FIXTURE).unwrap(), 1.0);
+    let stream =
+        sim::run_streaming(&cfg, ReplayStream::open(FIXTURE, 1.0).unwrap().map(|r| r.unwrap()));
+    assert_eq!(batch.n_events, stream.n_events);
+    assert_eq!(batch.n_completed, stream.n_completed);
+    assert_eq!(batch.decode_tokens_out, stream.decode_tokens_out);
+    assert_eq!(batch.wall_ms.to_bits(), stream.wall_ms.to_bits());
+}
+
+#[test]
+fn bad_json_line_is_tagged_with_file_and_line() {
+    let path = write_trace(
+        "loader_bad_json.jsonl",
+        concat!(
+            r#"{"timestamp": 0, "input_length": 10, "output_length": 1, "hash_ids": []}"#,
+            "\n",
+            "{not json at all\n",
+        ),
+    );
+    let mut r = ReplayReader::open(&path).unwrap();
+    assert!(r.next().unwrap().is_ok());
+    let err = r.next().unwrap().unwrap_err().to_string();
+    let want = format!("{}:2:", path.display());
+    assert!(err.starts_with(&want), "missing file:line tag: {err}");
+    assert!(err.contains("bad trace line"), "wrong diagnostic: {err}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn missing_field_is_tagged_with_file_and_line() {
+    let path = write_trace(
+        "loader_missing_field.jsonl",
+        concat!(r#"{"input_length": 10, "output_length": 1, "hash_ids": []}"#, "\n"),
+    );
+    let err = ReplayReader::open(&path).unwrap().next().unwrap().unwrap_err().to_string();
+    let want = format!("{}:1:", path.display());
+    assert!(err.starts_with(&want), "missing file:line tag: {err}");
+    assert!(err.contains("missing field timestamp"), "wrong diagnostic: {err}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn non_monotone_timestamp_is_a_loader_error_not_a_reorder() {
+    let path = write_trace(
+        "loader_non_monotone.jsonl",
+        concat!(
+            r#"{"timestamp": 500, "input_length": 10, "output_length": 1, "hash_ids": [1]}"#,
+            "\n",
+            r#"{"timestamp": 400, "input_length": 10, "output_length": 1, "hash_ids": [1]}"#,
+            "\n",
+        ),
+    );
+    let mut r = ReplayReader::open(&path).unwrap();
+    assert!(r.next().unwrap().is_ok());
+    let err = r.next().unwrap().unwrap_err().to_string();
+    let want = format!("{}:2:", path.display());
+    assert!(err.starts_with(&want), "missing file:line tag: {err}");
+    assert!(err.contains("non-monotone timestamp 400 after 500"), "wrong diagnostic: {err}");
+    // The batch loader accepts the same file because it sorts; the
+    // streaming loader cannot sort, so it must refuse loudly instead.
+    assert_eq!(jsonl::load(&path).unwrap().len(), 2);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn blank_lines_are_skipped_but_count_in_diagnostics() {
+    let path = write_trace(
+        "loader_blank_lines.jsonl",
+        concat!(
+            r#"{"timestamp": 0, "input_length": 10, "output_length": 1, "hash_ids": []}"#,
+            "\n\n\n",
+            "garbage\n",
+        ),
+    );
+    let mut r = ReplayReader::open(&path).unwrap();
+    assert!(r.next().unwrap().is_ok());
+    let err = r.next().unwrap().unwrap_err().to_string();
+    assert!(err.contains(":4:"), "diagnostics must count physical lines: {err}");
+    std::fs::remove_file(path).ok();
+}
