@@ -7,7 +7,7 @@
 //! "KVCache-centric" configuration and unit-testable in isolation.
 //!
 //! Holder sets come from the Conductor's global
-//! [`PrefixIndex`] — one probe per block for the whole
+//! [`ShardedPrefixIndex`] — one probe per block for the whole
 //! cluster — instead of a `contains` scan of every pool; congestion is
 //! read off the NIC-tx resource queues, and (PR 4 follow-up) the
 //! *destination* side consults `Messenger::rx_backlog_ms`: pushing a
@@ -16,7 +16,7 @@
 //! `SimConfig::replication_rx_backlog_cap_ms` is set.
 
 use crate::config::SimConfig;
-use crate::kvcache::{DenseBlockId, PrefixIndex};
+use crate::kvcache::{DenseBlockId, ShardedPrefixIndex};
 use crate::prefill::PrefillPool;
 use crate::resource::Resources;
 use crate::util::fasthash::FastMap;
@@ -93,7 +93,7 @@ impl HeatTracker {
 pub fn plan_replications(
     tracker: &HeatTracker,
     pool: &PrefillPool,
-    index: &PrefixIndex,
+    index: &ShardedPrefixIndex,
     res: &Resources,
     cfg: &SimConfig,
     now: TimeMs,

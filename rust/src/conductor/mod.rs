@@ -29,7 +29,7 @@ pub mod migration;
 use crate::config::{SchedulingPolicy, SimConfig};
 use crate::costmodel::{self, FetchPlan, PrefillEstimate};
 use crate::decode::DecodeInstance;
-use crate::kvcache::{DenseBlockId, PrefixIndex, SsdPositions, TierDelta, TierMatch};
+use crate::kvcache::{DenseBlockId, ShardedPrefixIndex, SsdPositions, TierDelta, TierMatch};
 use crate::model::PerfModel;
 use crate::prefill::{JobId, PrefillPool};
 use crate::resource::Resources;
@@ -134,6 +134,29 @@ pub struct SchedScratch {
     delta: TierDelta,
     /// Replica block list for the §6.2 forwarding path.
     replica_blocks: Vec<DenseBlockId>,
+    /// Per-shard SSD-position buffers for the sharded index walk (one
+    /// per 256-node shard, warmed once; single-shard clusters never
+    /// touch them).
+    shard_pos: Vec<SsdPositions>,
+    /// Per-candidate choice slots for the parallel scoring fan-out
+    /// (`sched_workers > 1`): workers fill disjoint slices, the reduce
+    /// reads them back in ascending node order.
+    choices: Vec<PrefillChoice>,
+    /// One CPP-group buffer per scoring worker (disjoint, warmed once).
+    worker_groups: Vec<Vec<usize>>,
+    /// Recycled `Placement::prefill_group` buffers: the Sim hands each
+    /// consumed placement's vector back via
+    /// [`SchedScratch::recycle_placement_group`], so a warmed accept
+    /// path allocates nothing for the placement either.
+    placement_groups: Vec<Vec<usize>>,
+}
+
+impl SchedScratch {
+    /// Return a consumed placement's group buffer for reuse by a future
+    /// accept — the other half of the allocation-free accept loop.
+    pub fn recycle_placement_group(&mut self, group: Vec<usize>) {
+        self.placement_groups.push(group);
+    }
 }
 
 /// Scratch the scheduler needs each call (everything lives in the Sim).
@@ -152,7 +175,7 @@ pub struct Ctx<'a> {
     /// pool mutation's [`crate::kvcache::TierDelta`] is applied back to
     /// it.  `None` falls back to the per-node scan — results are
     /// bit-for-bit identical either way (a debug assert checks it).
-    pub index: Option<&'a mut PrefixIndex>,
+    pub index: Option<&'a mut ShardedPrefixIndex>,
     /// Reused decision buffers (see [`SchedScratch`]).
     pub scratch: &'a mut SchedScratch,
 }
@@ -181,37 +204,69 @@ pub struct ConductorStats {
     pub fetch_staged_blocks: u64,
 }
 
+/// The read-only environment one candidate's scoring needs.  Everything
+/// is a shared borrow — the cost model only *probes* the pools and
+/// resource banks — so a candidate's score is a pure function of
+/// `(env, i)` plus a caller-owned CPP-group buffer.  That purity is what
+/// lets `select_prefill` fan the candidate loop out across scoped
+/// threads and still reduce to bit-for-bit the sequential answer.
+struct ScoreEnv<'a> {
+    perf: &'a PerfModel,
+    cfg: &'a SimConfig,
+    prefill: &'a PrefillPool,
+    res: &'a Resources,
+    req: &'a SchedRequest,
+    now: TimeMs,
+    /// Per-node tier matches from the one prefix walk.
+    matches: &'a [TierMatch],
+    /// Per-node SSD positions from the same walk.
+    ssd_pos: &'a SsdPositions,
+    /// Suffix counts of the best holder's SSD copies (valid only when
+    /// `have_src_ssd`; empty otherwise).
+    suf: &'a [u32],
+    best_inst: usize,
+    best_blocks: usize,
+    /// §6.2 cache load balancing is on (KvCacheCentric policy).
+    balancing: bool,
+    /// The best holder keeps part of its match on SSD, so `suf` holds
+    /// valid suffix counts.
+    have_src_ssd: bool,
+}
+
 /// One cost-model probe: instance `i`, `prefix_blocks` reusable blocks
 /// of which `ssd_blocks` must be staged up from the SSD tier, and an
 /// optional remote fetch first.  Allocation-free: the CPP group forms in
-/// the scratch buffer and the returned estimate is plain `Copy` data.
+/// the caller's buffer and the returned estimate is plain `Copy` data.
 // lint: hot
-fn estimate_for(
-    ctx: &mut Ctx,
-    req: &SchedRequest,
+fn estimate_in(
+    env: &ScoreEnv,
     i: usize,
     prefix_blocks: usize,
     ssd_blocks: usize,
     fetch: Option<FetchPlan>,
+    group: &mut Vec<usize>,
 ) -> PrefillEstimate {
-    let (prefix_tokens, n_new) = req.split(prefix_blocks);
+    let (prefix_tokens, n_new) = env.req.split(prefix_blocks);
     let ssd_tokens = (ssd_blocks as u64 * BLOCK_TOKENS).min(prefix_tokens);
-    ctx.prefill.cpp_group_into(ctx.cfg, i, n_new, ctx.now, &mut ctx.scratch.group);
+    env.prefill.cpp_group_into(env.cfg, i, n_new, env.now, group);
     costmodel::estimate_prefill(
-        ctx.perf,
-        ctx.cfg,
-        &*ctx.prefill,
-        &*ctx.res,
-        &ctx.scratch.group,
+        env.perf,
+        env.cfg,
+        env.prefill,
+        env.res,
+        group,
         n_new,
         prefix_tokens,
         ssd_tokens,
         fetch,
-        ctx.now,
+        env.now,
     )
 }
 
-/// The prefill placement `select_prefill` decided on.
+/// The prefill placement `select_prefill` decided on.  `Copy + Default`
+/// so the parallel scoring fan-out can pre-size a per-candidate slot
+/// buffer once and overwrite it in place every decision.
+#[derive(Debug, Clone, Copy, Default)]
 struct PrefillChoice {
     inst: usize,
     /// Prefix blocks resident on `inst` (either tier) — reported in the
@@ -239,8 +294,8 @@ struct PrefillChoice {
 /// load-vs-recompute half of the three-way prefix decision — the third
 /// option (recompute everything) is what a zero match degenerates to.
 // lint: hot
-fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> PrefillChoice {
-    let full = estimate_for(ctx, req, i, m.blocks, m.ssd_blocks, None);
+fn local_choice_in(env: &ScoreEnv, i: usize, m: TierMatch, group: &mut Vec<usize>) -> PrefillChoice {
+    let full = estimate_in(env, i, m.blocks, m.ssd_blocks, None, group);
     let mut choice = PrefillChoice {
         inst: i,
         local_blocks: m.blocks,
@@ -251,7 +306,7 @@ fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> Pr
         est: full,
     };
     if m.blocks > m.dram_prefix {
-        let dram_only = estimate_for(ctx, req, i, m.dram_prefix, 0, None);
+        let dram_only = estimate_in(env, i, m.dram_prefix, 0, None, group);
         if dram_only.end < choice.est.end {
             choice.eff_blocks = m.dram_prefix;
             choice.ssd_blocks = 0;
@@ -260,6 +315,100 @@ fn local_choice(ctx: &mut Ctx, req: &SchedRequest, i: usize, m: TierMatch) -> Pr
         }
     }
     choice
+}
+
+/// Score one candidate: Algorithm 1 lines 8–21 for instance `i` — the
+/// local-vs-balancing branch, the stage-vs-wire fetch pricing, the
+/// load-vs-recompute split.  Pure in `(env, i)`; `group` is scratch.
+// lint: hot
+fn score_candidate(env: &ScoreEnv, i: usize, group: &mut Vec<usize>) -> PrefillChoice {
+    let m = env.matches[i];
+    let local = m.blocks;
+    let src_ssd_from =
+        |k: usize| if env.have_src_ssd { env.suf[k.min(env.best_blocks)] as usize } else { 0 };
+    // Line 8: prefer local compute unless the best remote match dwarfs
+    // the local one.
+    let ratio = if local == 0 { f64::INFINITY } else { env.best_blocks as f64 / local as f64 };
+    if !env.balancing
+        || env.best_inst == i
+        || env.best_blocks == 0
+        || ratio < env.cfg.kvcache_balancing_threshold
+    {
+        // Cache-aware branch (lines 9–13), with the load-vs-recompute
+        // split priced per instance.
+        local_choice_in(env, i, m, group)
+    } else {
+        // Cache-aware and -balancing branch (lines 15–21): fetch the
+        // missing blocks from the best holder; the transfer runs on the
+        // *source* NIC — and first pays the source's NVMe staging for
+        // any of the missing blocks the holder keeps on SSD.  The local
+        // contribution's SSD-resident blocks are priced both ways:
+        // staged from the local NVMe, or wire-refreshed from the holder
+        // along with the missing blocks (RDMA is often faster than the
+        // local SSD read).
+        let stage_fetch = FetchPlan {
+            src: env.best_inst,
+            blocks: env.best_blocks - local,
+            src_ssd_blocks: src_ssd_from(local),
+        };
+        let stage = estimate_in(env, i, env.best_blocks, m.ssd_blocks, Some(stage_fetch), group);
+        // The wire plan only differs when local SSD copies exist —
+        // don't pay a second probe otherwise.
+        let wire_plan = if m.ssd_blocks > 0 {
+            // Exact source-SSD accounting: the wire plan also re-fetches
+            // the candidate's own SSD copies inside its matched head,
+            // and the *source* may hold some of those on its SSD too —
+            // each one is a staging read the source pays before its NIC
+            // can start.  The candidate's SSD positions came out of the
+            // prefix walk; its `TierMatch` SSD-run summary
+            // (`[dram_prefix, ssd_last]`) rejects non-overlapping spans
+            // in O(1), and otherwise each of its SSD positions tests the
+            // source via the suffix array (`suf[p] > suf[p+1]` ⟺ the
+            // source holds position p on SSD) — O(1) per position, zero
+            // tier probes.
+            let head_overlap = if env.have_src_ssd
+                && env.suf[m.dram_prefix] > env.suf[m.ssd_last as usize + 1]
+            {
+                env.ssd_pos
+                    .node(i)
+                    .iter()
+                    .filter(|&&p| env.suf[p as usize] > env.suf[p as usize + 1])
+                    .count()
+            } else {
+                0
+            };
+            let wire_fetch = FetchPlan {
+                src: env.best_inst,
+                blocks: env.best_blocks - m.dram_blocks,
+                src_ssd_blocks: src_ssd_from(local) + head_overlap,
+            };
+            let wire = estimate_in(env, i, env.best_blocks, 0, Some(wire_fetch), group);
+            (wire.end < stage.end).then_some((wire_fetch, wire))
+        } else {
+            None
+        };
+        if let Some((wire_fetch, wire)) = wire_plan {
+            PrefillChoice {
+                inst: i,
+                local_blocks: local,
+                eff_blocks: env.best_blocks,
+                ssd_blocks: 0,
+                recomputed_ssd_blocks: 0,
+                fetch: Some(wire_fetch),
+                est: wire,
+            }
+        } else {
+            PrefillChoice {
+                inst: i,
+                local_blocks: local,
+                eff_blocks: env.best_blocks,
+                ssd_blocks: m.ssd_blocks,
+                recomputed_ssd_blocks: 0,
+                fetch: Some(stage_fetch),
+                est: stage,
+            }
+        }
+    }
 }
 
 /// Per-pool scan form of `FindBestPrefixMatch` (the explicit
@@ -289,22 +438,25 @@ fn scan_into(
 }
 
 /// `FindBestPrefixMatch` over every instance, tier-aware: one O(chain)
-/// walk of the global [`PrefixIndex`] when available, the per-pool scan
-/// otherwise.  The two are interchangeable bit-for-bit — the index is a
-/// pure optimization, and a debug build cross-checks every call
-/// (matches *and* the carried SSD positions).  `out`/`ssd_pos` are
-/// caller-owned scratch, cleared here.
+/// walk per 256-node shard of the global [`ShardedPrefixIndex`] when
+/// available (fanned across `workers` scoped threads past one shard),
+/// the per-pool scan otherwise.  The two are interchangeable bit-for-bit
+/// — the index is a pure optimization, and a debug build cross-checks
+/// every call (matches *and* the carried SSD positions).
+/// `out`/`ssd_pos`/`shard_pos` are caller-owned scratch, cleared here.
 // lint: hot
 pub fn find_prefix_matches_into(
     prefill: &PrefillPool,
-    index: Option<&PrefixIndex>,
+    index: Option<&ShardedPrefixIndex>,
     hash_ids: &[DenseBlockId],
     out: &mut Vec<TierMatch>,
     ssd_pos: &mut SsdPositions,
+    shard_pos: &mut Vec<SsdPositions>,
+    workers: usize,
 ) {
     match index {
         Some(idx) => {
-            idx.best_prefix_into(hash_ids, out, ssd_pos);
+            idx.best_prefix_into(hash_ids, out, ssd_pos, shard_pos, workers);
             #[cfg(debug_assertions)]
             {
                 // lint: allow(hot-no-alloc) — debug-only walk-vs-scan cross-check, compiled out of release
@@ -325,33 +477,47 @@ pub fn find_prefix_matches_into(
 /// Allocating convenience wrapper around [`find_prefix_matches_into`].
 pub fn find_prefix_matches(
     prefill: &PrefillPool,
-    index: Option<&PrefixIndex>,
+    index: Option<&ShardedPrefixIndex>,
     hash_ids: &[DenseBlockId],
 ) -> Vec<TierMatch> {
     let mut out = Vec::new();
     let mut ssd_pos = SsdPositions::default();
-    find_prefix_matches_into(prefill, index, hash_ids, &mut out, &mut ssd_pos);
+    let mut shard_pos = Vec::new();
+    find_prefix_matches_into(prefill, index, hash_ids, &mut out, &mut ssd_pos, &mut shard_pos, 1);
     out
 }
 
 /// Algorithm 1 (lines 1–23): choose the prefill instance, including the
 /// tier-aware reuse-from-DRAM / load-from-SSD / recompute decision.
+/// With `cfg.sched_workers > 1` the per-candidate scoring fans out
+/// across scoped threads into pre-sized choice slots; the reduce scans
+/// the slots in ascending node order with the same strict-min rule as
+/// the sequential loop, so the winner is bit-for-bit identical at any
+/// worker count.
 // lint: hot
 fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     let n = ctx.prefill.len();
     // The walk's outputs move out of the scratch for the decision (the
-    // nested estimate calls below need `ctx` mutably) and return at the
-    // end — a reborrow dance, not an allocation.
+    // scoring environment below borrows them shared while the CPP-group
+    // buffers stay mutable) and return at the end — a reborrow dance,
+    // not an allocation.
     let mut matches = std::mem::take(&mut ctx.scratch.matches);
     let mut ssd_pos = std::mem::take(&mut ctx.scratch.ssd_pos);
     let mut suf = std::mem::take(&mut ctx.scratch.src_ssd_suffix);
+    let mut shard_pos = std::mem::take(&mut ctx.scratch.shard_pos);
+    let workers = ctx.cfg.sched_workers.max(1);
     find_prefix_matches_into(
         &*ctx.prefill,
         ctx.index.as_deref(),
         &req.hash_ids,
         &mut matches,
         &mut ssd_pos,
+        &mut shard_pos,
+        workers,
     );
+    // Best holder: `max_by_key` keeps the *last* maximal element — part
+    // of the determinism contract, so this stays one cheap sequential
+    // O(n) pass whatever `sched_workers` says.
     let (best_inst, best_blocks) = matches
         .iter()
         .enumerate()
@@ -359,154 +525,128 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
         .map(|(i, m)| (i, m.blocks))
         .unwrap_or((0, 0));
 
+    let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
+    // §6.2 fetches serialize on the *source*: when the holder's copy is
+    // partly SSD-resident, the transfer also pays the source's NVMe
+    // staging.  The holder's SSD *positions* came out of the one prefix
+    // walk above; one suffix-count pass over them lets every candidate
+    // price its own fetch range in O(1) — no per-block tier probes
+    // anywhere below.
+    let have_src_ssd = balancing && best_blocks > 0 && matches[best_inst].ssd_blocks > 0;
+    if have_src_ssd {
+        suf.clear();
+        suf.resize(best_blocks + 1, 0);
+        for &p in ssd_pos.node(best_inst) {
+            suf[p as usize] = 1;
+        }
+        let mut c = 0u32;
+        for s in suf[..best_blocks].iter_mut().rev() {
+            c += *s;
+            *s = c;
+        }
+    }
+
+    let scratch = &mut *ctx.scratch;
+    let env = ScoreEnv {
+        perf: ctx.perf,
+        cfg: ctx.cfg,
+        prefill: &*ctx.prefill,
+        res: &*ctx.res,
+        req,
+        now: ctx.now,
+        matches: &matches,
+        ssd_pos: &ssd_pos,
+        suf: &suf,
+        best_inst,
+        best_blocks,
+        balancing,
+        have_src_ssd,
+    };
     let choice = match ctx.cfg.scheduling {
         SchedulingPolicy::Random => {
             let i = ctx.rng.below(n as u64) as usize;
-            local_choice(ctx, req, i, matches[i])
+            local_choice_in(&env, i, matches[i], &mut scratch.group)
         }
         SchedulingPolicy::LoadBalance => {
             let i = (0..n)
                 .min_by(|&a, &b| {
-                    ctx.prefill.instances[a]
-                        .queue_ms(ctx.now)
-                        .partial_cmp(&ctx.prefill.instances[b].queue_ms(ctx.now))
+                    env.prefill.instances[a]
+                        .queue_ms(env.now)
+                        .partial_cmp(&env.prefill.instances[b].queue_ms(env.now))
                         .unwrap()
                 })
                 .unwrap();
-            local_choice(ctx, req, i, matches[i])
+            local_choice_in(&env, i, matches[i], &mut scratch.group)
         }
         SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
-            let balancing = ctx.cfg.scheduling == SchedulingPolicy::KvCacheCentric;
-            // §6.2 fetches serialize on the *source*: when the holder's
-            // copy is partly SSD-resident, the transfer also pays the
-            // source's NVMe staging.  The holder's SSD *positions* came
-            // out of the one prefix walk above; one suffix-count pass
-            // over them lets every candidate price its own fetch range
-            // in O(1) — no per-block tier probes anywhere below.
-            let have_src_ssd = balancing && best_blocks > 0 && matches[best_inst].ssd_blocks > 0;
-            if have_src_ssd {
-                suf.clear();
-                suf.resize(best_blocks + 1, 0);
-                for &p in ssd_pos.node(best_inst) {
-                    suf[p as usize] = 1;
-                }
-                let mut c = 0u32;
-                for s in suf[..best_blocks].iter_mut().rev() {
-                    c += *s;
-                    *s = c;
-                }
-            }
-            let src_ssd_from =
-                |k: usize| if have_src_ssd { suf[k.min(best_blocks)] as usize } else { 0 };
-            let mut best: Option<PrefillChoice> = None;
-            for i in 0..n {
-                let m = matches[i];
-                let local = m.blocks;
-                // Line 8: prefer local compute unless the best remote
-                // match dwarfs the local one.
-                let ratio = if local == 0 {
-                    f64::INFINITY
-                } else {
-                    best_blocks as f64 / local as f64
-                };
-                let cand = if !balancing
-                    || best_inst == i
-                    || best_blocks == 0
-                    || ratio < ctx.cfg.kvcache_balancing_threshold
-                {
-                    // Cache-aware branch (lines 9–13), with the
-                    // load-vs-recompute split priced per instance.
-                    local_choice(ctx, req, i, m)
-                } else {
-                    // Cache-aware and -balancing branch (lines 15–21):
-                    // fetch the missing blocks from the best holder; the
-                    // transfer runs on the *source* NIC — and first pays
-                    // the source's NVMe staging for any of the missing
-                    // blocks the holder keeps on SSD.  The local
-                    // contribution's SSD-resident blocks are priced both
-                    // ways: staged from the local NVMe, or wire-refreshed
-                    // from the holder along with the missing blocks
-                    // (RDMA is often faster than the local SSD read).
-                    let stage_fetch = FetchPlan {
-                        src: best_inst,
-                        blocks: best_blocks - local,
-                        src_ssd_blocks: src_ssd_from(local),
+            let workers = workers.clamp(1, n);
+            if workers <= 1 {
+                // Sequential scoring — the historical loop, byte-for-byte
+                // the same float sequence.
+                let mut best: Option<PrefillChoice> = None;
+                for i in 0..n {
+                    let cand = score_candidate(&env, i, &mut scratch.group);
+                    let better = match &best {
+                        None => true,
+                        Some(b) => cand.est.end < b.est.end,
                     };
-                    let stage =
-                        estimate_for(ctx, req, i, best_blocks, m.ssd_blocks, Some(stage_fetch));
-                    // The wire plan only differs when local SSD copies
-                    // exist — don't pay a second probe otherwise.
-                    let wire_plan = if m.ssd_blocks > 0 {
-                        // Exact source-SSD accounting: the wire plan also
-                        // re-fetches the candidate's own SSD copies inside
-                        // its matched head, and the *source* may hold some
-                        // of those on its SSD too — each one is a staging
-                        // read the source pays before its NIC can start.
-                        // The candidate's SSD positions came out of the
-                        // prefix walk; its `TierMatch` SSD-run summary
-                        // (`[dram_prefix, ssd_last]`) rejects
-                        // non-overlapping spans in O(1), and otherwise
-                        // each of its SSD positions tests the source via
-                        // the suffix array (`suf[p] > suf[p+1]` ⟺ the
-                        // source holds position p on SSD) — O(1) per
-                        // position, zero tier probes.
-                        let head_overlap = if have_src_ssd
-                            && suf[m.dram_prefix] > suf[m.ssd_last as usize + 1]
-                        {
-                            ssd_pos
-                                .node(i)
-                                .iter()
-                                .filter(|&&p| suf[p as usize] > suf[p as usize + 1])
-                                .count()
-                        } else {
-                            0
-                        };
-                        let wire_fetch = FetchPlan {
-                            src: best_inst,
-                            blocks: best_blocks - m.dram_blocks,
-                            src_ssd_blocks: src_ssd_from(local) + head_overlap,
-                        };
-                        let wire = estimate_for(ctx, req, i, best_blocks, 0, Some(wire_fetch));
-                        (wire.end < stage.end).then_some((wire_fetch, wire))
-                    } else {
-                        None
-                    };
-                    if let Some((wire_fetch, wire)) = wire_plan {
-                        PrefillChoice {
-                            inst: i,
-                            local_blocks: local,
-                            eff_blocks: best_blocks,
-                            ssd_blocks: 0,
-                            recomputed_ssd_blocks: 0,
-                            fetch: Some(wire_fetch),
-                            est: wire,
-                        }
-                    } else {
-                        PrefillChoice {
-                            inst: i,
-                            local_blocks: local,
-                            eff_blocks: best_blocks,
-                            ssd_blocks: m.ssd_blocks,
-                            recomputed_ssd_blocks: 0,
-                            fetch: Some(stage_fetch),
-                            est: stage,
-                        }
+                    if better {
+                        best = Some(cand);
                     }
-                };
-                let better = match &best {
-                    None => true,
-                    Some(b) => cand.est.end < b.est.end,
-                };
-                if better {
-                    best = Some(cand);
                 }
+                best.expect("at least one prefill instance")
+            } else {
+                // Parallel scoring: contiguous candidate ranges, one
+                // worker each, writing disjoint slices of the warmed
+                // choice buffer; every worker owns its own CPP-group
+                // buffer.  Scoring is pure in `(env, i)`, so the slots
+                // hold exactly what the sequential loop would have
+                // computed — the reduce below re-applies its strict-min
+                // rule in ascending node order.
+                scratch.choices.clear();
+                scratch.choices.resize(n, PrefillChoice::default());
+                if scratch.worker_groups.len() < workers {
+                    scratch.worker_groups.resize_with(workers, Default::default);
+                }
+                std::thread::scope(|scope| {
+                    let env = &env;
+                    let mut ch_rest: &mut [PrefillChoice] = &mut scratch.choices;
+                    let mut grp_rest: &mut [Vec<usize>] = &mut scratch.worker_groups;
+                    let mut lo = 0usize;
+                    for w in 0..workers {
+                        let take = (n - lo).div_ceil(workers - w);
+                        let (ch_mine, r) = ch_rest.split_at_mut(take);
+                        ch_rest = r;
+                        let (grp_mine, r) = grp_rest.split_at_mut(1);
+                        grp_rest = r;
+                        let base = lo;
+                        lo += take;
+                        scope.spawn(move || {
+                            let group = &mut grp_mine[0];
+                            for (k, slot) in ch_mine.iter_mut().enumerate() {
+                                *slot = score_candidate(env, base + k, group);
+                            }
+                        });
+                    }
+                });
+                let mut best: Option<PrefillChoice> = None;
+                for &cand in scratch.choices.iter() {
+                    let better = match &best {
+                        None => true,
+                        Some(b) => cand.est.end < b.est.end,
+                    };
+                    if better {
+                        best = Some(cand);
+                    }
+                }
+                best.expect("at least one prefill instance")
             }
-            best.expect("at least one prefill instance")
         }
     };
     ctx.scratch.matches = matches;
     ctx.scratch.ssd_pos = ssd_pos;
     ctx.scratch.src_ssd_suffix = suf;
+    ctx.scratch.shard_pos = shard_pos;
     choice
 }
 
@@ -589,8 +729,9 @@ pub fn schedule(
 
     // The chosen placement's CPP group, recomputed into the scratch from
     // the same pool state the estimate priced (nothing has touched the
-    // queues since) — the accept path's only remaining allocations are
-    // the Placement itself and the admitted job.
+    // queues since).  Both downstream copies — the Placement's and the
+    // admitted job's — ride recycled buffers, so the accept path's
+    // steady state allocates nothing at all.
     ctx.prefill.cpp_group_into(ctx.cfg, p, n_new, ctx.now, &mut ctx.scratch.best_group);
 
     // Local SSD→DRAM staging (the load half of the three-way decision):
@@ -760,9 +901,16 @@ pub fn schedule(
         stats.ssd_recomputes += 1;
     }
 
+    // The placement's group rides a recycled buffer (the Sim returns it
+    // through `recycle_placement_group` once the placement is consumed),
+    // so even the accept path is allocation-free in warmed steady state
+    // — pinned by `tests/alloc_audit.rs`.
+    let mut prefill_group = ctx.scratch.placement_groups.pop().unwrap_or_default();
+    prefill_group.clear();
+    prefill_group.extend_from_slice(&ctx.scratch.best_group);
+
     Ok(Placement {
-        // lint: allow(hot-no-alloc) — accept path materializes one Placement per admitted request; the steady-state reject loop returns above
-        prefill_group: ctx.scratch.best_group.clone(),
+        prefill_group,
         job,
         decode: d,
         local_prefix_blocks: choice.local_blocks,
@@ -1112,8 +1260,25 @@ mod tests {
 
         let mut via_idx = (Vec::new(), SsdPositions::default());
         let mut via_scan = (Vec::new(), SsdPositions::default());
-        find_prefix_matches_into(&prefill, Some(&idx), &chain, &mut via_idx.0, &mut via_idx.1);
-        find_prefix_matches_into(&prefill, None, &chain, &mut via_scan.0, &mut via_scan.1);
+        let mut shard_pos = Vec::new();
+        find_prefix_matches_into(
+            &prefill,
+            Some(&idx),
+            &chain,
+            &mut via_idx.0,
+            &mut via_idx.1,
+            &mut shard_pos,
+            1,
+        );
+        find_prefix_matches_into(
+            &prefill,
+            None,
+            &chain,
+            &mut via_scan.0,
+            &mut via_scan.1,
+            &mut shard_pos,
+            1,
+        );
         assert_eq!(via_idx.0, via_scan.0);
         assert!(via_idx.1.same_nodes(&via_scan.1, cfg.n_prefill));
 

@@ -73,10 +73,17 @@ pub struct SimConfig {
     /// Conductor keeps a global block→node prefix index so
     /// `FindBestPrefixMatch` is one O(chain) walk instead of a scan of
     /// every pool.  Pure optimization: results are bit-for-bit identical
-    /// either way.  `false` restores the per-node scan; the widened
-    /// `[u64; W]` bitsets cover up to `PrefixIndex::MAX_NODES` prefill
-    /// nodes with no automatic fallback.
+    /// either way.  `false` restores the per-node scan; clusters wider
+    /// than `PrefixIndex::MAX_NODES` are tiled into fixed 256-node
+    /// shards by `ShardedPrefixIndex`, so any `n_prefill` is covered.
     pub use_prefix_index: bool,
+    /// Scheduler worker threads for the candidate walk + scoring fan-out
+    /// (`std::thread::scope`, no pool).  The reduce is deterministic —
+    /// strict min of `(est.end.to_bits(), node_id)` — so any value
+    /// produces bit-for-bit the `sched_workers = 1` placement; pinned by
+    /// `sched_workers_do_not_perturb_results`.  1 (the default) runs the
+    /// historical sequential loop with zero thread traffic.
+    pub sched_workers: usize,
     /// Per-node NIC *receive* bandwidth in B/s.  A transfer completes at
     /// the max of source-tx and destination-rx availability, so a finite
     /// value makes fan-in onto one hot node (incast, §6.1) congest.
@@ -153,6 +160,7 @@ impl Default for SimConfig {
             slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
             overload_threshold: 1.0,
             use_prefix_index: true,
+            sched_workers: 1,
             nic_rx_bw: None,
             ssd_write_bw: None,
             demote_after_ms: None,

@@ -135,7 +135,7 @@ pub fn kv_stream_bytes(perf: &PerfModel, input_tokens: u64) -> u64 {
 /// `Copy` data — the CPP group is the *caller's* (reused) buffer, so the
 /// scheduler's candidate loop prices dozens of estimates per decision
 /// without a heap allocation per probe.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct PrefillEstimate {
     /// Planned start: the job runs when its whole group has drained AND
     /// any remote prefix fetch has landed AND any local SSD staging has

@@ -8,6 +8,14 @@
 //! [`DenseBlockId`]s — membership probes are the innermost loop of every
 //! prefix match, so they use the Fx hasher over 4-byte ids rather than
 //! SipHash over trace hashes.
+//!
+//! **Unbounded tiers skip the order set entirely.**  The `BTreeSet` is
+//! only ever *read* by `evict_entry`, which is only reachable when a
+//! capacity bound exists — so with `capacity: None` every
+//! touch/insert/remove skips the tree's node churn.  That keeps the
+//! default (uncapped) configuration's admission hit path free of both
+//! O(log n) maintenance and the BTree's split/merge heap traffic, which
+//! is what lets the accept path audit to zero allocations.
 
 use std::collections::BTreeSet;
 
@@ -124,13 +132,23 @@ impl EvictionPolicy {
         v
     }
 
+    /// Whether the eviction-order set is maintained at all: an unbounded
+    /// tier never evicts, so it never pays the BTree churn.
+    #[inline]
+    fn ordered(&self) -> bool {
+        self.capacity.is_some()
+    }
+
     /// Record a hit: bump recency/frequency/position metadata.
+    // lint: hot
     pub fn touch(&mut self, b: DenseBlockId, now_ms: f64, pos: usize) {
         self.tick += 1;
         if let Some(m) = self.entries.get(&b).copied() {
-            self.order.remove(&self.key(b, &m));
             let m2 = Meta { stamp: self.tick, freq: m.freq + 1, pos, last_used_ms: now_ms };
-            self.order.insert(self.key(b, &m2));
+            if self.ordered() {
+                self.order.remove(&self.key(b, &m));
+                self.order.insert(self.key(b, &m2));
+            }
             self.entries.insert(b, m2);
         }
     }
@@ -153,7 +171,9 @@ impl EvictionPolicy {
         self.tick += 1;
         let m = Meta { stamp: self.tick, freq: 1, pos, last_used_ms: now_ms };
         self.entries.insert(b, m);
-        self.order.insert(self.key(b, &m));
+        if self.ordered() {
+            self.order.insert(self.key(b, &m));
+        }
         evicted
     }
 
@@ -177,7 +197,9 @@ impl EvictionPolicy {
     /// Remove a specific block (e.g. swapped out by Conductor).
     pub fn remove(&mut self, b: DenseBlockId) -> bool {
         if let Some(m) = self.entries.remove(&b) {
-            self.order.remove(&self.key(b, &m));
+            if self.ordered() {
+                self.order.remove(&self.key(b, &m));
+            }
             true
         } else {
             false

@@ -17,8 +17,20 @@
 //! the lookup path — and the stride is sized to the cluster at
 //! construction: `n_words = n_nodes.div_ceil(64)` words per tier, so an
 //! 8-node cluster pays 2 words (16 B) per block slot where the old fixed
-//! `[u64; 4]`-per-tier representation paid 8 (64 B).  One index covers
-//! up to [`PrefixIndex::MAX_NODES`] prefill nodes; only the explicit
+//! `[u64; 4]`-per-tier representation paid 8 (64 B).  One monolithic
+//! index covers up to [`PrefixIndex::MAX_NODES`] prefill nodes.
+//!
+//! **Cluster scale** (ROADMAP item 3): past that, [`ShardedPrefixIndex`]
+//! tiles the cluster into fixed [`ShardedPrefixIndex::SHARD_NODES`]-node
+//! groups, one monolithic index per group.  Per-block footprint stays
+//! `O(shard_width)` — a block held by 3 nodes of a 1024-node cluster
+//! occupies slots in (at most) the 3 owning shards' tables, not one
+//! 1024-bit-wide row — and `TierDelta` application routes to the one
+//! owning shard.  The walk runs shard-by-shard into disjoint slices of
+//! the caller's output buffer, optionally fanned out across
+//! `std::thread::scope` workers; the merge is shard-ordered and
+//! sequential, so the result is **bit-for-bit identical** to the
+//! monolithic walk regardless of worker count.  Only the explicit
 //! `use_prefix_index: false` knob restores the per-pool scan.
 //!
 //! Consistency protocol: the index is owned next to the scheduler (the
@@ -163,16 +175,22 @@ impl PrefixIndex {
     /// (`conductor::migration` reads holder sets through this).
     pub fn holders(&self, b: DenseBlockId) -> Vec<usize> {
         let mut out = Vec::new();
+        self.push_holders(b, 0, &mut out);
+        out
+    }
+
+    /// Append every holder of `b`, offset by `base` — the sharded
+    /// index's holder probe collects all shards into one buffer.
+    fn push_holders(&self, b: DenseBlockId, base: usize, out: &mut Vec<usize>) {
         if let Some(e) = self.entry(b) {
             for w in 0..self.n_words {
                 let mut bits = e[w] | e[self.n_words + w];
                 while bits != 0 {
-                    out.push(w * 64 + bits.trailing_zeros() as usize);
+                    out.push(base + w * 64 + bits.trailing_zeros() as usize);
                     bits &= bits - 1;
                 }
             }
         }
-        out
     }
 
     /// Bulk-load one node's pool (brute-force rebuild path).
@@ -202,6 +220,22 @@ impl PrefixIndex {
         out.clear();
         out.resize(self.n_nodes, TierMatch::default());
         ssd_pos.reset(self.n_nodes);
+        self.walk_into(hash_ids, out, ssd_pos);
+        ssd_pos.seal();
+    }
+
+    /// The walk core: fill `out` (exactly `n_nodes` default-reset slots)
+    /// and push SSD positions into `ssd_pos` (already reset, NOT sealed
+    /// here).  Factored out so [`ShardedPrefixIndex`] can aim each
+    /// shard's walk at a disjoint slice of one cluster-wide buffer.
+    // lint: hot
+    fn walk_into(
+        &self,
+        hash_ids: &[DenseBlockId],
+        out: &mut [TierMatch],
+        ssd_pos: &mut SsdPositions,
+    ) {
+        debug_assert_eq!(out.len(), self.n_nodes);
         if self.n_nodes == 0 {
             return;
         }
@@ -280,7 +314,6 @@ impl PrefixIndex {
         for m in out.iter_mut() {
             m.dram_blocks = m.blocks - m.ssd_blocks;
         }
-        ssd_pos.seal();
     }
 
     /// Allocating convenience wrapper around [`Self::best_prefix_into`].
@@ -310,6 +343,207 @@ impl PrefixIndex {
         a[..common] == b[..common]
             && a[common..].iter().all(|&w| w == 0)
             && b[common..].iter().all(|&w| w == 0)
+    }
+}
+
+/// The cluster-scale prefix index (ROADMAP item 3): fixed
+/// [`Self::SHARD_NODES`]-node groups, one monolithic [`PrefixIndex`]
+/// per group.  Shard `s` owns global nodes `[s·256, (s+1)·256)`; every
+/// mutation routes to the one owning shard, so per-block storage stays
+/// `O(shard_width)` however wide the cluster grows.  The walk fills
+/// disjoint 256-node slices of the caller's output buffer — shard-by-
+/// shard sequentially, or fanned out across `std::thread::scope`
+/// workers — and merges SSD positions in shard order, so results are
+/// **bit-for-bit identical** to a single flat walk at any worker count.
+#[derive(Debug)]
+pub struct ShardedPrefixIndex {
+    n_nodes: usize,
+    shards: Vec<PrefixIndex>,
+}
+
+impl ShardedPrefixIndex {
+    /// Nodes per shard — one full-width monolithic index each.
+    pub const SHARD_NODES: usize = PrefixIndex::MAX_NODES;
+
+    /// Covers any cluster size: `div_ceil(n_nodes, SHARD_NODES)` shards
+    /// (at least one), the last possibly partial.
+    pub fn new(n_nodes: usize) -> Self {
+        let n_shards = n_nodes.div_ceil(Self::SHARD_NODES).max(1);
+        let shards = (0..n_shards)
+            .map(|s| {
+                let base = s * Self::SHARD_NODES;
+                PrefixIndex::new(n_nodes.saturating_sub(base).min(Self::SHARD_NODES))
+            })
+            .collect();
+        ShardedPrefixIndex { n_nodes, shards }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard monolithic indexes (inspection / tests).
+    pub fn shards(&self) -> &[PrefixIndex] {
+        &self.shards
+    }
+
+    /// Sum of per-shard resident counts.  A block held in several
+    /// *shards* counts once per shard (shards don't see each other), so
+    /// this upper-bounds the cluster-distinct count; within one shard it
+    /// is exact, and for ≤ 256 nodes it equals the monolithic `len`.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    #[inline]
+    fn route(&self, node: usize) -> (usize, usize) {
+        debug_assert!(node < self.n_nodes);
+        (node / Self::SHARD_NODES, node % Self::SHARD_NODES)
+    }
+
+    /// Record `node`'s residency for one block (`None` = not resident).
+    pub fn set(&mut self, node: usize, b: DenseBlockId, loc: Option<Tier>) {
+        let (s, ln) = self.route(node);
+        self.shards[s].set(ln, b, loc);
+    }
+
+    /// Apply a pool mutation's residency changes: routed to the one
+    /// shard owning `node`.
+    pub fn apply(&mut self, node: usize, delta: &TierDelta) {
+        let (s, ln) = self.route(node);
+        self.shards[s].apply(ln, delta);
+    }
+
+    /// `node`'s residency for one block, as the pool would report it.
+    pub fn tier_on(&self, node: usize, b: DenseBlockId) -> Option<Tier> {
+        let (s, ln) = self.route(node);
+        self.shards[s].tier_on(ln, b)
+    }
+
+    /// Every node holding `b` (either tier), ascending across the whole
+    /// cluster — shards probed in order, offsets applied.
+    pub fn holders(&self, b: DenseBlockId) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            shard.push_holders(b, s * Self::SHARD_NODES, &mut out);
+        }
+        out
+    }
+
+    /// Bulk-load one node's pool (brute-force rebuild path).
+    pub fn insert_pool(&mut self, node: usize, pool: &CachePool) {
+        let (s, ln) = self.route(node);
+        self.shards[s].insert_pool(ln, pool);
+    }
+
+    /// `FindBestPrefixMatch` for all nodes, sharded: identical outputs
+    /// to a monolithic [`PrefixIndex::best_prefix_into`] over the same
+    /// residency.  `shard_pos` is per-shard position scratch (warmed
+    /// once, untouched in the common ≤ 256-node case, where the one
+    /// shard walks straight into the caller's buffers).  `workers > 1`
+    /// fans the shard walks out over scoped threads; the shard-ordered
+    /// merge keeps the result bit-for-bit independent of worker count.
+    // lint: hot
+    pub fn best_prefix_into(
+        &self,
+        hash_ids: &[DenseBlockId],
+        out: &mut Vec<TierMatch>,
+        ssd_pos: &mut SsdPositions,
+        shard_pos: &mut Vec<SsdPositions>,
+        workers: usize,
+    ) {
+        if self.shards.len() == 1 {
+            return self.shards[0].best_prefix_into(hash_ids, out, ssd_pos);
+        }
+        out.clear();
+        out.resize(self.n_nodes, TierMatch::default());
+        ssd_pos.reset(self.n_nodes);
+        if shard_pos.len() < self.shards.len() {
+            shard_pos.resize_with(self.shards.len(), SsdPositions::default);
+        }
+        let workers = workers.clamp(1, self.shards.len());
+        if workers <= 1 {
+            for ((shard, o), pos) in self
+                .shards
+                .iter()
+                .zip(out.chunks_mut(Self::SHARD_NODES))
+                .zip(shard_pos.iter_mut())
+            {
+                pos.reset(shard.n_nodes());
+                shard.walk_into(hash_ids, o, pos);
+                pos.seal();
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let mut out_rest: &mut [TierMatch] = out;
+                let mut pos_rest: &mut [SsdPositions] = shard_pos;
+                let mut lo = 0usize;
+                for w in 0..workers {
+                    let take = (self.shards.len() - lo).div_ceil(workers - w);
+                    let shards = &self.shards[lo..lo + take];
+                    let slots: usize = shards.iter().map(|s| s.n_nodes()).sum();
+                    let (out_mine, r) = out_rest.split_at_mut(slots);
+                    out_rest = r;
+                    let (pos_mine, r) = pos_rest.split_at_mut(take);
+                    pos_rest = r;
+                    lo += take;
+                    scope.spawn(move || {
+                        for ((shard, o), pos) in shards
+                            .iter()
+                            .zip(out_mine.chunks_mut(Self::SHARD_NODES))
+                            .zip(pos_mine.iter_mut())
+                        {
+                            pos.reset(shard.n_nodes());
+                            shard.walk_into(hash_ids, o, pos);
+                            pos.seal();
+                        }
+                    });
+                }
+            });
+        }
+        // Deterministic merge: shard order, then node order within each
+        // shard (counting-sorted again by the final seal) — the same
+        // (node, position) multiset a flat walk would have produced.
+        for (s, pos) in shard_pos[..self.shards.len()].iter().enumerate() {
+            let base = s * Self::SHARD_NODES;
+            for ln in 0..self.shards[s].n_nodes() {
+                for &p in pos.node(ln) {
+                    ssd_pos.push(base + ln, p);
+                }
+            }
+        }
+        ssd_pos.seal();
+    }
+
+    /// Allocating convenience wrapper around [`Self::best_prefix_into`].
+    pub fn best_prefix(&self, hash_ids: &[DenseBlockId]) -> Vec<TierMatch> {
+        let mut out = Vec::new();
+        let mut ssd_pos = SsdPositions::default();
+        let mut shard_pos = Vec::new();
+        self.best_prefix_into(hash_ids, &mut out, &mut ssd_pos, &mut shard_pos, 1);
+        out
+    }
+
+    /// Debug invariant: every shard equals a brute-force rebuild from
+    /// its slice of the pools (in node order).
+    pub fn equals_rebuild_of<'a>(&self, pools: impl Iterator<Item = &'a CachePool>) -> bool {
+        let pools: Vec<&CachePool> = pools.collect();
+        if pools.len() != self.n_nodes {
+            return false;
+        }
+        self.shards.iter().enumerate().all(|(s, shard)| {
+            let base = s * Self::SHARD_NODES;
+            let hi = (base + shard.n_nodes()).min(pools.len());
+            shard.equals_rebuild_of(pools[base..hi].iter().copied())
+        })
     }
 }
 
@@ -494,5 +728,119 @@ mod tests {
         assert_eq!(m, vec![TierMatch::default(), TierMatch::default()]);
         let m = idx.best_prefix(&[99]);
         assert_eq!(m, vec![TierMatch::default(), TierMatch::default()]);
+    }
+
+    #[test]
+    fn sharding_tiles_any_cluster_width() {
+        assert_eq!(ShardedPrefixIndex::new(1).n_shards(), 1);
+        assert_eq!(ShardedPrefixIndex::new(256).n_shards(), 1);
+        assert_eq!(ShardedPrefixIndex::new(257).n_shards(), 2);
+        assert_eq!(ShardedPrefixIndex::new(1024).n_shards(), 4);
+        // Partial trailing shard gets exactly the leftover nodes, and
+        // every full shard stays at the per-shard word ceiling.
+        let idx = ShardedPrefixIndex::new(300);
+        assert_eq!(idx.n_nodes(), 300);
+        assert_eq!(idx.shards().len(), 2);
+        assert_eq!(idx.shards()[0].n_nodes(), 256);
+        assert_eq!(idx.shards()[1].n_nodes(), 44);
+        assert_eq!(idx.shards()[1].n_words(), 1); // footprint tracks shard width
+    }
+
+    /// Builds a 300-node (two-shard) environment with holders straddling
+    /// the 255/256/257 shard boundary, plus demotions on both sides.
+    fn sharded_env() -> (Vec<CachePool>, ShardedPrefixIndex, Vec<DenseBlockId>) {
+        let nodes = [0usize, 5, 200, 254, 255, 256, 257, 299];
+        let mut ps = pools(300);
+        let mut idx = ShardedPrefixIndex::new(300);
+        let chain: Vec<DenseBlockId> = (2_000..2_048).collect();
+        for &node in &nodes {
+            let len = 4 + node % 40;
+            idx.apply(node, &ps[node].admit_chain(&chain[..len], 0.0));
+        }
+        idx.apply(255, &ps[255].demote_block(chain[2], 1.0).unwrap());
+        idx.apply(256, &ps[256].demote_block(chain[0], 1.0).unwrap());
+        (ps, idx, chain)
+    }
+
+    #[test]
+    fn sharded_index_matches_per_pool_scan_across_the_boundary() {
+        let (ps, idx, chain) = sharded_env();
+        assert_eq!(idx.best_prefix(&chain), scan(&ps, &chain));
+        assert!(idx.equals_rebuild_of(ps.iter()));
+        // Routing lands residency on the right side of the 256 split.
+        assert_eq!(idx.tier_on(255, chain[2]), Some(Tier::Ssd));
+        assert_eq!(idx.tier_on(256, chain[0]), Some(Tier::Ssd));
+        assert_eq!(idx.tier_on(257, chain[1]), Some(Tier::Dram));
+        assert_eq!(idx.tier_on(1, chain[0]), None);
+        // Holder probes cross shards in ascending global node order.
+        assert_eq!(idx.holders(chain[0]), vec![0, 5, 200, 254, 255, 256, 257, 299]);
+        assert_eq!(idx.holders(chain[20]), vec![257, 299]); // only lens 21 and 23 reach it
+        assert_eq!(idx.holders(9_999), Vec::<usize>::new());
+        // Per-node SSD positions agree with the pools' own scan.
+        let mut out = Vec::new();
+        let mut pos = SsdPositions::default();
+        let mut shard_pos = Vec::new();
+        idx.best_prefix_into(&chain, &mut out, &mut pos, &mut shard_pos, 1);
+        let mut scan_list = Vec::new();
+        for (n, p) in ps.iter().enumerate() {
+            let m = p.prefix_match_with(&chain, &mut scan_list);
+            assert_eq!(out[n], m, "node {n}");
+            assert_eq!(pos.node(n), &scan_list[..], "node {n} positions");
+        }
+        assert_eq!(pos.node(255), &[2]);
+        assert_eq!(pos.node(256), &[0]);
+    }
+
+    #[test]
+    fn sharded_walk_is_worker_count_invariant() {
+        // The whole determinism story rests on this: any worker count
+        // produces bit-for-bit the sequential walk's matches *and*
+        // positions, so `sched_workers` can never perturb placement.
+        let (_ps, idx, chain) = sharded_env();
+        let mut base_out = Vec::new();
+        let mut base_pos = SsdPositions::default();
+        let mut shard_pos = Vec::new();
+        idx.best_prefix_into(&chain, &mut base_out, &mut base_pos, &mut shard_pos, 1);
+        for workers in [2usize, 3, 8] {
+            let mut out = Vec::new();
+            let mut pos = SsdPositions::default();
+            idx.best_prefix_into(&chain, &mut out, &mut pos, &mut shard_pos, workers);
+            assert_eq!(out, base_out, "{workers} workers");
+            for n in 0..idx.n_nodes() {
+                assert_eq!(pos.node(n), base_pos.node(n), "{workers} workers, node {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_delegates_bit_for_bit_to_monolithic() {
+        // ≤ 256 nodes: the sharded wrapper routes straight into one
+        // monolithic shard, so outputs are the monolithic index's own.
+        let mut ps = pools(130);
+        let mut mono = PrefixIndex::new(130);
+        let mut sharded = ShardedPrefixIndex::new(130);
+        assert_eq!(sharded.n_shards(), 1);
+        let chain: Vec<DenseBlockId> = (7_000..7_016).collect();
+        for &node in &[0usize, 63, 64, 77, 129] {
+            let d = ps[node].admit_chain(&chain[..4 + node % 12], 0.0);
+            mono.apply(node, &d);
+            sharded.apply(node, &d);
+        }
+        let d = ps[77].demote_block(7_001, 1.0).unwrap();
+        mono.apply(77, &d);
+        sharded.apply(77, &d);
+        assert_eq!(sharded.best_prefix(&chain), mono.best_prefix(&chain));
+        assert_eq!(sharded.holders(7_000), mono.holders(7_000));
+        assert_eq!(sharded.len(), mono.len());
+        let (mut mo, mut mp) = (Vec::new(), SsdPositions::default());
+        mono.best_prefix_into(&chain, &mut mo, &mut mp);
+        let (mut so, mut sp, mut scratch) = (Vec::new(), SsdPositions::default(), Vec::new());
+        sharded.best_prefix_into(&chain, &mut so, &mut sp, &mut scratch, 4);
+        assert_eq!(so, mo);
+        for n in 0..130 {
+            assert_eq!(sp.node(n), mp.node(n), "node {n}");
+        }
+        assert!(scratch.is_empty(), "single-shard walk must not touch per-shard scratch");
+        assert!(sharded.equals_rebuild_of(ps.iter()));
     }
 }

@@ -17,7 +17,7 @@ pub mod intern;
 pub mod pool;
 
 pub use eviction::{EvictionPolicy, PolicyKind};
-pub use index::PrefixIndex;
+pub use index::{PrefixIndex, ShardedPrefixIndex};
 pub use intern::{BlockInterner, DenseBlockId};
 pub use pool::{CachePool, SsdPositions, Tier, TierCounters, TierDelta, TierMatch};
 

@@ -35,15 +35,16 @@ fn main() -> Result<()> {
                 "usage: mooncake <gen-trace|analyze|simulate|replay|baseline|serve> [--options]\n\
                  \n\
                  gen-trace --out trace.jsonl [--requests 23608] [--seed 42]\n\
-                 analyze   --trace trace.jsonl\n\
-                 simulate  --trace trace.jsonl [--prefill 8] [--decode 8] [--speedup 1]\n\
+                 analyze   --trace trace.jsonl[.gz]\n\
+                 simulate  --trace trace.jsonl[.gz] [--prefill 8] [--decode 8] [--speedup 1]\n\
                  \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
                  \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
                  \t[--rx-bw BYTES_PER_SEC] [--ssd-write-bw BYTES_PER_SEC]\n\
-                 \t[--no-prefix-index]\n\
-                 replay    --traces a.jsonl[,b.jsonl,...] [--rates 1[,2,...]]\n\
+                 \t[--no-prefix-index] [--sched-workers N]\n\
+                 replay    --traces a.jsonl[,b.jsonl.gz,...] [--rates 1[,2,...]]\n\
                  \t[--prefill 8] [--decode 8] [--policy ...] [--reject ...]\n\
                  \t[--max-live N] [--epoch-blocks N] [--no-metrics]\n\
+                 \t[--sched-workers N]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -110,6 +111,23 @@ fn parse_reject(s: &str) -> Result<RejectionPolicy> {
     })
 }
 
+/// Scheduler worker threads for the candidate walk + scoring (default 1
+/// = the sequential loop).  Any value yields bit-for-bit the same
+/// placements — this is purely a wall-clock knob — but a bad value must
+/// still fail loudly, not silently fall back to sequential.
+fn parse_sched_workers(args: &Args) -> Result<usize> {
+    match args.get("sched-workers") {
+        None if args.has_flag("sched-workers") => {
+            bail!("--sched-workers requires a value (a positive thread count)")
+        }
+        None => Ok(1),
+        Some(s) => match s.parse::<usize>() {
+            Ok(v) if v > 0 => Ok(v),
+            _ => bail!("invalid --sched-workers {s} (expected a positive thread count)"),
+        },
+    }
+}
+
 fn simulate(args: &Args) -> Result<()> {
     let path = args.get_or("trace", "trace.jsonl");
     let trace = jsonl::load(&path)?;
@@ -155,21 +173,12 @@ fn simulate(args: &Args) -> Result<()> {
         // Pure optimization — `--no-prefix-index` restores the per-pool
         // scan (bit-for-bit identical results, for A/B timing).
         use_prefix_index: !args.has_flag("no-prefix-index"),
+        sched_workers: parse_sched_workers(args)?,
         nic_rx_bw: parse_bw("rx-bw")?,
         ssd_write_bw: parse_bw("ssd-write-bw")?,
         demote_after_ms,
         ..Default::default()
     };
-    // The widened prefix index covers up to `PrefixIndex::MAX_NODES`
-    // prefill nodes with no automatic scan fallback — reject a bigger
-    // cluster cleanly instead of panicking inside the library.
-    if cfg.use_prefix_index && !mooncake::kvcache::PrefixIndex::supports(cfg.n_prefill) {
-        bail!(
-            "--prefill {} exceeds the prefix index's {}-node shard; pass --no-prefix-index",
-            cfg.n_prefill,
-            mooncake::kvcache::PrefixIndex::MAX_NODES
-        );
-    }
     let speedup = args.get_f64("speedup", 1.0);
     let res = sim::run(&cfg, &trace, speedup);
     let rep = res.report(&cfg);
@@ -259,6 +268,7 @@ fn replay(args: &Args) -> Result<()> {
         scheduling: parse_policy(&args.get_or("policy", "centric"))?,
         rejection: parse_reject(&args.get_or("reject", "none"))?,
         seed: args.get_u64("seed", 42),
+        sched_workers: parse_sched_workers(args)?,
         max_live_requests: parse_count("max-live")?,
         interner_epoch_blocks: parse_count("epoch-blocks")?,
         retain_metrics: !args.has_flag("no-metrics"),

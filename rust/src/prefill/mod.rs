@@ -26,7 +26,7 @@ use std::collections::VecDeque;
 
 use crate::config::SimConfig;
 use crate::costmodel;
-use crate::kvcache::{CachePool, PolicyKind, PrefixIndex};
+use crate::kvcache::{CachePool, PolicyKind, ShardedPrefixIndex};
 use crate::model::PerfModel;
 use crate::util::fasthash::FastMap;
 use crate::{RequestId, TimeMs};
@@ -134,6 +134,10 @@ pub struct PrefillPool {
     pub instances: Vec<PrefillInstance>,
     jobs: FastMap<JobId, PrefillJob>,
     next_job: JobId,
+    /// Recycled CPP-group buffers: `finish` reclaims each completed
+    /// job's group vector and `submit` reuses it, so a warmed
+    /// admit→start→finish cycle allocates nothing for the job record.
+    group_pool: Vec<Vec<usize>>,
 }
 
 impl PrefillPool {
@@ -150,6 +154,7 @@ impl PrefillPool {
                 .collect(),
             jobs: FastMap::default(),
             next_job: 0,
+            group_pool: Vec::new(),
         }
     }
 
@@ -161,13 +166,13 @@ impl PrefillPool {
         self.instances.is_empty()
     }
 
-    /// Brute-force build of the Conductor's global [`PrefixIndex`] from
-    /// the current pools.  Incremental maintenance afterwards goes
+    /// Brute-force build of the Conductor's global [`ShardedPrefixIndex`]
+    /// from the current pools.  Incremental maintenance afterwards goes
     /// through the [`crate::kvcache::TierDelta`]s the pool mutators
     /// return — this rebuild is the debug invariant's ground truth and
     /// the cold-start path.
-    pub fn build_prefix_index(&self) -> PrefixIndex {
-        let mut idx = PrefixIndex::new(self.len());
+    pub fn build_prefix_index(&self) -> ShardedPrefixIndex {
+        let mut idx = ShardedPrefixIndex::new(self.len());
         for (node, inst) in self.instances.iter().enumerate() {
             idx.insert_pool(node, &inst.pool);
         }
@@ -253,6 +258,7 @@ impl PrefillPool {
     /// `startable`/`start`/`finish` (the simulator's
     /// `PrefillStart`/`PrefillDone` events).
     #[allow(clippy::too_many_arguments)]
+    // lint: hot
     pub fn submit(
         &mut self,
         perf: &PerfModel,
@@ -275,12 +281,17 @@ impl PrefillPool {
             self.instances[m].queue.push_back(id);
             self.instances[m].free_at = planned_end;
         }
+        // Reuse a reclaimed group buffer (warmed steady state: zero
+        // allocations per admitted job).
+        let mut g = self.group_pool.pop().unwrap_or_default();
+        g.clear();
+        g.extend_from_slice(group);
         self.jobs.insert(
             id,
             PrefillJob {
                 id,
                 rid,
-                group: group.to_vec(),
+                group: g,
                 n_new,
                 prefix_tokens,
                 gate,
@@ -296,10 +307,14 @@ impl PrefillPool {
         id
     }
 
-    /// Jobs that can start at `now`: at the head of every member's queue,
-    /// all members idle, gate passed.  Sorted by admission order.
-    pub fn startable(&self, now: TimeMs) -> Vec<JobId> {
-        let mut out = Vec::new();
+    /// Jobs that can start at `now`, written into a caller-owned
+    /// (reused) buffer: at the head of every member's queue, all members
+    /// idle, gate passed.  Sorted by admission order.  Allocation-free
+    /// once `out` has warmed — the Sim's event pump calls this per
+    /// start opportunity.
+    // lint: hot
+    pub fn startable_into(&self, now: TimeMs, out: &mut Vec<JobId>) {
+        out.clear();
         for inst in &self.instances {
             if inst.running.is_some() {
                 continue;
@@ -321,6 +336,12 @@ impl PrefillPool {
             }
         }
         out.sort_unstable();
+    }
+
+    /// Allocating convenience form of [`Self::startable_into`].
+    pub fn startable(&self, now: TimeMs) -> Vec<JobId> {
+        let mut out = Vec::new();
+        self.startable_into(now, &mut out);
         out
     }
 
@@ -339,6 +360,9 @@ impl PrefillPool {
     /// Start a job: pops it from every member's queue and occupies the
     /// members.  Returns (primary, exec_ms, rid) for the caller to
     /// schedule the completion event and the decode-bound KV stream.
+    /// Allocation-free: the group buffer is borrowed out of the job
+    /// record for the member walk and put back.
+    // lint: hot
     pub fn start(&mut self, id: JobId, now: TimeMs) -> (usize, f64, RequestId) {
         let (group, exec_ms, rid) = {
             let job = self.jobs.get_mut(&id).expect("start of unknown job");
@@ -346,7 +370,7 @@ impl PrefillPool {
             debug_assert!(job.gate <= now + 1e-9, "started before its gate");
             job.state = JobState::Running;
             job.actual_start = now;
-            (job.group.clone(), job.exec_ms, job.rid)
+            (std::mem::take(&mut job.group), job.exec_ms, job.rid)
         };
         for &m in &group {
             let head = self.instances[m].queue.pop_front();
@@ -354,11 +378,16 @@ impl PrefillPool {
             debug_assert!(self.instances[m].running.is_none());
             self.instances[m].running = Some(id);
         }
-        (group[0], exec_ms, rid)
+        let primary = group[0];
+        self.jobs.get_mut(&id).expect("job vanished mid-start").group = group;
+        (primary, exec_ms, rid)
     }
 
     /// Complete a job at `now`: frees the members, records utilization,
-    /// and returns the job (with actual start/end filled in).
+    /// and returns the job (with actual start/end filled in).  The CPP
+    /// group buffer is reclaimed for reuse by a future `submit`, so the
+    /// returned job's `group` is empty — callers read ids and timings.
+    // lint: hot
     pub fn finish(&mut self, id: JobId, now: TimeMs) -> PrefillJob {
         let mut job = self.jobs.remove(&id).expect("finish of unknown job");
         debug_assert_eq!(job.state, JobState::Running);
@@ -373,6 +402,7 @@ impl PrefillPool {
             }
         }
         self.instances[job.group[0]].n_prefilled += 1;
+        self.group_pool.push(std::mem::take(&mut job.group));
         job
     }
 }

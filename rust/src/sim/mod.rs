@@ -33,7 +33,7 @@ use crate::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
-use crate::kvcache::{BlockInterner, DenseBlockId, PrefixIndex, TierCounters};
+use crate::kvcache::{BlockInterner, DenseBlockId, ShardedPrefixIndex, TierCounters};
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
@@ -212,7 +212,7 @@ pub struct Sim<'a> {
     ssd_loaded_bytes_by_node: Vec<u64>,
     /// The Conductor's global prefix index (§5) — `None` only when
     /// explicitly disabled (`use_prefix_index: false`).
-    index: Option<PrefixIndex>,
+    index: Option<ShardedPrefixIndex>,
     /// The interning boundary: trace-level block hashes become dense
     /// scheduler ids here, at request admission, and nothing downstream
     /// ever sees a hash again.
@@ -221,6 +221,8 @@ pub struct Sim<'a> {
     chain_buf: Vec<DenseBlockId>,
     /// The Conductor's reusable decision buffers.
     scratch: SchedScratch,
+    /// Reused startable-job buffer for the prefill event pump.
+    ready_buf: Vec<JobId>,
     n_events: u64,
     /// Outstanding non-bookkeeping events.  `Sample` and `DemoteSweep`
     /// re-arm themselves only while real work remains — gating on this
@@ -267,13 +269,14 @@ impl<'a> Sim<'a> {
             sample_interval: 10_000.0,
             ssd_load_events: 0,
             ssd_loaded_bytes_by_node: vec![0; cfg.n_prefill],
-            // The width-adaptive residency bitsets cover every realistic
-            // cluster, so there is no automatic scan fallback — only the
+            // The sharded index tiles any cluster width into 256-node
+            // groups, so there is no automatic scan fallback — only the
             // explicit `use_prefix_index: false` knob restores the scan.
-            index: cfg.use_prefix_index.then(|| PrefixIndex::new(cfg.n_prefill)),
+            index: cfg.use_prefix_index.then(|| ShardedPrefixIndex::new(cfg.n_prefill)),
             interner: BlockInterner::new(),
             chain_buf: Vec::new(),
             scratch: SchedScratch::default(),
+            ready_buf: Vec::new(),
             n_events: 0,
             real_events: 0,
             demote_after: cfg.demote_after_ms.filter(|&x| x > 0.0 && x.is_finite()),
@@ -348,12 +351,15 @@ impl<'a> Sim<'a> {
     /// it was reserved on the NVMe queue at admission and gated the
     /// start.)
     fn pump_prefill(&mut self, now: TimeMs) {
+        // The startable list rides a reused buffer (swapped in and out
+        // around the loop), keeping the warmed event pump allocation-free.
+        let mut ready = std::mem::take(&mut self.ready_buf);
         loop {
-            let ready = self.prefill.startable(now);
+            self.prefill.startable_into(now, &mut ready);
             if ready.is_empty() {
-                return;
+                break;
             }
-            for jid in ready {
+            for &jid in &ready {
                 let (primary, exec_ms, rid) = self.prefill.start(jid, now);
                 let (input, decode) =
                     self.pending.get(&rid).map(|p| (p.input, p.decode)).unwrap_or((0, 0));
@@ -369,6 +375,7 @@ impl<'a> Sim<'a> {
                 self.push(now + exec_ms, EventKind::PrefillDone { jid });
             }
         }
+        self.ready_buf = ready;
     }
 
     /// Admit one request at time `now` (its arrival time, except when a
@@ -475,6 +482,9 @@ impl<'a> Sim<'a> {
                 // when there is no remote fetch).
                 let gate = self.prefill.job(p.job).gate;
                 self.push(gate.max(now), EventKind::PrefillStart { jid: p.job });
+                // Placement consumed: hand its group buffer back so the
+                // next accept reuses it instead of allocating.
+                self.scratch.recycle_placement_group(p.prefill_group);
             }
         }
     }

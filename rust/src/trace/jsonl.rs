@@ -42,11 +42,23 @@ pub fn record_to_json(r: &TraceRecord) -> String {
     ]))
 }
 
+/// Load a whole trace, sorted by timestamp.  Gzipped traces are
+/// detected by the `0x1F 0x8B` magic (same sniff as
+/// [`super::replay::ReplayReader`]) and routed through the vendored
+/// streaming inflater.
 pub fn load<P: AsRef<Path>>(path: P) -> Result<Vec<TraceRecord>> {
     let f = File::open(path.as_ref())
         .with_context(|| format!("open trace {:?}", path.as_ref()))?;
+    let mut raw = BufReader::new(f);
+    let head =
+        raw.fill_buf().with_context(|| format!("read trace {:?}", path.as_ref()))?;
+    let reader: Box<dyn BufRead> = if head.starts_with(&[0x1F, 0x8B]) {
+        Box::new(BufReader::new(super::inflate::GzReader::new(raw)))
+    } else {
+        Box::new(raw)
+    };
     let mut out = Vec::new();
-    for line in BufReader::new(f).lines() {
+    for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;

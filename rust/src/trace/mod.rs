@@ -3,6 +3,7 @@
 //! trace features, and analyzers for Figs 5/6 and Table 1.
 
 pub mod gen;
+pub mod inflate;
 pub mod jsonl;
 pub mod replay;
 pub mod stats;

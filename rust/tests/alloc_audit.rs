@@ -8,10 +8,11 @@
 //!
 //! One `#[test]` only: the allocation counter is process-global, so a
 //! second concurrent test in this binary would pollute the audited
-//! regions.  Both phases (scan pricing and index-backed pricing) run
+//! regions.  All phases (scan/index pricing, scan/index *accepts*) run
 //! sequentially inside it.
 
 use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
+use mooncake::prefill::JobId;
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
 use mooncake::decode::DecodeInstance;
 use mooncake::kvcache::DenseBlockId;
@@ -95,6 +96,89 @@ fn audit_decisions(use_index: bool, iters: usize) -> u64 {
     guard.count()
 }
 
+/// Allocations across `iters` warmed **accept** cycles: an accepting
+/// SLO admits the same fully-resident chain every iteration, and the
+/// job is driven through `startable_into`/`start`/`finish` so the pool
+/// returns to its idle state before the next accept.  Every buffer the
+/// lifecycle needs is recycled — the placement group, the job's CPP
+/// group, the startable list — so the warmed cycle performs zero heap
+/// allocations (ISSUE 8 satellite).  Uncapped tiers, so the hit path
+/// never touches the eviction-order tree.
+fn audit_accepts(use_index: bool, iters: usize) -> u64 {
+    let cfg = SimConfig {
+        n_prefill: 4,
+        n_decode: 4,
+        scheduling: SchedulingPolicy::KvCacheCentric,
+        rejection: RejectionPolicy::None,
+        cache_capacity_blocks: None,
+        ssd_capacity_blocks: None,
+        slo: SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let chain = 64usize;
+    let perf = PerfModel::paper();
+
+    // Every node holds the whole chain in DRAM: each accept is an
+    // all-hit local placement — no fetch, no staging, no demotions —
+    // and admission merely touches recency metadata.
+    let mut pool = PrefillPool::new(&cfg);
+    let probe: Vec<DenseBlockId> = (0..chain as u32).collect();
+    for inst in pool.instances.iter_mut() {
+        let _ = inst.pool.admit_chain(&probe, 0.0);
+    }
+    let mut index = use_index.then(|| pool.build_prefix_index());
+
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
+    let mut stats = ConductorStats::default();
+    // Four blocks of fresh suffix keep the prefill non-degenerate.
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: (chain as u64 + 4) * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut ready: Vec<JobId> = Vec::new();
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+            scratch: &mut scratch,
+        };
+        let p = conductor::schedule(&mut ctx, &req, &mut stats)
+            .expect("accepting steady state must admit");
+        let jid = p.job;
+        assert!(p.fetch.is_none() && p.ssd_load_blocks == 0, "accept must be all-hit local");
+        scratch.recycle_placement_group(p.prefill_group);
+        // Drive the admitted job to completion so the queues drain back
+        // to the idle state the next accept prices.
+        pool.startable_into(now, &mut ready);
+        assert!(ready.len() == 1 && ready[0] == jid, "the fresh job must be startable");
+        let (_primary, exec_ms, rid) = pool.start(jid, now);
+        assert!(rid == req.rid);
+        let _done = pool.finish(jid, now + exec_ms);
+        assert!(pool.outstanding() == 0);
+    };
+    for w in 0..64 {
+        run_one(w as f64 * 1e4);
+    }
+    let guard = AllocGuard::new();
+    for k in 0..iters {
+        run_one((64 + k) as f64 * 1e4);
+    }
+    guard.count()
+}
+
 #[test]
 fn steady_state_decisions_do_not_allocate() {
     let iters = 1_000usize;
@@ -104,16 +188,29 @@ fn steady_state_decisions_do_not_allocate() {
     let scan = audit_decisions(false, iters);
     assert_eq!(scan, 0, "scan-path decision loop allocated ({scan} allocs / {iters} decisions)");
 
-    // Index-backed pricing: the release hot path is allocation-free.
+    // Accept lifecycle on the scan path: admit → start → finish, also
+    // allocation-free once the recycled buffers are warm.
+    let scan_accepts = audit_accepts(false, iters);
+    assert_eq!(
+        scan_accepts, 0,
+        "scan-path accept loop allocated ({scan_accepts} allocs / {iters} accepts)"
+    );
+
+    // Index-backed phases: the release hot path is allocation-free.
     // Debug builds run the scan-vs-index parity self-check inside
-    // `find_prefix_matches_into`, which allocates by design — so this
-    // phase only gates optimized builds (CI runs it via
+    // `find_prefix_matches_into`, which allocates by design — so these
+    // phases only gate optimized builds (CI runs them via
     // `cargo test --release --features alloc-audit`).
     if !cfg!(debug_assertions) {
         let indexed = audit_decisions(true, iters);
         assert_eq!(
             indexed, 0,
             "index-path decision loop allocated ({indexed} allocs / {iters} decisions)"
+        );
+        let indexed_accepts = audit_accepts(true, iters);
+        assert_eq!(
+            indexed_accepts, 0,
+            "index-path accept loop allocated ({indexed_accepts} allocs / {iters} accepts)"
         );
     }
 }

@@ -271,6 +271,55 @@ fn prefix_index_is_a_pure_optimization_bit_for_bit() {
 }
 
 #[test]
+fn sched_workers_do_not_perturb_results() {
+    // ISSUE 8 acceptance pin: the parallel candidate walk is a pure
+    // wall-clock optimization — `sched_workers = 1` and `= 4` produce
+    // bit-for-bit identical SimResults, on the default config and under
+    // tier pressure (evictions, demotions, SSD staging, remote fetches
+    // all flowing through the sharded index while workers differ).
+    let t = trace(500);
+    let one = SimConfig { sched_workers: 1, ..Default::default() };
+    assert_eq!(SimConfig::default().sched_workers, 1, "sequential is the default");
+    let four = SimConfig { sched_workers: 4, ..Default::default() };
+    assert_runs_identical(&sim::run(&one, &t, 1.0), &sim::run(&four, &t, 1.0));
+
+    let mk = |workers| SimConfig {
+        sched_workers: workers,
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(50_000),
+        demote_after_ms: Some(120_000.0),
+        n_prefill: 4,
+        n_decode: 4,
+        ..Default::default()
+    };
+    let a = sim::run(&mk(1), &t, 2.0);
+    let b = sim::run(&mk(4), &t, 2.0);
+    assert!(a.tier.demotions > 0, "pressure scenario must exercise demotion");
+    assert_runs_identical(&a, &b);
+}
+
+#[test]
+fn multi_shard_cluster_runs_end_to_end() {
+    // The 256-node cap is gone: a 300-node prefill fleet (two index
+    // shards, one only 44 nodes wide) completes a full run, stays
+    // bit-for-bit identical to the per-pool scan path (index off) and to
+    // itself under parallel scoring, and actually reuses prefixes.
+    let t = trace(400);
+    let mk = |use_idx, workers| SimConfig {
+        n_prefill: 300,
+        n_decode: 8,
+        use_prefix_index: use_idx,
+        sched_workers: workers,
+        ..Default::default()
+    };
+    let idx = sim::run(&mk(true, 1), &t, 1.0);
+    assert!(idx.n_completed > 0, "300-node cluster must complete requests");
+    assert!(idx.conductor.reused_blocks > 0, "prefix reuse must survive sharding");
+    assert_runs_identical(&idx, &sim::run(&mk(false, 1), &t, 1.0));
+    assert_runs_identical(&idx, &sim::run(&mk(true, 4), &t, 1.0));
+}
+
+#[test]
 fn streaming_replay_is_bit_for_bit_the_materialized_run() {
     // The streaming tentpole's equivalence pin: feeding the default
     // generated trace through `run_stream` as an iterator (no knobs set)

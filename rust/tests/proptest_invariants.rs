@@ -6,6 +6,7 @@
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig};
 use mooncake::kvcache::{
     chain_hashes, BlockInterner, CachePool, DenseBlockId, EvictionPolicy, PolicyKind, PrefixIndex,
+    ShardedPrefixIndex,
 };
 use mooncake::metrics::Outcome;
 use mooncake::sim;
@@ -663,5 +664,117 @@ fn prop_prefix_index_widths_agree_with_scan() {
             }
         }
         assert!(idx.equals_rebuild_of(pools.iter()), "width {width}: final state");
+    }
+}
+
+/// Property (tentpole, ISSUE 8): the sharded index is observationally
+/// identical to the monolithic one — over arbitrary interleavings of
+/// admit / demote / replica / idle-sweep ops at cluster widths from a
+/// single node to 1024 (one shard, an exactly-full shard, a one-node
+/// overflow shard, and four full shards):
+///
+/// * `best_prefix_into` (matches, SSD positions) equals every node's own
+///   `prefix_match_with`, at every worker count — the parallel walk may
+///   not perturb a single bit;
+/// * for ≤ 256 nodes it is also bit-for-bit the monolithic
+///   `PrefixIndex` fed the identical deltas;
+/// * `holders` / `tier_on` agree with the ground-truth pools;
+/// * every shard survives `equals_rebuild_of`.
+#[test]
+fn prop_sharded_index_agrees_with_monolithic() {
+    use mooncake::kvcache::SsdPositions;
+    let mut rng = Rng::new(0x5AADED);
+    for &n_nodes in &[1usize, 3, 255, 256, 257, 300, 1024] {
+        // Larger clusters get fewer steps: each probe cross-checks every
+        // node, so the work per step is already O(n_nodes).
+        let steps = if n_nodes > 300 { 60 } else { 250 };
+        let mut pools: Vec<CachePool> =
+            (0..n_nodes).map(|_| CachePool::new(PolicyKind::Lru, Some(24), Some(40))).collect();
+        let mut sharded = ShardedPrefixIndex::new(n_nodes);
+        assert_eq!(sharded.n_shards(), n_nodes.div_ceil(256));
+        let mut mono = (n_nodes <= 256).then(|| PrefixIndex::new(n_nodes));
+        let mut out = Vec::new();
+        let mut pos = SsdPositions::default();
+        let mut shard_pos: Vec<SsdPositions> = Vec::new();
+        let mut mono_out = Vec::new();
+        let mut mono_pos = SsdPositions::default();
+        let mut scan_pos = Vec::new();
+        for step in 0..steps {
+            let now = step as f64;
+            // A few mutations per probe, spread over random nodes (with
+            // some clustering so shard-boundary nodes see real traffic).
+            for _ in 0..4 {
+                let node = match rng.below(4) {
+                    0 if n_nodes > 2 => n_nodes - 1 - rng.below(2) as usize,
+                    _ => rng.below(n_nodes as u64) as usize,
+                };
+                let delta = match rng.below(6) {
+                    0 => {
+                        let chain: Vec<DenseBlockId> = (0..1 + rng.below(8))
+                            .map(|_| rng.below(150) as DenseBlockId)
+                            .collect();
+                        pools[node].insert_replica(&chain, now)
+                    }
+                    1 => {
+                        let b = rng.below(150) as DenseBlockId;
+                        pools[node].demote_block(b, now).unwrap_or_default()
+                    }
+                    2 => pools[node].demote_idle(now, 1.0 + rng.f64() * 40.0),
+                    _ => {
+                        let len = 1 + rng.below(12) as u32;
+                        let start = rng.below(130) as u32;
+                        let chain: Vec<DenseBlockId> = (start..start + len).collect();
+                        let reused = rng.below(len as u64 + 1) as usize;
+                        pools[node].admit_chain_reusing(&chain, reused, now)
+                    }
+                };
+                sharded.apply(node, &delta);
+                if let Some(m) = mono.as_mut() {
+                    m.apply(node, &delta);
+                }
+            }
+            let start = rng.below(130) as u32;
+            let probe: Vec<DenseBlockId> = (start..start + 1 + rng.below(16) as u32).collect();
+            let workers = [1usize, 2, 3, 8][step % 4];
+            sharded.best_prefix_into(&probe, &mut out, &mut pos, &mut shard_pos, workers);
+            assert_eq!(out.len(), n_nodes);
+            for (n, pool) in pools.iter().enumerate() {
+                let want = pool.prefix_match_with(&probe, &mut scan_pos);
+                assert_eq!(out[n], want, "{n_nodes} nodes, {workers} workers, node {n}");
+                assert_eq!(
+                    pos.node(n),
+                    &scan_pos[..],
+                    "{n_nodes} nodes, {workers} workers, node {n}: SSD positions"
+                );
+            }
+            if let Some(m) = &mono {
+                m.best_prefix_into(&probe, &mut mono_out, &mut mono_pos);
+                assert_eq!(out, mono_out, "{n_nodes} nodes: sharded != monolithic");
+                for n in 0..n_nodes {
+                    assert_eq!(pos.node(n), mono_pos.node(n), "{n_nodes} nodes, node {n}");
+                }
+            }
+            // Holders and tier_on against the ground-truth pools.
+            let b = rng.below(150) as DenseBlockId;
+            let want_holders: Vec<usize> = pools
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.contains(b))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(sharded.holders(b), want_holders, "{n_nodes} nodes: holders of {b}");
+            for _ in 0..8 {
+                let n = rng.below(n_nodes as u64) as usize;
+                assert_eq!(
+                    sharded.tier_on(n, b),
+                    pools[n].tier_of(b),
+                    "{n_nodes} nodes: tier_on({n}, {b})"
+                );
+            }
+            if step % 50 == 0 {
+                assert!(sharded.equals_rebuild_of(pools.iter()), "{n_nodes} nodes, step {step}");
+            }
+        }
+        assert!(sharded.equals_rebuild_of(pools.iter()), "{n_nodes} nodes: final state");
     }
 }

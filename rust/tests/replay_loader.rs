@@ -14,6 +14,8 @@ use mooncake::trace::replay::{ReplayReader, ReplayStream};
 use mooncake::trace::{jsonl, TraceRecord};
 
 const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/mooncake_trace.jsonl");
+const FIXTURE_GZ: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/mooncake_trace.jsonl.gz");
 
 /// FNV-1a fold over every field of every record (the same construction
 /// as `kvcache::chain_hashes`): the pin breaks iff parsed content
@@ -86,6 +88,56 @@ fn fixture_replay_matches_batch_simulation() {
     assert_eq!(batch.n_completed, stream.n_completed);
     assert_eq!(batch.decode_tokens_out, stream.decode_tokens_out);
     assert_eq!(batch.wall_ms.to_bits(), stream.wall_ms.to_bits());
+}
+
+/// The committed `.gz` fixture (produced by `gzip -9 -n`, dynamic
+/// Huffman) parses to exactly the same records as the plain file, FNV
+/// pin included — the gzip path is a pure transport change.
+#[test]
+fn gzipped_fixture_matches_plain_and_fnv_pin() {
+    let plain: Vec<TraceRecord> =
+        ReplayReader::open(FIXTURE).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    let gz: Vec<TraceRecord> =
+        ReplayReader::open(FIXTURE_GZ).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    assert_eq!(gz, plain, "gzipped fixture must parse to the plain fixture's records");
+    assert_eq!(fnv_records(&gz), 0xac17_4157_1860_3447);
+    // The batch loader shares the sniff.
+    assert_eq!(jsonl::load(FIXTURE_GZ).unwrap(), plain);
+}
+
+/// Detection is by content (the 0x1F 0x8B magic), not filename: gzip
+/// bytes under a `.jsonl` name and plain text under a `.gz` name both
+/// replay.
+#[test]
+fn gzip_detection_is_by_content_not_extension() {
+    let misnamed_gz = std::env::temp_dir().join("loader_actually_gzip.jsonl");
+    std::fs::copy(FIXTURE_GZ, &misnamed_gz).unwrap();
+    let a: Vec<TraceRecord> =
+        ReplayReader::open(&misnamed_gz).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    assert_eq!(a.len(), 8);
+
+    let misnamed_plain = std::env::temp_dir().join("loader_actually_plain.jsonl.gz");
+    std::fs::copy(FIXTURE, &misnamed_plain).unwrap();
+    let b: Vec<TraceRecord> =
+        ReplayReader::open(&misnamed_plain).unwrap().collect::<anyhow::Result<_>>().unwrap();
+    assert_eq!(b, a);
+    std::fs::remove_file(misnamed_gz).ok();
+    std::fs::remove_file(misnamed_plain).ok();
+}
+
+/// A corrupt gzip trailer surfaces as a loader error after the decoded
+/// records — never as silent truncation.
+#[test]
+fn corrupt_gzip_crc_is_a_loader_error() {
+    let mut bytes = std::fs::read(FIXTURE_GZ).unwrap();
+    let n = bytes.len();
+    bytes[n - 5] ^= 0xFF; // trailer = 4 CRC bytes + 4 ISIZE bytes
+    let path = std::env::temp_dir().join("loader_bad_crc.jsonl.gz");
+    std::fs::write(&path, &bytes).unwrap();
+    let results: Vec<anyhow::Result<TraceRecord>> = ReplayReader::open(&path).unwrap().collect();
+    let err = results.last().unwrap().as_ref().unwrap_err().to_string();
+    assert!(err.contains("CRC-32 mismatch"), "wrong diagnostic: {err}");
+    std::fs::remove_file(path).ok();
 }
 
 #[test]
