@@ -42,10 +42,20 @@
 //! printed loudly and recorded in the JSON row as
 //! `par_floor_enforced: false`).
 //!
+//! Two cells ride along for ISSUE 9's hybrid load+recompute branch: a
+//! **hybrid prefix-plan ablation** pricing Algorithm 1's four plans
+//! (pure-dram / ssd-stage / recompute / hybrid) straight from the cost
+//! model across NVMe backlog depths — pure arithmetic over queue
+//! probes, so the hybrid-dominates-every-exclusive-plan floor is a
+//! deterministic CI gate rather than a perf measurement — and a
+//! **cold-start sweep** (DRAM capacity × session re-arrival gap) whose
+//! returning prefixes have been demoted to SSD, exercising the
+//! stage-vs-recompute-vs-hybrid decision end to end.
+//!
 //! Emits `BENCH_sched.json` — the one trajectory artifact CI uploads;
-//! every row carries a `variant` column (`"sharded"` since ISSUE 8) so
-//! the same file accumulates seed/interned/sharded cells instead of
-//! growing parallel artifacts.  The ≥5× decision-throughput floor on
+//! every row carries a `variant` column (`"hybrid"` since ISSUE 9) so
+//! the same file accumulates seed/interned/sharded/hybrid cells instead
+//! of growing parallel artifacts.  The ≥5× decision-throughput floor on
 //! the 64-node × 4096-block cell is asserted in **both** full and
 //! `--smoke` mode (smoke runs that one target cell on top of its tiny
 //! grid), as is the cluster cell's seq-vs-scan floor.
@@ -55,19 +65,21 @@ use std::time::Instant;
 use mooncake::bench_util::{banner, row};
 use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
+use mooncake::costmodel;
 use mooncake::decode::DecodeInstance;
 use mooncake::kvcache::DenseBlockId;
 use mooncake::model::PerfModel;
 use mooncake::prefill::PrefillPool;
 use mooncake::resource::Resources;
 use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
 use mooncake::trace::{TraceRecord, BLOCK_TOKENS};
 use mooncake::util::json::{self, Value};
 use mooncake::util::rng::Rng;
 
 /// Implementation variant stamped on every JSON row — bump when a perf
 /// PR re-measures the same cells so the artifact reads as a trajectory.
-const VARIANT: &str = "sharded";
+const VARIANT: &str = "hybrid";
 
 const TARGET_NODES: usize = 64;
 const TARGET_CHAIN: usize = 4096;
@@ -86,6 +98,12 @@ const FULL_NODES: &[usize] = &[4, 16, 64];
 const FULL_CHAINS: &[usize] = &[64, 512, 4096];
 const SMOKE_NODES: &[usize] = &[4, 8];
 const SMOKE_CHAINS: &[usize] = &[64, 256];
+
+/// Hybrid ablation cell (ISSUE 9): on the contended row the hybrid plan
+/// must beat the best exclusive plan by this factor.  The ablation is
+/// deterministic cost-model arithmetic, so the floor is enforced in
+/// both full and smoke mode.
+const HYBRID_FLOOR: f64 = 1.25;
 
 struct Cell {
     nodes: usize,
@@ -587,6 +605,172 @@ fn sustained_replay(smoke: bool) -> Value {
     ])
 }
 
+/// Hybrid-vs-exclusive prefix-plan ablation (ISSUE 9): price all four
+/// plans of Algorithm 1's decision on one fixed cell — a 64-block
+/// matched chain, half DRAM-resident and half demoted to SSD, with
+/// 4 096 fresh tokens — across NVMe backlog depths, straight from the
+/// cost model.  Pure arithmetic over queue probes (no timing noise), so
+/// the dominance asserts are deterministic CI gates: the hybrid plan
+/// must beat every exclusive plan in every row, and beat the best of
+/// them by [`HYBRID_FLOOR`]x on the contended 500 ms-backlog row.
+fn hybrid_ablation() -> Value {
+    let cfg = SimConfig { n_prefill: 1, n_decode: 1, ..Default::default() };
+    assert!(cfg.hybrid, "the ablation prices the default-on fourth branch");
+    let perf = PerfModel::paper();
+    let pool = PrefillPool::new(&cfg);
+    let group = [0usize];
+    let (m, dram) = (64usize, 32usize);
+    let total = m as u64 * BLOCK_TOKENS + 4_096;
+    let positions: Vec<u32> = (dram as u32..m as u32).collect();
+    banner("hybrid prefix-plan ablation: plan end-ms vs NVMe backlog");
+    let header = ["backlog ms", "pure-dram", "ssd-stage", "recompute", "hybrid", "staged", "gain"];
+    row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for &(backlog_ms, min_gain) in &[(0.0f64, 1.0), (500.0, HYBRID_FLOOR), (2_000.0, 1.0)] {
+        let mut res = Resources::new(&cfg, &perf);
+        if backlog_ms > 0.0 {
+            let bytes = (backlog_ms / 1e3 * perf.hw.ssd_read_bw) as u64;
+            res.nvme.schedule(0, 0.0, bytes, 0.0);
+        }
+        let exclusive = |reuse: u64, ssd: u64| {
+            costmodel::estimate_prefill(
+                &perf,
+                &cfg,
+                &pool,
+                &res,
+                &group,
+                total - reuse * BLOCK_TOKENS,
+                reuse * BLOCK_TOKENS,
+                ssd * BLOCK_TOKENS,
+                None,
+                0.0,
+            )
+        };
+        let pure_dram = exclusive(dram as u64, 0);
+        let ssd_stage = exclusive(m as u64, (m - dram) as u64);
+        let recompute = exclusive(0, 0);
+        let (k, j, hybrid) = costmodel::hybrid_split_scan(m, &positions, |k, j| {
+            costmodel::estimate_prefill_hybrid(
+                &perf,
+                &cfg,
+                &pool,
+                &res,
+                &group,
+                total - k as u64 * BLOCK_TOKENS,
+                k as u64 * BLOCK_TOKENS,
+                j as u64 * BLOCK_TOKENS,
+                0.0,
+            )
+        })
+        .expect("half the chain sits on the SSD tier");
+        let best_excl = pure_dram.end.min(ssd_stage.end).min(recompute.end);
+        let gain = best_excl / hybrid.end;
+        assert!(
+            hybrid.end < best_excl,
+            "hybrid plan must dominate at backlog {backlog_ms} ms: {:.0} vs {best_excl:.0}",
+            hybrid.end
+        );
+        assert!(
+            gain >= min_gain,
+            "hybrid gain {gain:.2}x below the {min_gain}x floor at backlog {backlog_ms} ms"
+        );
+        row(&[
+            format!("{backlog_ms:.0}"),
+            format!("{:.0}", pure_dram.end),
+            format!("{:.0}", ssd_stage.end),
+            format!("{:.0}", recompute.end),
+            format!("{:.0}", hybrid.end),
+            format!("{j}/{}", m - dram),
+            format!("{gain:.2}x"),
+        ]);
+        rows.push(json::obj(vec![
+            ("variant", Value::Str(VARIANT.into())),
+            ("chain_blocks", json::num(m as f64)),
+            ("dram_blocks", json::num(dram as f64)),
+            ("new_tokens", json::num(4_096.0)),
+            ("nvme_backlog_ms", json::num(backlog_ms)),
+            ("pure_dram_ms", json::num(pure_dram.end)),
+            ("ssd_stage_ms", json::num(ssd_stage.end)),
+            ("recompute_ms", json::num(recompute.end)),
+            ("hybrid_ms", json::num(hybrid.end)),
+            ("hybrid_staged_blocks", json::num(j as f64)),
+            ("hybrid_reused_blocks", json::num(k as f64)),
+            ("dominance_gain", json::num(gain)),
+            ("min_gain", json::num(min_gain)),
+        ]));
+    }
+    Value::Arr(rows)
+}
+
+/// Cold-start capacity sweep (ISSUE 9): sessions re-arrive after long
+/// idle gaps against DRAM tiers smaller than the working set, so the
+/// returning prefix has been demoted and Algorithm 1's
+/// stage-vs-recompute-vs-hybrid choice runs end to end — the regime the
+/// fourth branch exists for.  Grids DRAM capacity x re-arrival gap;
+/// schema-stable rows (`hybrid_placements` et al.) land in
+/// `BENCH_sched.json`.
+fn cold_start_sweep(smoke: bool) -> Value {
+    let n_req = if smoke { 150 } else { 500 };
+    let dram_caps: &[usize] = &[256, 1_024];
+    let gaps: &[f64] = &[120_000.0, 600_000.0];
+    banner("cold-start sweep: dram capacity x re-arrival gap");
+    let header = ["dram", "gap s", "done", "ttft ms", "ssd loads", "hybrid", "demotions", "hits"];
+    row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let mut rows = Vec::new();
+    for &cap in dram_caps {
+        for &gap in gaps {
+            let trace = gen::generate(&TraceGenConfig {
+                n_requests: n_req,
+                duration_ms: 1_200_000,
+                seed: 0xC01D,
+                rearrival_fraction: 0.7,
+                mean_rearrival_gap_ms: gap,
+                ..Default::default()
+            });
+            let cfg = SimConfig {
+                n_prefill: 4,
+                n_decode: 4,
+                cache_capacity_blocks: Some(cap),
+                ssd_capacity_blocks: Some(100_000),
+                demote_after_ms: Some(60_000.0),
+                slo: SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+                ..Default::default()
+            };
+            let res = sim::run(&cfg, &trace, 1.0);
+            let rep = res.report(&cfg);
+            let done = res
+                .metrics
+                .iter()
+                .filter(|m| m.outcome == mooncake::metrics::Outcome::Completed)
+                .count();
+            row(&[
+                cap.to_string(),
+                format!("{:.0}", gap / 1e3),
+                done.to_string(),
+                format!("{:.0}", rep.ttft_mean),
+                res.conductor.ssd_loads.to_string(),
+                res.conductor.hybrid_placements.to_string(),
+                res.tier.demotions.to_string(),
+                res.tier.ssd_hits.to_string(),
+            ]);
+            rows.push(json::obj(vec![
+                ("variant", Value::Str(VARIANT.into())),
+                ("dram_blocks", json::num(cap as f64)),
+                ("rearrival_gap_ms", json::num(gap)),
+                ("requests", json::num(n_req as f64)),
+                ("completed", json::num(done as f64)),
+                ("ttft_mean_ms", json::num(rep.ttft_mean)),
+                ("ssd_loads", json::num(res.conductor.ssd_loads as f64)),
+                ("hybrid_placements", json::num(res.conductor.hybrid_placements as f64)),
+                ("hybrid_staged_blocks", json::num(res.conductor.hybrid_staged_blocks as f64)),
+                ("demotions", json::num(res.tier.demotions as f64)),
+                ("ssd_hits", json::num(res.tier.ssd_hits as f64)),
+            ]));
+        }
+    }
+    Value::Arr(rows)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     banner(if smoke {
@@ -667,6 +851,10 @@ fn main() {
 
     let sweep = congestion_sweep(smoke);
     let replay = sustained_replay(smoke);
+    // Deterministic cost-model ablation + end-to-end cold-start sweep
+    // (ISSUE 9); the ablation's dominance floor gates every push.
+    let ablation = hybrid_ablation();
+    let cold = cold_start_sweep(smoke);
 
     let allocs_per_decision = measure_allocs_per_decision();
     println!("allocs_per_decision: {}", json::to_string(&allocs_per_decision));
@@ -718,6 +906,8 @@ fn main() {
     obj.push(("cluster", cluster));
     obj.push(("congestion_sweep", sweep));
     obj.push(("sustained_replay", replay));
+    obj.push(("hybrid_ablation", ablation));
+    obj.push(("cold_start_sweep", cold));
     // The runtime no-alloc audit (null unless built with `alloc-audit`).
     obj.push(("allocs_per_decision", allocs_per_decision));
     if let Some(c) = target {

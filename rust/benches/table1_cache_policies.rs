@@ -6,9 +6,15 @@
 //! 1k 0.30 — and LRU >= LFU >= LengthAware at mid capacities.
 
 use mooncake::bench_util::{banner, fmt, row};
+use mooncake::config::SimConfig;
+use mooncake::costmodel;
 use mooncake::kvcache::PolicyKind;
+use mooncake::model::PerfModel;
+use mooncake::prefill::PrefillPool;
+use mooncake::resource::Resources;
 use mooncake::trace::gen::{generate, TraceGenConfig};
 use mooncake::trace::stats::{cache_hit_rate, tiered_cache_hit_rate};
+use mooncake::trace::BLOCK_TOKENS;
 
 fn main() {
     let trace = generate(&TraceGenConfig::default());
@@ -77,4 +83,85 @@ fn main() {
         assert!(tc.ssd_hits > 0 && tc.demotions > tc.dropped);
     }
     println!("\ntable1b tier ablation OK");
+
+    prefix_plan_ablation();
+}
+
+/// Table 1c — the ISSUE 9 prefix-plan ablation: one fixed decision cell
+/// (64-block matched chain, half DRAM / half SSD, 4 096 fresh tokens)
+/// priced under every plan of Algorithm 1's four-way choice, idle and
+/// behind a 500 ms NVMe backlog.  Rows are keyed by a schema-stable
+/// `policy` name (pure-dram / ssd-stage / recompute / hybrid) so they
+/// are self-describing rather than positional, and the hybrid plan must
+/// strictly dominate every exclusive plan in both columns.
+fn prefix_plan_ablation() {
+    let cfg = SimConfig { n_prefill: 1, n_decode: 1, ..Default::default() };
+    let perf = PerfModel::paper();
+    let pool = PrefillPool::new(&cfg);
+    let group = [0usize];
+    let (m, dram) = (64usize, 32usize);
+    let total = m as u64 * BLOCK_TOKENS + 4_096;
+    let positions: Vec<u32> = (dram as u32..m as u32).collect();
+
+    let price_all = |res: &Resources| -> [(&'static str, f64); 4] {
+        let excl = |reuse: u64, ssd: u64| {
+            costmodel::estimate_prefill(
+                &perf,
+                &cfg,
+                &pool,
+                res,
+                &group,
+                total - reuse * BLOCK_TOKENS,
+                reuse * BLOCK_TOKENS,
+                ssd * BLOCK_TOKENS,
+                None,
+                0.0,
+            )
+            .end
+        };
+        let (_, _, best) = costmodel::hybrid_split_scan(m, &positions, |k, j| {
+            costmodel::estimate_prefill_hybrid(
+                &perf,
+                &cfg,
+                &pool,
+                res,
+                &group,
+                total - k as u64 * BLOCK_TOKENS,
+                k as u64 * BLOCK_TOKENS,
+                j as u64 * BLOCK_TOKENS,
+                0.0,
+            )
+        })
+        .expect("half the chain sits on the SSD tier");
+        [
+            ("pure-dram", excl(dram as u64, 0)),
+            ("ssd-stage", excl(m as u64, (m - dram) as u64)),
+            ("recompute", excl(0, 0)),
+            ("hybrid", best.end),
+        ]
+    };
+
+    let idle = Resources::new(&cfg, &perf);
+    let mut contended = Resources::new(&cfg, &perf);
+    // 500 ms of queued reads ahead of us on the primary's NVMe device.
+    contended.nvme.schedule(0, 0.0, (0.5 * perf.hw.ssd_read_bw) as u64, 0.0);
+
+    banner("Table 1c: prefix-plan ablation (64-block chain, half on SSD, 4096 new tokens)");
+    let header: Vec<String> =
+        ["policy", "idle ms", "contended ms"].iter().map(|s| s.to_string()).collect();
+    row(&header);
+    let idle_ms = price_all(&idle);
+    let cont_ms = price_all(&contended);
+    for (a, b) in idle_ms.iter().zip(cont_ms.iter()) {
+        row(&[a.0.to_string(), format!("{:.0}", a.1), format!("{:.0}", b.1)]);
+    }
+    for t in [&idle_ms, &cont_ms] {
+        let hybrid = t[3].1;
+        let best_excl = t[0].1.min(t[1].1).min(t[2].1);
+        assert!(
+            hybrid < best_excl,
+            "hybrid plan must strictly dominate: {hybrid:.0} vs best exclusive {best_excl:.0}"
+        );
+    }
+    println!("\ntable1c prefix-plan ablation OK (hybrid dominates both columns)");
 }

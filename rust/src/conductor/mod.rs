@@ -202,6 +202,14 @@ pub struct ConductorStats {
     /// blocks those stagings covered.
     pub fetch_stagings: u64,
     pub fetch_staged_blocks: u64,
+    /// Placements that chose the *hybrid* load+recompute plan
+    /// (`cfg.hybrid`, Algorithm 1's fourth branch): the head of the
+    /// matched SSD prefix streams up while the GPU recomputes the tail.
+    /// `hybrid_staged_blocks` / `hybrid_recomputed_blocks` split the
+    /// SSD-resident match between the two sides of the chosen split.
+    pub hybrid_placements: u64,
+    pub hybrid_staged_blocks: u64,
+    pub hybrid_recomputed_blocks: u64,
 }
 
 /// The read-only environment one candidate's scoring needs.  Everything
@@ -284,6 +292,10 @@ struct PrefillChoice {
     /// was priced cheaper than staging them, and `src_ssd_blocks` is the
     /// source-side SSD staging the transfer pays first.
     fetch: Option<FetchPlan>,
+    /// The hybrid load+recompute plan won (`cfg.hybrid`): `ssd_blocks`
+    /// stage up *overlapped* with recomputing the tail — the staging
+    /// read floors the job's completion instead of gating its start.
+    hybrid: bool,
     est: PrefillEstimate,
 }
 
@@ -303,6 +315,7 @@ fn local_choice_in(env: &ScoreEnv, i: usize, m: TierMatch, group: &mut Vec<usize
         ssd_blocks: m.ssd_blocks,
         recomputed_ssd_blocks: 0,
         fetch: None,
+        hybrid: false,
         est: full,
     };
     if m.blocks > m.dram_prefix {
@@ -312,6 +325,45 @@ fn local_choice_in(env: &ScoreEnv, i: usize, m: TierMatch, group: &mut Vec<usize
             choice.ssd_blocks = 0;
             choice.recomputed_ssd_blocks = m.ssd_blocks;
             choice.est = dram_only;
+        }
+        // The fourth branch (`cfg.hybrid`): split the match at an SSD
+        // position — stage the head *while* recomputing the tail, so
+        // the critical path is max(load, compute) rather than their
+        // sum.  The scan prices every distinct split (j staged blocks,
+        // reuse up to the next SSD position); j = 0 is the dram_only
+        // plan above and j = npos competes with the full-stage plan.
+        // Strict `<` keeps `hybrid: false` ties on yesterday's plans.
+        if env.cfg.hybrid {
+            let scan = costmodel::hybrid_split_scan(m.blocks, env.ssd_pos.node(i), |k, j| {
+                let (prefix_tokens, n_new) = env.req.split(k);
+                let ssd_tokens = (j as u64 * BLOCK_TOKENS).min(prefix_tokens);
+                env.prefill.cpp_group_into(env.cfg, i, n_new, env.now, group);
+                costmodel::estimate_prefill_hybrid(
+                    env.perf,
+                    env.cfg,
+                    env.prefill,
+                    env.res,
+                    group,
+                    n_new,
+                    prefix_tokens,
+                    ssd_tokens,
+                    env.now,
+                )
+            });
+            if let Some((k, j, h)) = scan {
+                if h.end < choice.est.end {
+                    choice = PrefillChoice {
+                        inst: i,
+                        local_blocks: m.blocks,
+                        eff_blocks: k,
+                        ssd_blocks: j,
+                        recomputed_ssd_blocks: m.ssd_blocks - j,
+                        fetch: None,
+                        hybrid: true,
+                        est: h,
+                    };
+                }
+            }
         }
     }
     choice
@@ -395,6 +447,7 @@ fn score_candidate(env: &ScoreEnv, i: usize, group: &mut Vec<usize>) -> PrefillC
                 ssd_blocks: 0,
                 recomputed_ssd_blocks: 0,
                 fetch: Some(wire_fetch),
+                hybrid: false,
                 est: wire,
             }
         } else {
@@ -405,6 +458,7 @@ fn score_candidate(env: &ScoreEnv, i: usize, group: &mut Vec<usize>) -> PrefillC
                 ssd_blocks: m.ssd_blocks,
                 recomputed_ssd_blocks: 0,
                 fetch: Some(stage_fetch),
+                hybrid: false,
                 est: stage,
             }
         }
@@ -823,12 +877,24 @@ pub fn schedule(
         }
     }
 
-    // The job may not start before both gates have landed.
-    let job_gate = fetch_gate.max(ssd_stage_done.unwrap_or(ctx.now));
+    // The job may not start before both gates have landed — except that
+    // a *hybrid* placement's staging read is not a start gate at all:
+    // compute begins as soon as the group drains, and the read instead
+    // floors the job's completion (the overlap the plan priced).
+    let job_gate = if choice.hybrid {
+        fetch_gate
+    } else {
+        fetch_gate.max(ssd_stage_done.unwrap_or(ctx.now))
+    };
+    let stage_floor = if choice.hybrid {
+        ssd_stage_done.expect("hybrid placement without a staging read")
+    } else {
+        f64::NEG_INFINITY
+    };
 
     // Admit the job onto the group's FIFO queues.  The planned window is
     // the estimate: same cost model, same queue state, same gates.
-    let job = ctx.prefill.submit(
+    let job = ctx.prefill.submit_with_floor(
         ctx.perf,
         ctx.cfg,
         req.rid,
@@ -837,6 +903,7 @@ pub fn schedule(
         prefix_tokens,
         job_gate,
         ctx.now,
+        stage_floor,
     );
     let (planned_start, planned_end) = {
         let j = ctx.prefill.job(job);
@@ -899,6 +966,11 @@ pub fn schedule(
     }
     if choice.recomputed_ssd_blocks > 0 {
         stats.ssd_recomputes += 1;
+    }
+    if choice.hybrid {
+        stats.hybrid_placements += 1;
+        stats.hybrid_staged_blocks += choice.ssd_blocks as u64;
+        stats.hybrid_recomputed_blocks += choice.recomputed_ssd_blocks as u64;
     }
 
     // The placement's group rides a recycled buffer (the Sim returns it
@@ -1117,8 +1189,12 @@ mod tests {
         // and CacheAware disables the remote-fetch branch — RDMA is an
         // order of magnitude faster than NVMe, so under KvCacheCentric a
         // remote DRAM fetch would rightly shadow the local SSD load.)
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
+        // Hybrid off: this test pins the *exclusive* three-way decision;
+        // the fourth branch would split this very chain (see
+        // `hybrid_splits_deep_ssd_prefix_and_beats_the_exclusive_plans`).
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::CacheAware);
+        cfg.hybrid = false;
         let mut stats = ConductorStats::default();
         let r = req(1, 63);
         {
@@ -1153,12 +1229,77 @@ mod tests {
     }
 
     #[test]
+    fn hybrid_splits_deep_ssd_prefix_and_beats_the_exclusive_plans() {
+        // The deep-prefix scenario above with the fourth branch left on
+        // (the default): instead of gating the whole job on a ~3.5 s
+        // full-chain staging read, the conductor stages only the head of
+        // the demoted chain while the GPU recomputes the tail under the
+        // read — and must finish strictly earlier than the exclusive
+        // three-way plan on the identical cluster.
+        let run = |hybrid: bool| {
+            let (mut cfg, perf, mut prefill, decodes, mut res, mut rng, mut sc) =
+                setup(SchedulingPolicy::CacheAware);
+            cfg.hybrid = hybrid;
+            let mut stats = ConductorStats::default();
+            let r = req(1, 63);
+            {
+                let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, sc, 0.0);
+                schedule(&mut ctx, &r, &mut stats).unwrap();
+            }
+            let holder = prefill
+                .instances
+                .iter()
+                .position(|i| i.pool.prefix_match_blocks(&r.hash_ids) == 63)
+                .unwrap();
+            for &b in &r.hash_ids {
+                assert!(prefill.instances[holder].pool.demote_block(b, 1.0).is_some());
+            }
+            let mut ctx = ctx!(cfg, perf, prefill, decodes, res, rng, sc, 1e7);
+            let p = schedule(&mut ctx, &r, &mut stats).unwrap();
+            assert_eq!(p.prefill_group[0], holder);
+            (p, stats)
+        };
+        let (exclusive, sx) = run(false);
+        let (hybrid, sh) = run(true);
+        assert_eq!(sx.hybrid_placements, 0);
+        assert_eq!(sh.hybrid_placements, 1);
+        assert_eq!(sh.ssd_loads, 1, "the hybrid split still stages its head");
+        assert!(hybrid.fetch.is_none());
+        // A real split: part of the chain stages, the rest recomputes.
+        assert!(
+            hybrid.ssd_load_blocks > 0 && hybrid.ssd_load_blocks < 63,
+            "ssd_load_blocks = {}",
+            hybrid.ssd_load_blocks
+        );
+        assert_eq!(
+            sh.hybrid_staged_blocks + sh.hybrid_recomputed_blocks,
+            63,
+            "the split covers the whole SSD-resident match"
+        );
+        // The staging read floors completion instead of gating the start.
+        let stage_done = hybrid.ssd_stage_done.unwrap();
+        assert!(hybrid.prefill_start < stage_done);
+        assert!(hybrid.prefill_end >= stage_done);
+        // The overlap must strictly beat the exclusive full-stage plan.
+        assert!(
+            hybrid.prefill_end < exclusive.prefill_end,
+            "hybrid {} must finish before exclusive {}",
+            hybrid.prefill_end,
+            exclusive.prefill_end
+        );
+    }
+
+    #[test]
     fn recompute_chosen_over_slow_ssd_load_for_shallow_prefix() {
         // A 2-block (1k-token) chain on SSD: at near-zero context the
         // recompute is cheaper than the NVMe read, so the decision must
         // recompute — exercising the "compute, don't load" branch.
-        let (cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
+        // Hybrid off: with it on, staging one block (~56 ms) under the
+        // ~52 ms tail recompute would rightly beat pure recompute even
+        // here — this test pins the exclusive decision.
+        let (mut cfg, perf, mut prefill, decodes, mut msgr, mut rng, mut sc) =
             setup(SchedulingPolicy::CacheAware);
+        cfg.hybrid = false;
         let mut stats = ConductorStats::default();
         let r = req(2, 2);
         {
@@ -1316,6 +1457,10 @@ mod tests {
                 n_prefill: 2,
                 n_decode: 2,
                 kvcache_balancing_threshold: 1.5,
+                // This test pins the balancing branch's stage-vs-wire
+                // pricing; the orthogonal hybrid local plan would
+                // otherwise compete for the same SSD head.
+                hybrid: false,
                 ..Default::default()
             };
             let perf = PerfModel::paper();

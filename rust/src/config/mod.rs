@@ -77,6 +77,15 @@ pub struct SimConfig {
     /// than `PrefixIndex::MAX_NODES` are tiled into fixed 256-node
     /// shards by `ShardedPrefixIndex`, so any `n_prefill` is covered.
     pub use_prefix_index: bool,
+    /// Fourth branch of Algorithm 1's prefix decision: the *hybrid*
+    /// load+recompute plan overlaps the SSD→DRAM staging read for the
+    /// head of the matched prefix with recomputing its tail on the GPU,
+    /// splitting at the point that minimizes `max(load, compute)`
+    /// (`costmodel::hybrid_split_scan`).  `true` (the default) lets the
+    /// hybrid plan compete with the three exclusive plans on equal
+    /// estimated-TTFT terms; `false` restores the exclusive three-way
+    /// decision bit-for-bit.
+    pub hybrid: bool,
     /// Scheduler worker threads for the candidate walk + scoring fan-out
     /// (`std::thread::scope`, no pool).  The reduce is deterministic —
     /// strict min of `(est.end.to_bits(), node_id)` — so any value
@@ -160,6 +169,7 @@ impl Default for SimConfig {
             slo: SloConfig { ttft_ms: 30_000.0, tbt_ms: 100.0 },
             overload_threshold: 1.0,
             use_prefix_index: true,
+            hybrid: true,
             sched_workers: 1,
             nic_rx_bw: None,
             ssd_write_bw: None,

@@ -216,6 +216,91 @@ pub fn estimate_prefill(
     }
 }
 
+/// Estimate the **hybrid load+recompute** plan — Algorithm 1's fourth
+/// branch (`cfg.hybrid`): the head of the matched prefix
+/// (`ssd_prefix_tokens` of `prefix_tokens`) streams up from the primary's
+/// SSD tier *while* the GPU recomputes everything past `prefix_tokens`.
+/// Unlike [`estimate_prefill`], the staging read is not a start gate but
+/// a completion floor: compute starts as soon as the group drains and the
+/// job finishes at `max(compute, load)` instead of `load + compute` —
+/// the overlap the plan exists to buy.  Local-only by construction (the
+/// balancing branch prices remote fetches separately), read-only and
+/// allocation-free like [`estimate_prefill`]; with
+/// `ssd_prefix_tokens == 0` it returns the DRAM-only estimate
+/// bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+#[must_use = "a discarded estimate means the probe's cost never reached the decision"]
+// lint: hot
+pub fn estimate_prefill_hybrid(
+    perf: &PerfModel,
+    cfg: &SimConfig,
+    pool: &PrefillPool,
+    res: &Resources,
+    group: &[usize],
+    n_new: u64,
+    prefix_tokens: u64,
+    ssd_prefix_tokens: u64,
+    now: TimeMs,
+) -> PrefillEstimate {
+    debug_assert!(ssd_prefix_tokens <= prefix_tokens);
+    debug_assert!(!group.is_empty());
+    let primary = group[0];
+    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+    let queue_free = pool.group_free_at(group).max(now);
+    let stage_done = estimate_stage_done(perf, &res.nvme, primary, now, ssd_prefix_tokens);
+    let start = queue_free;
+    // The staging overhang (if any) folds into the job's effective
+    // makespan — the executor applies the same floor via
+    // `PrefillPool::submit_with_floor`, keeping estimate == actual.
+    let exec_eff = exec_ms.max(stage_done - start);
+    PrefillEstimate {
+        start,
+        end: start + exec_eff,
+        queue_wait_ms: queue_free - now,
+        fetch_wait_ms: 0.0,
+        stage_wait_ms: stage_done - now,
+        exec_ms: exec_eff,
+    }
+}
+
+/// Scan the hybrid split frontier of one matched prefix and return the
+/// cheapest split, if any.
+///
+/// The match spans `match_blocks` cache blocks of which those at
+/// `ssd_positions` (ascending chain indices) sit on the SSD tier;
+/// everything before `ssd_positions[0]` is DRAM-resident.  Splitting
+/// "after the j-th SSD block" stages the first `j` SSD blocks, reuses
+/// the prefix up to the next SSD-resident block (the whole match for
+/// `j = npos`), and recomputes the tail.  Those are the only splits
+/// worth pricing: between two SSD positions the staged set cannot
+/// change, so the reuse boundary snaps to SSD positions.  `price(k, j)`
+/// returns the estimate for reusing `k` blocks of which `j` are staged;
+/// `j = 0` (pure DRAM reuse) is NOT scanned — the caller already prices
+/// it as the dram-only plan.  Returns `(k, j, estimate)` of the strict
+/// argmin over `end` (smallest `j` on ties), or `None` when the match
+/// has no SSD blocks.
+// lint: hot
+pub fn hybrid_split_scan(
+    match_blocks: usize,
+    ssd_positions: &[u32],
+    mut price: impl FnMut(usize, usize) -> PrefillEstimate,
+) -> Option<(usize, usize, PrefillEstimate)> {
+    let npos = ssd_positions.len();
+    let mut best: Option<(usize, usize, PrefillEstimate)> = None;
+    for j in 1..=npos {
+        let k = if j < npos { ssd_positions[j] as usize } else { match_blocks };
+        let est = price(k, j);
+        let better = match best {
+            None => true,
+            Some((_, _, b)) => est.end < b.end,
+        };
+        if better {
+            best = Some((k, j, est));
+        }
+    }
+    best
+}
+
 /// When the streamed KVCache lands at the decode node: the layer-wise
 /// stream starts with the prefill and can finish no earlier than the
 /// prefill itself, than the wire time on the primary's tx queue, nor
@@ -435,6 +520,66 @@ mod tests {
         let e = estimate_prefill(&perf, &cfg, &pool, &res, &group, 100_000, 0, 0, None, 0.0);
         assert!((e.start - 0.5).abs() < 1e-9, "group max drives start: {}", e.start);
         assert!((e.queue_wait_ms - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hybrid_without_ssd_tokens_is_the_dram_plan_bit_for_bit() {
+        // The fourth branch's j = 0 degenerate case must be exactly the
+        // dram-only plan — what makes `hybrid: false` a pure pin.
+        let (cfg, perf, mut pool, res) = env();
+        pool.instances[0].block_until(1_234.5);
+        let group = pool.cpp_group(&cfg, 0, 4_096, 0.0);
+        let a = estimate_prefill(&perf, &cfg, &pool, &res, &group, 4_096, 2_048, 0, None, 0.0);
+        let b = estimate_prefill_hybrid(&perf, &cfg, &pool, &res, &group, 4_096, 2_048, 0, 0.0);
+        assert_eq!(a.start.to_bits(), b.start.to_bits());
+        assert_eq!(a.end.to_bits(), b.end.to_bits());
+        assert_eq!(a.exec_ms.to_bits(), b.exec_ms.to_bits());
+        assert_eq!(a.queue_wait_ms.to_bits(), b.queue_wait_ms.to_bits());
+        assert_eq!(a.stage_wait_ms.to_bits(), b.stage_wait_ms.to_bits());
+        assert_eq!(a.fetch_wait_ms.to_bits(), b.fetch_wait_ms.to_bits());
+    }
+
+    #[test]
+    fn hybrid_overlap_floors_completion_at_the_staging_read() {
+        // Load-dominant: a long NVMe read under a short compute — the
+        // plan ends exactly when the read lands, not read + compute.
+        let (cfg, perf, pool, res) = env();
+        let group = [0usize];
+        let h = estimate_prefill_hybrid(&perf, &cfg, &pool, &res, &group, 0, 8_000, 8_000, 0.0);
+        let stage = estimate_stage_done(&perf, &res.nvme, 0, 0.0, 8_000);
+        let serial = estimate_prefill(&perf, &cfg, &pool, &res, &group, 0, 8_000, 8_000, None, 0.0);
+        assert_eq!(h.end.to_bits(), stage.to_bits(), "load-bound: end == stage landing");
+        assert!(serial.end > h.end, "the exclusive plan pays load + compute serially");
+        assert!((serial.end - h.end - serial.exec_ms).abs() < 1e-9);
+        // Compute-dominant: enough new tokens that the GPU outlasts the
+        // read — the staging read vanishes from the critical path.
+        let c =
+            estimate_prefill_hybrid(&perf, &cfg, &pool, &res, &group, 16_384, 8_000, 8_000, 0.0);
+        let dram = estimate_prefill(&perf, &cfg, &pool, &res, &group, 16_384, 8_000, 0, None, 0.0);
+        assert!(c.exec_ms > stage, "compute must dominate in this regime");
+        assert_eq!(c.end.to_bits(), dram.end.to_bits(), "overlap hides the read entirely");
+    }
+
+    #[test]
+    fn hybrid_split_scan_prices_every_split_and_keeps_the_first_argmin() {
+        let mk = |end: f64| PrefillEstimate { end, ..Default::default() };
+        // k maps j to the reuse frontier: the next SSD position, or the
+        // whole match for the final split.
+        let mut seen = Vec::new();
+        let got = hybrid_split_scan(10, &[2, 4, 7], |k, j| {
+            seen.push((k, j));
+            mk(match j {
+                1 => 5.0,
+                2 => 3.0,
+                _ => 3.0, // tie with j = 2 — the earlier split must win
+            })
+        });
+        assert_eq!(seen, vec![(4, 1), (7, 2), (10, 3)]);
+        let (k, j, e) = got.unwrap();
+        assert_eq!((k, j), (7, 2), "strict argmin keeps the first of equal ends");
+        assert_eq!(e.end, 3.0);
+        // No SSD blocks -> no splits to price.
+        assert!(hybrid_split_scan(10, &[], |_, _| mk(0.0)).is_none());
     }
 
     #[test]

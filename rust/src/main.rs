@@ -40,11 +40,11 @@ fn main() -> Result<()> {
                  \t[--policy random|load|cache|centric] [--reject none|baseline|early|predictive]\n\
                  \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
                  \t[--rx-bw BYTES_PER_SEC] [--ssd-write-bw BYTES_PER_SEC]\n\
-                 \t[--no-prefix-index] [--sched-workers N]\n\
+                 \t[--no-prefix-index] [--sched-workers N] [--no-hybrid]\n\
                  replay    --traces a.jsonl[,b.jsonl.gz,...] [--rates 1[,2,...]]\n\
                  \t[--prefill 8] [--decode 8] [--policy ...] [--reject ...]\n\
                  \t[--max-live N] [--epoch-blocks N] [--no-metrics]\n\
-                 \t[--sched-workers N]\n\
+                 \t[--sched-workers N] [--no-hybrid]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -173,6 +173,9 @@ fn simulate(args: &Args) -> Result<()> {
         // Pure optimization — `--no-prefix-index` restores the per-pool
         // scan (bit-for-bit identical results, for A/B timing).
         use_prefix_index: !args.has_flag("no-prefix-index"),
+        // `--no-hybrid` restores the exclusive three-way prefix decision
+        // (bit-for-bit yesterday's placements, for A/B ablations).
+        hybrid: !args.has_flag("no-hybrid"),
         sched_workers: parse_sched_workers(args)?,
         nic_rx_bw: parse_bw("rx-bw")?,
         ssd_write_bw: parse_bw("ssd-write-bw")?,
@@ -209,6 +212,12 @@ fn simulate(args: &Args) -> Result<()> {
         res.conductor.ssd_loaded_blocks,
         res.conductor.ssd_recomputes,
         res.ssd_loaded_bytes / 1_000_000
+    );
+    println!(
+        "hybrid:     {} placements overlapped {} staged + {} recomputed blocks",
+        res.conductor.hybrid_placements,
+        res.conductor.hybrid_staged_blocks,
+        res.conductor.hybrid_recomputed_blocks
     );
     // Utilization denominators: NIC banks span every node; NVMe traffic
     // only ever lands on prefill nodes (staging reads, demotion writes),
@@ -268,6 +277,7 @@ fn replay(args: &Args) -> Result<()> {
         scheduling: parse_policy(&args.get_or("policy", "centric"))?,
         rejection: parse_reject(&args.get_or("reject", "none"))?,
         seed: args.get_u64("seed", 42),
+        hybrid: !args.has_flag("no-hybrid"),
         sched_workers: parse_sched_workers(args)?,
         max_live_requests: parse_count("max-live")?,
         interner_epoch_blocks: parse_count("epoch-blocks")?,

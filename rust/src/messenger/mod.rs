@@ -36,13 +36,36 @@ pub struct Messenger {
     /// Outgoing (source-side) NIC queues: setup latency + wire
     /// serialization.
     pub tx: BwQueue,
-    /// Incoming (destination-side) NIC queues: pure bandwidth, no extra
-    /// setup (the rendezvous was paid on the tx side).
+    /// Incoming (destination-side) NIC capacity: pure bandwidth, no
+    /// extra setup (the rendezvous was paid on the tx side).  Holds the
+    /// rx speed and the aggregate counters; occupancy itself lives in
+    /// `rx_windows`.
     pub rx: BwQueue,
+    /// Per-destination busy intervals `(start, end)`, sorted and
+    /// disjoint: each admitted transfer books the window where its bytes
+    /// actually cross the ingress wire.
+    rx_windows: Vec<Vec<(TimeMs, TimeMs)>>,
     /// Finite ingress bandwidth?  When false (unconstrained, the
-    /// default) the rx bank is a true no-op — no ops recorded, no state
+    /// default) the rx side is a true no-op — no ops recorded, no state
     /// touched — so default runs are the pre-rx model *exactly*.
     rx_active: bool,
+}
+
+/// Earliest start `>= lb` of a `dur`-long slot among sorted disjoint
+/// busy `windows` — first-fit into the gaps.  Expired windows need not
+/// be pruned first: anything ending at or before `lb` is skipped.
+fn earliest_gap(windows: &[(TimeMs, TimeMs)], lb: TimeMs, dur: f64) -> TimeMs {
+    let mut s = lb;
+    for &(a, b) in windows {
+        if b <= s {
+            continue;
+        }
+        if s + dur <= a {
+            break;
+        }
+        s = b;
+    }
+    s
 }
 
 impl Messenger {
@@ -53,29 +76,42 @@ impl Messenger {
         Messenger {
             tx: BwQueue::new(n_nodes, tx_bw, latency_ms),
             rx: BwQueue::new(n_nodes, rx_bw, 0.0),
+            rx_windows: vec![Vec::new(); n_nodes],
             rx_active: rx_bw.is_finite(),
         }
     }
 
+    /// The rx placement both [`Self::estimate_done`] and
+    /// [`Self::schedule`] compute: the transfer's ingress window starts
+    /// no earlier than `now` and no earlier than `tx_end - d` (its bytes
+    /// cannot finish landing before the source has sent them), first-fit
+    /// into the destination's gaps.  Returns `(start, dur)`.
+    fn rx_slot(&self, dst: usize, now: TimeMs, tx_end: TimeMs, bytes: u64) -> (TimeMs, f64) {
+        let d = self.rx.serialize_ms(bytes, 0.0);
+        let lb = now.max(tx_end - d);
+        (earliest_gap(&self.rx_windows[dst], lb, d), d)
+    }
+
     /// Absolute landing time if a transfer of `bytes` from `src` to
     /// `dst` were enqueued now — includes queueing behind in-flight
-    /// transfers on the source tx queue *and* the destination rx queue.
-    /// Read-only, and bit-for-bit what [`Self::schedule`] would return.
+    /// transfers on the source tx queue *and* the destination's booked
+    /// ingress windows.  Read-only, and bit-for-bit what
+    /// [`Self::schedule`] would return.
     ///
-    /// Modeling note: ingress capacity is reserved in admission order
-    /// from the probe time, like every other `BwQueue` — a transfer
-    /// admitted behind a deep tx backlog holds its rx slot from
-    /// admission even though its bytes arrive later.  That is a
-    /// deliberate store-and-forward-style simplification: a per-op
-    /// interval model could interleave later senders into the gap, but
-    /// would give up the one-scalar FIFO the estimate==schedule
-    /// contract is built on.
+    /// Modeling note: ingress capacity is booked as a per-op *interval*
+    /// at the time the bytes actually arrive (PR 4's admission-order rx
+    /// FIFO reserved from probe time instead, so a tx-backlogged
+    /// transfer blocked later senders out of the gap in front of its own
+    /// arrival).  First-fit over sorted disjoint windows keeps the
+    /// estimate==schedule contract: the probe runs the identical
+    /// placement against the identical windows.
     pub fn estimate_done(&self, src: usize, dst: usize, now: TimeMs, bytes: u64) -> TimeMs {
         let tx_end = self.tx.estimate_done(src, now, bytes, 0.0);
         if !self.rx_active {
             return tx_end;
         }
-        tx_end.max(self.rx.estimate_done(dst, now, bytes, 0.0))
+        let (s, d) = self.rx_slot(dst, now, tx_end, bytes);
+        tx_end.max(s + d)
     }
 
     /// Landing delay (ms from `now`) of the same probe.
@@ -86,12 +122,23 @@ impl Messenger {
     /// Enqueue a transfer from `src` to `dst`; returns its (start, end).
     pub fn schedule(&mut self, src: usize, dst: usize, now: TimeMs, bytes: u64) -> Transfer {
         let tx = self.tx.schedule(src, now, bytes, 0.0);
-        let end = if self.rx_active {
-            tx.end.max(self.rx.schedule(dst, now, bytes, 0.0).end)
-        } else {
-            tx.end
-        };
-        Transfer { start: tx.start, end, bytes }
+        if !self.rx_active {
+            return Transfer { start: tx.start, end: tx.end, bytes };
+        }
+        let (s, d) = self.rx_slot(dst, now, tx.end, bytes);
+        // Book the window: drop expired intervals (they can never
+        // constrain a future placement — every later probe has `lb >=
+        // now`), insert in start order.  The probe above skipped the
+        // expired ones anyway, so pruning preserves estimate == schedule.
+        let windows = &mut self.rx_windows[dst];
+        windows.retain(|&(_, b)| b > now);
+        let pos = windows.partition_point(|&(a, _)| a < s);
+        windows.insert(pos, (s, s + d));
+        self.rx.n_ops += 1;
+        self.rx.total_bytes += bytes;
+        self.rx.busy_ms += d;
+        self.rx.queued_ms += s - now.max(tx.end - d);
+        Transfer { start: tx.start, end: tx.end.max(s + d), bytes }
     }
 
     /// Current outgoing-queue depth of a node in ms (the congestion
@@ -100,9 +147,13 @@ impl Messenger {
         self.tx.backlog_ms(src, now)
     }
 
-    /// Current incoming-queue depth of a node in ms (the incast signal).
+    /// Current incoming-queue depth of a node in ms (the incast signal):
+    /// how far past `now` the destination's last booked window reaches.
     pub fn rx_backlog_ms(&self, dst: usize, now: TimeMs) -> f64 {
-        self.rx.backlog_ms(dst, now)
+        if !self.rx_active {
+            return 0.0;
+        }
+        self.rx_windows[dst].last().map_or(0.0, |&(_, b)| (b - now).max(0.0))
     }
 
     /// Wire bytes moved (each transfer counted once, on the tx side).
@@ -185,7 +236,6 @@ mod tests {
         assert_eq!(msg.rx.n_ops, 0);
     }
 
-
     #[test]
     fn finite_rx_serializes_incast() {
         // 100 GB/s tx but only 10 GB/s rx: two senders converging on one
@@ -205,5 +255,39 @@ mod tests {
         let d = msg.schedule(2, 3, 0.0, bytes);
         assert_eq!(est.to_bits(), d.end.to_bits());
         assert!((d.end - 300.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn later_sender_interleaves_into_rx_gap() {
+        // The admission-order rx FIFO reserved ingress from probe time,
+        // so a tx-backlogged transfer held its rx slot while its bytes
+        // were still queued at the source and a later sender to the same
+        // destination serialized behind a reservation whose bytes hadn't
+        // even left.  The interval model books the window where the
+        // bytes actually arrive, so the later sender lands in the gap in
+        // front of it.
+        let mut msg = Messenger::new(4, 100e9, 10e9, 1.0);
+        // ~1001 ms of tx backlog on node 0.
+        msg.schedule(0, 2, 0.0, 100_000_000_000);
+        // Transfer a (0 -> 3): tx start 1001, landed 1012; its ingress
+        // window is the last 100 ms of wire time, [912, 1012].
+        let est_a = msg.estimate_done(0, 3, 0.0, 1_000_000_000);
+        let a = msg.schedule(0, 3, 0.0, 1_000_000_000);
+        assert_eq!(est_a.to_bits(), a.end.to_bits());
+        assert!((a.end - 1012.0).abs() < 1e-6, "{a:?}");
+        // Transfer b (1 -> 3): idle tx, its 100 ms ingress window fits
+        // entirely in the gap before a's.  The old FIFO parked it at
+        // 200 behind a's phantom reservation; the interval model lands
+        // it the moment its own wire time is done.
+        let est_b = msg.estimate_done(1, 3, 0.0, 1_000_000_000);
+        let b = msg.schedule(1, 3, 0.0, 1_000_000_000);
+        assert_eq!(est_b.to_bits(), b.end.to_bits());
+        assert!((b.end - 100.0).abs() < 1e-6, "later sender must use the gap: {b:?}");
+        // A third transfer still fits in the gap, right behind b.
+        let c = msg.schedule(1, 3, 0.0, 1_000_000_000);
+        assert!((c.end - 200.0).abs() < 1e-6, "{c:?}");
+        // The rx side accounted for all three landings.
+        assert_eq!(msg.rx.n_ops, 3);
+        assert!(msg.rx_backlog_ms(3, 0.0) > 1_000.0);
     }
 }

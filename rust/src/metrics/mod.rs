@@ -100,6 +100,10 @@ pub struct RunReport {
     /// `BankStats::utilization` with the run's wall time for device
     /// utilization).
     pub resources: ResourceStats,
+    /// Placements that chose the hybrid (overlapped load+recompute)
+    /// prefix plan — Algorithm 1's fourth branch (filled by
+    /// `SimResult::report`; zero for engines without it).
+    pub hybrid_placements: u64,
 }
 
 pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
@@ -142,6 +146,7 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
         ttft_est_mae: stats::mean(&est_errs),
         tiers: TierCounters::default(),
         resources: ResourceStats::default(),
+        hybrid_placements: 0,
     }
 }
 

@@ -270,10 +270,46 @@ impl PrefillPool {
         gate: TimeMs,
         now: TimeMs,
     ) -> JobId {
+        self.submit_with_floor(
+            perf,
+            cfg,
+            rid,
+            group,
+            n_new,
+            prefix_tokens,
+            gate,
+            now,
+            f64::NEG_INFINITY,
+        )
+    }
+
+    /// [`Self::submit`] with a completion floor: the job may not finish
+    /// before `min_end` (absolute ms).  This is how a *hybrid* placement
+    /// executes its overlapped staging read — the NVMe reservation is not
+    /// a start gate but a floor on the end, so any staging overhang folds
+    /// into the job's effective makespan exactly as
+    /// [`costmodel::estimate_prefill_hybrid`] priced it.
+    /// `f64::NEG_INFINITY` (what [`Self::submit`] passes) makes the floor
+    /// a no-op bit-for-bit: `exec.max(-inf - start) == exec`.
+    #[allow(clippy::too_many_arguments)]
+    // lint: hot
+    pub fn submit_with_floor(
+        &mut self,
+        perf: &PerfModel,
+        cfg: &SimConfig,
+        rid: RequestId,
+        group: &[usize],
+        n_new: u64,
+        prefix_tokens: u64,
+        gate: TimeMs,
+        now: TimeMs,
+        min_end: TimeMs,
+    ) -> JobId {
         debug_assert!(!group.is_empty());
-        let exec_ms =
+        let base_exec_ms =
             costmodel::prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
         let planned_start = self.group_free_at(group).max(gate).max(now);
+        let exec_ms = base_exec_ms.max(min_end - planned_start);
         let planned_end = planned_start + exec_ms;
         self.next_job += 1;
         let id = self.next_job;

@@ -172,6 +172,7 @@ impl SimResult {
         metrics::RunReport {
             tiers: self.tier,
             resources: self.resources,
+            hybrid_placements: self.conductor.hybrid_placements,
             ..metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
         }
     }

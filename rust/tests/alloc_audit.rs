@@ -96,6 +96,77 @@ fn audit_decisions(use_index: bool, iters: usize) -> u64 {
     guard.count()
 }
 
+/// Allocations across `iters` warmed *hybrid-branch* decisions (ISSUE 9
+/// satellite): the tail half of the probe chain sits on every node's
+/// SSD tier, so each pricing pass runs Algorithm 1's fourth branch —
+/// `hybrid_split_scan` pricing every SSD split position against the
+/// NVMe queue — before the SLO gate rejects.  The hybrid decision path
+/// must be as allocation-free as the exclusive three-way one.
+fn audit_hybrid_decisions(use_index: bool, iters: usize) -> u64 {
+    let mut cfg = SimConfig {
+        n_prefill: 8,
+        n_decode: 4,
+        scheduling: SchedulingPolicy::KvCacheCentric,
+        rejection: RejectionPolicy::None,
+        cache_capacity_blocks: None,
+        ssd_capacity_blocks: Some(1_000_000),
+        ..Default::default()
+    };
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    assert!(cfg.hybrid, "the audited branch must be on by default");
+    let chain = 256usize;
+    let perf = PerfModel::paper();
+
+    // Warm every node with the probe chain, then demote its tail half:
+    // every candidate carries a 128-position SSD tail for the scan.
+    let mut pool = PrefillPool::new(&cfg);
+    let probe: Vec<DenseBlockId> = (0..chain as u32).collect();
+    for inst in pool.instances.iter_mut() {
+        let _ = inst.pool.admit_chain(&probe, 0.0);
+        for b in (chain as u32 / 2)..chain as u32 {
+            let _ = inst.pool.demote_block(b, 0.5);
+        }
+    }
+    let mut index = use_index.then(|| pool.build_prefix_index());
+
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+            scratch: &mut scratch,
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..64 {
+        run_one(w as f64);
+    }
+    let guard = AllocGuard::new();
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    guard.count()
+}
+
 /// Allocations across `iters` warmed **accept** cycles: an accepting
 /// SLO admits the same fully-resident chain every iteration, and the
 /// job is driven through `startable_into`/`start`/`finish` so the pool
@@ -188,6 +259,14 @@ fn steady_state_decisions_do_not_allocate() {
     let scan = audit_decisions(false, iters);
     assert_eq!(scan, 0, "scan-path decision loop allocated ({scan} allocs / {iters} decisions)");
 
+    // Hybrid-branch pricing (ISSUE 9): the fourth branch's split scan
+    // prices every SSD position of every candidate without allocating.
+    let hybrid = audit_hybrid_decisions(false, iters);
+    assert_eq!(
+        hybrid, 0,
+        "hybrid decision loop allocated ({hybrid} allocs / {iters} decisions)"
+    );
+
     // Accept lifecycle on the scan path: admit → start → finish, also
     // allocation-free once the recycled buffers are warm.
     let scan_accepts = audit_accepts(false, iters);
@@ -211,6 +290,11 @@ fn steady_state_decisions_do_not_allocate() {
         assert_eq!(
             indexed_accepts, 0,
             "index-path accept loop allocated ({indexed_accepts} allocs / {iters} accepts)"
+        );
+        let indexed_hybrid = audit_hybrid_decisions(true, iters);
+        assert_eq!(
+            indexed_hybrid, 0,
+            "index-path hybrid loop allocated ({indexed_hybrid} allocs / {iters} decisions)"
         );
     }
 }

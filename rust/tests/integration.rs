@@ -299,6 +299,53 @@ fn sched_workers_do_not_perturb_results() {
 }
 
 #[test]
+fn hybrid_off_reproduces_three_way_behavior() {
+    // ISSUE 9 acceptance pin: `hybrid: false` restores the exclusive
+    // three-way prefix decision bit-for-bit.  On the default trace
+    // nothing is ever SSD-resident, so the fourth branch has no splits
+    // to price and hybrid on/off must already be indistinguishable.
+    let t = trace(500);
+    let on = SimConfig::default();
+    assert!(on.hybrid, "the fourth branch is the default");
+    let off = SimConfig { hybrid: false, ..Default::default() };
+    let a = sim::run(&on, &t, 1.0);
+    assert_runs_identical(&a, &sim::run(&off, &t, 1.0));
+    assert_eq!(a.conductor.hybrid_placements, 0, "no SSD tier, no hybrid plans");
+
+    // Under tier pressure the fourth branch is live.  With it pinned
+    // off, the run must stay invariant under every pure-optimization
+    // knob (prefix index on/off, 1 or 4 scoring workers) — the
+    // exclusive decision of PR 8 and earlier is fully intact.
+    let mk = |hybrid, use_idx, workers| SimConfig {
+        hybrid,
+        use_prefix_index: use_idx,
+        sched_workers: workers,
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(50_000),
+        demote_after_ms: Some(120_000.0),
+        n_prefill: 4,
+        n_decode: 4,
+        ..Default::default()
+    };
+    let exclusive = sim::run(&mk(false, true, 1), &t, 2.0);
+    assert!(exclusive.tier.demotions > 0, "pressure scenario must exercise demotion");
+    assert_eq!(exclusive.conductor.hybrid_placements, 0);
+    assert_eq!(exclusive.conductor.hybrid_staged_blocks, 0);
+    assert_eq!(exclusive.conductor.hybrid_recomputed_blocks, 0);
+    assert_runs_identical(&exclusive, &sim::run(&mk(false, false, 1), &t, 2.0));
+    assert_runs_identical(&exclusive, &sim::run(&mk(false, true, 4), &t, 2.0));
+
+    // With the branch live, a hybrid placement is one of the staging
+    // reads — a split of one, never an extra device op.
+    let hybrid = sim::run(&mk(true, true, 1), &t, 2.0);
+    assert!(hybrid.conductor.hybrid_placements <= hybrid.conductor.ssd_loads);
+    assert!(
+        hybrid.conductor.hybrid_staged_blocks >= hybrid.conductor.hybrid_placements,
+        "every hybrid placement stages at least one block"
+    );
+}
+
+#[test]
 fn multi_shard_cluster_runs_end_to_end() {
     // The 256-node cap is gone: a 300-node prefill fleet (two index
     // shards, one only 44 nodes wide) completes a full run, stays

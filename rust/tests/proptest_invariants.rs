@@ -778,3 +778,87 @@ fn prop_sharded_index_agrees_with_monolithic() {
         assert!(sharded.equals_rebuild_of(pools.iter()), "{n_nodes} nodes: final state");
     }
 }
+
+/// Property (ISSUE 9): the hybrid split chosen by `hybrid_split_scan` is
+/// the *first* global argmin of the priced completion — so no other
+/// split, in particular neither neighbor, strictly beats it — and the
+/// number of staged blocks is monotone nonincreasing in the NVMe
+/// backlog: the busier the device, the more of the SSD tail Algorithm
+/// 1's fourth branch recomputes instead of loading.
+#[test]
+fn prop_hybrid_split_is_locally_optimal_and_monotone_in_backlog() {
+    use mooncake::costmodel;
+    use mooncake::model::PerfModel;
+    use mooncake::prefill::PrefillPool;
+    use mooncake::resource::Resources;
+
+    let cfg = SimConfig { n_prefill: 1, n_decode: 1, ..Default::default() };
+    let perf = PerfModel::paper();
+    let prefill = PrefillPool::new(&cfg);
+    let group = [0usize];
+    let mut rng = Rng::new(0x4B81D);
+    for round in 0..40 {
+        // A matched chain of `m` blocks whose DRAM head covers
+        // `dram_prefix` of them; the SSD tail starts at `dram_prefix`
+        // and sits at random ascending positions (DRAM-resident blocks
+        // may be interleaved between them).
+        let m = 2 + rng.below(48) as usize;
+        let dram_prefix = rng.below(m as u64 - 1) as u32;
+        let mut positions: Vec<u32> = vec![dram_prefix];
+        loop {
+            let next = *positions.last().unwrap() + 1 + rng.below(4) as u32;
+            if next as usize >= m {
+                break;
+            }
+            positions.push(next);
+        }
+        let total_tokens = m as u64 * BLOCK_TOKENS + 1 + rng.below(4_096);
+        let mut prev_j: Option<usize> = None;
+        for backlog_step in 0..6u64 {
+            // A fresh device with `backlog_step` × ~500 ms of reads
+            // queued in front of any staging the split would schedule.
+            let mut res = Resources::new(&cfg, &perf);
+            if backlog_step > 0 {
+                let _ = res.nvme.schedule(0, 0.0, backlog_step * 1_500_000_000, 0.0);
+            }
+            let price = |k: usize, j: usize| {
+                let prefix_tokens = k as u64 * BLOCK_TOKENS;
+                let n_new = total_tokens - prefix_tokens;
+                let ssd_tokens = (j as u64 * BLOCK_TOKENS).min(prefix_tokens);
+                costmodel::estimate_prefill_hybrid(
+                    &perf,
+                    &cfg,
+                    &prefill,
+                    &res,
+                    &group,
+                    n_new,
+                    prefix_tokens,
+                    ssd_tokens,
+                    0.0,
+                )
+            };
+            let scan = costmodel::hybrid_split_scan(m, &positions, |k, j| price(k, j));
+            let (k, j, est) = scan.expect("the SSD tail is non-empty");
+            assert_eq!(k, if j < positions.len() { positions[j] as usize } else { m });
+            for jj in 1..=positions.len() {
+                let kk = if jj < positions.len() { positions[jj] as usize } else { m };
+                let alt = price(kk, jj);
+                assert!(
+                    alt.end >= est.end,
+                    "round {round} backlog {backlog_step}: split {jj} beats chosen {j}"
+                );
+                if jj < j {
+                    assert!(alt.end > est.end, "round {round}: {j} must be the first argmin");
+                }
+            }
+            // Monotone in backlog: a busier NVMe never stages *more*.
+            if let Some(p) = prev_j {
+                assert!(
+                    j <= p,
+                    "round {round} backlog {backlog_step}: staged blocks grew {p} -> {j}"
+                );
+            }
+            prev_j = Some(j);
+        }
+    }
+}
