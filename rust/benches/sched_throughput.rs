@@ -52,6 +52,13 @@
 //! returning prefixes have been demoted to SSD, exercising the
 //! stage-vs-recompute-vs-hybrid decision end to end.
 //!
+//! A **degraded cell** (ISSUE 10) rides along: decision throughput
+//! against a cluster that has already absorbed a fault — one node dead
+//! and dropped from the index the way the sim's `NodeLoss` event does
+//! it, and a quarter-speed NVMe under a half-demoted probe chain — each
+//! compared to an identically shaped healthy baseline.  Both slowdowns
+//! gate CI at ≤2× in full and smoke mode (`variant: "degraded"` rows).
+//!
 //! Emits `BENCH_sched.json` — the one trajectory artifact CI uploads;
 //! every row carries a `variant` column (`"hybrid"` since ISSUE 9) so
 //! the same file accumulates seed/interned/sharded/hybrid cells instead
@@ -67,7 +74,7 @@ use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
 use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig, SloConfig};
 use mooncake::costmodel;
 use mooncake::decode::DecodeInstance;
-use mooncake::kvcache::DenseBlockId;
+use mooncake::kvcache::{DenseBlockId, TierDelta};
 use mooncake::model::PerfModel;
 use mooncake::prefill::PrefillPool;
 use mooncake::resource::Resources;
@@ -79,7 +86,7 @@ use mooncake::util::rng::Rng;
 
 /// Implementation variant stamped on every JSON row — bump when a perf
 /// PR re-measures the same cells so the artifact reads as a trajectory.
-const VARIANT: &str = "hybrid";
+const VARIANT: &str = "degraded";
 
 const TARGET_NODES: usize = 64;
 const TARGET_CHAIN: usize = 4096;
@@ -104,6 +111,14 @@ const SMOKE_CHAINS: &[usize] = &[64, 256];
 /// deterministic cost-model arithmetic, so the floor is enforced in
 /// both full and smoke mode.
 const HYBRID_FLOOR: f64 = 1.25;
+
+/// Degraded-mode cell (ISSUE 10): decision throughput against a cluster
+/// that has already absorbed a fault — a dead node dropped from the
+/// index, or the probe chain half-stranded on a quarter-speed NVMe —
+/// must stay within this factor of the matching healthy cell.  Graceful
+/// degradation is a scheduling property, not just a liveness one: a
+/// fault must not turn Algorithm 1 into a slow path.
+const DEGRADED_FLOOR: f64 = 2.0;
 
 struct Cell {
     nodes: usize,
@@ -351,6 +366,151 @@ fn bench_congested_decisions(nodes: usize, chain: usize, iters: usize, use_index
         run_one(k as f64);
     }
     iters as f64 / t.elapsed().as_secs_f64()
+}
+
+/// Decisions/sec through the index-backed path against a cluster in a
+/// chosen fault posture: `kill_last` marks the last node dead and drops
+/// its pools from the index through the same `TierDelta` route the
+/// sim's `NodeLoss` event uses; `demote_half` strands every other probe
+/// block on node 0's SSD tier (so candidate pricing walks the NVMe
+/// probe); `nvme_scale` degrades every prefill node's NVMe bandwidth.
+/// The healthy baselines pass `(false, ·, 1.0)` so each degraded row is
+/// compared against an identically shaped workload.
+fn bench_decisions_degraded(
+    cfg: &SimConfig,
+    chain: usize,
+    iters: usize,
+    kill_last: bool,
+    demote_half: bool,
+    nvme_scale: f64,
+) -> f64 {
+    let mut cfg = cfg.clone();
+    cfg.slo = SloConfig { ttft_ms: 0.0, tbt_ms: 1e9 };
+    let perf = PerfModel::paper();
+    let (mut pool, probe) = warm_env(&cfg, chain);
+    if demote_half {
+        for (k, &b) in probe.iter().enumerate() {
+            if k % 2 == 1 {
+                let _ = pool.instances[0].pool.demote_block(b, 1.0);
+            }
+        }
+    }
+    let mut index = pool.build_prefix_index();
+    if kill_last {
+        let dead = cfg.n_prefill - 1;
+        pool.instances[dead].alive = false;
+        let mut delta = TierDelta::default();
+        pool.instances[dead].pool.drop_all_into(&mut delta);
+        index.apply(dead, &delta);
+    }
+    let mut index = Some(index);
+    let decodes: Vec<DecodeInstance> = (0..cfg.n_decode)
+        .map(|_| DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch))
+        .collect();
+    let mut res = Resources::new(&cfg, &perf);
+    if nvme_scale != 1.0 {
+        for n in 0..cfg.n_prefill {
+            res.nvme.set_scale(n, nvme_scale);
+        }
+    }
+    let mut rng = Rng::new(7);
+    let mut scratch = SchedScratch::default();
+    let mut stats = ConductorStats::default();
+    let req = SchedRequest {
+        rid: 1,
+        input_tokens: chain as u64 * BLOCK_TOKENS,
+        output_tokens: 8,
+        hash_ids: probe,
+    };
+    let mut run_one = |now: f64| {
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut pool,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now,
+            index: index.as_mut(),
+            scratch: &mut scratch,
+        };
+        let out = conductor::schedule(&mut ctx, &req, &mut stats);
+        assert!(out.is_err(), "SLO-rejecting steady state must reject");
+    };
+    for w in 0..iters.min(10) {
+        run_one(w as f64);
+    }
+    let t = Instant::now();
+    for k in 0..iters {
+        run_one(k as f64);
+    }
+    iters as f64 / t.elapsed().as_secs_f64()
+}
+
+/// Degraded-mode cell (ISSUE 10): two decision-throughput comparisons —
+/// one node dead vs healthy, and quarter-speed NVMe under a half-
+/// demoted probe vs the same shape at full speed.  Both ratios gate CI
+/// at [`DEGRADED_FLOOR`] in full and smoke mode alike.
+fn degraded_cell(smoke: bool) -> Value {
+    let (nodes, chain) = if smoke { (8, 256) } else { (TARGET_NODES, TARGET_CHAIN) };
+    let cfg = cfg_for(nodes);
+    let iters = (30_000_000 / (nodes * chain)).clamp(100, 5_000);
+    let healthy = bench_decisions_degraded(&cfg, chain, iters, false, false, 1.0);
+    let node_loss = bench_decisions_degraded(&cfg, chain, iters, true, false, 1.0);
+    let healthy_staged = bench_decisions_degraded(&cfg, chain, iters, false, true, 1.0);
+    let nvme_deg = bench_decisions_degraded(&cfg, chain, iters, false, true, 0.25);
+    let loss_slowdown = healthy / node_loss;
+    let nvme_slowdown = healthy_staged / nvme_deg;
+
+    banner("degraded cell: decision throughput under fault postures");
+    let header = ["posture", "healthy dec/s", "degraded dec/s", "slowdown"];
+    row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    row(&[
+        "node loss".into(),
+        format!("{healthy:.0}"),
+        format!("{node_loss:.0}"),
+        format!("{loss_slowdown:.2}x"),
+    ]);
+    row(&[
+        "nvme 25%".into(),
+        format!("{healthy_staged:.0}"),
+        format!("{nvme_deg:.0}"),
+        format!("{nvme_slowdown:.2}x"),
+    ]);
+
+    assert!(
+        loss_slowdown <= DEGRADED_FLOOR,
+        "node-loss decision slowdown {loss_slowdown:.2}x exceeds the {DEGRADED_FLOOR}x floor \
+         at {nodes} nodes x {chain} blocks"
+    );
+    assert!(
+        nvme_slowdown <= DEGRADED_FLOOR,
+        "degraded-NVMe decision slowdown {nvme_slowdown:.2}x exceeds the {DEGRADED_FLOOR}x \
+         floor at {nodes} nodes x {chain} blocks"
+    );
+
+    Value::Arr(vec![
+        json::obj(vec![
+            ("variant", Value::Str("degraded".into())),
+            ("posture", Value::Str("node_loss".into())),
+            ("nodes", json::num(nodes as f64)),
+            ("chain_blocks", json::num(chain as f64)),
+            ("decisions_per_sec_healthy", json::num(healthy)),
+            ("decisions_per_sec_degraded", json::num(node_loss)),
+            ("slowdown", json::num(loss_slowdown)),
+            ("max_slowdown", json::num(DEGRADED_FLOOR)),
+        ]),
+        json::obj(vec![
+            ("variant", Value::Str("degraded".into())),
+            ("posture", Value::Str("nvme_quarter_speed".into())),
+            ("nodes", json::num(nodes as f64)),
+            ("chain_blocks", json::num(chain as f64)),
+            ("decisions_per_sec_healthy", json::num(healthy_staged)),
+            ("decisions_per_sec_degraded", json::num(nvme_deg)),
+            ("slowdown", json::num(nvme_slowdown)),
+            ("max_slowdown", json::num(DEGRADED_FLOOR)),
+        ]),
+    ])
 }
 
 /// Cluster cell (ISSUE 8): 1024 nodes × 4096 blocks, three decision
@@ -849,6 +1009,10 @@ fn main() {
     // the seq-vs-scan floor must gate every push.
     let cluster = cluster_cell(smoke);
 
+    // Degraded cell (ISSUE 10): fault postures must not slow Algorithm 1
+    // past the 2x floor — asserted in both modes.
+    let degraded = degraded_cell(smoke);
+
     let sweep = congestion_sweep(smoke);
     let replay = sustained_replay(smoke);
     // Deterministic cost-model ablation + end-to-end cold-start sweep
@@ -904,6 +1068,7 @@ fn main() {
         ]),
     ));
     obj.push(("cluster", cluster));
+    obj.push(("degraded", degraded));
     obj.push(("congestion_sweep", sweep));
     obj.push(("sustained_replay", replay));
     obj.push(("hybrid_ablation", ablation));

@@ -547,9 +547,14 @@ pub fn find_prefix_matches(
 /// across scoped threads into pre-sized choice slots; the reduce scans
 /// the slots in ascending node order with the same strict-min rule as
 /// the sequential loop, so the winner is bit-for-bit identical at any
-/// worker count.
+/// worker count.  Dead nodes (`faults::FaultEntry::NodeLoss`) are never
+/// candidates — every policy masks them out — and `None` means no
+/// surviving instance exists (the caller rejects).  With every node
+/// alive the masks are no-ops, so healthy runs are bit-for-bit
+/// yesterday's (including the Random policy's RNG stream: the draw is
+/// over the alive count, which then equals `n`).
 // lint: hot
-fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
+fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> Option<PrefillChoice> {
     let n = ctx.prefill.len();
     // The walk's outputs move out of the scratch for the decision (the
     // scoring environment below borrows them shared while the CPP-group
@@ -618,20 +623,36 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
     };
     let choice = match ctx.cfg.scheduling {
         SchedulingPolicy::Random => {
-            let i = ctx.rng.below(n as u64) as usize;
-            local_choice_in(&env, i, matches[i], &mut scratch.group)
+            // Draw over the *alive* count, then walk to the k-th alive
+            // node: with every node alive this is exactly the historical
+            // `below(n)` draw (same RNG stream), and after a loss the
+            // dead nodes simply vanish from the index space.
+            let n_alive = env.prefill.instances.iter().filter(|inst| inst.alive).count();
+            if n_alive == 0 {
+                None
+            } else {
+                let k = ctx.rng.below(n_alive as u64) as usize;
+                let i = env
+                    .prefill
+                    .instances
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, inst)| inst.alive)
+                    .nth(k)
+                    .map(|(i, _)| i)
+                    .expect("k < n_alive");
+                Some(local_choice_in(&env, i, matches[i], &mut scratch.group))
+            }
         }
-        SchedulingPolicy::LoadBalance => {
-            let i = (0..n)
-                .min_by(|&a, &b| {
-                    env.prefill.instances[a]
-                        .queue_ms(env.now)
-                        .partial_cmp(&env.prefill.instances[b].queue_ms(env.now))
-                        .unwrap()
-                })
-                .unwrap();
-            local_choice_in(&env, i, matches[i], &mut scratch.group)
-        }
+        SchedulingPolicy::LoadBalance => (0..n)
+            .filter(|&i| env.prefill.instances[i].alive)
+            .min_by(|&a, &b| {
+                env.prefill.instances[a]
+                    .queue_ms(env.now)
+                    .partial_cmp(&env.prefill.instances[b].queue_ms(env.now))
+                    .unwrap()
+            })
+            .map(|i| local_choice_in(&env, i, matches[i], &mut scratch.group)),
         SchedulingPolicy::CacheAware | SchedulingPolicy::KvCacheCentric => {
             let workers = workers.clamp(1, n);
             if workers <= 1 {
@@ -639,6 +660,9 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                 // the same float sequence.
                 let mut best: Option<PrefillChoice> = None;
                 for i in 0..n {
+                    if !env.prefill.instances[i].alive {
+                        continue;
+                    }
                     let cand = score_candidate(&env, i, &mut scratch.group);
                     let better = match &best {
                         None => true,
@@ -648,7 +672,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                         best = Some(cand);
                     }
                 }
-                best.expect("at least one prefill instance")
+                best
             } else {
                 // Parallel scoring: contiguous candidate ranges, one
                 // worker each, writing disjoint slices of the warmed
@@ -683,8 +707,14 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                         });
                     }
                 });
+                // The reduce skips dead slots — bit-identical to the
+                // sequential loop's `alive` skip (workers still score
+                // them, but scoring is pure and the slots are ignored).
                 let mut best: Option<PrefillChoice> = None;
-                for &cand in scratch.choices.iter() {
+                for (i, &cand) in scratch.choices.iter().enumerate() {
+                    if !env.prefill.instances[i].alive {
+                        continue;
+                    }
                     let better = match &best {
                         None => true,
                         Some(b) => cand.est.end < b.est.end,
@@ -693,7 +723,7 @@ fn select_prefill(ctx: &mut Ctx, req: &SchedRequest) -> PrefillChoice {
                         best = Some(cand);
                     }
                 }
-                best.expect("at least one prefill instance")
+                best
             }
         }
     };
@@ -744,7 +774,12 @@ pub fn schedule(
     req: &SchedRequest,
     stats: &mut ConductorStats,
 ) -> Result<Placement, RejectReason> {
-    let choice = select_prefill(ctx, req);
+    // `None` = no surviving prefill instance (every node dead): no
+    // placement can meet any TTFT, so the request is an SLO rejection.
+    let Some(choice) = select_prefill(ctx, req) else {
+        stats.rejected_ttft += 1;
+        return Err(RejectReason::TtftSlo);
+    };
     let p = choice.inst;
 
     // Line 24–27: decode selection and SLO gate.  The decode-side gate at

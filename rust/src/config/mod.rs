@@ -1,8 +1,30 @@
 //! Cluster / scheduling / SLO configuration for simulations and the live
 //! engine.  Every §8 experiment is a point in this config space.
 
+use crate::faults::FaultPlan;
 use crate::kvcache::PolicyKind;
 use crate::verify::Paranoia;
+
+/// Per-node hardware override — the heterogeneity knob.  The cost model
+/// already prices per-node speeds; this is the config-layer way to say
+/// "node 3 is an H800 box with half the DRAM".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeOverride {
+    /// Which prefill node this override applies to.
+    pub node: usize,
+    /// GPU-generation speed multiplier relative to the baseline A800
+    /// node (1.0 = baseline; an H800 node computes prefill ~2.9× faster).
+    /// Execution *and* estimation divide the nominal prefill makespan by
+    /// the group's min speed, so estimate == actual holds on mixed
+    /// groups.
+    pub speed: f64,
+    /// Override for the node's DRAM tier capacity (blocks); `None`
+    /// keeps the cluster-wide `cache_capacity_blocks`.
+    pub dram_blocks: Option<usize>,
+    /// Override for the node's SSD tier capacity (blocks); `None` keeps
+    /// the cluster-wide `ssd_capacity_blocks`.
+    pub ssd_blocks: Option<usize>,
+}
 
 /// Latency SLOs (§2): absolute limits derived per-experiment from the
 /// unloaded baseline (×10 for TTFT, ×5 for TBT in §8.1; fixed 30 s / 0.1 s
@@ -148,6 +170,19 @@ pub struct SimConfig {
     /// stats) still accumulate — so a 10M-request replay's memory stays
     /// flat instead of growing one row per request.
     pub retain_metrics: bool,
+    /// Scripted fault schedule ([`crate::faults`]): node loss/recovery
+    /// and device-bandwidth degradation injected as ordinary sim events.
+    /// Empty (the default) pushes no events and reproduces the healthy
+    /// run bit-for-bit.
+    pub faults: FaultPlan,
+    /// How many times a request orphaned by node loss may be re-priced
+    /// and re-admitted against the surviving nodes before it counts as a
+    /// rejection.  Only consulted when `faults` is non-empty.
+    pub fault_retry_budget: u32,
+    /// Per-node hardware overrides (mixed GPU generations, asymmetric
+    /// DRAM/SSD capacities).  Empty (the default) = the homogeneous
+    /// cluster, bit-for-bit yesterday's behavior.
+    pub node_overrides: Vec<NodeOverride>,
     pub seed: u64,
 }
 
@@ -179,6 +214,9 @@ impl Default for SimConfig {
             max_live_requests: None,
             interner_epoch_blocks: None,
             retain_metrics: true,
+            faults: FaultPlan::default(),
+            fault_retry_budget: 2,
+            node_overrides: Vec::new(),
             seed: 42,
         }
     }

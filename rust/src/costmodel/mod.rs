@@ -189,7 +189,9 @@ pub fn estimate_prefill(
     debug_assert!(ssd_prefix_tokens <= prefix_tokens);
     debug_assert!(!group.is_empty());
     let primary = group[0];
-    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+    // Heterogeneity-aware: the pool divides by the group's min speed —
+    // the same function `submit_with_floor` fixes the makespan with.
+    let exec_ms = pool.exec_ms_for(perf, cfg, group, n_new, prefix_tokens);
     let queue_free = pool.group_free_at(group).max(now);
     let stage_done = estimate_stage_done(perf, &res.nvme, primary, now, ssd_prefix_tokens);
     let fetch_done = match fetch {
@@ -245,7 +247,7 @@ pub fn estimate_prefill_hybrid(
     debug_assert!(ssd_prefix_tokens <= prefix_tokens);
     debug_assert!(!group.is_empty());
     let primary = group[0];
-    let exec_ms = prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+    let exec_ms = pool.exec_ms_for(perf, cfg, group, n_new, prefix_tokens);
     let queue_free = pool.group_free_at(group).max(now);
     let stage_done = estimate_stage_done(perf, &res.nvme, primary, now, ssd_prefix_tokens);
     let start = queue_free;

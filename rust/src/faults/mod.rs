@@ -1,0 +1,303 @@
+//! Deterministic, scripted fault injection — the robustness frontier of
+//! ROADMAP item 5.
+//!
+//! A [`FaultPlan`] is a list of *scheduled* adversities: a prefill node
+//! dies (its DRAM+SSD pools drop, its in-flight jobs cancel, its
+//! orphaned requests go back to the conductor for bounded re-admission),
+//! a node comes back empty, or a device bank (NIC-tx, NIC-rx, NVMe)
+//! degrades to a fraction of its bandwidth over a window.  Entries are
+//! injected as *ordinary simulator events*, so a run with a plan is
+//! exactly as reproducible as a run without one: same (config, plan) →
+//! bit-for-bit the same `SimResult`, and the empty plan reproduces the
+//! healthy baseline bit-for-bit (the simulator pushes zero fault
+//! events).
+//!
+//! The plan is deliberately *scripted*, not sampled: determinism is the
+//! repo's central invariant, and a fault schedule drawn from the sim RNG
+//! would entangle failure timing with every other random draw.  Scripts
+//! come from the builder API (tests) or `--faults plan.json` (CLI),
+//! validated against the cluster shape before the run starts.
+
+use crate::TimeMs;
+use crate::util::json;
+
+/// Which per-node bandwidth bank a [`FaultEntry::BwDegrade`] hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bank {
+    /// Outgoing NIC (remote prefix fetches, KV streams from this node).
+    NicTx,
+    /// Incoming NIC (incast onto this node).  With the default
+    /// *unconstrained* rx model (`nic_rx_bw: None` → infinite bandwidth)
+    /// a factor times infinity is still infinity, so degrading rx is a
+    /// documented no-op unless the run sets a finite `--rx-bw`.
+    NicRx,
+    /// NVMe queue (SSD staging reads + demotion writes).
+    Nvme,
+}
+
+impl Bank {
+    fn name(self) -> &'static str {
+        match self {
+            Bank::NicTx => "nic_tx",
+            Bank::NicRx => "nic_rx",
+            Bank::Nvme => "nvme",
+        }
+    }
+}
+
+/// One scheduled adversity.  Times are absolute simulator milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEntry {
+    /// Prefill node `node` dies at `at_ms`: pools drop (through the
+    /// delta-maintained index), queued/running jobs cancel, orphaned
+    /// requests re-admit against the survivors under the retry budget.
+    NodeLoss { node: usize, at_ms: TimeMs },
+    /// The node rejoins (empty — a dead node's cache does not survive
+    /// it) and becomes placeable again.
+    NodeRecover { node: usize, at_ms: TimeMs },
+    /// Bank `bank` on `node` runs at `factor` × nominal bandwidth over
+    /// `[from_ms, to_ms)`; already-reserved windows are honored, so
+    /// estimates made after the change still equal actuals.
+    BwDegrade { node: usize, bank: Bank, factor: f64, from_ms: TimeMs, to_ms: TimeMs },
+}
+
+/// A scripted fault schedule.  Empty by default — the healthy baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Builder: prefill node `node` dies at `at_ms`.
+    pub fn node_loss(mut self, node: usize, at_ms: TimeMs) -> Self {
+        self.entries.push(FaultEntry::NodeLoss { node, at_ms });
+        self
+    }
+
+    /// Builder: prefill node `node` rejoins (empty) at `at_ms`.
+    pub fn node_recover(mut self, node: usize, at_ms: TimeMs) -> Self {
+        self.entries.push(FaultEntry::NodeRecover { node, at_ms });
+        self
+    }
+
+    /// Builder: `bank` on `node` runs at `factor` × nominal over
+    /// `[from_ms, to_ms)`.
+    pub fn bw_degrade(
+        mut self,
+        node: usize,
+        bank: Bank,
+        factor: f64,
+        from_ms: TimeMs,
+        to_ms: TimeMs,
+    ) -> Self {
+        self.entries.push(FaultEntry::BwDegrade { node, bank, factor, from_ms, to_ms });
+        self
+    }
+
+    /// Parse a plan from JSON: a top-level array of entry objects, e.g.
+    /// `[{"kind":"node_loss","node":2,"at_ms":60000},
+    ///   {"kind":"bw_degrade","node":0,"bank":"nvme","factor":0.25,
+    ///    "from_ms":0,"to_ms":120000}]`.
+    pub fn from_json(src: &str) -> Result<Self, String> {
+        let v = json::parse(src).map_err(|e| format!("fault plan: {e}"))?;
+        let arr = v.as_arr().ok_or("fault plan: top level must be a JSON array")?;
+        let mut plan = FaultPlan::default();
+        for (i, entry) in arr.iter().enumerate() {
+            let obj = entry.as_obj().ok_or_else(|| format!("fault plan entry {i}: not an object"))?;
+            let field = |key: &str| -> Result<f64, String> {
+                obj.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("fault plan entry {i}: missing numeric \"{key}\""))
+            };
+            let kind = obj
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("fault plan entry {i}: missing string \"kind\""))?;
+            let e = match kind {
+                "node_loss" => FaultEntry::NodeLoss {
+                    node: field("node")? as usize,
+                    at_ms: field("at_ms")?,
+                },
+                "node_recover" => FaultEntry::NodeRecover {
+                    node: field("node")? as usize,
+                    at_ms: field("at_ms")?,
+                },
+                "bw_degrade" => {
+                    let bank = match obj.get("bank").and_then(|v| v.as_str()) {
+                        Some("nic_tx") => Bank::NicTx,
+                        Some("nic_rx") => Bank::NicRx,
+                        Some("nvme") => Bank::Nvme,
+                        other => {
+                            return Err(format!(
+                                "fault plan entry {i}: bad \"bank\" {other:?} \
+                                 (expected nic_tx|nic_rx|nvme)"
+                            ))
+                        }
+                    };
+                    FaultEntry::BwDegrade {
+                        node: field("node")? as usize,
+                        bank,
+                        factor: field("factor")?,
+                        from_ms: field("from_ms")?,
+                        to_ms: field("to_ms")?,
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "fault plan entry {i}: unknown \"kind\" {other:?} \
+                         (expected node_loss|node_recover|bw_degrade)"
+                    ))
+                }
+            };
+            plan.entries.push(e);
+        }
+        Ok(plan)
+    }
+
+    /// Check the plan against the cluster shape before the run starts:
+    /// only *prefill* nodes can be lost/recovered (decode loss is out of
+    /// scope — validated here so it fails loudly, not silently), NVMe
+    /// banks exist only on prefill nodes, NIC banks on every node, and
+    /// degradation factors/windows must be sane.
+    pub fn validate(&self, n_prefill: usize, n_total: usize) -> Result<(), String> {
+        for (i, e) in self.entries.iter().enumerate() {
+            match *e {
+                FaultEntry::NodeLoss { node, at_ms } | FaultEntry::NodeRecover { node, at_ms } => {
+                    if node >= n_prefill {
+                        return Err(format!(
+                            "fault plan entry {i}: node {node} out of range \
+                             (only prefill nodes 0..{n_prefill} can be lost/recovered)"
+                        ));
+                    }
+                    if !at_ms.is_finite() || at_ms < 0.0 {
+                        return Err(format!("fault plan entry {i}: bad at_ms {at_ms}"));
+                    }
+                }
+                FaultEntry::BwDegrade { node, bank, factor, from_ms, to_ms } => {
+                    let limit = match bank {
+                        Bank::Nvme => n_prefill,
+                        Bank::NicTx | Bank::NicRx => n_total,
+                    };
+                    if node >= limit {
+                        return Err(format!(
+                            "fault plan entry {i}: node {node} out of range for bank {} \
+                             (limit {limit})",
+                            bank.name()
+                        ));
+                    }
+                    if !factor.is_finite() || factor <= 0.0 {
+                        return Err(format!(
+                            "fault plan entry {i}: bad factor {factor} \
+                             (expected a finite fraction > 0)"
+                        ));
+                    }
+                    if !from_ms.is_finite() || !to_ms.is_finite() || from_ms < 0.0 || to_ms < from_ms
+                    {
+                        return Err(format!(
+                            "fault plan entry {i}: bad window [{from_ms}, {to_ms})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What the injected plan did to the run — reported in `SimResult` /
+/// `RunReport` so no request is ever silently lost: every orphan is
+/// either `rescued` (retried and later completed) or `lost` (retry
+/// budget exhausted → counted as a rejection).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fault events injected into the run (plan entries; a BwDegrade
+    /// window counts once even though it compiles to two events).
+    pub injected: u64,
+    pub nodes_lost: u64,
+    pub nodes_recovered: u64,
+    /// Mid-run bandwidth scale changes applied (degrade + restore).
+    pub bw_changes: u64,
+    /// Prefill jobs cancelled by node loss (queued or running).
+    pub jobs_killed: u64,
+    /// Orphaned requests handed back to the conductor and re-admitted.
+    pub retried: u64,
+    /// Retried requests that later completed.
+    pub rescued: u64,
+    /// Orphans whose retry budget ran out (or re-pricing rejected them)
+    /// — counted in `n_rejected`, never dropped silently.
+    pub lost: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_json_agree() {
+        let built = FaultPlan::new()
+            .node_loss(2, 60_000.0)
+            .node_recover(2, 180_000.0)
+            .bw_degrade(0, Bank::Nvme, 0.25, 30_000.0, 90_000.0);
+        let parsed = FaultPlan::from_json(
+            r#"[
+                {"kind":"node_loss","node":2,"at_ms":60000},
+                {"kind":"node_recover","node":2,"at_ms":180000},
+                {"kind":"bw_degrade","node":0,"bank":"nvme","factor":0.25,
+                 "from_ms":30000,"to_ms":90000}
+            ]"#,
+        )
+        .unwrap();
+        assert_eq!(built, parsed);
+        assert!(built.validate(8, 16).is_ok());
+    }
+
+    #[test]
+    fn empty_plan_is_default() {
+        assert_eq!(FaultPlan::from_json("[]").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_nodes() {
+        // Decode nodes cannot be lost.
+        let p = FaultPlan::new().node_loss(9, 0.0);
+        assert!(p.validate(8, 16).unwrap_err().contains("out of range"));
+        // NVMe banks exist only on prefill nodes...
+        let p = FaultPlan::new().bw_degrade(9, Bank::Nvme, 0.5, 0.0, 1.0);
+        assert!(p.validate(8, 16).is_err());
+        // ...but NIC banks span the whole cluster.
+        let p = FaultPlan::new().bw_degrade(9, Bank::NicTx, 0.5, 0.0, 1.0);
+        assert!(p.validate(8, 16).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_factors_and_windows() {
+        for factor in [0.0, -0.5, f64::INFINITY, f64::NAN] {
+            let p = FaultPlan::new().bw_degrade(0, Bank::Nvme, factor, 0.0, 1.0);
+            assert!(p.validate(8, 16).is_err(), "factor {factor} must be rejected");
+        }
+        let p = FaultPlan::new().bw_degrade(0, Bank::Nvme, 0.5, 10.0, 5.0);
+        assert!(p.validate(8, 16).unwrap_err().contains("window"));
+    }
+
+    #[test]
+    fn json_errors_are_loud() {
+        assert!(FaultPlan::from_json("{}").unwrap_err().contains("array"));
+        assert!(FaultPlan::from_json(r#"[{"kind":"meteor"}]"#).unwrap_err().contains("meteor"));
+        assert!(FaultPlan::from_json(r#"[{"kind":"node_loss"}]"#)
+            .unwrap_err()
+            .contains("node"));
+        assert!(FaultPlan::from_json(r#"[{"kind":"bw_degrade","node":0,"bank":"warp",
+            "factor":0.5,"from_ms":0,"to_ms":1}]"#)
+            .unwrap_err()
+            .contains("bank"));
+    }
+}

@@ -561,6 +561,30 @@ impl CachePool {
         delta
     }
 
+    /// Drop every resident block from *both* tiers at once — node loss
+    /// (`faults::FaultEntry::NodeLoss`): the node's DRAM and SSD pools
+    /// vanish together, so each block leaves the pool entirely.  The
+    /// residency changes are recorded into a caller-owned delta (cleared
+    /// first, `_into` convention) in ascending dense-id order, keeping
+    /// fault runs deterministic regardless of tier-map iteration order.
+    /// Applying the delta to the prefix index is what keeps the index
+    /// `equals_rebuild_of`-consistent without a rebuild.
+    pub fn drop_all_into(&mut self, delta: &mut TierDelta) {
+        delta.clear();
+        let mut ids: Vec<DenseBlockId> =
+            self.dram.iter_blocks().chain(self.ssd.iter_blocks()).collect();
+        ids.sort_unstable();
+        for &b in &ids {
+            if self.dram.contains(b) {
+                self.dram.remove(b);
+            } else {
+                self.ssd.remove(b);
+            }
+            delta.push(b, None);
+        }
+        self.stats.dropped += ids.len() as u64;
+    }
+
     pub fn hits(&self) -> u64 {
         self.stats.hits()
     }
@@ -793,6 +817,26 @@ mod tests {
         assert_eq!(m.dram_blocks, 3);
         assert_eq!(m.ssd_blocks, 1);
         assert_eq!(m.ssd_last, 1, "the one SSD copy sits at position 1");
+    }
+
+    #[test]
+    fn drop_all_empties_both_tiers_in_id_order() {
+        let mut p = CachePool::new(PolicyKind::Lru, Some(4), Some(8));
+        let _ = p.admit_chain(&[3, 1, 4], 0.0);
+        let _ = p.demote_block(1, 1.0).expect("demote");
+        let dropped_before = p.stats.dropped;
+        let mut delta = TierDelta { changes: vec![(99, None)] }; // stale scratch
+        p.drop_all_into(&mut delta);
+        assert_eq!(
+            delta.changes,
+            vec![(1, None), (3, None), (4, None)],
+            "everything leaves, ascending id order"
+        );
+        assert!(p.is_empty());
+        assert_eq!(p.stats.dropped, dropped_before + 3);
+        // Idempotent on an empty pool.
+        p.drop_all_into(&mut delta);
+        assert!(delta.is_empty());
     }
 
     #[test]

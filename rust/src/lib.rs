@@ -28,6 +28,8 @@
 //!   decode (§3).
 //! * [`overload`] — overload-oriented scheduling: early rejection and
 //!   prediction-based early rejection (§7).
+//! * [`faults`] — deterministic scripted fault injection (node loss,
+//!   device degradation) driving the degraded-mode scheduling scenarios.
 //! * [`baseline`] — a vLLM-like *coupled* continuous-batching engine used
 //!   as the paper's comparison system (§8).
 //! * [`sim`] — the discrete-event cluster simulator that replays traces
@@ -52,6 +54,7 @@ pub mod config;
 pub mod costmodel;
 pub mod decode;
 pub mod engine;
+pub mod faults;
 pub mod kvcache;
 pub mod messenger;
 pub mod metrics;

@@ -12,9 +12,11 @@
 use anyhow::{bail, Result};
 
 use mooncake::baseline::{self, VllmConfig};
-use mooncake::config::{RejectionPolicy, SchedulingPolicy, SimConfig};
+use mooncake::config::{NodeOverride, RejectionPolicy, SchedulingPolicy, SimConfig};
 use mooncake::engine::{Engine, EngineConfig, GenRequest};
+use mooncake::faults::FaultPlan;
 use mooncake::kvcache::PolicyKind;
+use mooncake::model::HardwareSpec;
 use mooncake::runtime::Runtime;
 use mooncake::sim;
 use mooncake::trace::{gen, jsonl, replay as trace_replay, stats};
@@ -41,10 +43,13 @@ fn main() -> Result<()> {
                  \t[--dram-blocks 50000] [--ssd-blocks 250000] [--demote-after-ms N]\n\
                  \t[--rx-bw BYTES_PER_SEC] [--ssd-write-bw BYTES_PER_SEC]\n\
                  \t[--no-prefix-index] [--sched-workers N] [--no-hybrid]\n\
+                 \t[--faults plan.json] [--retry-budget N]\n\
+                 \t[--node-hw node:spec[:dram[:ssd]],...  (spec: a800|h800|FACTOR)]\n\
                  replay    --traces a.jsonl[,b.jsonl.gz,...] [--rates 1[,2,...]]\n\
                  \t[--prefill 8] [--decode 8] [--policy ...] [--reject ...]\n\
                  \t[--max-live N] [--epoch-blocks N] [--no-metrics]\n\
                  \t[--sched-workers N] [--no-hybrid]\n\
+                 \t[--faults plan.json] [--retry-budget N] [--node-hw ...]\n\
                  baseline  --trace trace.jsonl [--instances 4] [--speedup 1]\n\
                  serve     [--artifacts artifacts] [--requests 8] [--max-new 32]"
             );
@@ -109,6 +114,82 @@ fn parse_reject(s: &str) -> Result<RejectionPolicy> {
         "predictive" => RejectionPolicy::Predictive,
         other => bail!("unknown rejection policy {other}"),
     })
+}
+
+/// Scripted fault plan (`--faults plan.json`): parsed and validated
+/// loudly *before* the run starts — a malformed script must not silently
+/// produce a healthy-looking measurement.  Absent → the empty plan (the
+/// healthy baseline, bit-for-bit).
+fn parse_faults(args: &Args) -> Result<FaultPlan> {
+    match args.get("faults") {
+        None if args.has_flag("faults") => {
+            bail!("--faults requires a path (a fault-plan JSON file)")
+        }
+        None => Ok(FaultPlan::default()),
+        Some(path) => {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))?;
+            FaultPlan::from_json(&src).map_err(|e| anyhow::anyhow!("--faults {path}: {e}"))
+        }
+    }
+}
+
+fn parse_retry_budget(args: &Args, default: u32) -> Result<u32> {
+    match args.get("retry-budget") {
+        None if args.has_flag("retry-budget") => {
+            bail!("--retry-budget requires a value (re-admissions per orphaned request)")
+        }
+        None => Ok(default),
+        Some(s) => s
+            .parse::<u32>()
+            .map_err(|_| anyhow::anyhow!("invalid --retry-budget {s} (expected a count)")),
+    }
+}
+
+/// Heterogeneous hardware: `--node-hw node:spec[:dram[:ssd]]`, comma
+/// separated.  `spec` is a named GPU generation (`a800` = the 1.0
+/// baseline, `h800` = the measured prefill speed ratio over A800) or a
+/// bare positive speed factor; the optional trailing fields override
+/// that node's DRAM/SSD tier capacities in blocks.
+fn parse_node_hw(args: &Args) -> Result<Vec<NodeOverride>> {
+    let Some(s) = args.get("node-hw") else {
+        if args.has_flag("node-hw") {
+            bail!("--node-hw requires a value (node:spec[:dram[:ssd]], comma separated)");
+        }
+        return Ok(Vec::new());
+    };
+    let a800 = HardwareSpec::a800_node();
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 2 || fields.len() > 4 {
+            bail!("invalid --node-hw entry {part:?} (expected node:spec[:dram[:ssd]])");
+        }
+        let node: usize = fields[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --node-hw node {:?}", fields[0]))?;
+        let speed = match fields[1] {
+            "a800" | "a100" => 1.0,
+            "h800" | "h100" => HardwareSpec::h800_node().prefill_speed_ratio(&a800),
+            num => match num.parse::<f64>() {
+                Ok(v) if v > 0.0 && v.is_finite() => v,
+                _ => bail!(
+                    "invalid --node-hw spec {num:?} (expected a800|h800 or a positive factor)"
+                ),
+            },
+        };
+        let cap = |i: usize| -> Result<Option<usize>> {
+            match fields.get(i) {
+                None => Ok(None),
+                Some(x) => x
+                    .parse::<usize>()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("invalid --node-hw capacity {x:?} (blocks)")),
+            }
+        };
+        out.push(NodeOverride { node, speed, dram_blocks: cap(2)?, ssd_blocks: cap(3)? });
+    }
+    Ok(out)
 }
 
 /// Scheduler worker threads for the candidate walk + scoring (default 1
@@ -180,8 +261,16 @@ fn simulate(args: &Args) -> Result<()> {
         nic_rx_bw: parse_bw("rx-bw")?,
         ssd_write_bw: parse_bw("ssd-write-bw")?,
         demote_after_ms,
+        faults: parse_faults(args)?,
+        fault_retry_budget: parse_retry_budget(args, defaults.fault_retry_budget)?,
+        node_overrides: parse_node_hw(args)?,
         ..Default::default()
     };
+    // Shape errors fail here, before the run, with the plan's own
+    // diagnostics (the simulator would only panic mid-run).
+    if let Err(e) = cfg.faults.validate(cfg.n_prefill, cfg.n_prefill + cfg.n_decode) {
+        bail!("{e}");
+    }
     let speedup = args.get_f64("speedup", 1.0);
     let res = sim::run(&cfg, &trace, speedup);
     let rep = res.report(&cfg);
@@ -219,6 +308,20 @@ fn simulate(args: &Args) -> Result<()> {
         res.conductor.hybrid_staged_blocks,
         res.conductor.hybrid_recomputed_blocks
     );
+    if !cfg.faults.is_empty() {
+        println!(
+            "faults:     {} injected ({} node losses, {} recoveries, {} bw changes); \
+             {} jobs killed, {} retried, {} rescued, {} lost",
+            res.faults.injected,
+            res.faults.nodes_lost,
+            res.faults.nodes_recovered,
+            res.faults.bw_changes,
+            res.faults.jobs_killed,
+            res.faults.retried,
+            res.faults.rescued,
+            res.faults.lost
+        );
+    }
     // Utilization denominators: NIC banks span every node; NVMe traffic
     // only ever lands on prefill nodes (staging reads, demotion writes),
     // so its device utilization is per prefill node.
@@ -282,8 +385,14 @@ fn replay(args: &Args) -> Result<()> {
         max_live_requests: parse_count("max-live")?,
         interner_epoch_blocks: parse_count("epoch-blocks")?,
         retain_metrics: !args.has_flag("no-metrics"),
+        faults: parse_faults(args)?,
+        fault_retry_budget: parse_retry_budget(args, SimConfig::default().fault_retry_budget)?,
+        node_overrides: parse_node_hw(args)?,
         ..Default::default()
     };
+    if let Err(e) = cfg.faults.validate(cfg.n_prefill, cfg.n_prefill + cfg.n_decode) {
+        bail!("{e}");
+    }
     // A loader error (bad line, timestamp regression) aborts the replay
     // with the reader's `file:line` diagnostic.
     let die = |e: anyhow::Error| -> sim::Request {
@@ -315,6 +424,16 @@ fn replay(args: &Args) -> Result<()> {
         "interner:   id space {} ({} recycle epochs freed {} ids)",
         res.interner_id_space, res.interner_epochs, res.interner_freed
     );
+    if !cfg.faults.is_empty() {
+        println!(
+            "faults:     {} injected; {} jobs killed, {} retried, {} rescued, {} lost",
+            res.faults.injected,
+            res.faults.jobs_killed,
+            res.faults.retried,
+            res.faults.rescued,
+            res.faults.lost
+        );
+    }
     println!(
         "simulated:  {:.0} s of cluster time, {} events, {} tokens decoded",
         res.wall_ms / 1e3,

@@ -87,7 +87,7 @@ impl Messenger {
     /// cannot finish landing before the source has sent them), first-fit
     /// into the destination's gaps.  Returns `(start, dur)`.
     fn rx_slot(&self, dst: usize, now: TimeMs, tx_end: TimeMs, bytes: u64) -> (TimeMs, f64) {
-        let d = self.rx.serialize_ms(bytes, 0.0);
+        let d = self.rx.serialize_ms(dst, bytes, 0.0);
         let lb = now.max(tx_end - d);
         (earliest_gap(&self.rx_windows[dst], lb, d), d)
     }

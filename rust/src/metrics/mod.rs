@@ -3,6 +3,7 @@
 //! (§2: only *fully completed* requests count — anything rejected or
 //! SLO-violating is wasted work).
 
+use crate::faults::FaultStats;
 use crate::kvcache::TierCounters;
 use crate::resource::ResourceStats;
 use crate::util::stats;
@@ -104,6 +105,10 @@ pub struct RunReport {
     /// prefix plan — Algorithm 1's fourth branch (filled by
     /// `SimResult::report`; zero for engines without it).
     pub hybrid_placements: u64,
+    /// Fault-injection accounting (`crate::faults`): injected events,
+    /// nodes lost/recovered, jobs killed, orphan retries/rescues/losses
+    /// (filled by `SimResult::report`; all zero on healthy runs).
+    pub faults: FaultStats,
 }
 
 pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: f64) -> RunReport {
@@ -147,6 +152,7 @@ pub fn report(metrics: &[RequestMetrics], ttft_slo: f64, tbt_slo: f64, wall_ms: 
         tiers: TierCounters::default(),
         resources: ResourceStats::default(),
         hybrid_placements: 0,
+        faults: FaultStats::default(),
     }
 }
 

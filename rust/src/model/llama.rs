@@ -102,6 +102,13 @@ pub struct HardwareSpec {
 }
 
 impl HardwareSpec {
+    /// Prefill-speed ratio of this node over `baseline` — what the
+    /// heterogeneity layer feeds `NodeOverride::speed` (prefill is
+    /// compute-bound, so achieved dense throughput is the right proxy).
+    pub fn prefill_speed_ratio(&self, baseline: &HardwareSpec) -> f64 {
+        (self.flops_peak * self.prefill_mfu) / (baseline.flops_peak * baseline.prefill_mfu)
+    }
+
     /// 8×A800-SXM4-80GB node as in §8.1.
     pub fn a800_node() -> Self {
         let gpus = 8.0;
@@ -123,6 +130,25 @@ impl HardwareSpec {
             transfer_latency_ms: 1.0,
         }
     }
+
+    /// 8×H800 node — the newer-generation box a heterogeneous cluster
+    /// mixes in (Hopper bf16 dense peak ~990 TFLOP/s per GPU; prefill
+    /// MFU a bit lower than Ampere's at these sequence lengths).  Same
+    /// pool/NIC shape as the A800 node: the interesting asymmetry is
+    /// compute speed, which `prefill_speed_ratio` turns into a
+    /// `NodeOverride::speed` factor (~2.9× over A800).
+    pub fn h800_node() -> Self {
+        let gpus = 8.0;
+        HardwareSpec {
+            name: "8xH800",
+            flops_peak: gpus * 990e12,
+            prefill_mfu: 0.5,
+            hbm_bw: gpus * 3.35e12,
+            hbm_eff: 0.55,
+            step_overhead_ms: 25.0,
+            ..HardwareSpec::a800_node()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +166,15 @@ mod tests {
     fn kv_bytes_match_paper_math() {
         let m = ModelSpec::llama2_70b();
         assert_eq!(m.kv_bytes_per_token(), 327_680);
+    }
+
+    #[test]
+    fn h800_speed_ratio_is_sane() {
+        let a = HardwareSpec::a800_node();
+        let h = HardwareSpec::h800_node();
+        let r = h.prefill_speed_ratio(&a);
+        assert!(r > 2.0 && r < 4.0, "H800/A800 prefill ratio {r}");
+        assert_eq!(a.prefill_speed_ratio(&a), 1.0);
     }
 
     #[test]

@@ -80,8 +80,11 @@ impl Admission {
         now: TimeMs,
     ) -> f64 {
         let nominal = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1);
+        // Dead nodes can't serve anyone — with no survivor the fold
+        // stays INFINITY, which reads as a fully loaded pool (reject).
         pool.instances
             .iter()
+            .filter(|i| i.alive)
             .map(|i| i.load(now, nominal, cfg.slo.ttft_ms))
             .fold(f64::INFINITY, f64::min)
     }
@@ -167,7 +170,12 @@ impl Admission {
             RejectionPolicy::Early => self.decode_load_now(decodes, perf, cfg.slo.tbt_ms),
             RejectionPolicy::Predictive => {
                 let est_prefill = crate::costmodel::prefill_exec_ms(perf, cfg, input_tokens, 0, 1)
-                    + pool.instances.iter().map(|i| i.queue_ms(now)).fold(f64::INFINITY, f64::min);
+                    + pool
+                        .instances
+                        .iter()
+                        .filter(|i| i.alive)
+                        .map(|i| i.queue_ms(now))
+                        .fold(f64::INFINITY, f64::min);
                 self.decode_load_predicted(
                     decodes,
                     in_flight,

@@ -86,6 +86,17 @@ pub struct PrefillInstance {
     /// Requests prefilled and compute-ms spent (utilization accounting).
     pub n_prefilled: u64,
     pub busy_ms: f64,
+    /// False while the node is down (fault injection): the conductor
+    /// skips it for placement, CPP recruitment, and admission load; the
+    /// sim cancels its jobs and drops its pools on loss.  `true` by
+    /// default — and a recovered node comes back `true` with empty
+    /// pools.
+    pub alive: bool,
+    /// GPU-generation speed multiplier (heterogeneity): execution and
+    /// estimation both divide the nominal prefill makespan by the
+    /// group's min speed.  1.0 (the default) is bit-identical to the
+    /// homogeneous cluster.
+    pub speed: f64,
 }
 
 impl PrefillInstance {
@@ -101,6 +112,8 @@ impl PrefillInstance {
             pool: CachePool::new(eviction, dram_capacity_blocks, ssd_capacity_blocks),
             n_prefilled: 0,
             busy_ms: 0.0,
+            alive: true,
+            speed: 1.0,
         }
     }
 
@@ -142,14 +155,35 @@ pub struct PrefillPool {
 
 impl PrefillPool {
     pub fn new(cfg: &SimConfig) -> Self {
+        for o in &cfg.node_overrides {
+            assert!(
+                o.node < cfg.n_prefill,
+                "node override {} out of range (n_prefill {})",
+                o.node,
+                cfg.n_prefill
+            );
+        }
         PrefillPool {
             instances: (0..cfg.n_prefill)
-                .map(|_| {
-                    PrefillInstance::new(
+                .map(|node| {
+                    // Heterogeneity: a NodeOverride replaces this node's
+                    // speed and/or tier capacities; everything else keeps
+                    // the cluster-wide config.
+                    let ov = cfg.node_overrides.iter().find(|o| o.node == node);
+                    let mut inst = PrefillInstance::new(
                         cfg.eviction,
-                        cfg.cache_capacity_blocks,
-                        cfg.ssd_capacity_blocks,
-                    )
+                        ov.and_then(|o| o.dram_blocks).or(cfg.cache_capacity_blocks),
+                        ov.and_then(|o| o.ssd_blocks).or(cfg.ssd_capacity_blocks),
+                    );
+                    if let Some(o) = ov {
+                        assert!(
+                            o.speed.is_finite() && o.speed > 0.0,
+                            "node {node}: bad speed override {}",
+                            o.speed
+                        );
+                        inst.speed = o.speed;
+                    }
+                    inst
                 })
                 .collect(),
             jobs: FastMap::default(),
@@ -195,6 +229,89 @@ impl PrefillPool {
         self.jobs.get(&id).expect("unknown prefill job")
     }
 
+    /// Is `id` still admitted (queued or running)?  Node loss cancels
+    /// jobs out from under their scheduled events, so the sim guards
+    /// `PrefillStart`/`PrefillDone` handlers with this.
+    pub fn contains_job(&self, id: JobId) -> bool {
+        self.jobs.contains_key(&id)
+    }
+
+    /// Slowest member bounds a CPP group: pipeline stages synchronize,
+    /// so a mixed-generation group runs at its min speed.
+    pub fn group_speed(&self, group: &[usize]) -> f64 {
+        group.iter().map(|&i| self.instances[i].speed).fold(f64::INFINITY, f64::min)
+    }
+
+    /// The ONE heterogeneity-aware execution makespan — nominal cost
+    /// over the group divided by the group's min speed — used by both
+    /// the estimator ([`costmodel::estimate_prefill`]) and the executor
+    /// ([`Self::submit_with_floor`]), so estimate == actual holds on
+    /// mixed clusters.  `x / 1.0` is bit-identical to `x`, so the
+    /// homogeneous default is unchanged bit-for-bit.
+    // lint: hot
+    pub fn exec_ms_for(
+        &self,
+        perf: &PerfModel,
+        cfg: &SimConfig,
+        group: &[usize],
+        n_new: u64,
+        prefix_tokens: u64,
+    ) -> f64 {
+        costmodel::prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64)
+            / self.group_speed(group)
+    }
+
+    /// Collect every admitted (queued or running) job whose CPP group
+    /// contains `node`, appending to `out` — the member-based half of
+    /// the node-loss doomed set.  The caller sorts + dedups before
+    /// acting, so FastMap iteration order never reaches a decision.
+    pub fn collect_jobs_touching(&self, node: usize, out: &mut Vec<JobId>) {
+        for (&id, job) in self.jobs.iter() {
+            if job.group.contains(&node) {
+                out.push(id);
+            }
+        }
+    }
+
+    /// Cancel jobs by id (callers pass a sorted, deduped list): remove
+    /// the records, purge every member's FIFO queue, free occupied
+    /// running slots, and recompute each instance's drain horizon from
+    /// the surviving jobs' planned ends (a horizon in the past is
+    /// harmless — `queue_ms` clamps at zero).  Appends `(id, rid)` per
+    /// cancelled job to `out` in the order given, so the sim can hand
+    /// the orphaned requests back to the conductor.  Ids no longer
+    /// admitted are skipped silently (a request may have finished
+    /// between collection and cancellation).
+    // lint: hot
+    pub fn cancel_jobs(&mut self, ids: &[JobId], out: &mut Vec<(JobId, RequestId)>) {
+        for &id in ids {
+            let Some(mut job) = self.jobs.remove(&id) else { continue };
+            for &m in &job.group {
+                self.instances[m].queue.retain(|&q| q != id);
+                if self.instances[m].running == Some(id) {
+                    self.instances[m].running = None;
+                }
+            }
+            out.push((id, job.rid));
+            self.group_pool.push(std::mem::take(&mut job.group));
+        }
+        // Drain horizons restate over the survivors: every remaining
+        // queued/running job keeps the planned end it was admitted with
+        // (cancellation never *delays* surviving work, and the
+        // planned-start floor in `startable_into` keeps it from starting
+        // early into the freed gap — estimate == actual survives).
+        for inst in self.instances.iter_mut() {
+            inst.free_at = 0.0;
+        }
+        for job in self.jobs.values() {
+            for &m in &job.group {
+                if self.instances[m].free_at < job.planned_end {
+                    self.instances[m].free_at = job.planned_end;
+                }
+            }
+        }
+    }
+
     /// Decide the CPP group for an input of `n_new` uncached tokens
     /// (§5.1), writing the member ids into a caller-owned (reused)
     /// buffer — the primary is always first.  Long contexts recruit idle
@@ -222,7 +339,7 @@ impl PrefillPool {
             let mut best_i = usize::MAX;
             let mut best_q = f64::INFINITY;
             for (i, inst) in self.instances.iter().enumerate() {
-                if i == primary || group.contains(&i) {
+                if i == primary || !inst.alive || group.contains(&i) {
                     continue;
                 }
                 let q = inst.queue_ms(now);
@@ -306,8 +423,7 @@ impl PrefillPool {
         min_end: TimeMs,
     ) -> JobId {
         debug_assert!(!group.is_empty());
-        let base_exec_ms =
-            costmodel::prefill_exec_ms(perf, cfg, n_new, prefix_tokens, group.len() as u64);
+        let base_exec_ms = self.exec_ms_for(perf, cfg, group, n_new, prefix_tokens);
         let planned_start = self.group_free_at(group).max(gate).max(now);
         let exec_ms = base_exec_ms.max(min_end - planned_start);
         let planned_end = planned_start + exec_ms;
@@ -361,6 +477,16 @@ impl PrefillPool {
             }
             let job = &self.jobs[&id];
             if job.gate > now {
+                continue;
+            }
+            // Planned-start floor: in a healthy run a job is never ready
+            // before its planned start (predecessors finish exactly at
+            // their planned ends), so this is bit-neutral — but after a
+            // cancellation frees a queue slot early, starting into the
+            // gap would finish *before* the estimate and break the
+            // estimate == actual contract.  The job's outstanding wake
+            // event at `planned_start` starts it on time.
+            if job.planned_start > now {
                 continue;
             }
             let ready = job.group.iter().all(|&m| {

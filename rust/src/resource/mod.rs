@@ -54,6 +54,16 @@ pub struct BwQueue {
     latency_ms: f64,
     /// Each node's device is busy until this time.
     busy_until: Vec<TimeMs>,
+    /// Per-node bandwidth multiplier (fault injection: a degraded device
+    /// runs at `scale × nominal`).  1.0 everywhere by default — and
+    /// `x * 1.0` is bit-identical to `x` in IEEE arithmetic (including
+    /// `bw_per_ms = ∞`), so healthy runs are unchanged bit-for-bit.
+    /// Changing a node's scale mid-run leaves `busy_until` (and any
+    /// caller-side booked windows) untouched: already-reserved ops keep
+    /// the completion times they were promised, only *future* ops pay
+    /// the new rate — which is exactly what keeps estimate == actual
+    /// across the change.
+    scale: Vec<f64>,
     pub total_bytes: u64,
     pub n_ops: u64,
     /// Total time ops spent queued behind earlier ones (congestion).
@@ -70,6 +80,7 @@ impl BwQueue {
             bw_per_ms: bw_bytes_per_sec / 1e3,
             latency_ms,
             busy_until: vec![0.0; n_nodes],
+            scale: vec![1.0; n_nodes],
             total_bytes: 0,
             n_ops: 0,
             queued_ms: 0.0,
@@ -77,11 +88,24 @@ impl BwQueue {
         }
     }
 
-    /// Device occupation of one op: setup latencies plus bandwidth
-    /// serialization.  `setup_ms` carries op-specific setup on top of
-    /// the bank's fixed latency (e.g. the NVMe per-block IOPS term).
-    pub fn serialize_ms(&self, bytes: u64, setup_ms: f64) -> f64 {
-        self.latency_ms + setup_ms + bytes as f64 / self.bw_per_ms
+    /// Device occupation of one op on `node`: setup latencies plus
+    /// bandwidth serialization at the node's current (possibly degraded)
+    /// rate.  `setup_ms` carries op-specific setup on top of the bank's
+    /// fixed latency (e.g. the NVMe per-block IOPS term).
+    pub fn serialize_ms(&self, node: usize, bytes: u64, setup_ms: f64) -> f64 {
+        self.latency_ms + setup_ms + bytes as f64 / (self.bw_per_ms * self.scale[node])
+    }
+
+    /// Set `node`'s bandwidth multiplier (fault injection).  Existing
+    /// reservations keep their completion times; only ops priced after
+    /// this call see the new rate.
+    pub fn set_scale(&mut self, node: usize, factor: f64) {
+        self.scale[node] = factor;
+    }
+
+    /// `node`'s current bandwidth multiplier (1.0 = healthy).
+    pub fn scale_of(&self, node: usize) -> f64 {
+        self.scale[node]
     }
 
     /// Absolute completion time if an op of `bytes` were scheduled on
@@ -90,7 +114,7 @@ impl BwQueue {
     // lint: hot
     #[must_use = "a discarded estimate means the probe's cost never reached the decision"]
     pub fn estimate_done(&self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> TimeMs {
-        self.estimate_done_dur(node, now, self.serialize_ms(bytes, setup_ms))
+        self.estimate_done_dur(node, now, self.serialize_ms(node, bytes, setup_ms))
     }
 
     /// Completion delay (ms from `now`) of the same probe.
@@ -108,7 +132,7 @@ impl BwQueue {
 
     /// Enqueue an op of `bytes` on `node`; returns its (start, end).
     pub fn schedule(&mut self, node: usize, now: TimeMs, bytes: u64, setup_ms: f64) -> Op {
-        let dur = self.serialize_ms(bytes, setup_ms);
+        let dur = self.serialize_ms(node, bytes, setup_ms);
         self.schedule_dur(node, now, dur, bytes)
     }
 
@@ -225,7 +249,8 @@ impl Resources {
             return None;
         }
         let bytes = n_blocks as u64 * BLOCK_TOKENS * perf.model.kv_bytes_per_token();
-        let dur = bytes as f64 / self.ssd_write_per_ms;
+        // Writes share the (possibly degraded) device with staging reads.
+        let dur = bytes as f64 / (self.ssd_write_per_ms * self.nvme.scale_of(node));
         Some(self.nvme.schedule_dur(node, now, dur, bytes))
     }
 
@@ -255,7 +280,32 @@ mod tests {
         let q = q();
         let bytes = 5_242_880_000u64;
         let want = 1.0 + bytes as f64 / (100e9 / 1e3);
-        assert_eq!(q.serialize_ms(bytes, 0.0).to_bits(), want.to_bits());
+        assert_eq!(q.serialize_ms(0, bytes, 0.0).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn degraded_scale_slows_future_ops_but_honors_reservations() {
+        let mut q = q();
+        // Healthy scale is a bit-exact no-op on the formula pin.
+        let bytes = 1_000_000_000u64;
+        let healthy = q.serialize_ms(0, bytes, 0.0);
+        assert_eq!(healthy.to_bits(), (1.0 + bytes as f64 / 1e8).to_bits());
+        // Reserve an op at full speed, then degrade the device to 25%.
+        let before = q.schedule(0, 0.0, bytes, 0.0);
+        q.set_scale(0, 0.25);
+        assert_eq!(q.scale_of(0), 0.25);
+        // The reserved op keeps its window; the next op starts where the
+        // reservation promised and pays 4× the serialization.
+        let est = q.estimate_done(0, 0.0, bytes, 0.0);
+        let after = q.schedule(0, 0.0, bytes, 0.0);
+        assert_eq!(est.to_bits(), after.end.to_bits(), "estimate == schedule under degrade");
+        assert_eq!(after.start.to_bits(), before.end.to_bits());
+        assert!((after.end - after.start - (1.0 + 4.0 * bytes as f64 / 1e8)).abs() < 1e-9);
+        // Restoring the scale restores the healthy rate for future ops.
+        q.set_scale(0, 1.0);
+        assert_eq!(q.serialize_ms(0, bytes, 0.0).to_bits(), healthy.to_bits());
+        // Other nodes never saw the degrade.
+        assert_eq!(q.serialize_ms(1, bytes, 0.0).to_bits(), healthy.to_bits());
     }
 
     #[test]
@@ -311,9 +361,9 @@ mod tests {
     #[test]
     fn setup_term_rides_on_top_of_bandwidth() {
         let q = BwQueue::new(1, 3e9, 0.0); // the NVMe read shape
-        let bw_only = q.serialize_ms(3_000_000, 0.0);
+        let bw_only = q.serialize_ms(0, 3_000_000, 0.0);
         assert!((bw_only - 1.0).abs() < 1e-9);
-        let with_iops = q.serialize_ms(3_000_000, 0.05);
+        let with_iops = q.serialize_ms(0, 3_000_000, 0.05);
         assert!((with_iops - 1.05).abs() < 1e-9);
     }
 

@@ -33,7 +33,8 @@ use crate::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
 use crate::config::SimConfig;
 use crate::costmodel;
 use crate::decode::DecodeInstance;
-use crate::kvcache::{BlockInterner, DenseBlockId, ShardedPrefixIndex, TierCounters};
+use crate::faults::{Bank, FaultEntry, FaultStats};
+use crate::kvcache::{BlockInterner, DenseBlockId, ShardedPrefixIndex, TierCounters, TierDelta};
 use crate::metrics::{self, Outcome, RequestMetrics};
 use crate::model::PerfModel;
 use crate::overload::{Admission, InFlight};
@@ -83,6 +84,15 @@ enum EventKind {
     /// idle DRAM blocks down to the SSD tier ahead of eviction pressure.
     DemoteSweep,
     Sample,
+    /// Scripted fault (`cfg.faults`): prefill node `node` dies — pools
+    /// drop, its jobs cancel, orphans re-admit against the survivors.
+    NodeLoss { node: usize },
+    /// Scripted fault: the node rejoins, empty but placeable.
+    NodeRecover { node: usize },
+    /// Scripted fault: set `bank` on `node` to `factor` × nominal
+    /// bandwidth (a `BwDegrade` window compiles to a degrade event at
+    /// `from_ms` and a `factor: 1.0` restore at `to_ms`).
+    BwChange { node: usize, bank: Bank, factor: f64 },
 }
 
 #[derive(Debug, Clone)]
@@ -165,6 +175,10 @@ pub struct SimResult {
     /// Dense-id space high-water mark (`BlockInterner::id_space`) — with
     /// recycling on this stays bounded under unbounded distinct blocks.
     pub interner_id_space: usize,
+    /// Fault-injection accounting (`cfg.faults`): every orphaned request
+    /// is either rescued or counted in `n_rejected` — never lost
+    /// silently.  All zero on healthy runs.
+    pub faults: FaultStats,
 }
 
 impl SimResult {
@@ -173,6 +187,7 @@ impl SimResult {
             tiers: self.tier,
             resources: self.resources,
             hybrid_placements: self.conductor.hybrid_placements,
+            faults: self.faults,
             ..metrics::report(&self.metrics, cfg.slo.ttft_ms, cfg.slo.tbt_ms, self.wall_ms)
         }
     }
@@ -189,6 +204,14 @@ struct Pending {
     ttft: f64,
     /// KV stream completion on the wire, set when the job starts.
     stream_end: TimeMs,
+    /// Node-loss re-admissions so far (`cfg.fault_retry_budget` bounds
+    /// it; 0 on every healthy request).
+    retries: u32,
+    /// The original *trace-level* block hashes, retained only in fault
+    /// runs (`retain_chains`) so an orphan can be re-interned and
+    /// re-priced — trace hashes stay valid across interner epochs where
+    /// dense ids would not.  Empty (capacity 0) on healthy runs.
+    chain: Vec<u64>,
 }
 
 pub struct Sim<'a> {
@@ -244,6 +267,22 @@ pub struct Sim<'a> {
     /// above `interner_epoch_blocks` so a mostly-live epoch does not
     /// re-scan on every arrival).
     epoch_trigger: usize,
+    /// Fault-injection accounting (all zero on healthy runs).
+    fault_stats: FaultStats,
+    /// True iff `cfg.faults` is non-empty: gates the per-request chain
+    /// retention and fetch-source tracking below, so the default path
+    /// stays allocation-free (pinned by `tests/alloc_audit.rs`).
+    retain_chains: bool,
+    /// Remote-fetch source of each still-gated job (fault runs only):
+    /// node loss dooms jobs whose pending fetch came *from* the dead
+    /// node — the transfer will never land.
+    fetch_src: FastMap<JobId, usize>,
+    /// Reused doomed-job buffer for the node-loss handler.
+    doomed_buf: Vec<JobId>,
+    /// Reused (job, request) orphan buffer for the node-loss handler.
+    orphan_buf: Vec<(JobId, RequestId)>,
+    /// Reused residency delta for `CachePool::drop_all_into`.
+    fault_delta: TierDelta,
 }
 
 impl<'a> Sim<'a> {
@@ -286,12 +325,33 @@ impl<'a> Sim<'a> {
             live_peak: 0,
             mark_buf: Vec::new(),
             epoch_trigger: 0,
+            fault_stats: FaultStats::default(),
+            retain_chains: !cfg.faults.is_empty(),
+            fetch_src: FastMap::default(),
+            doomed_buf: Vec::new(),
+            orphan_buf: Vec::new(),
+            fault_delta: TierDelta::default(),
             perf,
         }
     }
 
+    /// Is this event *work* (counted in `real_events`) or bookkeeping?
+    /// Samples and sweeps re-arm themselves and must not keep each other
+    /// alive; scripted fault events fire exactly once at plan-fixed
+    /// times, so counting them would only stretch the bookkeeping tail.
+    fn is_bookkeeping(kind: &EventKind) -> bool {
+        matches!(
+            kind,
+            EventKind::Sample
+                | EventKind::DemoteSweep
+                | EventKind::NodeLoss { .. }
+                | EventKind::NodeRecover { .. }
+                | EventKind::BwChange { .. }
+        )
+    }
+
     fn push(&mut self, t: TimeMs, kind: EventKind) {
-        if !matches!(kind, EventKind::Sample | EventKind::DemoteSweep) {
+        if !Self::is_bookkeeping(&kind) {
             self.real_events += 1;
         }
         self.order += 1;
@@ -472,6 +532,12 @@ impl<'a> Sim<'a> {
                         est_ttft: p.prefill_end - now,
                         ttft: f64::NAN,
                         stream_end: f64::NAN,
+                        retries: 0,
+                        chain: if self.retain_chains {
+                            req.hash_ids.clone()
+                        } else {
+                            Vec::new() // capacity 0: no heap traffic on healthy runs
+                        },
                     },
                 );
                 self.live_peak = self.live_peak.max(self.pending.len());
@@ -479,10 +545,23 @@ impl<'a> Sim<'a> {
                     req.rid,
                     InFlight { kv_arrive: p.kv_arrive, decode: p.decode, ctx_tokens: req.input },
                 );
-                // Wake the queue when the job's gate passes (immediately
-                // when there is no remote fetch).
-                let gate = self.prefill.job(p.job).gate;
-                self.push(gate.max(now), EventKind::PrefillStart { jid: p.job });
+                // Wake the queue at the job's planned start.  On a
+                // healthy run this is bit-neutral versus waking at the
+                // gate: planned_start = max(queue_free, gate, now), and
+                // whenever queue_free dominates, the predecessor's
+                // PrefillDone fires at exactly that instant and pumps
+                // first (the equal-time wake pops later and no-ops).
+                // After a node-loss cancellation, though, the
+                // predecessor's PrefillDone never comes — this wake is
+                // what keeps survivors' restated planned starts live
+                // without any extra recovery events.
+                let planned = self.prefill.job(p.job).planned_start;
+                self.push(planned.max(now), EventKind::PrefillStart { jid: p.job });
+                if self.retain_chains {
+                    if let Some((src, _)) = p.fetch {
+                        self.fetch_src.insert(p.job, src);
+                    }
+                }
                 // Placement consumed: hand its group buffer back so the
                 // next accept reuses it instead of allocating.
                 self.scratch.recycle_placement_group(p.prefill_group);
@@ -491,6 +570,9 @@ impl<'a> Sim<'a> {
     }
 
     fn handle_prefill_done(&mut self, jid: JobId, now: TimeMs) {
+        if self.retain_chains {
+            self.fetch_src.remove(&jid);
+        }
         let job = self.prefill.finish(jid, now);
         let rid = job.rid;
         let (kv_arrive, decode, ctx_tokens, out) = {
@@ -538,6 +620,10 @@ impl<'a> Sim<'a> {
             let p = self.pending.remove(&f.rid).expect("finish for unknown request");
             self.admission.observe_decode_duration(now - (p.arrival + p.ttft));
             self.n_completed += 1;
+            if p.retries > 0 {
+                // Orphaned by a node loss, re-admitted, and completed.
+                self.fault_stats.rescued += 1;
+            }
             if self.cfg.retain_metrics {
                 self.metrics.push(RequestMetrics {
                     id: f.rid,
@@ -555,6 +641,171 @@ impl<'a> Sim<'a> {
             }
         }
         self.start_decode_step(d, now);
+    }
+
+    /// `FaultEntry::NodeLoss` — the node's pools vanish, its in-flight
+    /// prefill work dies, and every orphaned request goes back through
+    /// the conductor for bounded re-admission.  Cache state is removed
+    /// through an ordinary `TierDelta` applied to the prefix index, so
+    /// `equals_rebuild_of` keeps holding without a rebuild.  The doomed
+    /// set is: every queued/running job whose group touches the node,
+    /// plus every still-gated job whose remote fetch *sources* from it
+    /// (the layer-wise transfer can no longer complete).  A running
+    /// job's already-reserved NIC window is deliberately not unwound —
+    /// the wire time was spent; surviving reservations stay honored.
+    // lint: hot
+    fn handle_node_loss(&mut self, node: usize, now: TimeMs) {
+        self.fault_stats.nodes_lost += 1;
+        self.prefill.instances[node].alive = false;
+        let mut delta = std::mem::take(&mut self.fault_delta);
+        self.prefill.instances[node].pool.drop_all_into(&mut delta);
+        if let Some(idx) = self.index.as_mut() {
+            idx.apply(node, &delta);
+        }
+        self.fault_delta = delta;
+        let mut doomed = std::mem::take(&mut self.doomed_buf);
+        doomed.clear();
+        self.prefill.collect_jobs_touching(node, &mut doomed);
+        // lint: allow(unordered-iter) — doomed is sorted + deduped below
+        for (&jid, &src) in self.fetch_src.iter() {
+            if src == node && self.prefill.contains_job(jid) && self.prefill.job(jid).gate > now
+            {
+                doomed.push(jid);
+            }
+        }
+        doomed.sort_unstable();
+        doomed.dedup();
+        self.fault_stats.jobs_killed += doomed.len() as u64;
+        let mut orphans = std::mem::take(&mut self.orphan_buf);
+        orphans.clear();
+        self.prefill.cancel_jobs(&doomed, &mut orphans);
+        // Re-admit in job-id (= admission) order: deterministic, and
+        // earliest-admitted requests get first claim on survivors.
+        orphans.sort_unstable_by_key(|&(jid, _)| jid);
+        for i in 0..orphans.len() {
+            let (jid, rid) = orphans[i];
+            self.readmit_orphan(jid, rid, now);
+        }
+        self.orphan_buf = orphans;
+        self.doomed_buf = doomed;
+        self.pump_prefill(now);
+    }
+
+    /// `FaultEntry::NodeRecover` — the node takes new placements again.
+    /// Its pools stay empty (the crash lost them); the prefix index
+    /// already reflects that, so nothing to reconcile.
+    fn handle_node_recover(&mut self, node: usize) {
+        self.fault_stats.nodes_recovered += 1;
+        self.prefill.instances[node].alive = true;
+    }
+
+    /// One orphaned request back through the conductor at fault time.
+    /// Within budget it is re-priced against the *surviving* topology
+    /// (so the cost-model contract holds for the new placement); past
+    /// budget it becomes an ordinary rejection — never silent loss.
+    /// TTFT keeps being measured from the original arrival.
+    // lint: hot
+    fn readmit_orphan(&mut self, jid: JobId, rid: RequestId, now: TimeMs) {
+        self.fetch_src.remove(&jid);
+        self.in_flight.remove(&rid);
+        let Some(p) = self.pending.remove(&rid) else {
+            return;
+        };
+        if p.retries >= self.cfg.fault_retry_budget {
+            self.n_rejected += 1;
+            self.fault_stats.lost += 1;
+            if self.cfg.retain_metrics {
+                self.metrics.push(RequestMetrics::rejected(
+                    rid, p.arrival, p.input, p.output, false,
+                ));
+            }
+            return;
+        }
+        // Re-intern the retained trace-level chain: the original dense
+        // ids may have been recycled by an interner epoch since
+        // admission, so the chain is re-resolved like a fresh arrival.
+        let mut hash_ids = std::mem::take(&mut self.chain_buf);
+        self.interner.intern_chain_into(&p.chain, &mut hash_ids);
+        let sched = SchedRequest {
+            rid,
+            input_tokens: p.input,
+            output_tokens: p.output,
+            hash_ids,
+        };
+        let mut ctx = conductor::Ctx {
+            cfg: self.cfg,
+            perf: &self.perf,
+            prefill: &mut self.prefill,
+            decodes: &self.decodes,
+            res: &mut self.resources,
+            rng: &mut self.rng,
+            now,
+            index: self.index.as_mut(),
+            scratch: &mut self.scratch,
+        };
+        let outcome = conductor::schedule(&mut ctx, &sched, &mut self.stats);
+        self.chain_buf = sched.hash_ids;
+        match outcome {
+            Err(_) => {
+                // No survivor can take it (or SLO says don't) — an
+                // ordinary rejection, counted like any other.
+                self.n_rejected += 1;
+                self.fault_stats.lost += 1;
+                if self.cfg.retain_metrics {
+                    self.metrics.push(RequestMetrics::rejected(
+                        rid, p.arrival, p.input, p.output, false,
+                    ));
+                }
+            }
+            Ok(pl) => {
+                if let Some(t) = pl.fetch_stage_done {
+                    let (src, _) = pl.fetch.expect("staging implies a fetch");
+                    let tokens = pl.fetch_ssd_stage_blocks as u64 * crate::trace::BLOCK_TOKENS;
+                    self.push(
+                        t,
+                        EventKind::SsdLoad {
+                            node: src,
+                            bytes: costmodel::stage_bytes(&self.perf, tokens),
+                        },
+                    );
+                }
+                if let Some(t) = pl.ssd_stage_done {
+                    self.push(
+                        t,
+                        EventKind::SsdLoad {
+                            node: pl.prefill_group[0],
+                            bytes: costmodel::stage_bytes(&self.perf, pl.ssd_stage_tokens),
+                        },
+                    );
+                }
+                self.pending.insert(
+                    rid,
+                    Pending {
+                        arrival: p.arrival,
+                        input: p.input,
+                        output: p.output,
+                        decode: pl.decode,
+                        est_ttft: pl.prefill_end - p.arrival,
+                        ttft: f64::NAN,
+                        stream_end: f64::NAN,
+                        retries: p.retries + 1,
+                        chain: p.chain,
+                    },
+                );
+                self.live_peak = self.live_peak.max(self.pending.len());
+                self.in_flight.insert(
+                    rid,
+                    InFlight { kv_arrive: pl.kv_arrive, decode: pl.decode, ctx_tokens: p.input },
+                );
+                let planned = self.prefill.job(pl.job).planned_start;
+                self.push(planned.max(now), EventKind::PrefillStart { jid: pl.job });
+                if let Some((src, _)) = pl.fetch {
+                    self.fetch_src.insert(pl.job, src);
+                }
+                self.scratch.recycle_placement_group(pl.prefill_group);
+                self.fault_stats.retried += 1;
+            }
+        }
     }
 
     /// Epoch-based interner recycling (`interner_epoch_blocks`): once
@@ -636,6 +887,34 @@ impl<'a> Sim<'a> {
     {
         let mut arrivals = arrivals.into_iter();
         let mut next_arr = arrivals.next();
+        // Compile the fault plan into ordinary heap events up front: the
+        // script is part of the run's inputs, so two runs with the same
+        // (config, plan) pop the same events in the same order and stay
+        // bit-for-bit identical.  An empty plan pushes nothing — the
+        // healthy path is untouched.  A `BwDegrade` window compiles to a
+        // degrade edge at `from_ms` and a restore edge (factor 1.0) at
+        // `to_ms`; each plan entry counts once in `injected`.
+        let cfg = self.cfg;
+        if !cfg.faults.is_empty() {
+            if let Err(e) = cfg.faults.validate(cfg.n_prefill, cfg.n_prefill + cfg.n_decode) {
+                panic!("invalid fault plan: {e}");
+            }
+            for e in &cfg.faults.entries {
+                self.fault_stats.injected += 1;
+                match *e {
+                    FaultEntry::NodeLoss { node, at_ms } => {
+                        self.push(at_ms, EventKind::NodeLoss { node });
+                    }
+                    FaultEntry::NodeRecover { node, at_ms } => {
+                        self.push(at_ms, EventKind::NodeRecover { node });
+                    }
+                    FaultEntry::BwDegrade { node, bank, factor, from_ms, to_ms } => {
+                        self.push(from_ms, EventKind::BwChange { node, bank, factor });
+                        self.push(to_ms, EventKind::BwChange { node, bank, factor: 1.0 });
+                    }
+                }
+            }
+        }
         self.push(0.0, EventKind::Sample);
         if let Some(idle) = self.demote_after {
             self.push(idle, EventKind::DemoteSweep);
@@ -681,7 +960,7 @@ impl<'a> Sim<'a> {
             let arrivals_left = next_arr.is_some();
             now = ev.t;
             self.n_events += 1;
-            if !matches!(ev.kind, EventKind::Sample | EventKind::DemoteSweep) {
+            if !Self::is_bookkeeping(&ev.kind) {
                 self.real_events -= 1;
             }
             if self.n_events % 1024 == 0 {
@@ -692,17 +971,39 @@ impl<'a> Sim<'a> {
                     self.pump_prefill(now);
                 }
                 EventKind::PrefillDone { jid } => {
-                    self.handle_prefill_done(jid, now);
+                    // A node loss may have cancelled the job after this
+                    // event was armed; the stale completion is skipped.
+                    if self.prefill.contains_job(jid) {
+                        self.handle_prefill_done(jid, now);
+                    }
                 }
                 EventKind::SsdLoad { node, bytes } => {
-                    self.ssd_load_events += 1;
-                    self.ssd_loaded_bytes_by_node[node] += bytes;
+                    // Reads on a node that died after the reservation are
+                    // not observable traffic.
+                    if self.prefill.instances[node].alive {
+                        self.ssd_load_events += 1;
+                        self.ssd_loaded_bytes_by_node[node] += bytes;
+                    }
                 }
                 EventKind::KvArrive { rid, decode, ctx, out } => {
                     self.handle_kv_arrive(rid, decode, ctx, out, now);
                 }
                 EventKind::DecodeStep { decode, seq, dur } => {
                     self.handle_decode_step(decode, seq, dur, now);
+                }
+                EventKind::NodeLoss { node } => {
+                    self.handle_node_loss(node, now);
+                }
+                EventKind::NodeRecover { node } => {
+                    self.handle_node_recover(node);
+                }
+                EventKind::BwChange { node, bank, factor } => {
+                    self.fault_stats.bw_changes += 1;
+                    match bank {
+                        Bank::NicTx => self.resources.nic.tx.set_scale(node, factor),
+                        Bank::NicRx => self.resources.nic.rx.set_scale(node, factor),
+                        Bank::Nvme => self.resources.nvme.set_scale(node, factor),
+                    }
                 }
                 EventKind::DemoteSweep => {
                     let idle = self.demote_after.expect("sweep without a config");
@@ -766,6 +1067,7 @@ impl<'a> Sim<'a> {
             interner_epochs: self.interner.epochs(),
             interner_freed: self.interner.freed_total(),
             interner_id_space: self.interner.id_space(),
+            faults: self.fault_stats,
         }
     }
 }

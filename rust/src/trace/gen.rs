@@ -55,6 +55,16 @@ pub struct TraceGenConfig {
     pub rearrival_fraction: f64,
     /// Mean idle gap before a session re-arrives (ms, exponential).
     pub mean_rearrival_gap_ms: f64,
+    /// Flash-crowd storm: fraction of sessions/one-shots whose arrival
+    /// lands inside *one* spike window at `storm_start_ms` instead of
+    /// uniformly over the trace (0.0 = off, bit-for-bit the calibrated
+    /// stream).  Unlike `burst_fraction`'s evenly spaced bumps, a storm
+    /// is a single overload wall — the §7 early-rejection scenario.
+    pub storm_fraction: f64,
+    /// Where the storm window starts (ms).
+    pub storm_start_ms: u64,
+    /// Storm window width (ms).
+    pub storm_width_ms: u64,
 }
 
 impl Default for TraceGenConfig {
@@ -79,6 +89,9 @@ impl Default for TraceGenConfig {
             burst_width_ms: 20_000,
             rearrival_fraction: 0.0,
             mean_rearrival_gap_ms: 900_000.0,
+            storm_fraction: 0.0,
+            storm_start_ms: 0,
+            storm_width_ms: 30_000,
         }
     }
 }
@@ -104,8 +117,13 @@ pub fn generate(cfg: &TraceGenConfig) -> Vec<TraceRecord> {
         // Arrival: uniform over the trace, or — for the bursty-replay
         // scenario — concentrated into evenly spaced burst windows.  The
         // guards short-circuit so the default config consumes the exact
-        // RNG stream earlier seeds calibrated against.
-        let t0 = if cfg.burst_fraction > 0.0 && rng.f64() < cfg.burst_fraction {
+        // RNG stream earlier seeds calibrated against.  The storm branch
+        // is checked first: a flash crowd dominates any background
+        // burstiness it is layered over.
+        let t0 = if cfg.storm_fraction > 0.0 && rng.f64() < cfg.storm_fraction {
+            (cfg.storm_start_ms + rng.below(cfg.storm_width_ms.max(1)))
+                .min(cfg.duration_ms - 1)
+        } else if cfg.burst_fraction > 0.0 && rng.f64() < cfg.burst_fraction {
             let k = rng.below(cfg.n_bursts.max(1) as u64);
             let center = (k + 1) * cfg.duration_ms / (cfg.n_bursts as u64 + 1);
             let start = center.saturating_sub(cfg.burst_width_ms / 2);
@@ -425,6 +443,75 @@ mod tests {
             ..Default::default()
         });
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn storm_knob_off_is_bitwise_default() {
+        // storm_fraction = 0.0 must not perturb the RNG stream — the
+        // golden-hash pin in tests/determinism.rs rides on this.
+        let a = generate(&TraceGenConfig { n_requests: 500, seed: 3, ..Default::default() });
+        let b = generate(&TraceGenConfig {
+            n_requests: 500,
+            seed: 3,
+            storm_start_ms: 123_456, // ignored while storm_fraction == 0
+            storm_width_ms: 1,       // ignored while storm_fraction == 0
+            ..Default::default()
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn storm_concentrates_arrivals_into_the_window() {
+        let cfg = TraceGenConfig {
+            n_requests: 4_000,
+            seed: 9,
+            storm_fraction: 0.6,
+            storm_start_ms: 1_200_000,
+            storm_width_ms: 30_000,
+            ..Default::default()
+        };
+        let storm = generate(&cfg);
+        assert_eq!(storm.len(), 4_000);
+        assert!(storm.windows(2).all(|w| w[0].timestamp <= w[1].timestamp));
+        // First arrivals of sessions/one-shots land in the window; their
+        // follow-up turns trail behind it, so count the window share
+        // directly: it must dwarf the uniform expectation (width/duration
+        // ≈ 0.8% of requests) without demanding every turn lands inside.
+        let in_window = storm
+            .iter()
+            .filter(|r| {
+                r.timestamp >= cfg.storm_start_ms
+                    && r.timestamp < cfg.storm_start_ms + cfg.storm_width_ms
+            })
+            .count();
+        assert!(
+            in_window as f64 > 0.25 * storm.len() as f64,
+            "storm window holds {in_window}/{} requests",
+            storm.len()
+        );
+        // The spike is also the trace's load peak.
+        let uniform =
+            generate(&TraceGenConfig { n_requests: 4_000, seed: 9, ..Default::default() });
+        let pu = peak_window_count(&uniform, 30_000);
+        let ps = peak_window_count(&storm, 30_000);
+        assert!(ps > 3 * pu, "storm peak {ps} must dwarf the uniform peak {pu}");
+    }
+
+    #[test]
+    fn storm_stream_is_deterministic_and_distinct() {
+        let cfg = TraceGenConfig {
+            n_requests: 1_000,
+            seed: 5,
+            storm_fraction: 0.5,
+            storm_start_ms: 600_000,
+            storm_width_ms: 20_000,
+            ..Default::default()
+        };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b, "same (config, seed) must generate bit-for-bit the same trace");
+        let plain = generate(&TraceGenConfig { n_requests: 1_000, seed: 5, ..Default::default() });
+        assert_ne!(a, plain, "an active storm must change the arrival pattern");
     }
 
     #[test]

@@ -322,6 +322,68 @@ fn estimates_match_under_concurrent_nvme_staging() {
 }
 
 #[test]
+fn estimates_match_with_nvme_degraded_to_quarter_speed_mid_run() {
+    // The PR-10 degraded twin of the scenario above: two deep demoted
+    // prefixes re-arrive ~1 s apart, but a fault plan has cut node 0's
+    // NVMe to 25% just before they return — so both staging reads are
+    // priced *and executed* at quarter bandwidth, the second queued
+    // behind a ~4×-longer first read.  The 1 ms + 1% contract must hold
+    // anyway: the BwChange event rescales the same `BwQueue` estimator
+    // and executor share, and the restore (which lands while the second
+    // reserved read is still draining) touches only future ops, never a
+    // booked window.
+    //
+    // Chain length is the decision margin here.  At quarter bandwidth a
+    // staging read costs 4 × ~0.44 ms/KB-token; recompute grows
+    // *quadratically* in chain length through the attention term.  A
+    // 2048-block (1M-token) chain recomputes in ~1050 s but stages in
+    // ~458 s even degraded (~915 s for the queued second read), so the
+    // three-way decision still picks SSD for both re-arrivals — a
+    // shorter chain would rationally flip to recompute, which is the
+    // degraded-mode adaptivity other tests cover.
+    use mooncake::faults::{Bank, FaultPlan};
+    use mooncake::trace::BLOCK_TOKENS;
+    let blocks = 2_048u64;
+    let rec = |t: u64, base: u64| TraceRecord {
+        timestamp: t,
+        input_length: blocks * BLOCK_TOKENS,
+        output_length: 8,
+        hash_ids: (base..base + blocks).collect(),
+    };
+    let trace = vec![
+        rec(0, 10_000),          // A cold — fills the DRAM tier exactly
+        rec(1_100_000, 20_000),  // B cold — evicts A wholesale to SSD
+        rec(2_600_000, 10_000),  // A returns: a ~4x slower staging read
+        rec(2_601_000, 20_000),  // B returns while A's slow read drains
+    ];
+    let cfg = SimConfig {
+        n_prefill: 1,
+        n_decode: 1,
+        scheduling: mooncake::config::SchedulingPolicy::CacheAware,
+        cache_capacity_blocks: Some(blocks as usize),
+        ssd_capacity_blocks: Some(100_000),
+        // Same exclusive-decision pin as the healthy twin: the asserts
+        // are about whole-chain staging reads on the degraded device.
+        hybrid: false,
+        faults: FaultPlan::new().bw_degrade(0, Bank::Nvme, 0.25, 2_500_000.0, 3_100_000.0),
+        slo: mooncake::config::SloConfig { ttft_ms: 1e9, tbt_ms: 1e9 },
+        ..Default::default()
+    };
+    let res = assert_agreement(&cfg, &trace, 1.0, 4);
+    assert_eq!(res.conductor.ssd_loads, 2, "both re-arrivals must still stage");
+    assert_eq!(res.resources.nvme.n_ops, 2);
+    assert_eq!(res.faults.bw_changes, 2, "one degrade edge, one restore edge");
+    // The second read queued behind a 4x-longer first: minutes of
+    // queueing, dwarfing the healthy twin's > 5 s.
+    assert!(
+        res.resources.nvme.queued_ms > 100_000.0,
+        "degraded queueing must dwarf the healthy twin: {} ms",
+        res.resources.nvme.queued_ms
+    );
+    assert_eq!(res.tier.ssd_hits, 2 * blocks);
+}
+
+#[test]
 fn estimates_match_on_hybrid_placements_under_concurrent_nvme_staging() {
     // The PR-9 acceptance scenario: the same two deep demoted prefixes
     // re-arrive ~1 s apart, but with Algorithm 1's fourth branch live

@@ -1,0 +1,328 @@
+//! Fault-injection integration tests: deterministic node loss with full
+//! request accounting (nothing is ever silently lost), bit-for-bit
+//! reproducibility of faulted runs, inert-when-empty plans, bounded
+//! retry budgets, heterogeneous-cluster placement preference, and the
+//! flash-crowd storm scenario against early rejection.
+
+use mooncake::conductor::{self, ConductorStats, SchedRequest, SchedScratch};
+use mooncake::config::{NodeOverride, RejectionPolicy, SimConfig};
+use mooncake::decode::DecodeInstance;
+use mooncake::faults::{Bank, FaultPlan};
+use mooncake::metrics::Outcome;
+use mooncake::model::PerfModel;
+use mooncake::prefill::PrefillPool;
+use mooncake::resource::Resources;
+use mooncake::sim;
+use mooncake::trace::gen::{self, TraceGenConfig};
+use mooncake::util::rng::Rng;
+use mooncake::verify::Paranoia;
+
+fn trace(n: usize, seed: u64) -> Vec<mooncake::trace::TraceRecord> {
+    gen::generate(&TraceGenConfig {
+        n_requests: n,
+        duration_ms: 1_200_000,
+        seed,
+        ..Default::default()
+    })
+}
+
+/// Bit-for-bit equality of two runs that must be indistinguishable.
+fn assert_runs_identical(a: &sim::SimResult, b: &sim::SimResult) {
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (x, y) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.outcome, y.outcome, "request {}", x.id);
+        assert_eq!(x.ttft_ms.to_bits(), y.ttft_ms.to_bits(), "request {}", x.id);
+        assert_eq!(x.est_ttft_ms.to_bits(), y.est_ttft_ms.to_bits());
+        assert_eq!(x.max_tbt_ms.to_bits(), y.max_tbt_ms.to_bits());
+        assert_eq!(x.mean_tbt_ms.to_bits(), y.mean_tbt_ms.to_bits());
+        assert_eq!(x.generated, y.generated);
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+    }
+    assert_eq!(a.conductor, b.conductor);
+    assert_eq!(a.tier, b.tier);
+    assert_eq!(a.wall_ms.to_bits(), b.wall_ms.to_bits());
+    assert_eq!(a.transfer_bytes, b.transfer_bytes);
+    assert_eq!(a.rejected_at_arrival, b.rejected_at_arrival);
+    assert_eq!(a.rejected_at_decode, b.rejected_at_decode);
+    assert_eq!(a.ssd_load_events, b.ssd_load_events);
+    assert_eq!(a.ssd_loaded_bytes_by_node, b.ssd_loaded_bytes_by_node);
+    assert_eq!(a.decode_tokens_out, b.decode_tokens_out);
+    assert_eq!(a.n_events, b.n_events);
+    assert_eq!(a.n_completed, b.n_completed);
+    assert_eq!(a.n_rejected, b.n_rejected);
+    assert_eq!(a.live_peak, b.live_peak);
+    assert_eq!(a.interner_epochs, b.interner_epochs);
+    assert_eq!(a.interner_freed, b.interner_freed);
+    assert_eq!(a.interner_id_space, b.interner_id_space);
+    assert_eq!(a.resources, b.resources);
+    assert_eq!(a.load_samples.len(), b.load_samples.len());
+    for (x, y) in a.load_samples.iter().zip(&b.load_samples) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+        assert_eq!(x.prefill_load.to_bits(), y.prefill_load.to_bits());
+        assert_eq!(x.decode_load.to_bits(), y.decode_load.to_bits());
+    }
+    assert_eq!(a.faults, b.faults);
+}
+
+/// Every arrival is accounted exactly once: completed or rejected, with
+/// one metrics row per request id.
+fn assert_conservation(res: &sim::SimResult, n_arrivals: usize) {
+    assert_eq!(
+        res.n_completed + res.n_rejected,
+        n_arrivals as u64,
+        "completed + rejected must sum to arrivals — no silent loss"
+    );
+    assert_eq!(res.metrics.len(), n_arrivals, "one metrics row per request");
+    for w in res.metrics.windows(2) {
+        assert!(w[0].id < w[1].id, "request ids must be unique");
+    }
+    let completed = res.metrics.iter().filter(|m| m.outcome == Outcome::Completed).count();
+    assert_eq!(completed as u64, res.n_completed);
+}
+
+#[test]
+fn node_loss_conserves_every_request_and_keeps_the_index_consistent() {
+    // Overloaded 3-node prefill pool (speedup 20 compresses the hour of
+    // arrivals into minutes) so node 1 dies at t = 45 s with a deep
+    // queue: queued jobs cancel, orphans re-admit against the survivors.
+    // Paranoia::Full asserts the prefix index equals a brute-force
+    // rebuild of the pools every 1024 events *and* at the end — i.e. the
+    // node-loss TierDelta left the index exactly consistent, with no
+    // rebuild.
+    let t = trace(600, 11);
+    let cfg = SimConfig {
+        n_prefill: 3,
+        n_decode: 3,
+        paranoia: Paranoia::Full,
+        faults: FaultPlan::new().node_loss(1, 45_000.0).node_recover(1, 200_000.0),
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, &t, 20.0);
+    assert_conservation(&res, t.len());
+    assert_eq!(res.faults.injected, 2);
+    assert_eq!(res.faults.nodes_lost, 1);
+    assert_eq!(res.faults.nodes_recovered, 1);
+    assert!(res.faults.jobs_killed > 0, "the loss must catch in-flight jobs");
+    // Every cancelled job's request is re-admitted or rejected — the two
+    // outcomes partition the orphan set.
+    assert_eq!(
+        res.faults.retried + res.faults.lost,
+        res.faults.jobs_killed,
+        "every orphan must be retried or counted lost"
+    );
+    assert!(res.faults.rescued <= res.faults.retried);
+    // Rescued requests really completed: their rows carry finite TTFTs.
+    for m in res.metrics.iter().filter(|m| m.outcome == Outcome::Completed) {
+        assert!(m.ttft_ms.is_finite() && m.ttft_ms > 0.0);
+    }
+}
+
+#[test]
+fn same_plan_twice_is_bit_for_bit_identical() {
+    let t = trace(400, 7);
+    let cfg = SimConfig {
+        n_prefill: 3,
+        n_decode: 2,
+        faults: FaultPlan::new()
+            .node_loss(0, 30_000.0)
+            .node_recover(0, 90_000.0)
+            .bw_degrade(1, Bank::Nvme, 0.25, 0.0, 120_000.0),
+        ..Default::default()
+    };
+    let a = sim::run(&cfg, &t, 8.0);
+    let b = sim::run(&cfg, &t, 8.0);
+    assert_runs_identical(&a, &b);
+    assert!(a.faults.nodes_lost == 1 && a.faults.bw_changes == 2);
+}
+
+#[test]
+fn empty_plan_and_inert_knobs_reproduce_the_baseline() {
+    // An explicitly empty plan — and a retry budget, which is only
+    // consulted when the plan is non-empty — must be bit-for-bit the
+    // default healthy run.
+    let t = trace(300, 3);
+    let base = SimConfig::default();
+    let knobs = SimConfig {
+        faults: FaultPlan::new(),
+        fault_retry_budget: 99,
+        ..Default::default()
+    };
+    let a = sim::run(&base, &t, 2.0);
+    let b = sim::run(&knobs, &t, 2.0);
+    assert_runs_identical(&a, &b);
+    assert_eq!(a.faults, mooncake::faults::FaultStats::default());
+}
+
+#[test]
+fn zero_retry_budget_rejects_every_orphan_loudly() {
+    let t = trace(500, 13);
+    let cfg = SimConfig {
+        n_prefill: 3,
+        n_decode: 3,
+        fault_retry_budget: 0,
+        faults: FaultPlan::new().node_loss(2, 40_000.0),
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, &t, 20.0);
+    assert_conservation(&res, t.len());
+    assert!(res.faults.jobs_killed > 0);
+    assert_eq!(res.faults.retried, 0, "budget 0 must retry nothing");
+    assert_eq!(res.faults.rescued, 0);
+    assert_eq!(res.faults.lost, res.faults.jobs_killed);
+    // The losses surface as ordinary rejections, not vanished requests.
+    assert!(res.n_rejected >= res.faults.lost);
+}
+
+#[test]
+fn bw_degrade_window_applies_and_restores() {
+    // NVMe at 25% across a window plus a halved NIC-tx: the run still
+    // completes with full accounting and records the degrade + restore
+    // edges.  DRAM is squeezed so staging reads actually traverse the
+    // degraded NVMe queue.
+    let t = trace(300, 17);
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        cache_capacity_blocks: Some(400),
+        ssd_capacity_blocks: Some(50_000),
+        paranoia: Paranoia::Full,
+        faults: FaultPlan::new()
+            .bw_degrade(0, Bank::Nvme, 0.25, 10_000.0, 200_000.0)
+            .bw_degrade(1, Bank::NicTx, 0.5, 10_000.0, 200_000.0),
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, &t, 4.0);
+    assert_conservation(&res, t.len());
+    assert_eq!(res.faults.injected, 2);
+    assert_eq!(res.faults.bw_changes, 4, "each window is a degrade + a restore");
+    assert_eq!(res.faults.nodes_lost, 0);
+}
+
+#[test]
+fn conductor_prefers_the_fast_node_when_estimates_differ() {
+    // Two idle nodes, no cache anywhere, node 1 three times faster: the
+    // KVCache-centric policy's min-estimated-TTFT choice must land on
+    // node 1 — and on the homogeneous cluster the same tie falls to
+    // node 0, proving the preference comes from the speed estimate.
+    let run_once = |overrides: Vec<NodeOverride>| -> usize {
+        let cfg = SimConfig {
+            n_prefill: 2,
+            n_decode: 1,
+            node_overrides: overrides,
+            ..Default::default()
+        };
+        let perf = PerfModel::paper();
+        let mut prefill = PrefillPool::new(&cfg);
+        let decodes =
+            vec![DecodeInstance::new(perf.vram_kv_capacity_tokens(), cfg.max_decode_batch)];
+        let mut res = Resources::new(&cfg, &perf);
+        let mut rng = Rng::new(1);
+        let mut scratch = SchedScratch::default();
+        let mut stats = ConductorStats::default();
+        let req = SchedRequest {
+            rid: 1,
+            input_tokens: 16_384,
+            output_tokens: 64,
+            hash_ids: Vec::new(),
+        };
+        let mut ctx = conductor::Ctx {
+            cfg: &cfg,
+            perf: &perf,
+            prefill: &mut prefill,
+            decodes: &decodes,
+            res: &mut res,
+            rng: &mut rng,
+            now: 0.0,
+            index: None,
+            scratch: &mut scratch,
+        };
+        let pl = conductor::schedule(&mut ctx, &req, &mut stats).expect("idle cluster admits");
+        pl.prefill_group[0]
+    };
+    let fast = run_once(vec![NodeOverride {
+        node: 1,
+        speed: 3.0,
+        dram_blocks: None,
+        ssd_blocks: None,
+    }]);
+    assert_eq!(fast, 1, "the 3x node must win the estimated-TTFT comparison");
+    let homog = run_once(Vec::new());
+    assert_eq!(homog, 0, "equal estimates tie-break to the lowest node id");
+}
+
+#[test]
+fn heterogeneous_cluster_estimates_still_match_actuals() {
+    // Mixed speeds and asymmetric capacities must not break the
+    // estimate == actual contract the scheduler's SLO gates ride on.
+    let t = trace(300, 19);
+    let cfg = SimConfig {
+        n_prefill: 3,
+        n_decode: 2,
+        node_overrides: vec![
+            NodeOverride { node: 0, speed: 2.88, dram_blocks: None, ssd_blocks: None },
+            NodeOverride { node: 2, speed: 1.0, dram_blocks: Some(5_000), ssd_blocks: Some(20_000) },
+        ],
+        paranoia: Paranoia::Full,
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, &t, 4.0);
+    assert_conservation(&res, t.len());
+    let rep = res.report(&cfg);
+    assert!(
+        rep.ttft_est_mae < 1.0,
+        "estimate/actual drift {} ms on the heterogeneous cluster",
+        rep.ttft_est_mae
+    );
+}
+
+#[test]
+fn flash_crowd_storm_engages_early_rejection_then_drains() {
+    // A storm packs half the trace into one 20 s window.  Early
+    // rejection must fire during the spike, the backlog must drain
+    // afterwards, and conservation must hold throughout.
+    let storm_start = 300_000u64;
+    let storm_width = 20_000u64;
+    let t = gen::generate(&TraceGenConfig {
+        n_requests: 2_500,
+        duration_ms: 1_200_000,
+        seed: 7,
+        storm_fraction: 0.5,
+        storm_start_ms: storm_start,
+        storm_width_ms: storm_width,
+        ..Default::default()
+    });
+    let cfg = SimConfig {
+        n_prefill: 2,
+        n_decode: 2,
+        rejection: RejectionPolicy::Early,
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, &t, 1.0);
+    assert_conservation(&res, t.len());
+    assert!(res.n_rejected > 0, "the spike must engage early rejection");
+    // Rejection concentrates in the spike; the quiet tail mostly clears.
+    let (mut rej_in, mut tot_in, mut rej_late, mut tot_late) = (0u64, 0u64, 0u64, 0u64);
+    for m in &res.metrics {
+        let arr = m.arrival as u64;
+        let rejected = m.outcome != Outcome::Completed;
+        if arr >= storm_start && arr < storm_start + storm_width {
+            tot_in += 1;
+            rej_in += rejected as u64;
+        } else if arr >= storm_start + 300_000 {
+            tot_late += 1;
+            rej_late += rejected as u64;
+        }
+    }
+    assert!(tot_in > 500 && tot_late > 100, "storm shape: {tot_in} in, {tot_late} late");
+    let rate_in = rej_in as f64 / tot_in as f64;
+    let rate_late = rej_late as f64 / tot_late as f64;
+    assert!(
+        rate_in > 0.2,
+        "rejection must engage during the spike (rate {rate_in:.3})"
+    );
+    assert!(
+        rate_late < rate_in / 2.0,
+        "the pool must drain after the spike: late rate {rate_late:.3} vs spike {rate_in:.3}"
+    );
+}
